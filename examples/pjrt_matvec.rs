@@ -1,0 +1,77 @@
+//! The AOT bridge in isolation: load the Pallas GEMV artifacts via PJRT,
+//! run Algorithm 1's hot products through them, and cross-check against
+//! the native f64 kernels. Then run full F-SVD over the PJRT operator.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example pjrt_matvec
+//! ```
+
+use fastlr::data::synth::low_rank_gaussian;
+use fastlr::krylov::fsvd::{fsvd, FsvdOptions};
+use fastlr::krylov::LinOp;
+use fastlr::linalg::Matrix;
+use fastlr::rng::Pcg64;
+use fastlr::runtime::backend::PjrtLinOp;
+use fastlr::runtime::{default_artifact_dir, Registry};
+use std::time::Instant;
+
+fn main() -> fastlr::Result<()> {
+    let dir = default_artifact_dir();
+    let reg = Registry::load(&dir)?;
+    println!(
+        "artifacts: {} ({} modules, platform {})",
+        dir.display(),
+        reg.names().len(),
+        reg.engine().platform()
+    );
+
+    // The shipped GK artifacts are fixed at 1024x512 (see python/compile/aot.py).
+    let (m, n) = (1024usize, 512usize);
+    let mut rng = Pcg64::seed_from_u64(77);
+    let a = low_rank_gaussian(m, n, 16, &mut rng);
+    let op = PjrtLinOp::new(&reg, &a)?;
+
+    // --- Single matvec parity check. ---
+    let x: Vec<f64> = (0..n).map(|i| ((i as f64) * 0.01).sin()).collect();
+    let t0 = Instant::now();
+    let y_pjrt = op.apply(&x)?;
+    let t_pjrt = t0.elapsed();
+    let t0 = Instant::now();
+    let y_native = a.matvec(&x)?;
+    let t_native = t0.elapsed();
+    let max_diff = y_pjrt
+        .iter()
+        .zip(&y_native)
+        .fold(0.0f64, |acc, (p, q)| acc.max((p - q).abs()));
+    println!(
+        "A·x  : pjrt {t_pjrt:?} vs native {t_native:?}, max |diff| = {max_diff:.3e} (f32 artifacts)"
+    );
+
+    // --- Full Algorithm 2 with PJRT-backed products. ---
+    let t0 = Instant::now();
+    let out = fsvd(
+        &op,
+        &FsvdOptions { k: 40, r: 8, eps: 1e-6, reorth_passes: 2, ..Default::default() },
+    )?;
+    println!(
+        "F-SVD over PJRT operator: k' = {}, {:?}",
+        out.k_used,
+        t0.elapsed()
+    );
+    let native = fsvd(
+        &a,
+        &FsvdOptions { k: 40, r: 8, eps: 1e-6, reorth_passes: 2, ..Default::default() },
+    )?;
+    println!("\n  i     sigma (PJRT)       sigma (native)");
+    for i in 0..8 {
+        println!("  {i}  {:>16.8e}  {:>16.8e}", out.sigma[i], native.sigma[i]);
+    }
+
+    // Demonstrate the typed shape-check path too.
+    let bad = Matrix::zeros(100, 100);
+    match PjrtLinOp::new(&reg, &bad) {
+        Err(e) => println!("\nshape guard works: {e}"),
+        Ok(_) => println!("\nunexpected: 100x100 artifact exists?"),
+    }
+    Ok(())
+}

@@ -1,0 +1,55 @@
+//! Quickstart: the paper's three algorithms on one synthetic matrix.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+
+use fastlr::data::synth::low_rank_gaussian;
+use fastlr::krylov::fsvd::{fsvd, FsvdOptions};
+use fastlr::krylov::rank::{estimate_rank, RankOptions};
+use fastlr::linalg::svd::svd;
+use fastlr::rng::Pcg64;
+use std::time::Instant;
+
+fn main() -> fastlr::Result<()> {
+    // A "huge" (for a quickstart) matrix with known numerical rank 40.
+    let (m, n, rank) = (1500, 1200, 40);
+    let mut rng = Pcg64::seed_from_u64(7);
+    println!("generating {m}x{n} gaussian product of rank {rank} ...");
+    let a = low_rank_gaussian(m, n, rank, &mut rng);
+
+    // --- Algorithm 3: how big is the numerical rank? ---
+    let t0 = Instant::now();
+    let est = estimate_rank(&a, &RankOptions::default())?;
+    println!(
+        "Algorithm 3: numerical rank = {} (k' = {} iterations) in {:.3}s",
+        est.rank,
+        est.k_iterations,
+        t0.elapsed().as_secs_f64()
+    );
+
+    // --- Algorithm 2: the 10 dominant triplets, fast. ---
+    let t0 = Instant::now();
+    let out = fsvd(&a, &FsvdOptions { k: n, r: 10, eps: 1e-8, ..Default::default() })?;
+    let t_fsvd = t0.elapsed().as_secs_f64();
+    println!("F-SVD: 10 dominant triplets in {t_fsvd:.3}s (k' = {})", out.k_used);
+
+    // --- Traditional SVD for reference. ---
+    let t0 = Instant::now();
+    let full = svd(&a)?;
+    let t_svd = t0.elapsed().as_secs_f64();
+    println!("traditional SVD: {t_svd:.3}s  ({:.1}x slower)", t_svd / t_fsvd);
+
+    println!("\n  i      sigma (F-SVD)      sigma (SVD)        |diff|");
+    for i in 0..10 {
+        println!(
+            "  {i:<2}  {:>16.9e}  {:>16.9e}  {:>10.2e}",
+            out.sigma[i],
+            full.sigma[i],
+            (out.sigma[i] - full.sigma[i]).abs()
+        );
+    }
+    let rel = out.relative_error(&a)?;
+    println!("\nF-SVD relative error ||A^T U - V S|| / ||S|| = {rel:.2e}");
+    Ok(())
+}

@@ -1,0 +1,81 @@
+//! The L3 coordinator as a deployment: a factorization service handling a
+//! concurrent mix of partial-SVD and rank-estimation jobs with routing,
+//! micro-batching and metrics.
+//!
+//! ```text
+//! cargo run --release --example svd_service
+//! ```
+
+use fastlr::coordinator::batcher::{Batcher, BatcherConfig};
+use fastlr::coordinator::{
+    AccuracyClass, FactorizationService, JobRequest, JobSpec, ServiceConfig,
+};
+use fastlr::data::synth::low_rank_gaussian;
+use fastlr::rng::Pcg64;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn main() -> fastlr::Result<()> {
+    let svc = Arc::new(FactorizationService::new(ServiceConfig {
+        workers: 4,
+        queue_depth: 32,
+        ..Default::default()
+    })?);
+    let mut rng = Pcg64::seed_from_u64(31337);
+
+    // --- Large accuracy-sensitive jobs straight to the queue. ---
+    println!("submitting 4 large Balanced jobs (route: F-SVD) ...");
+    let large: Vec<_> = (0..4)
+        .map(|i| {
+            let a = Arc::new(low_rank_gaussian(900, 700, 12 + i, &mut rng));
+            svc.submit(JobRequest {
+                spec: JobSpec::PartialSvd { matrix: a, r: 10 },
+                accuracy: AccuracyClass::Balanced,
+            })
+            .expect("submit")
+        })
+        .collect();
+
+    // --- A swarm of small jobs through the micro-batcher. ---
+    println!("submitting 16 small jobs through the micro-batcher ...");
+    let batcher = Batcher::new(
+        svc.clone(),
+        BatcherConfig { max_batch: 8, max_delay: Duration::from_millis(3) },
+    );
+    let small: Vec<_> = (0..16)
+        .map(|i| {
+            let a = Arc::new(low_rank_gaussian(150, 120, 5, &mut rng));
+            let spec = if i % 3 == 2 {
+                JobSpec::RankEstimate { matrix: a, eps: 1e-8 }
+            } else {
+                JobSpec::PartialSvd { matrix: a, r: 5 }
+            };
+            batcher.submit(JobRequest { spec, accuracy: AccuracyClass::Balanced })
+        })
+        .collect();
+
+    for h in large {
+        let r = h.wait()?;
+        match r.outcome {
+            Ok(fastlr::coordinator::job::JobOutcome::Svd(s)) => println!(
+                "  large job {:>2}: {:?}, sigma1 = {:.4e}, exec {:?}",
+                r.id, s.method, s.sigma[0], r.exec_time
+            ),
+            other => println!("  large job {:>2}: {other:?}", r.id),
+        }
+    }
+    let mut ranks = vec![];
+    for rx in small {
+        let r = rx.recv().expect("batcher reply")?;
+        if let Ok(fastlr::coordinator::job::JobOutcome::Rank { rank, .. }) = r.outcome {
+            ranks.push(rank);
+        }
+    }
+    println!("  batched rank estimates: {ranks:?}");
+    println!(
+        "  batcher flushes: {}",
+        batcher.flushes.load(std::sync::atomic::Ordering::Relaxed)
+    );
+    println!("\nservice metrics:\n{}", svc.metrics.render());
+    Ok(())
+}

@@ -1,0 +1,145 @@
+"""AOT lowering: JAX/Pallas entry points -> HLO text artifacts + manifest.
+
+Interchange format is HLO *text* (NOT serialized HloModuleProto): jax >= 0.5
+emits protos with 64-bit instruction ids that the xla crate's bundled
+xla_extension 0.5.1 rejects; the text parser reassigns ids cleanly (see
+/opt/xla-example/README.md). Every entry point returns a tuple and is
+lowered with return_tuple=True; the rust side unwraps with to_tuple1/N.
+
+Run once via `make artifacts`:
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Writes `<name>.hlo.txt` per entry plus `manifest.tsv` with one line per
+artifact:  name <TAB> file <TAB> in_specs <TAB> out_specs
+where a spec list is `;`-joined `dtype[dim,dim,...]` strings (rank-0 is
+`dtype[]`). The rust `runtime::registry` parses exactly this format.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Fixed shapes for the shipped artifact set. The GK shapes match the
+# pjrt_matvec example and the runtime-backend integration test; the RSL
+# shapes are the paper's MNIST(784) x USPS(256) with rank-5 manifold and
+# batch 32.
+GK_M, GK_N, GK_K = 1024, 512, 64
+RSL_B, RSL_D1, RSL_D2 = 32, 784, 256
+
+F32 = jnp.float32
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+def entries():
+    """(name, fn, example_args) for every shipped artifact."""
+    return [
+        (
+            f"gk_matvec_{GK_M}x{GK_N}",
+            model.gk_matvec,
+            (_spec((GK_M, GK_N)), _spec((GK_N,))),
+        ),
+        (
+            f"gk_matvec_t_{GK_M}x{GK_N}",
+            model.gk_matvec_t,
+            (_spec((GK_M, GK_N)), _spec((GK_M,))),
+        ),
+        (
+            f"gk_reorth_{GK_M}x{GK_K}",
+            model.gk_reorth,
+            (_spec((GK_M, GK_K)), _spec((GK_M,))),
+        ),
+        (
+            f"gk_step_{GK_M}x{GK_N}k{GK_K}",
+            model.gk_step,
+            (
+                _spec((GK_M, GK_N)),
+                _spec((GK_N,)),
+                _spec((GK_M,)),
+                _spec(()),
+                _spec((GK_M, GK_K)),
+            ),
+        ),
+        (
+            f"rsl_scores_b{RSL_B}_{RSL_D1}x{RSL_D2}",
+            model.rsl_scores,
+            (
+                _spec((RSL_D1, RSL_D2)),
+                _spec((RSL_B, RSL_D1)),
+                _spec((RSL_B, RSL_D2)),
+            ),
+        ),
+        (
+            f"rsl_batch_grad_b{RSL_B}_{RSL_D1}x{RSL_D2}",
+            model.rsl_batch_grad,
+            (
+                _spec((RSL_D1, RSL_D2)),
+                _spec((RSL_B, RSL_D1)),
+                _spec((RSL_B, RSL_D2)),
+                _spec((RSL_B,)),
+                _spec(()),
+            ),
+        ),
+    ]
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _fmt_specs(specs) -> str:
+    out = []
+    for s in specs:
+        dims = ",".join(str(d) for d in s.shape)
+        out.append(f"{s.dtype}[{dims}]")
+    return ";".join(out)
+
+
+def lower_entry(name, fn, args):
+    """Lower one entry; returns (hlo_text, in_specs_str, out_specs_str)."""
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    out_shapes = jax.eval_shape(fn, *args)
+    # Entries return tuples; normalize.
+    if not isinstance(out_shapes, (tuple, list)):
+        out_shapes = (out_shapes,)
+    return text, _fmt_specs(args), _fmt_specs(out_shapes)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ns = ap.parse_args()
+    os.makedirs(ns.out, exist_ok=True)
+
+    manifest_lines = []
+    for name, fn, args in entries():
+        text, ins, outs = lower_entry(name, fn, args)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(ns.out, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest_lines.append(f"{name}\t{fname}\t{ins}\t{outs}")
+        print(f"  lowered {name}: {len(text)} chars -> {fname}")
+
+    mpath = os.path.join(ns.out, "manifest.tsv")
+    with open(mpath, "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {mpath} ({len(manifest_lines)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

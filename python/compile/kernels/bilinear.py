@@ -1,0 +1,85 @@
+"""L1 Pallas kernels for the RSL application (paper §5).
+
+* `rsl_scores`  — batched bilinear scores f_i = x_i^T W v_i. The batch of
+  rank-1 bilinear forms is expressed as one MXU contraction (X @ W) and a
+  row-wise reduction against V, tiled so W streams through VMEM in
+  (d1-block x d2) panels.
+* `rsl_grad_core` — the batch Euclidean hinge gradient's heavy term
+  (X * g[:,None]).T @ V as a (b x d1)^T (b x d2) MXU contraction tiled over
+  the (d1, d2) output — instead of b rank-1 updates (the GPU-native
+  formulation), which is the hardware adaptation DESIGN.md describes.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _blk(dim, want):
+    b = min(want, dim)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def _scores_kernel(x_ref, w_ref, v_ref, o_ref):
+    """Grid over d1-blocks: accumulate f += sum((X_blk @ W_blk) * V)."""
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    s = jnp.dot(x_ref[...], w_ref[...], preferred_element_type=o_ref.dtype)
+    o_ref[...] += jnp.sum(s * v_ref[...], axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d1",))
+def rsl_scores(w, xb, vb, *, block_d1: int = 256):
+    """f_i = x_i^T W v_i for X (b, d1), W (d1, d2), V (b, d2)."""
+    b, d1 = xb.shape
+    d2 = vb.shape[1]
+    bd1 = _blk(d1, block_d1)
+    grid = (d1 // bd1,)
+    return pl.pallas_call(
+        _scores_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, bd1), lambda j: (0, j)),
+            pl.BlockSpec((bd1, d2), lambda j: (j, 0)),
+            pl.BlockSpec((b, d2), lambda j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((b,), lambda j: (0,)),
+        out_shape=jax.ShapeDtypeStruct((b,), w.dtype),
+        interpret=True,
+    )(xb, w, vb)
+
+
+def _grad_kernel(x_ref, g_ref, v_ref, o_ref):
+    """One (bd1, bd2) output tile: (X_blk * g).T @ V_blk."""
+    xg = x_ref[...] * g_ref[...][:, None]
+    o_ref[...] = jnp.dot(xg.T, v_ref[...], preferred_element_type=o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d1", "block_d2"))
+def rsl_grad_core(xb, g, vb, *, block_d1: int = 256, block_d2: int = 256):
+    """Gr_core = (X * g[:,None]).T @ V — (d1, d2) from (b, d1) and (b, d2)."""
+    b, d1 = xb.shape
+    d2 = vb.shape[1]
+    bd1 = _blk(d1, block_d1)
+    bd2 = _blk(d2, block_d2)
+    grid = (d1 // bd1, d2 // bd2)
+    return pl.pallas_call(
+        _grad_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, bd1), lambda i, j: (0, i)),
+            pl.BlockSpec((b,), lambda i, j: (0,)),
+            pl.BlockSpec((b, bd2), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bd1, bd2), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((d1, d2), xb.dtype),
+        interpret=True,
+    )(xb, g, vb)

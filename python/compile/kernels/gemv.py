@@ -1,0 +1,89 @@
+"""L1 Pallas kernels: tiled GEMV and GEMV^T — the Golub-Kahan hot path.
+
+TPU shaping (DESIGN.md §Hardware-Adaptation): the matrix is streamed
+HBM→VMEM in (block_m x block_n) tiles expressed by BlockSpec; the vector
+operand stays VMEM-resident; partial products accumulate in the output
+block across the contraction grid dimension. Block sizes default to
+multiples of the (8, 128) VPU lanes. `interpret=True` everywhere — the CPU
+PJRT plugin cannot execute Mosaic custom-calls (see /opt/xla-example).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _blk(dim, want):
+    """Largest divisor of `dim` that is <= want (keeps grids exact)."""
+    b = min(want, dim)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def _gemv_kernel(a_ref, x_ref, o_ref):
+    """One (bm, bn) tile: o[bm] += A[bm, bn] @ x[bn]."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += a_ref[...] @ x_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
+def gemv(a, x, *, block_m: int = 256, block_n: int = 512):
+    """y = A @ x with a VMEM-tiled Pallas kernel."""
+    m, n = a.shape
+    bm = _blk(m, block_m)
+    bn = _blk(n, block_n)
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _gemv_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), a.dtype),
+        interpret=True,
+    )(a, x)
+
+
+def _gemv_t_kernel(a_ref, y_ref, o_ref):
+    """One (bm, bn) tile: o[bn] += A[bm, bn].T @ y[bm]."""
+    i = pl.program_id(1)  # contraction dim is the second grid axis
+
+    @pl.when(i == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += a_ref[...].T @ y_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
+def gemv_t(a, y, *, block_m: int = 512, block_n: int = 256):
+    """x = A.T @ y with a VMEM-tiled Pallas kernel.
+
+    The grid iterates output blocks (axis 0) then contraction blocks
+    (axis 1) so the accumulator block stays resident.
+    """
+    m, n = a.shape
+    bm = _blk(m, block_m)
+    bn = _blk(n, block_n)
+    grid = (n // bn, m // bm)
+    return pl.pallas_call(
+        _gemv_t_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda j, i: (i, j)),
+            pl.BlockSpec((bm,), lambda j, i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda j, i: (j,)),
+        out_shape=jax.ShapeDtypeStruct((n,), a.dtype),
+        interpret=True,
+    )(a, y)

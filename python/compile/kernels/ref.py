@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel (the CORE correctness signal).
+
+Each function here is the mathematical definition the corresponding kernel
+in this package must reproduce; `python/tests/test_kernels.py` asserts
+allclose between the two across shape/dtype sweeps (hypothesis-driven).
+"""
+
+import jax.numpy as jnp
+
+
+def gemv(a, x):
+    """y = A @ x."""
+    return a @ x
+
+
+def gemv_t(a, y):
+    """x = A.T @ y."""
+    return a.T @ y
+
+
+def gemm(a, b):
+    """C = A @ B."""
+    return a @ b
+
+
+def reorth(q, w):
+    """One classical Gram-Schmidt pass: w - Q @ (Q.T @ w).
+
+    This is lines 6/13 of the paper's Algorithm 1.
+    """
+    return w - q @ (q.T @ w)
+
+
+def rsl_scores(w, xb, vb):
+    """Bilinear scores f_i = x_i^T W v_i for a batch (paper eq. 19)."""
+    return jnp.sum((xb @ w) * vb, axis=1)
+
+
+def hinge_loss(f, y):
+    """max(0, 1 - y*f)."""
+    return jnp.maximum(0.0, 1.0 - y * f)
+
+
+def rsl_batch_grad(w, xb, vb, y, lam):
+    """Euclidean batch gradient of the regularized hinge objective.
+
+    Gr = 1/b * sum_i hinge'(f_i, y_i) x_i v_i^T + lam * W
+    hinge'(f, y) = -y on margin violation else 0.
+    Returns (Gr, mean_loss). Mirrors rust `rsl::model::batch_euclidean_gradient`.
+    """
+    f = rsl_scores(w, xb, vb)
+    loss = jnp.mean(hinge_loss(f, y))
+    g = jnp.where(1.0 - y * f > 0.0, -y, 0.0) / xb.shape[0]
+    gr = (xb * g[:, None]).T @ vb + lam * w
+    return gr, loss

@@ -1,0 +1,67 @@
+"""L1 Pallas kernel: fused classical Gram-Schmidt reorthogonalization.
+
+Computes `w - Q @ (Q.T @ w)` — lines 6/13 of the paper's Algorithm 1 — as
+TWO MXU contractions inside ONE pallas_call: the grid walks row-blocks of
+Q twice (phase 0 accumulates c = Q.T @ w into a small VMEM-resident
+coefficient vector, phase 1 emits w - Q @ c). Q is streamed from HBM
+exactly twice and w once, the memory lower bound for this op. The
+coefficient vector is carried as a second kernel output (k floats) rather
+than scratch so the same code runs under interpret=True.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _blk(dim, want):
+    b = min(want, dim)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def _reorth_kernel(q_ref, w_ref, o_ref, c_ref):
+    """Grid = (2, m/bm): phase 0 builds c = Q^T w, phase 1 o = w - Q c."""
+    phase = pl.program_id(0)
+    i = pl.program_id(1)
+
+    @pl.when((phase == 0) & (i == 0))
+    def _init_c():
+        c_ref[...] = jnp.zeros_like(c_ref)
+
+    @pl.when(phase == 0)
+    def _accumulate():
+        c_ref[...] += q_ref[...].T @ w_ref[...]
+
+    @pl.when(phase == 1)
+    def _apply():
+        o_ref[...] = w_ref[...] - q_ref[...] @ c_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_m",))
+def reorth(q, w, *, block_m: int = 512):
+    """One CGS pass `w - Q (Q^T w)` for Q of shape (m, k), w of shape (m,)."""
+    m, k = q.shape
+    bm = _blk(m, block_m)
+    grid = (2, m // bm)
+    out, _c = pl.pallas_call(
+        _reorth_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda p, i: (i, 0)),
+            pl.BlockSpec((bm,), lambda p, i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm,), lambda p, i: (i,)),
+            pl.BlockSpec((k,), lambda p, i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m,), q.dtype),
+            jax.ShapeDtypeStruct((k,), q.dtype),
+        ],
+        interpret=True,
+    )(q, w)
+    return out

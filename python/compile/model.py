@@ -1,0 +1,67 @@
+"""L2 — JAX compute graphs for the paper's system, calling the L1 Pallas
+kernels. Build-time only: `aot.py` lowers each entry point once to HLO
+text; the rust coordinator executes the compiled artifacts on the request
+path and Python is never invoked again.
+
+Entry points (all f32, fixed shapes chosen by aot.py):
+
+* `gk_matvec` / `gk_matvec_t` — the Golub-Kahan hot products A@p / A.T@q
+  (Algorithm 1 lines 5/12).
+* `gk_reorth` — one classical Gram-Schmidt pass (lines 6/13).
+* `gk_step` — a fused Algorithm-1 iteration half: A@p - alpha*q followed
+  by reorthogonalization (what the rust `runtime::backend` calls when an
+  artifact with matching shape exists).
+* `rsl_scores` / `rsl_batch_grad` — the RSL application's forward scores
+  and Euclidean batch gradient (Algorithm 4 lines 5-6).
+"""
+
+import jax.numpy as jnp
+
+from .kernels import bilinear as _bilinear
+from .kernels import gemv as _gemv
+from .kernels import reorth as _reorth
+
+
+def gk_matvec(a, p):
+    """A @ p (Algorithm 1 line 5 product)."""
+    return (_gemv.gemv(a, p),)
+
+
+def gk_matvec_t(a, q):
+    """A.T @ q (Algorithm 1 line 12 product)."""
+    return (_gemv.gemv_t(a, q),)
+
+
+def gk_reorth(q_basis, w):
+    """w - Q (Q^T w): one CGS pass (Algorithm 1 lines 6/13)."""
+    return (_reorth.reorth(q_basis, w),)
+
+
+def gk_step(a, p_j, q_j, alpha_j, q_basis):
+    """Fused Algorithm 1 lines 5-6: candidate q_{k'+1} before normalization.
+
+    q_new = A @ p_j - alpha_j * q_j, then one reorthogonalization pass
+    against the current basis Q (zero columns beyond k' are harmless:
+    they contribute nothing to Q Q^T w).
+    """
+    q_new = _gemv.gemv(a, p_j) - alpha_j * q_j
+    return (_reorth.reorth(q_basis, q_new),)
+
+
+def rsl_scores(w, xb, vb):
+    """Batched bilinear scores (paper eq. 19)."""
+    return (_bilinear.rsl_scores(w, xb, vb),)
+
+
+def rsl_batch_grad(w, xb, vb, y, lam):
+    """Batch Euclidean gradient of the regularized hinge objective.
+
+    Returns (Gr, mean_loss); mirrors `ref.rsl_batch_grad` and the rust
+    native engine exactly (same sign conventions).
+    """
+    f = _bilinear.rsl_scores(w, xb, vb)
+    margin = 1.0 - y * f
+    loss = jnp.mean(jnp.maximum(0.0, margin))
+    g = jnp.where(margin > 0.0, -y, 0.0) / xb.shape[0]
+    gr = _bilinear.rsl_grad_core(xb, g, vb) + lam * w
+    return gr, loss

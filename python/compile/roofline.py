@@ -1,0 +1,157 @@
+"""L1 §Perf: analytic VMEM-footprint / roofline model for the Pallas kernels.
+
+interpret=True gives CPU-numpy timings that say nothing about TPU
+performance, so (per DESIGN.md §Hardware-Adaptation) the L1 perf evidence
+is *structural*: for each kernel at its shipped artifact shape we compute,
+from the BlockSpec tiling itself,
+
+  * VMEM footprint per grid step (must sit well under ~16 MiB/core),
+  * bytes moved HBM<->VMEM over the whole grid,
+  * FLOPs, arithmetic intensity (FLOP/byte),
+  * the roofline-implied bound on a v4-like core
+    (275 TFLOP/s bf16 MXU, 1.2 TB/s HBM) and which wall binds.
+
+Run: cd python && python -m compile.roofline       (writes ../results/l1_roofline.csv)
+"""
+
+import csv
+import os
+from dataclasses import dataclass
+
+# v4-ish single-core numbers; only ratios matter for "which wall binds".
+PEAK_FLOPS = 275e12  # bf16 MXU
+PEAK_BW = 1.2e12     # HBM bytes/s
+VMEM_BYTES = 16 * 1024 * 1024
+
+
+@dataclass
+class KernelModel:
+    name: str
+    # per-grid-step VMEM residency (bytes)
+    vmem_per_step: int
+    # totals over the full grid
+    hbm_bytes: int
+    flops: int
+    grid: tuple
+
+    @property
+    def intensity(self) -> float:
+        return self.flops / max(self.hbm_bytes, 1)
+
+    @property
+    def bound(self) -> str:
+        # ridge point of the roofline
+        return "compute" if self.intensity > PEAK_FLOPS / PEAK_BW else "memory"
+
+    @property
+    def time_bound_us(self) -> float:
+        return max(self.flops / PEAK_FLOPS, self.hbm_bytes / PEAK_BW) * 1e6
+
+
+def _blk(dim, want):
+    b = min(want, dim)
+    while dim % b != 0:
+        b -= 1
+    return b
+
+
+def gemv_model(m, n, bm=256, bn=512, dtype=4):
+    bm, bn = _blk(m, bm), _blk(n, bn)
+    grid = (m // bm, n // bn)
+    # per step: A tile + x block + y block
+    vmem = (bm * bn + bn + bm) * dtype
+    # A streamed once; x re-read per row-block; y written once per column
+    # pass (accumulated in place).
+    hbm = (m * n + (m // bm) * n + m) * dtype
+    return KernelModel("gemv", vmem, hbm, 2 * m * n, grid)
+
+
+def gemv_t_model(m, n, bm=512, bn=256, dtype=4):
+    bm, bn = _blk(m, bm), _blk(n, bn)
+    grid = (n // bn, m // bm)
+    vmem = (bm * bn + bm + bn) * dtype
+    hbm = (m * n + (n // bn) * m + n) * dtype
+    return KernelModel("gemv_t", vmem, hbm, 2 * m * n, grid)
+
+
+def reorth_model(m, k, bm=512, dtype=4):
+    bm = _blk(m, bm)
+    grid = (2, m // bm)
+    vmem = (bm * k + bm + k) * dtype
+    # Q streamed twice (phase 0 + phase 1), w twice, out once, c negligible.
+    hbm = (2 * m * k + 3 * m) * dtype
+    return KernelModel("reorth", vmem, hbm, 4 * m * k, grid)
+
+
+def gemm_model(m, k, n, bm=128, bn=128, bk=256, dtype=4):
+    bm, bn, bk = _blk(m, bm), _blk(n, bn), _blk(k, bk)
+    grid = (m // bm, n // bn, k // bk)
+    vmem = (bm * bk + bk * bn + bm * bn) * dtype
+    # A re-read per n-block, B per m-block, C written once.
+    hbm = ((n // bn) * m * k + (m // bm) * k * n + m * n) * dtype
+    return KernelModel("gemm", vmem, hbm, 2 * m * k * n, grid)
+
+
+def rsl_scores_model(b, d1, d2, bd1=256, dtype=4):
+    bd1 = _blk(d1, bd1)
+    grid = (d1 // bd1,)
+    vmem = (b * bd1 + bd1 * d2 + b * d2 + b) * dtype
+    hbm = (b * d1 + d1 * d2 + (d1 // bd1) * b * d2 + b) * dtype
+    return KernelModel("rsl_scores", vmem, hbm, 2 * b * d1 * d2, grid)
+
+
+def rsl_grad_model(b, d1, d2, bd1=256, bd2=256, dtype=4):
+    bd1, bd2 = _blk(d1, bd1), _blk(d2, bd2)
+    grid = (d1 // bd1, d2 // bd2)
+    vmem = (b * bd1 + b + b * bd2 + bd1 * bd2) * dtype
+    hbm = ((d2 // bd2) * b * d1 + (d1 // bd1) * b * d2 + d1 * d2) * dtype
+    return KernelModel("rsl_grad_core", vmem, hbm, 2 * b * d1 * d2 + b * d1, grid)
+
+
+def models():
+    # Shapes = the shipped artifact shapes (see aot.py).
+    return [
+        gemv_model(1024, 512),
+        gemv_t_model(1024, 512),
+        reorth_model(1024, 64),
+        gemm_model(1024, 1024, 1024),
+        rsl_scores_model(32, 784, 256),
+        rsl_grad_model(32, 784, 256),
+    ]
+
+
+def main() -> None:
+    rows = []
+    print(f"{'kernel':<14}{'grid':<14}{'VMEM/step':<12}{'AI (F/B)':<10}"
+          f"{'bound':<9}{'roofline us':<12}")
+    for km in models():
+        assert km.vmem_per_step < VMEM_BYTES, f"{km.name} busts VMEM"
+        print(
+            f"{km.name:<14}{str(km.grid):<14}"
+            f"{km.vmem_per_step / 1024:>8.1f} KiB "
+            f"{km.intensity:>8.2f}  {km.bound:<9}{km.time_bound_us:>10.2f}"
+        )
+        rows.append(
+            dict(
+                kernel=km.name,
+                grid=str(km.grid),
+                vmem_per_step_bytes=km.vmem_per_step,
+                hbm_bytes=km.hbm_bytes,
+                flops=km.flops,
+                arithmetic_intensity=round(km.intensity, 3),
+                bound=km.bound,
+                roofline_time_us=round(km.time_bound_us, 3),
+            )
+        )
+    out_dir = os.path.join(os.path.dirname(__file__), "..", "..", "results")
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, "l1_roofline.csv")
+    with open(path, "w", newline="") as f:
+        w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+        w.writeheader()
+        w.writerows(rows)
+    print(f"\nwrote {os.path.normpath(path)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,167 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle in ref.py.
+
+Hypothesis sweeps shapes (and dtypes where the MXU contract allows bf16) so
+the BlockSpec tiling logic is exercised across non-divisible, degenerate
+and large-block shapes.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import bilinear, gemm, gemv, reorth, ref
+
+RNG = np.random.default_rng(12345)
+
+
+def _arr(shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.normal(size=shape) * scale, dtype)
+
+
+def _close(a, b, tol=1e-4):
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=tol, atol=tol)
+
+
+# ---------------------------------------------------------------- gemv
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 300),
+    n=st.integers(1, 300),
+    bm=st.sampled_from([8, 64, 256]),
+    bn=st.sampled_from([8, 128, 512]),
+)
+def test_gemv_matches_ref(m, n, bm, bn):
+    a = _arr((m, n))
+    x = _arr((n,))
+    _close(gemv.gemv(a, x, block_m=bm, block_n=bn), ref.gemv(a, x))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 300),
+    n=st.integers(1, 300),
+    bm=st.sampled_from([8, 64, 512]),
+    bn=st.sampled_from([8, 128, 256]),
+)
+def test_gemv_t_matches_ref(m, n, bm, bn):
+    a = _arr((m, n))
+    y = _arr((m,))
+    _close(gemv.gemv_t(a, y, block_m=bm, block_n=bn), ref.gemv_t(a, y))
+
+
+def test_gemv_prime_dims():
+    # 127 and 251 are prime: exercises the divisor-search fallback to 1.
+    a = _arr((127, 251))
+    x = _arr((251,))
+    y = _arr((127,))
+    _close(gemv.gemv(a, x), ref.gemv(a, x))
+    _close(gemv.gemv_t(a, y), ref.gemv_t(a, y))
+
+
+# ---------------------------------------------------------------- gemm
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(1, 128),
+    k=st.integers(1, 128),
+    n=st.integers(1, 128),
+)
+def test_gemm_matches_ref(m, k, n):
+    a = _arr((m, k))
+    b = _arr((k, n))
+    _close(gemm.gemm(a, b), ref.gemm(a, b), tol=1e-3)
+
+
+def test_gemm_bf16_accumulates_in_f32():
+    a = _arr((64, 64), jnp.bfloat16)
+    b = _arr((64, 64), jnp.bfloat16)
+    out = gemm.gemm(a, b)
+    assert out.dtype == jnp.float32
+    # bf16 inputs: loose tolerance band.
+    want = jnp.asarray(a, jnp.float32) @ jnp.asarray(b, jnp.float32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=0.1, atol=0.5)
+
+
+def test_gemm_block_sweep():
+    a = _arr((96, 80))
+    b = _arr((80, 112))
+    want = ref.gemm(a, b)
+    for bm, bn, bk in [(8, 8, 8), (32, 16, 80), (96, 112, 40)]:
+        _close(gemm.gemm(a, b, block_m=bm, block_n=bn, block_k=bk), want, tol=1e-3)
+
+
+# ---------------------------------------------------------------- reorth
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(4, 400),
+    k=st.integers(1, 32),
+    bm=st.sampled_from([16, 128, 512]),
+)
+def test_reorth_matches_ref(m, k, bm):
+    if k > m:
+        k = m
+    q_full, _ = np.linalg.qr(RNG.normal(size=(m, k)))
+    q = jnp.asarray(q_full, jnp.float32)
+    w = _arr((m,))
+    _close(reorth.reorth(q, w, block_m=bm), ref.reorth(q, w))
+
+
+def test_reorth_orthogonal_output():
+    # After one CGS pass against an orthonormal Q, Q^T w ~ 0.
+    m, k = 256, 16
+    q = jnp.asarray(np.linalg.qr(RNG.normal(size=(m, k)))[0], jnp.float32)
+    w = _arr((m,))
+    out = reorth.reorth(q, w)
+    resid = np.abs(np.asarray(q.T @ out)).max()
+    assert resid < 1e-4, resid
+
+
+def test_reorth_zero_basis_is_identity():
+    # Zero columns contribute nothing (the gk_step padding contract).
+    q = jnp.zeros((128, 8), jnp.float32)
+    w = _arr((128,))
+    _close(reorth.reorth(q, w), w)
+
+
+# ---------------------------------------------------------------- bilinear
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 48),
+    d1=st.integers(2, 256),
+    d2=st.integers(2, 200),
+)
+def test_rsl_scores_matches_ref(b, d1, d2):
+    w = _arr((d1, d2), scale=0.1)
+    xb = _arr((b, d1))
+    vb = _arr((b, d2))
+    _close(bilinear.rsl_scores(w, xb, vb), ref.rsl_scores(w, xb, vb), tol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 48),
+    d1=st.integers(2, 256),
+    d2=st.integers(2, 200),
+)
+def test_rsl_grad_core_matches_ref(b, d1, d2):
+    xb = _arr((b, d1))
+    vb = _arr((b, d2))
+    g = _arr((b,))
+    want = (xb * g[:, None]).T @ vb
+    _close(bilinear.rsl_grad_core(xb, g, vb), want, tol=1e-3)
+
+
+def test_paper_shapes_exactly():
+    # The shipped artifact shapes: b=32, d1=784, d2=256.
+    w = _arr((784, 256), scale=0.05)
+    xb = _arr((32, 784))
+    vb = _arr((32, 256))
+    _close(bilinear.rsl_scores(w, xb, vb), ref.rsl_scores(w, xb, vb), tol=1e-3)

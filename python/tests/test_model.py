@@ -1,0 +1,91 @@
+"""L2 correctness: model entry points vs ref.py, shapes, and the hinge
+gradient against jax autodiff (the strongest oracle available)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels import ref
+
+RNG = np.random.default_rng(777)
+
+
+def _arr(shape, scale=1.0):
+    return jnp.asarray(RNG.normal(size=shape) * scale, jnp.float32)
+
+
+def test_gk_matvec_entries():
+    a = _arr((128, 96))
+    p = _arr((96,))
+    q = _arr((128,))
+    (out,) = model.gk_matvec(a, p)
+    np.testing.assert_allclose(out, ref.gemv(a, p), rtol=1e-4, atol=1e-4)
+    (out_t,) = model.gk_matvec_t(a, q)
+    np.testing.assert_allclose(out_t, ref.gemv_t(a, q), rtol=1e-4, atol=1e-4)
+
+
+def test_gk_step_fuses_lines_5_and_6():
+    m, n, k = 128, 96, 8
+    a = _arr((m, n))
+    p_j = _arr((n,))
+    q_j = _arr((m,))
+    alpha = jnp.float32(1.7)
+    q_basis = jnp.asarray(np.linalg.qr(RNG.normal(size=(m, k)))[0], jnp.float32)
+    (got,) = model.gk_step(a, p_j, q_j, alpha, q_basis)
+    want = ref.reorth(q_basis, ref.gemv(a, p_j) - alpha * q_j)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_gk_step_tolerates_zero_padded_basis():
+    # The rust runtime pads Q with zero columns up to the artifact's k.
+    m, n, k = 128, 96, 8
+    a = _arr((m, n))
+    p_j = _arr((n,))
+    q_j = _arr((m,))
+    alpha = jnp.float32(0.5)
+    q2 = np.linalg.qr(RNG.normal(size=(m, 3)))[0]
+    padded = np.zeros((m, k), np.float32)
+    padded[:, :3] = q2
+    (got,) = model.gk_step(a, p_j, q_j, alpha, jnp.asarray(padded))
+    (want,) = model.gk_step(a, p_j, q_j, alpha, jnp.asarray(q2, jnp.float32))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_rsl_batch_grad_matches_ref():
+    w = _arr((784, 256), 0.05)
+    xb = _arr((32, 784))
+    vb = _arr((32, 256))
+    y = jnp.asarray(RNG.choice([-1.0, 1.0], size=32), jnp.float32)
+    lam = jnp.float32(1e-3)
+    gr, loss = model.rsl_batch_grad(w, xb, vb, y, lam)
+    gr_ref, loss_ref = ref.rsl_batch_grad(w, xb, vb, y, lam)
+    np.testing.assert_allclose(loss, loss_ref, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(gr, gr_ref, rtol=1e-3, atol=1e-4)
+
+
+def test_rsl_grad_matches_autodiff():
+    # Hinge is non-smooth at the kink; keep margins away from it.
+    w = _arr((64, 48), 0.01)
+    xb = _arr((16, 64))
+    vb = _arr((16, 48))
+    y = jnp.asarray(RNG.choice([-1.0, 1.0], size=16), jnp.float32)
+    lam = 1e-2
+
+    def objective(wm):
+        f = ref.rsl_scores(wm, xb, vb)
+        return jnp.mean(ref.hinge_loss(f, y)) + 0.5 * lam * jnp.sum(wm * wm) / 1.0
+
+    # Note: our Gr uses lam*W (derivative of 0.5*lam*||W||^2).
+    auto = jax.grad(objective)(w)
+    gr, _ = model.rsl_batch_grad(w, xb, vb, y, jnp.float32(lam))
+    np.testing.assert_allclose(np.asarray(gr), np.asarray(auto), rtol=1e-3, atol=1e-4)
+
+
+def test_rsl_scores_entry_shape():
+    w = _arr((784, 256), 0.05)
+    xb = _arr((32, 784))
+    vb = _arr((32, 256))
+    (f,) = model.rsl_scores(w, xb, vb)
+    assert f.shape == (32,)
+    np.testing.assert_allclose(f, ref.rsl_scores(w, xb, vb), rtol=1e-3, atol=1e-3)

@@ -1,0 +1,34 @@
+"""Roofline model sanity: every shipped kernel fits VMEM and the model's
+byte/flop accounting is self-consistent."""
+
+from compile import roofline
+
+
+def test_all_kernels_fit_vmem():
+    for km in roofline.models():
+        assert km.vmem_per_step < roofline.VMEM_BYTES, km.name
+
+
+def test_intensity_positive_and_bounds_sane():
+    for km in roofline.models():
+        assert km.intensity > 0
+        assert km.bound in ("compute", "memory")
+        assert km.time_bound_us > 0
+
+
+def test_memory_bound_kernels():
+    by_name = {km.name: km for km in roofline.models()}
+    # The GK hot products are memory-bound by construction (AI ~ 0.5).
+    assert by_name["gemv"].bound == "memory"
+    assert by_name["gemv_t"].bound == "memory"
+    assert by_name["reorth"].bound == "memory"
+    # gemm has far higher arithmetic intensity than the gemv family.
+    assert by_name["gemm"].intensity > 10 * by_name["gemv"].intensity
+
+
+def test_grid_covers_shape():
+    gm = roofline.gemv_model(1024, 512)
+    assert gm.grid[0] * gm.grid[1] >= 1
+    # exact divisor tiling
+    rm = roofline.reorth_model(1024, 64)
+    assert rm.grid == (2, 2)

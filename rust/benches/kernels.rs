@@ -1,0 +1,179 @@
+//! Microbenchmarks of the L3 hot-path kernels (GEMV/GEMVᵀ/GEMM/reorth and
+//! the GK loop) with roofline context — the §Perf evidence in
+//! EXPERIMENTS.md. Also runs the batching ablation (service with/without
+//! the micro-batcher) and the BᵀB-eig ablation (tridiagonal fast path vs
+//! dense eig), the two design choices DESIGN.md calls out.
+
+use fastlr::bench_harness::{time_reps, Table};
+use fastlr::coordinator::batcher::{Batcher, BatcherConfig};
+use fastlr::coordinator::{
+    AccuracyClass, FactorizationService, JobRequest, JobSpec, ServiceConfig,
+};
+use fastlr::data::synth::low_rank_gaussian;
+use fastlr::krylov::gk::{gk_bidiagonalize, GkOptions};
+use fastlr::linalg::{eig::sym_eig, tridiag::btb_eig, Matrix};
+use fastlr::rng::Pcg64;
+use std::sync::Arc;
+
+fn gb_per_s(bytes: usize, secs: f64) -> f64 {
+    bytes as f64 / secs / 1e9
+}
+
+fn gflops(flops: usize, secs: f64) -> f64 {
+    flops as f64 / secs / 1e9
+}
+
+fn main() {
+    let mut rng = Pcg64::seed_from_u64(0xBE7C);
+    let mut table = Table::new(
+        "Kernel microbenchmarks (median of reps)",
+        &["kernel", "shape", "time (ms)", "GB/s", "GFLOP/s"],
+    );
+
+    // --- GEMV / GEMV^T: the GK hot products (memory-bound). ---
+    for (m, n) in [(2000usize, 2000usize), (4096, 4096)] {
+        let a = Matrix::gaussian(m, n, &mut rng);
+        let x: Vec<f64> = (0..n).map(|i| (i as f64).sin()).collect();
+        let y: Vec<f64> = (0..m).map(|i| (i as f64).cos()).collect();
+        let bytes = m * n * 8;
+        let flops = 2 * m * n;
+        let (t, _) = time_reps(9, || a.matvec(&x).unwrap());
+        table.push_row(vec![
+            "gemv".into(),
+            format!("{m}x{n}"),
+            format!("{:.3}", t.median_secs() * 1e3),
+            format!("{:.2}", gb_per_s(bytes, t.median_secs())),
+            format!("{:.2}", gflops(flops, t.median_secs())),
+        ]);
+        let (tt, _) = time_reps(9, || a.matvec_t(&y).unwrap());
+        table.push_row(vec![
+            "gemv_t".into(),
+            format!("{m}x{n}"),
+            format!("{:.3}", tt.median_secs() * 1e3),
+            format!("{:.2}", gb_per_s(bytes, tt.median_secs())),
+            format!("{:.2}", gflops(flops, tt.median_secs())),
+        ]);
+    }
+
+    // --- GEMM (compute-bound). ---
+    for s in [512usize, 1024] {
+        let a = Matrix::gaussian(s, s, &mut rng);
+        let b = Matrix::gaussian(s, s, &mut rng);
+        let flops = 2 * s * s * s;
+        let (t, _) = time_reps(5, || a.matmul(&b).unwrap());
+        table.push_row(vec![
+            "gemm".into(),
+            format!("{s}x{s}x{s}"),
+            format!("{:.3}", t.median_secs() * 1e3),
+            "-".into(),
+            format!("{:.2}", gflops(flops, t.median_secs())),
+        ]);
+    }
+
+    // --- Full GK loop (Algorithm 1) at bench scale. ---
+    let a = low_rank_gaussian(4000, 2000, 100, &mut rng);
+    let (t, gk) = time_reps(3, || {
+        gk_bidiagonalize(&a, &GkOptions { k: 2000, eps: 1e-8, ..Default::default() }).unwrap()
+    });
+    // ~2 matvec passes/iter over the matrix.
+    let bytes = 2 * gk.k_used * 4000 * 2000 * 8;
+    table.push_row(vec![
+        "gk loop".into(),
+        format!("4000x2000 k'={}", gk.k_used),
+        format!("{:.3}", t.median_secs() * 1e3),
+        format!("{:.2}", gb_per_s(bytes, t.median_secs())),
+        "-".into(),
+    ]);
+    println!("{}", table.render_markdown());
+    table.write_csv("kernels").expect("csv");
+
+    // --- Ablation 1: B^T B eig — tridiagonal QL vs dense sym_eig. ---
+    let mut ab = Table::new(
+        "Ablation — eig of B^T B: tridiagonal fast path vs dense",
+        &["k'", "tridiag (ms)", "dense (ms)", "speedup"],
+    );
+    for k in [100usize, 300, 600] {
+        let alpha: Vec<f64> = (0..k).map(|i| 1.0 + ((i * 7) % 13) as f64).collect();
+        let beta: Vec<f64> = (0..k).map(|i| 0.3 + ((i * 5) % 11) as f64 * 0.1).collect();
+        let (t_tri, _) = time_reps(5, || btb_eig(&alpha, &beta).unwrap());
+        // Dense route (what the paper's Algorithm 2 line 2 literally says).
+        let mut b = Matrix::zeros(k + 1, k);
+        for i in 0..k {
+            b[(i, i)] = alpha[i];
+            b[(i + 1, i)] = beta[i];
+        }
+        let btb = b.matmul_tn(&b).unwrap();
+        let (t_dense, _) = time_reps(3, || sym_eig(&btb).unwrap());
+        ab.push_row(vec![
+            k.to_string(),
+            format!("{:.3}", t_tri.median_secs() * 1e3),
+            format!("{:.3}", t_dense.median_secs() * 1e3),
+            format!("{:.1}x", t_dense.median_secs() / t_tri.median_secs()),
+        ]);
+    }
+    println!("{}", ab.render_markdown());
+    ab.write_csv("ablation_btb_eig").expect("csv");
+
+    // --- Ablation 2: micro-batching overhead for small-job swarms. ---
+    let svc = Arc::new(
+        FactorizationService::new(ServiceConfig {
+            workers: 4,
+            queue_depth: 64,
+            ..Default::default()
+        })
+        .unwrap(),
+    );
+    let jobs = 24usize;
+    let mats: Vec<Arc<Matrix>> = (0..jobs)
+        .map(|_| Arc::new(low_rank_gaussian(100, 80, 4, &mut rng)))
+        .collect();
+    let (t_direct, _) = time_reps(3, || {
+        let hs: Vec<_> = mats
+            .iter()
+            .map(|m| {
+                svc.submit(JobRequest {
+                    spec: JobSpec::PartialSvd { matrix: m.clone(), r: 4 },
+                    accuracy: AccuracyClass::Balanced,
+                })
+                .unwrap()
+            })
+            .collect();
+        for h in hs {
+            h.wait().unwrap();
+        }
+    });
+    let batcher = Batcher::new(
+        svc.clone(),
+        BatcherConfig { max_batch: 8, max_delay: std::time::Duration::from_millis(2) },
+    );
+    let (t_batched, _) = time_reps(3, || {
+        let rs: Vec<_> = mats
+            .iter()
+            .map(|m| {
+                batcher.submit(JobRequest {
+                    spec: JobSpec::PartialSvd { matrix: m.clone(), r: 4 },
+                    accuracy: AccuracyClass::Balanced,
+                })
+            })
+            .collect();
+        for r in rs {
+            r.recv().unwrap().unwrap();
+        }
+    });
+    let mut svc_table = Table::new(
+        "Ablation — service dispatch: direct vs micro-batched (24 small jobs)",
+        &["mode", "total (ms)", "per-job (us)"],
+    );
+    svc_table.push_row(vec![
+        "direct".into(),
+        format!("{:.3}", t_direct.median_secs() * 1e3),
+        format!("{:.1}", t_direct.median_secs() * 1e6 / jobs as f64),
+    ]);
+    svc_table.push_row(vec![
+        "batched".into(),
+        format!("{:.3}", t_batched.median_secs() * 1e3),
+        format!("{:.1}", t_batched.median_secs() * 1e6 / jobs as f64),
+    ]);
+    println!("{}", svc_table.render_markdown());
+    svc_table.write_csv("ablation_batching").expect("csv");
+}

@@ -1,0 +1,13 @@
+//! Bench target regenerating the paper's table1a (see experiments::).
+//! Scale via FASTLR_BENCH_SCALE=smoke|paper (default paper).
+use fastlr::experiments::{emit, run, Scale};
+
+fn main() {
+    let scale = std::env::var("FASTLR_BENCH_SCALE")
+        .ok()
+        .and_then(|s| Scale::parse(&s))
+        .unwrap_or(Scale::Paper);
+    eprintln!("== table1a (scale {scale:?}) ==");
+    let tables = run("table1a", scale).expect("experiment");
+    emit(&tables).expect("emit");
+}

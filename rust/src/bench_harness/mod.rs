@@ -1,0 +1,246 @@
+//! Benchmark harness: timing statistics + table rendering.
+//!
+//! The vendored crate set has no criterion, so this module provides the
+//! same discipline by hand: warmup, N samples, median + MAD, and table
+//! output matching the paper's row format. Every `rust/benches/*.rs`
+//! target and `fastlr exp <name>` goes through here, and each run also
+//! writes a CSV under `results/` for EXPERIMENTS.md.
+
+use std::time::{Duration, Instant};
+
+/// Timing statistics over repeated runs.
+#[derive(Debug, Clone)]
+pub struct Timing {
+    /// All samples, sorted ascending.
+    pub samples: Vec<Duration>,
+}
+
+impl Timing {
+    /// Median sample.
+    pub fn median(&self) -> Duration {
+        if self.samples.is_empty() {
+            return Duration::ZERO;
+        }
+        self.samples[self.samples.len() / 2]
+    }
+
+    /// Median absolute deviation (spread diagnostic).
+    pub fn mad(&self) -> Duration {
+        if self.samples.len() < 2 {
+            return Duration::ZERO;
+        }
+        let med = self.median();
+        let mut devs: Vec<Duration> = self
+            .samples
+            .iter()
+            .map(|&s| if s > med { s - med } else { med - s })
+            .collect();
+        devs.sort();
+        devs[devs.len() / 2]
+    }
+
+    /// Median as fractional seconds (table cells).
+    pub fn median_secs(&self) -> f64 {
+        self.median().as_secs_f64()
+    }
+}
+
+/// Run `f` `reps` times (after one warmup) and collect timings.
+/// The closure's output is returned from the *last* rep so callers can
+/// also validate results.
+pub fn time_reps<T>(reps: usize, mut f: impl FnMut() -> T) -> (Timing, T) {
+    assert!(reps >= 1);
+    // Warmup (not recorded).
+    let mut out = f();
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        out = f();
+        samples.push(t0.elapsed());
+    }
+    samples.sort();
+    (Timing { samples }, out)
+}
+
+/// Adaptive reps: more repetitions for fast operations, fewer for slow.
+pub fn auto_reps(estimate: Duration) -> usize {
+    if estimate > Duration::from_secs(20) {
+        1
+    } else if estimate > Duration::from_secs(2) {
+        2
+    } else if estimate > Duration::from_millis(200) {
+        3
+    } else {
+        5
+    }
+}
+
+/// A result table rendered like the paper's.
+#[derive(Debug, Clone)]
+pub struct Table {
+    /// Table caption (e.g. `Table 1b — execution time (sec)`).
+    pub title: String,
+    /// Column headers.
+    pub headers: Vec<String>,
+    /// Cell rows.
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New empty table.
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    /// Append a row (stringify at the call site for format control).
+    pub fn push_row(&mut self, row: Vec<String>) {
+        assert_eq!(row.len(), self.headers.len(), "row width mismatch");
+        self.rows.push(row);
+    }
+
+    /// GitHub-flavored markdown rendering.
+    pub fn render_markdown(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, cell) in widths.iter_mut().zip(row) {
+                *w = (*w).max(cell.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for (cell, w) in cells.iter().zip(&widths) {
+                s.push_str(&format!(" {cell:>w$} |"));
+            }
+            s
+        };
+        let mut out = format!("### {}\n\n", self.title);
+        out.push_str(&fmt_row(&self.headers));
+        out.push('\n');
+        out.push('|');
+        for w in &widths {
+            out.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// CSV rendering (results/ archive).
+    pub fn render_csv(&self) -> String {
+        let esc = |s: &String| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.clone()
+            }
+        };
+        let mut out = self.headers.iter().map(esc).collect::<Vec<_>>().join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(esc).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Write the CSV under `results/<name>.csv` (directory created).
+    pub fn write_csv(&self, name: &str) -> crate::Result<std::path::PathBuf> {
+        let dir = std::path::Path::new("results");
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("{name}.csv"));
+        std::fs::write(&path, self.render_csv())?;
+        Ok(path)
+    }
+}
+
+/// Format seconds like the paper's tables (3 significant decimals, `NA`
+/// for skipped cells).
+pub fn fmt_secs(s: Option<f64>) -> String {
+    match s {
+        Some(v) if v < 0.001 => format!("{:.2e}", v),
+        Some(v) => format!("{v:.3}"),
+        None => "NA".into(),
+    }
+}
+
+/// Format an error value in the paper's scientific style.
+pub fn fmt_err(e: Option<f64>) -> String {
+    match e {
+        Some(v) => format!("{v:.2e}"),
+        None => "NA".into(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_reps_counts_samples() {
+        let (t, v) = time_reps(5, || 42);
+        assert_eq!(v, 42);
+        assert_eq!(t.samples.len(), 5);
+        assert!(t.median() >= Duration::ZERO);
+    }
+
+    #[test]
+    fn median_and_mad() {
+        let t = Timing {
+            samples: vec![
+                Duration::from_millis(1),
+                Duration::from_millis(2),
+                Duration::from_millis(10),
+            ],
+        };
+        assert_eq!(t.median(), Duration::from_millis(2));
+        assert_eq!(t.mad(), Duration::from_millis(1));
+    }
+
+    #[test]
+    fn table_markdown_and_csv() {
+        let mut t = Table::new("Demo", &["size", "time"]);
+        t.push_row(vec!["1000x1000".into(), "0.17".into()]);
+        let md = t.render_markdown();
+        assert!(md.contains("### Demo"));
+        assert!(md.contains("| 1000x1000 |"));
+        let csv = t.render_csv();
+        assert!(csv.starts_with("size,time\n"));
+        assert!(csv.contains("1000x1000,0.17"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn row_width_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.push_row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn formatting_helpers() {
+        assert_eq!(fmt_secs(None), "NA");
+        assert_eq!(fmt_secs(Some(1.23456)), "1.235");
+        assert!(fmt_secs(Some(1e-5)).contains('e'));
+        assert_eq!(fmt_err(Some(3.1e-15)), "3.10e-15");
+        assert_eq!(fmt_err(None), "NA");
+    }
+
+    #[test]
+    fn auto_reps_scales_down() {
+        assert_eq!(auto_reps(Duration::from_millis(10)), 5);
+        assert_eq!(auto_reps(Duration::from_secs(30)), 1);
+    }
+
+    #[test]
+    fn csv_escapes_commas() {
+        let mut t = Table::new("x", &["a"]);
+        t.push_row(vec!["v,w".into()]);
+        assert!(t.render_csv().contains("\"v,w\""));
+    }
+}

@@ -1,0 +1,124 @@
+//! Tiny flag parser: `--key value`, `--flag`, and positionals.
+
+use crate::{Error, Result};
+use std::collections::HashMap;
+
+/// Parsed arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    /// `--key value` pairs.
+    pub options: HashMap<String, String>,
+    /// Bare `--flag`s.
+    pub flags: Vec<String>,
+    /// Non-flag tokens, in order.
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse a token stream (everything after the subcommand).
+    pub fn parse(tokens: &[String]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < tokens.len() {
+            let t = &tokens[i];
+            if let Some(key) = t.strip_prefix("--") {
+                if key.is_empty() {
+                    return Err(Error::InvalidArg("stray `--`".into()));
+                }
+                // Value present and not itself a flag?
+                if i + 1 < tokens.len() && !tokens[i + 1].starts_with("--") {
+                    out.options.insert(key.to_string(), tokens[i + 1].clone());
+                    i += 2;
+                } else {
+                    out.flags.push(key.to_string());
+                    i += 1;
+                }
+            } else {
+                out.positional.push(t.clone());
+                i += 1;
+            }
+        }
+        Ok(out)
+    }
+
+    /// String option with default.
+    pub fn get_str(&self, key: &str, default: &str) -> String {
+        self.options.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// usize option with default.
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| Error::InvalidArg(format!("--{key} {v:?}: {e}"))),
+        }
+    }
+
+    /// u64 option with default.
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| Error::InvalidArg(format!("--{key} {v:?}: {e}"))),
+        }
+    }
+
+    /// f64 option with default.
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.options.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| Error::InvalidArg(format!("--{key} {v:?}: {e}"))),
+        }
+    }
+
+    /// Was `--flag` given (with no value)?
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_options_flags_positionals() {
+        let a = Args::parse(&sv(&["table1a", "--scale", "smoke", "--pjrt", "--n", "5"])).unwrap();
+        assert_eq!(a.positional, vec!["table1a"]);
+        assert_eq!(a.get_str("scale", "paper"), "smoke");
+        assert!(a.has_flag("pjrt"));
+        assert_eq!(a.get_usize("n", 0).unwrap(), 5);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = Args::parse(&[]).unwrap();
+        assert_eq!(a.get_usize("rows", 7).unwrap(), 7);
+        assert_eq!(a.get_f64("eps", 0.5).unwrap(), 0.5);
+        assert_eq!(a.get_u64("seed", 9).unwrap(), 9);
+        assert!(!a.has_flag("x"));
+    }
+
+    #[test]
+    fn bad_numbers_error() {
+        let a = Args::parse(&sv(&["--rows", "abc"])).unwrap();
+        assert!(a.get_usize("rows", 1).is_err());
+        assert!(Args::parse(&sv(&["--"])).is_err());
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = Args::parse(&sv(&["--verbose", "--workers", "3"])).unwrap();
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.get_usize("workers", 0).unwrap(), 3);
+    }
+}

@@ -1,0 +1,316 @@
+//! Command-line interface (hand-rolled parser — no clap offline).
+//!
+//! ```text
+//! fastlr svd   --rows M --cols N --rank L --r R [--method fsvd|rsvd|full]
+//! fastlr rank  --rows M --cols N --rank L [--eps E]
+//! fastlr rsl   [--iters K] [--backend full|fsvd20|fsvd35] [--pjrt]
+//! fastlr serve [--jobs N] [--workers W]
+//! fastlr exp   <table1a|table1b|table2|fig1|fig2> [--scale smoke|paper]
+//! fastlr artifacts
+//! ```
+
+mod args;
+
+pub use args::Args;
+
+use crate::coordinator::{
+    AccuracyClass, FactorizationService, JobRequest, JobSpec, ServiceConfig,
+};
+use crate::data::synth::low_rank_gaussian;
+use crate::experiments::{emit, run as run_experiment, Scale};
+use crate::rng::Pcg64;
+use std::sync::Arc;
+
+const USAGE: &str = "fastlr — accurate & fast matrix factorization for low-rank learning
+
+USAGE:
+  fastlr svd   --rows M --cols N --rank L --r R [--method fsvd|rsvd|full] [--seed S]
+  fastlr rank  --rows M --cols N --rank L [--eps E] [--seed S]
+  fastlr rsl   [--iters K] [--backend full|fsvd20|fsvd35] [--pjrt]
+  fastlr serve [--jobs N] [--workers W]
+  fastlr exp   <table1a|table1b|table2|fig1|fig2> [--scale smoke|paper]
+  fastlr artifacts
+
+Run `make artifacts` once before `--pjrt` / `artifacts` subcommands.";
+
+/// Entry point used by `main.rs`; parses `std::env::args`.
+pub fn run_main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    match dispatch(&argv) {
+        Ok(code) => std::process::exit(code),
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(1);
+        }
+    }
+}
+
+/// Dispatch a parsed command line (testable without a process).
+pub fn dispatch(argv: &[String]) -> crate::Result<i32> {
+    let Some(cmd) = argv.first() else {
+        println!("{USAGE}");
+        return Ok(2);
+    };
+    let args = Args::parse(&argv[1..])?;
+    match cmd.as_str() {
+        "svd" => cmd_svd(&args),
+        "rank" => cmd_rank(&args),
+        "rsl" => cmd_rsl(&args),
+        "serve" => cmd_serve(&args),
+        "exp" => cmd_exp(&args),
+        "artifacts" => cmd_artifacts(),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(0)
+        }
+        other => {
+            eprintln!("unknown command {other:?}\n\n{USAGE}");
+            Ok(2)
+        }
+    }
+}
+
+fn cmd_svd(args: &Args) -> crate::Result<i32> {
+    let m = args.get_usize("rows", 1000)?;
+    let n = args.get_usize("cols", 1000)?;
+    let l = args.get_usize("rank", 100)?;
+    let r = args.get_usize("r", 20)?;
+    let seed = args.get_u64("seed", 42)?;
+    let method = args.get_str("method", "fsvd");
+    let mut rng = Pcg64::seed_from_u64(seed);
+    eprintln!("generating {m}x{n} rank-{l} gaussian product ...");
+    let a = low_rank_gaussian(m, n, l, &mut rng);
+    let t0 = std::time::Instant::now();
+    let (sigma, label) = match method.as_str() {
+        "fsvd" => {
+            let out = crate::krylov::fsvd::fsvd(
+                &a,
+                &crate::krylov::fsvd::FsvdOptions {
+                    k: m.min(n),
+                    r,
+                    eps: 1e-8,
+                    seed,
+                    ..Default::default()
+                },
+            )?;
+            eprintln!("F-SVD used k' = {} iterations", out.k_used);
+            (out.sigma, "F-SVD")
+        }
+        "rsvd" => {
+            let out = crate::rsvd::rsvd(
+                &a,
+                &crate::rsvd::RsvdOptions { r, seed, ..Default::default() },
+            )?;
+            (out.truncate(r).sigma, "R-SVD")
+        }
+        "full" => (crate::linalg::svd::svd(&a)?.truncate(r).sigma, "SVD"),
+        other => {
+            return Err(crate::Error::InvalidArg(format!("unknown method {other:?}")));
+        }
+    };
+    let dt = t0.elapsed().as_secs_f64();
+    println!("{label}: {r} leading singular values in {dt:.3}s");
+    for (i, s) in sigma.iter().enumerate() {
+        println!("  sigma[{i}] = {s:.6e}");
+    }
+    Ok(0)
+}
+
+fn cmd_rank(args: &Args) -> crate::Result<i32> {
+    let m = args.get_usize("rows", 1000)?;
+    let n = args.get_usize("cols", 1000)?;
+    let l = args.get_usize("rank", 100)?;
+    let eps = args.get_f64("eps", 1e-8)?;
+    let seed = args.get_u64("seed", 42)?;
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let a = low_rank_gaussian(m, n, l, &mut rng);
+    let t0 = std::time::Instant::now();
+    let est = crate::krylov::rank::estimate_rank(
+        &a,
+        &crate::krylov::rank::RankOptions { eps, seed, ..Default::default() },
+    )?;
+    println!(
+        "rank = {} (Algorithm 1 ran {} iterations, early stop: {}) in {:.3}s",
+        est.rank,
+        est.k_iterations,
+        est.terminated_early,
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(0)
+}
+
+fn cmd_rsl(args: &Args) -> crate::Result<i32> {
+    use crate::data::digits::{generate, DigitStyle};
+    use crate::data::pairs::PairSampler;
+    use crate::manifold::SvdBackend;
+    let iters = args.get_usize("iters", 200)?;
+    let backend = match args.get_str("backend", "fsvd20").as_str() {
+        "full" => SvdBackend::Full,
+        "fsvd20" => SvdBackend::Fsvd { k: 20, reorth_passes: 1, seed: 0 },
+        "fsvd35" => SvdBackend::Fsvd { k: 35, reorth_passes: 1, seed: 0 },
+        other => return Err(crate::Error::InvalidArg(format!("backend {other:?}"))),
+    };
+    let mut rng = Pcg64::seed_from_u64(7);
+    let trx = generate(400, &DigitStyle::mnist_like(), &mut rng);
+    let trv = generate(400, &DigitStyle::usps_like(), &mut rng);
+    let tex = generate(200, &DigitStyle::mnist_like(), &mut rng);
+    let tev = generate(200, &DigitStyle::usps_like(), &mut rng);
+    let tr = PairSampler::new(&trx, &trv);
+    let te = PairSampler::new(&tex, &tev);
+    let opts = crate::rsl::trainer::RsgdOptions {
+        iters,
+        backend,
+        eval_every: (iters / 8).max(1),
+        ..Default::default()
+    };
+    let (w, hist) = if args.has_flag("pjrt") {
+        let reg = crate::runtime::Registry::load(&crate::runtime::default_artifact_dir())?;
+        let engine = crate::runtime::backend::PjrtGradEngine::new(&reg, 32, 784, 256)?;
+        crate::rsl::trainer::train(&tr, &te, &engine, &opts)?
+    } else {
+        crate::rsl::trainer::train(&tr, &te, &crate::rsl::model::NativeGradEngine, &opts)?
+    };
+    for rec in &hist.records {
+        println!(
+            "iter {:>6}  t={:>8.3}s  loss={:.4}  acc={:.4}",
+            rec.iter, rec.elapsed_sec, rec.train_loss, rec.test_accuracy
+        );
+    }
+    println!(
+        "done: rank-{} W, total {:.3}s, final accuracy {:.4}",
+        w.rank(),
+        hist.total_sec,
+        hist.records.last().map(|r| r.test_accuracy).unwrap_or(0.0)
+    );
+    Ok(0)
+}
+
+fn cmd_serve(args: &Args) -> crate::Result<i32> {
+    let jobs = args.get_usize("jobs", 12)?;
+    let workers = args.get_usize("workers", 4)?;
+    let svc = FactorizationService::new(ServiceConfig { workers, ..Default::default() })?;
+    let mut rng = Pcg64::seed_from_u64(99);
+    eprintln!("submitting {jobs} mixed factorization jobs to {workers} workers ...");
+    let handles: Vec<_> = (0..jobs)
+        .map(|i| {
+            let (m, n, l) = [(600, 500, 10), (400, 400, 8), (800, 300, 12)][i % 3];
+            let a = Arc::new(low_rank_gaussian(m, n, l, &mut rng));
+            let spec = if i % 4 == 3 {
+                JobSpec::RankEstimate { matrix: a, eps: 1e-8 }
+            } else {
+                JobSpec::PartialSvd { matrix: a, r: 8 }
+            };
+            let accuracy = if i % 5 == 4 { AccuracyClass::Fast } else { AccuracyClass::Balanced };
+            svc.submit(JobRequest { spec, accuracy }).expect("submit")
+        })
+        .collect();
+    for h in handles {
+        let res = h.wait()?;
+        match res.outcome {
+            Ok(crate::coordinator::job::JobOutcome::Svd(s)) => println!(
+                "job {:>3}: {:?} sigma1={:.4e} exec={:?} queued={:?}",
+                res.id, s.method, s.sigma[0], res.exec_time, res.queue_time
+            ),
+            Ok(crate::coordinator::job::JobOutcome::Rank { rank, k_iterations }) => println!(
+                "job {:>3}: rank={rank} (k'={k_iterations}) exec={:?} queued={:?}",
+                res.id, res.exec_time, res.queue_time
+            ),
+            Err(e) => println!("job {:>3}: FAILED {e}", res.id),
+        }
+    }
+    println!("\n{}", svc.metrics.render());
+    Ok(0)
+}
+
+fn cmd_exp(args: &Args) -> crate::Result<i32> {
+    let Some(id) = args.positional.first() else {
+        return Err(crate::Error::InvalidArg(
+            "exp needs an experiment id (table1a|table1b|table2|fig1|fig2)".into(),
+        ));
+    };
+    let scale = Scale::parse(&args.get_str("scale", "paper"))
+        .ok_or_else(|| crate::Error::InvalidArg("scale must be smoke|paper".into()))?;
+    let tables = run_experiment(id, scale)?;
+    emit(&tables)?;
+    Ok(0)
+}
+
+fn cmd_artifacts() -> crate::Result<i32> {
+    let dir = crate::runtime::default_artifact_dir();
+    let reg = crate::runtime::Registry::load(&dir)?;
+    println!("artifact dir: {} (platform: {})", dir.display(), reg.engine().platform());
+    for name in reg.names() {
+        let meta = reg.meta(&name).expect("known");
+        println!(
+            "  {name}: {} -> {}",
+            meta.inputs
+                .iter()
+                .map(|s| format!("{:?}", s.dims))
+                .collect::<Vec<_>>()
+                .join(","),
+            meta.outputs
+                .iter()
+                .map(|s| format!("{:?}", s.dims))
+                .collect::<Vec<_>>()
+                .join(",")
+        );
+        // Compile each to prove loadability.
+        reg.get(&name)?;
+    }
+    println!("all artifacts compile OK");
+    Ok(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn no_args_prints_usage() {
+        assert_eq!(dispatch(&[]).unwrap(), 2);
+    }
+
+    #[test]
+    fn unknown_command_is_code_2() {
+        assert_eq!(dispatch(&sv(&["frobnicate"])).unwrap(), 2);
+    }
+
+    #[test]
+    fn help_is_ok() {
+        assert_eq!(dispatch(&sv(&["help"])).unwrap(), 0);
+    }
+
+    #[test]
+    fn svd_small_runs() {
+        let code = dispatch(&sv(&[
+            "svd", "--rows", "120", "--cols", "100", "--rank", "6", "--r", "4",
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn rank_small_runs() {
+        let code = dispatch(&sv(&["rank", "--rows", "120", "--cols", "100", "--rank", "6"]))
+            .unwrap();
+        assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn bad_method_is_error() {
+        assert!(dispatch(&sv(&[
+            "svd", "--rows", "50", "--cols", "50", "--rank", "5", "--method", "magic"
+        ]))
+        .is_err());
+    }
+
+    #[test]
+    fn exp_requires_id() {
+        assert!(dispatch(&sv(&["exp"])).is_err());
+        assert!(dispatch(&sv(&["exp", "nope", "--scale", "smoke"])).is_err());
+    }
+}

@@ -1,0 +1,214 @@
+//! Size/deadline micro-batching for swarms of small jobs.
+//!
+//! Low-rank learning front-ends often emit many small factorizations (one
+//! per user shard, per mini-batch, per window). Submitting each one through
+//! the queue individually pays per-job dispatch overhead; the batcher
+//! groups up to `max_batch` requests or whatever arrived within
+//! `max_delay`, then submits the group and fans results back out. This is
+//! the same batching shape a serving router uses (vLLM-style), applied to
+//! factorization jobs.
+
+use super::job::{JobRequest, JobResult};
+use super::service::{FactorizationService, JobHandle};
+use crate::Result;
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::time::{Duration, Instant};
+
+/// Batching knobs.
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// Flush when this many requests are waiting.
+    pub max_batch: usize,
+    /// Flush whatever is waiting after this long.
+    pub max_delay: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 16, max_delay: Duration::from_millis(5) }
+    }
+}
+
+struct Incoming {
+    request: JobRequest,
+    reply: Sender<Result<JobResult>>,
+}
+
+/// Groups requests and forwards them to the service.
+pub struct Batcher {
+    tx: Option<Sender<Incoming>>,
+    pump: Option<std::thread::JoinHandle<()>>,
+    /// Number of flushes performed (telemetry for the ablation bench).
+    pub flushes: std::sync::Arc<std::sync::atomic::AtomicU64>,
+}
+
+impl Batcher {
+    /// Start the batching pump on top of a shared service.
+    pub fn new(service: std::sync::Arc<FactorizationService>, config: BatcherConfig) -> Self {
+        let (tx, rx) = channel::<Incoming>();
+        let flushes = std::sync::Arc::new(std::sync::atomic::AtomicU64::new(0));
+        let fl = flushes.clone();
+        let pump = std::thread::Builder::new()
+            .name("fastlr-batcher".into())
+            .spawn(move || pump_loop(rx, service, config, fl))
+            .expect("spawn batcher");
+        Batcher { tx: Some(tx), pump: Some(pump), flushes }
+    }
+
+    /// Submit through the batcher; returns a receiver for the result.
+    pub fn submit(&self, request: JobRequest) -> Receiver<Result<JobResult>> {
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .as_ref()
+            .expect("batcher alive")
+            .send(Incoming { request, reply: reply_tx })
+            .expect("batcher pump alive");
+        reply_rx
+    }
+}
+
+impl Drop for Batcher {
+    fn drop(&mut self) {
+        self.tx.take();
+        if let Some(p) = self.pump.take() {
+            let _ = p.join();
+        }
+    }
+}
+
+fn pump_loop(
+    rx: Receiver<Incoming>,
+    service: std::sync::Arc<FactorizationService>,
+    config: BatcherConfig,
+    flushes: std::sync::Arc<std::sync::atomic::AtomicU64>,
+) {
+    let mut pending: Vec<Incoming> = Vec::new();
+    let mut deadline: Option<Instant> = None;
+    loop {
+        let timeout = match deadline {
+            Some(d) => d.saturating_duration_since(Instant::now()),
+            None => Duration::from_secs(3600),
+        };
+        match rx.recv_timeout(timeout) {
+            Ok(incoming) => {
+                if pending.is_empty() {
+                    deadline = Some(Instant::now() + config.max_delay);
+                }
+                pending.push(incoming);
+                if pending.len() >= config.max_batch {
+                    flush(&mut pending, &service, &flushes);
+                    deadline = None;
+                }
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                if !pending.is_empty() {
+                    flush(&mut pending, &service, &flushes);
+                }
+                deadline = None;
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                if !pending.is_empty() {
+                    flush(&mut pending, &service, &flushes);
+                }
+                break;
+            }
+        }
+    }
+}
+
+fn flush(
+    pending: &mut Vec<Incoming>,
+    service: &FactorizationService,
+    flushes: &std::sync::atomic::AtomicU64,
+) {
+    flushes.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    // Submit the whole group, then fan results back out. Handles arrive in
+    // submit order; waiting happens per-reply so slow jobs don't block the
+    // pump beyond this flush.
+    let batch: Vec<Incoming> = pending.drain(..).collect();
+    let mut handles: Vec<(Incoming, Result<JobHandle>)> = Vec::with_capacity(batch.len());
+    for inc in batch {
+        let h = service.submit(inc.request.clone());
+        handles.push((inc, h));
+    }
+    for (inc, h) in handles {
+        let result = h.and_then(|h| h.wait());
+        let _ = inc.reply.send(result);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::policy::AccuracyClass;
+    use crate::coordinator::service::ServiceConfig;
+    use crate::coordinator::JobSpec;
+    use crate::data::synth::low_rank_gaussian;
+    use crate::rng::Pcg64;
+    use std::sync::Arc;
+
+    fn make() -> (Arc<FactorizationService>, Batcher) {
+        let svc = Arc::new(
+            FactorizationService::new(ServiceConfig {
+                workers: 2,
+                queue_depth: 32,
+                ..Default::default()
+            })
+            .unwrap(),
+        );
+        let b = Batcher::new(
+            svc.clone(),
+            BatcherConfig { max_batch: 4, max_delay: Duration::from_millis(10) },
+        );
+        (svc, b)
+    }
+
+    #[test]
+    fn batches_by_size() {
+        let (_svc, batcher) = make();
+        let mut rng = Pcg64::seed_from_u64(220);
+        let receivers: Vec<_> = (0..8)
+            .map(|_| {
+                let a = Arc::new(low_rank_gaussian(80, 60, 3, &mut rng));
+                batcher.submit(JobRequest {
+                    spec: JobSpec::PartialSvd { matrix: a, r: 3 },
+                    accuracy: AccuracyClass::Balanced,
+                })
+            })
+            .collect();
+        for rx in receivers {
+            let res = rx.recv().unwrap().unwrap();
+            assert!(res.outcome.is_ok());
+        }
+        // 8 jobs / max_batch 4 => exactly 2 size-triggered flushes.
+        assert_eq!(batcher.flushes.load(std::sync::atomic::Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn flushes_by_deadline() {
+        let (_svc, batcher) = make();
+        let mut rng = Pcg64::seed_from_u64(221);
+        let a = Arc::new(low_rank_gaussian(80, 60, 3, &mut rng));
+        let rx = batcher.submit(JobRequest {
+            spec: JobSpec::PartialSvd { matrix: a, r: 3 },
+            accuracy: AccuracyClass::Balanced,
+        });
+        // One lone job must still complete (deadline flush).
+        let res = rx.recv_timeout(Duration::from_secs(30)).unwrap().unwrap();
+        assert!(res.outcome.is_ok());
+    }
+
+    #[test]
+    fn drop_flushes_remaining() {
+        let (_svc, batcher) = make();
+        let mut rng = Pcg64::seed_from_u64(222);
+        let a = Arc::new(low_rank_gaussian(60, 40, 2, &mut rng));
+        let rx = batcher.submit(JobRequest {
+            spec: JobSpec::PartialSvd { matrix: a, r: 2 },
+            accuracy: AccuracyClass::Balanced,
+        });
+        drop(batcher);
+        let res = rx.recv().unwrap().unwrap();
+        assert!(res.outcome.is_ok());
+    }
+}

@@ -1,0 +1,145 @@
+//! Job specifications and results for the factorization service.
+
+use crate::linalg::Matrix;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Monotonic job identifier.
+pub type JobId = u64;
+
+/// What the client wants done.
+#[derive(Debug, Clone)]
+pub enum JobSpec {
+    /// Leading-`r` partial SVD of the matrix.
+    PartialSvd {
+        /// Input (shared, never copied into the queue).
+        matrix: Arc<Matrix>,
+        /// Number of leading triplets.
+        r: usize,
+    },
+    /// Numerical rank estimate (Algorithm 3).
+    RankEstimate {
+        /// Input matrix.
+        matrix: Arc<Matrix>,
+        /// Eigenvalue threshold ε.
+        eps: f64,
+    },
+    /// Full thin SVD (traditional baseline; routed only when tiny or
+    /// explicitly demanded by `AccuracyClass::Exact`).
+    FullSvd {
+        /// Input matrix.
+        matrix: Arc<Matrix>,
+    },
+}
+
+impl JobSpec {
+    /// `(rows, cols)` of the job's input.
+    pub fn shape(&self) -> (usize, usize) {
+        match self {
+            JobSpec::PartialSvd { matrix, .. }
+            | JobSpec::RankEstimate { matrix, .. }
+            | JobSpec::FullSvd { matrix } => matrix.shape(),
+        }
+    }
+
+    /// Number of matrix entries (routing feature).
+    pub fn numel(&self) -> usize {
+        let (m, n) = self.shape();
+        m * n
+    }
+}
+
+/// A queued request: spec + accuracy demand.
+#[derive(Debug, Clone)]
+pub struct JobRequest {
+    /// The work.
+    pub spec: JobSpec,
+    /// How accurate the result must be (drives routing).
+    pub accuracy: super::policy::AccuracyClass,
+}
+
+/// Which algorithm the policy chose (recorded in the result for audit).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SvdMethod {
+    /// Traditional Golub–Reinsch.
+    Full,
+    /// F-SVD (Algorithm 2) with this many Krylov iterations.
+    Fsvd {
+        /// Inner iterations `k`.
+        k: usize,
+    },
+    /// Randomized SVD with this oversampling.
+    Rsvd {
+        /// Oversampling parameter `p`.
+        oversample: usize,
+    },
+}
+
+/// A partial/full SVD outcome.
+#[derive(Debug, Clone)]
+pub struct SvdResult {
+    /// Left vectors `m x r`.
+    pub u: Matrix,
+    /// Singular values, descending.
+    pub sigma: Vec<f64>,
+    /// Right vectors `n x r`.
+    pub v: Matrix,
+    /// Which algorithm produced it.
+    pub method: SvdMethod,
+}
+
+/// Result payloads.
+#[derive(Debug, Clone)]
+pub enum JobOutcome {
+    /// SVD triplets.
+    Svd(SvdResult),
+    /// Rank estimate: (accurate rank, Algorithm-1 iteration count).
+    Rank {
+        /// Accurate numerical rank (Algorithm 3).
+        rank: usize,
+        /// Preliminary estimate (Algorithm 1 iterations).
+        k_iterations: usize,
+    },
+}
+
+/// Completed job envelope.
+#[derive(Debug, Clone)]
+pub struct JobResult {
+    /// Which job this answers.
+    pub id: JobId,
+    /// Payload or the error string (kept `Clone` for fan-out).
+    pub outcome: Result<JobOutcome, String>,
+    /// Time spent executing (excludes queueing).
+    pub exec_time: Duration,
+    /// Time spent in the queue before a worker picked it up.
+    pub queue_time: Duration,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::policy::AccuracyClass;
+
+    #[test]
+    fn spec_shape_and_numel() {
+        let m = Arc::new(Matrix::zeros(30, 20));
+        let s = JobSpec::PartialSvd { matrix: m.clone(), r: 5 };
+        assert_eq!(s.shape(), (30, 20));
+        assert_eq!(s.numel(), 600);
+        let r = JobSpec::RankEstimate { matrix: m, eps: 1e-8 };
+        assert_eq!(r.numel(), 600);
+    }
+
+    #[test]
+    fn request_is_cloneable_without_copying_matrix() {
+        let m = Arc::new(Matrix::zeros(10, 10));
+        let req = JobRequest {
+            spec: JobSpec::FullSvd { matrix: m.clone() },
+            accuracy: AccuracyClass::Balanced,
+        };
+        let req2 = req.clone();
+        assert_eq!(Arc::strong_count(&m), 3);
+        drop(req2);
+        assert_eq!(Arc::strong_count(&m), 2);
+    }
+}

@@ -1,0 +1,149 @@
+//! Lock-free service metrics: counters + fixed-bucket latency histograms.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Histogram bucket upper bounds in microseconds (last bucket = +inf).
+const BUCKETS_US: [u64; 12] = [
+    50, 100, 250, 500, 1_000, 5_000, 10_000, 50_000, 100_000, 500_000, 1_000_000, 10_000_000,
+];
+
+/// Latency histogram with fixed buckets (no allocation on the hot path).
+#[derive(Debug, Default)]
+pub struct LatencyHistogram {
+    counts: [AtomicU64; 13],
+    sum_us: AtomicU64,
+    n: AtomicU64,
+}
+
+impl LatencyHistogram {
+    /// Record one observation.
+    pub fn observe(&self, d: Duration) {
+        let us = d.as_micros().min(u64::MAX as u128) as u64;
+        let idx = BUCKETS_US.iter().position(|&b| us <= b).unwrap_or(BUCKETS_US.len());
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.n.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Number of observations.
+    pub fn count(&self) -> u64 {
+        self.n.load(Ordering::Relaxed)
+    }
+
+    /// Mean latency.
+    pub fn mean(&self) -> Duration {
+        let n = self.count();
+        if n == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_micros(self.sum_us.load(Ordering::Relaxed) / n)
+    }
+
+    /// Approximate quantile from the bucket CDF (upper bound of the bucket
+    /// containing the quantile).
+    pub fn quantile(&self, q: f64) -> Duration {
+        let n = self.count();
+        if n == 0 {
+            return Duration::ZERO;
+        }
+        let target = (q.clamp(0.0, 1.0) * n as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            acc += c.load(Ordering::Relaxed);
+            if acc >= target {
+                let us = if i < BUCKETS_US.len() { BUCKETS_US[i] } else { u64::MAX / 2 };
+                return Duration::from_micros(us);
+            }
+        }
+        Duration::from_micros(*BUCKETS_US.last().expect("buckets"))
+    }
+}
+
+/// Service-wide metrics registry.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    /// Jobs accepted.
+    pub submitted: AtomicU64,
+    /// Jobs finished successfully.
+    pub completed: AtomicU64,
+    /// Jobs that returned an error.
+    pub failed: AtomicU64,
+    /// Queue-wait distribution.
+    pub queue_wait: LatencyHistogram,
+    /// Execution-time distribution.
+    pub exec_time: LatencyHistogram,
+}
+
+impl Metrics {
+    /// Point-in-time snapshot rendered as a human-readable block.
+    pub fn render(&self) -> String {
+        format!(
+            "jobs: submitted={} completed={} failed={}\n\
+             queue_wait: mean={:?} p50={:?} p99={:?}\n\
+             exec_time:  mean={:?} p50={:?} p99={:?}",
+            self.submitted.load(Ordering::Relaxed),
+            self.completed.load(Ordering::Relaxed),
+            self.failed.load(Ordering::Relaxed),
+            self.queue_wait.mean(),
+            self.queue_wait.quantile(0.5),
+            self.queue_wait.quantile(0.99),
+            self.exec_time.mean(),
+            self.exec_time.quantile(0.5),
+            self.exec_time.quantile(0.99),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_counts_and_mean() {
+        let h = LatencyHistogram::default();
+        h.observe(Duration::from_micros(40));
+        h.observe(Duration::from_micros(60));
+        h.observe(Duration::from_micros(200));
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.mean(), Duration::from_micros(100));
+    }
+
+    #[test]
+    fn quantiles_are_monotone() {
+        let h = LatencyHistogram::default();
+        for us in [10u64, 80, 300, 600, 2_000, 80_000, 2_000_000] {
+            h.observe(Duration::from_micros(us));
+        }
+        let p50 = h.quantile(0.5);
+        let p90 = h.quantile(0.9);
+        let p99 = h.quantile(0.99);
+        assert!(p50 <= p90 && p90 <= p99, "{p50:?} {p90:?} {p99:?}");
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = LatencyHistogram::default();
+        assert_eq!(h.mean(), Duration::ZERO);
+        assert_eq!(h.quantile(0.99), Duration::ZERO);
+    }
+
+    #[test]
+    fn metrics_render_contains_counts() {
+        let m = Metrics::default();
+        m.submitted.store(7, Ordering::Relaxed);
+        m.completed.store(6, Ordering::Relaxed);
+        m.failed.store(1, Ordering::Relaxed);
+        let s = m.render();
+        assert!(s.contains("submitted=7"));
+        assert!(s.contains("failed=1"));
+    }
+
+    #[test]
+    fn observe_beyond_last_bucket() {
+        let h = LatencyHistogram::default();
+        h.observe(Duration::from_secs(100));
+        assert_eq!(h.count(), 1);
+        assert!(h.quantile(0.5) > Duration::from_secs(1));
+    }
+}

@@ -1,0 +1,25 @@
+//! L3 coordinator: the factorization **service**.
+//!
+//! Downstream low-rank-learning systems (recommenders, RSL trainers,
+//! PCA pipelines) issue factorization requests concurrently; this module
+//! gives them the deployment shell the paper's algorithms need:
+//!
+//! * [`job`]     — typed job specs (partial SVD / rank estimate / full SVD)
+//!   and results.
+//! * [`policy`]  — routing: picks traditional SVD, F-SVD or R-SVD per job
+//!   from its size, requested triplets and accuracy class (the decision
+//!   procedure the paper's §6 tables imply).
+//! * [`service`] — worker pool + queue; submit returns a handle that
+//!   resolves to the result.
+//! * [`batcher`] — size/deadline micro-batching for swarms of small jobs.
+//! * [`metrics`] — counters and latency histograms.
+
+pub mod batcher;
+pub mod job;
+pub mod metrics;
+pub mod policy;
+pub mod service;
+
+pub use job::{JobId, JobRequest, JobResult, JobSpec, SvdMethod, SvdResult};
+pub use policy::{AccuracyClass, RoutePolicy};
+pub use service::{FactorizationService, ServiceConfig};

@@ -1,0 +1,158 @@
+//! Algorithm routing policy.
+//!
+//! Encodes the decision procedure the paper's evaluation implies:
+//!
+//! * tiny inputs → traditional SVD (its constant factors win below ~1e5
+//!   entries, Table 1b first row);
+//! * accuracy-sensitive jobs (the default, and anything feeding Riemannian
+//!   optimization — §6.3 notes R-SVD "can not be used" there) → **F-SVD**
+//!   with `k = r + slack` Krylov iterations;
+//! * throughput-over-accuracy jobs → R-SVD with the Halko default `p=10`;
+//! * `Exact` → traditional SVD regardless of size.
+
+use super::job::{JobSpec, SvdMethod};
+
+/// Client-declared accuracy demand.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum AccuracyClass {
+    /// Machine-precision triplets required (Riemannian retraction path).
+    Exact,
+    /// Accurate singular values *and* vectors across the spectrum — the
+    /// paper's F-SVD target regime.
+    Balanced,
+    /// Speed matters more than tail accuracy (R-SVD regime).
+    Fast,
+}
+
+/// Tunable routing policy.
+#[derive(Debug, Clone)]
+pub struct RoutePolicy {
+    /// Below this many entries traditional SVD is used outright.
+    pub full_svd_numel_cutoff: usize,
+    /// Krylov slack: F-SVD runs `k = r + slack` iterations.
+    pub fsvd_slack: usize,
+    /// Hard cap on F-SVD iterations.
+    pub fsvd_max_k: usize,
+    /// R-SVD oversampling for `Fast` jobs.
+    pub rsvd_oversample: usize,
+}
+
+impl Default for RoutePolicy {
+    fn default() -> Self {
+        RoutePolicy {
+            full_svd_numel_cutoff: 250_000, // ~500x500
+            fsvd_slack: 10,
+            fsvd_max_k: 400,
+            rsvd_oversample: 10,
+        }
+    }
+}
+
+impl RoutePolicy {
+    /// Choose the SVD method for a partial-SVD job.
+    pub fn select(&self, spec: &JobSpec, accuracy: AccuracyClass) -> SvdMethod {
+        let (m, n) = spec.shape();
+        let numel = m * n;
+        match spec {
+            JobSpec::FullSvd { .. } => SvdMethod::Full,
+            JobSpec::RankEstimate { .. } => {
+                // Rank estimation *is* Algorithm 3 (GK-based); encode as
+                // F-SVD with the full iteration budget.
+                SvdMethod::Fsvd { k: m.min(n) }
+            }
+            JobSpec::PartialSvd { r, .. } => match accuracy {
+                AccuracyClass::Exact => SvdMethod::Full,
+                AccuracyClass::Balanced => {
+                    if numel <= self.full_svd_numel_cutoff {
+                        SvdMethod::Full
+                    } else {
+                        let k = (r + self.fsvd_slack).min(self.fsvd_max_k).min(m.min(n));
+                        SvdMethod::Fsvd { k }
+                    }
+                }
+                AccuracyClass::Fast => {
+                    if numel <= self.full_svd_numel_cutoff {
+                        SvdMethod::Full
+                    } else {
+                        SvdMethod::Rsvd { oversample: self.rsvd_oversample }
+                    }
+                }
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Matrix;
+    use std::sync::Arc;
+
+    fn spec(m: usize, n: usize, r: usize) -> JobSpec {
+        JobSpec::PartialSvd { matrix: Arc::new(Matrix::zeros(m, n)), r }
+    }
+
+    #[test]
+    fn tiny_inputs_route_to_full_svd() {
+        let p = RoutePolicy::default();
+        assert_eq!(
+            p.select(&spec(100, 100, 5), AccuracyClass::Balanced),
+            SvdMethod::Full
+        );
+        assert_eq!(
+            p.select(&spec(100, 100, 5), AccuracyClass::Fast),
+            SvdMethod::Full
+        );
+    }
+
+    #[test]
+    fn balanced_large_routes_to_fsvd_with_slack() {
+        let p = RoutePolicy::default();
+        match p.select(&spec(2000, 1000, 20), AccuracyClass::Balanced) {
+            SvdMethod::Fsvd { k } => assert_eq!(k, 30),
+            other => panic!("expected Fsvd, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn fast_large_routes_to_rsvd_default_p() {
+        let p = RoutePolicy::default();
+        assert_eq!(
+            p.select(&spec(2000, 1000, 20), AccuracyClass::Fast),
+            SvdMethod::Rsvd { oversample: 10 }
+        );
+    }
+
+    #[test]
+    fn exact_always_full() {
+        let p = RoutePolicy::default();
+        assert_eq!(
+            p.select(&spec(5000, 5000, 5), AccuracyClass::Exact),
+            SvdMethod::Full
+        );
+    }
+
+    #[test]
+    fn fsvd_k_clamped_to_dims_and_cap() {
+        let p = RoutePolicy { fsvd_slack: 1000, ..Default::default() };
+        match p.select(&spec(2000, 300, 20), AccuracyClass::Balanced) {
+            SvdMethod::Fsvd { k } => assert_eq!(k, 300),
+            other => panic!("{other:?}"),
+        }
+        let p2 = RoutePolicy { fsvd_max_k: 50, fsvd_slack: 100, ..Default::default() };
+        match p2.select(&spec(2000, 1000, 20), AccuracyClass::Balanced) {
+            SvdMethod::Fsvd { k } => assert_eq!(k, 50),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn rank_jobs_get_full_iteration_budget() {
+        let p = RoutePolicy::default();
+        let s = JobSpec::RankEstimate { matrix: Arc::new(Matrix::zeros(800, 600)), eps: 1e-8 };
+        match p.select(&s, AccuracyClass::Balanced) {
+            SvdMethod::Fsvd { k } => assert_eq!(k, 600),
+            other => panic!("{other:?}"),
+        }
+    }
+}

@@ -1,0 +1,360 @@
+//! The factorization service: bounded queue + worker pool.
+//!
+//! `submit` enqueues a [`JobRequest`] and returns a [`JobHandle`] that
+//! resolves to the [`JobResult`]. Workers route each job through
+//! [`RoutePolicy`] and execute the chosen algorithm. Everything is std
+//! threads + mpsc (no async runtime exists in the vendored crate set, and
+//! the jobs are CPU-bound minutes-to-microseconds tasks — a thread pool is
+//! the right shape anyway).
+
+use super::job::{JobId, JobOutcome, JobRequest, JobResult, JobSpec, SvdMethod, SvdResult};
+use super::metrics::Metrics;
+use super::policy::RoutePolicy;
+use crate::krylov::fsvd::{fsvd, FsvdOptions};
+use crate::krylov::rank::{estimate_rank, RankOptions};
+use crate::linalg::svd::svd;
+use crate::rsvd::{rsvd, RsvdOptions};
+use crate::{Error, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Service configuration.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Worker threads.
+    pub workers: usize,
+    /// Bounded queue depth (backpressure: submit blocks when full).
+    pub queue_depth: usize,
+    /// Routing policy.
+    pub policy: RoutePolicy,
+    /// Seed base for the stochastic algorithms (per-job xor'd with id).
+    pub seed: u64,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            workers: crate::linalg::num_threads().min(4),
+            queue_depth: 64,
+            policy: RoutePolicy::default(),
+            seed: 0x5eed,
+        }
+    }
+}
+
+struct QueuedJob {
+    id: JobId,
+    request: JobRequest,
+    enqueued: Instant,
+    reply: SyncSender<JobResult>,
+}
+
+/// Handle resolving to a job's result.
+pub struct JobHandle {
+    /// The job's id (for log correlation).
+    pub id: JobId,
+    rx: Receiver<JobResult>,
+}
+
+impl JobHandle {
+    /// Block until the result arrives.
+    pub fn wait(self) -> Result<JobResult> {
+        self.rx
+            .recv()
+            .map_err(|_| Error::Service("worker dropped the job".into()))
+    }
+
+    /// Non-blocking poll.
+    pub fn try_wait(&self) -> Option<JobResult> {
+        self.rx.try_recv().ok()
+    }
+}
+
+/// The service itself. Dropping it shuts the pool down (workers drain the
+/// queue first).
+pub struct FactorizationService {
+    tx: Option<SyncSender<QueuedJob>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    next_id: AtomicU64,
+    /// Shared metrics (exposed for dashboards/tests).
+    pub metrics: Arc<Metrics>,
+    config: ServiceConfig,
+}
+
+impl FactorizationService {
+    /// Spawn the worker pool.
+    pub fn new(config: ServiceConfig) -> Result<Self> {
+        if config.workers == 0 {
+            return Err(Error::InvalidArg("service: workers must be >= 1".into()));
+        }
+        let (tx, rx) = sync_channel::<QueuedJob>(config.queue_depth.max(1));
+        let rx = Arc::new(Mutex::new(rx));
+        let metrics = Arc::new(Metrics::default());
+        let mut workers = Vec::with_capacity(config.workers);
+        for wid in 0..config.workers {
+            let rx = rx.clone();
+            let metrics = metrics.clone();
+            let policy = config.policy.clone();
+            let seed = config.seed;
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("fastlr-worker-{wid}"))
+                    .spawn(move || loop {
+                        // Hold the lock only to receive.
+                        let job = match rx.lock().expect("queue lock").recv() {
+                            Ok(j) => j,
+                            Err(_) => break, // channel closed: shutdown
+                        };
+                        let queue_time = job.enqueued.elapsed();
+                        metrics.queue_wait.observe(queue_time);
+                        let started = Instant::now();
+                        let outcome = execute(&job.request, &policy, seed ^ job.id);
+                        let exec_time = started.elapsed();
+                        metrics.exec_time.observe(exec_time);
+                        match &outcome {
+                            Ok(_) => metrics.completed.fetch_add(1, Ordering::Relaxed),
+                            Err(_) => metrics.failed.fetch_add(1, Ordering::Relaxed),
+                        };
+                        let _ = job.reply.send(JobResult {
+                            id: job.id,
+                            outcome: outcome.map_err(|e| e.to_string()),
+                            exec_time,
+                            queue_time,
+                        });
+                    })
+                    .map_err(|e| Error::Service(format!("spawn: {e}")))?,
+            );
+        }
+        Ok(FactorizationService {
+            tx: Some(tx),
+            workers,
+            next_id: AtomicU64::new(1),
+            metrics,
+            config,
+        })
+    }
+
+    /// Enqueue a job; blocks when the queue is full (backpressure).
+    pub fn submit(&self, request: JobRequest) -> Result<JobHandle> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (reply_tx, reply_rx) = sync_channel(1);
+        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        self.tx
+            .as_ref()
+            .expect("service alive")
+            .send(QueuedJob { id, request, enqueued: Instant::now(), reply: reply_tx })
+            .map_err(|_| Error::Service("queue closed".into()))?;
+        Ok(JobHandle { id, rx: reply_rx })
+    }
+
+    /// Convenience: submit and wait.
+    pub fn run(&self, request: JobRequest) -> Result<JobResult> {
+        self.submit(request)?.wait()
+    }
+
+    /// Current configuration.
+    pub fn config(&self) -> &ServiceConfig {
+        &self.config
+    }
+}
+
+impl Drop for FactorizationService {
+    fn drop(&mut self) {
+        self.tx.take(); // close the queue
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Execute one routed job (also used directly by the benches so the
+/// algorithm dispatch is identical in and out of the pool).
+pub fn execute(request: &JobRequest, policy: &RoutePolicy, seed: u64) -> Result<JobOutcome> {
+    let method = policy.select(&request.spec, request.accuracy);
+    match &request.spec {
+        JobSpec::RankEstimate { matrix, eps } => {
+            let est = estimate_rank(
+                matrix.as_ref(),
+                &RankOptions { eps: *eps, seed, ..Default::default() },
+            )?;
+            Ok(JobOutcome::Rank { rank: est.rank, k_iterations: est.k_iterations })
+        }
+        JobSpec::FullSvd { matrix } => {
+            let s = svd(matrix)?;
+            Ok(JobOutcome::Svd(SvdResult {
+                u: s.u,
+                sigma: s.sigma,
+                v: s.v,
+                method: SvdMethod::Full,
+            }))
+        }
+        JobSpec::PartialSvd { matrix, r } => match method {
+            SvdMethod::Full => {
+                let s = svd(matrix)?.truncate(*r);
+                Ok(JobOutcome::Svd(SvdResult {
+                    u: s.u,
+                    sigma: s.sigma,
+                    v: s.v,
+                    method: SvdMethod::Full,
+                }))
+            }
+            SvdMethod::Fsvd { k } => {
+                let out = fsvd(
+                    matrix.as_ref(),
+                    &FsvdOptions { k, r: *r, seed, ..Default::default() },
+                )?;
+                Ok(JobOutcome::Svd(SvdResult {
+                    u: out.u,
+                    sigma: out.sigma,
+                    v: out.v,
+                    method: SvdMethod::Fsvd { k },
+                }))
+            }
+            SvdMethod::Rsvd { oversample } => {
+                let s = rsvd(
+                    matrix,
+                    &RsvdOptions { r: *r, oversample, seed, ..Default::default() },
+                )?
+                .truncate(*r);
+                Ok(JobOutcome::Svd(SvdResult {
+                    u: s.u,
+                    sigma: s.sigma,
+                    v: s.v,
+                    method: SvdMethod::Rsvd { oversample },
+                }))
+            }
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::policy::AccuracyClass;
+    use crate::data::synth::low_rank_gaussian;
+    use crate::linalg::Matrix;
+    use crate::rng::Pcg64;
+    use std::sync::Arc;
+
+    fn service() -> FactorizationService {
+        FactorizationService::new(ServiceConfig {
+            workers: 2,
+            queue_depth: 8,
+            ..Default::default()
+        })
+        .unwrap()
+    }
+
+    #[test]
+    fn partial_svd_job_round_trips() {
+        let mut rng = Pcg64::seed_from_u64(210);
+        let a = Arc::new(low_rank_gaussian(600, 500, 10, &mut rng));
+        let svc = service();
+        let res = svc
+            .run(JobRequest {
+                spec: JobSpec::PartialSvd { matrix: a.clone(), r: 10 },
+                accuracy: AccuracyClass::Balanced,
+            })
+            .unwrap();
+        let out = match res.outcome.unwrap() {
+            JobOutcome::Svd(s) => s,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(out.sigma.len(), 10);
+        assert!(matches!(out.method, SvdMethod::Fsvd { .. }));
+        // Rank-10 input: 10 triplets reconstruct A.
+        let full = crate::linalg::svd::svd(&a).unwrap();
+        for i in 0..10 {
+            assert!((out.sigma[i] - full.sigma[i]).abs() / full.sigma[i] < 1e-6);
+        }
+    }
+
+    #[test]
+    fn rank_job_round_trips() {
+        let mut rng = Pcg64::seed_from_u64(211);
+        let a = Arc::new(low_rank_gaussian(300, 200, 7, &mut rng));
+        let svc = service();
+        let res = svc
+            .run(JobRequest {
+                spec: JobSpec::RankEstimate { matrix: a, eps: 1e-8 },
+                accuracy: AccuracyClass::Balanced,
+            })
+            .unwrap();
+        match res.outcome.unwrap() {
+            JobOutcome::Rank { rank, k_iterations } => {
+                assert_eq!(rank, 7);
+                assert!(k_iterations >= 7);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn many_concurrent_jobs_complete() {
+        let mut rng = Pcg64::seed_from_u64(212);
+        let svc = service();
+        let mats: Vec<Arc<Matrix>> = (0..6)
+            .map(|_| Arc::new(low_rank_gaussian(120, 90, 4, &mut rng)))
+            .collect();
+        let handles: Vec<_> = mats
+            .iter()
+            .map(|m| {
+                svc.submit(JobRequest {
+                    spec: JobSpec::PartialSvd { matrix: m.clone(), r: 4 },
+                    accuracy: AccuracyClass::Balanced,
+                })
+                .unwrap()
+            })
+            .collect();
+        for h in handles {
+            let r = h.wait().unwrap();
+            assert!(r.outcome.is_ok());
+        }
+        assert_eq!(svc.metrics.completed.load(Ordering::Relaxed), 6);
+        assert_eq!(svc.metrics.failed.load(Ordering::Relaxed), 0);
+        assert_eq!(svc.metrics.exec_time.count(), 6);
+    }
+
+    #[test]
+    fn failing_job_reports_error_not_panic() {
+        let svc = service();
+        // Zero matrix breaks GK at p1 — should come back as Err outcome.
+        // (700x600 > the full-SVD cutoff, so it routes to F-SVD.)
+        let res = svc
+            .run(JobRequest {
+                spec: JobSpec::PartialSvd { matrix: Arc::new(Matrix::zeros(700, 600)), r: 3 },
+                accuracy: AccuracyClass::Balanced,
+            })
+            .unwrap();
+        assert!(res.outcome.is_err());
+        assert_eq!(svc.metrics.failed.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn zero_workers_rejected() {
+        assert!(FactorizationService::new(ServiceConfig {
+            workers: 0,
+            ..Default::default()
+        })
+        .is_err());
+    }
+
+    #[test]
+    fn fast_class_routes_to_rsvd() {
+        let mut rng = Pcg64::seed_from_u64(213);
+        let a = Arc::new(low_rank_gaussian(600, 500, 10, &mut rng));
+        let svc = service();
+        let res = svc
+            .run(JobRequest {
+                spec: JobSpec::PartialSvd { matrix: a, r: 10 },
+                accuracy: AccuracyClass::Fast,
+            })
+            .unwrap();
+        match res.outcome.unwrap() {
+            JobOutcome::Svd(s) => assert!(matches!(s.method, SvdMethod::Rsvd { .. })),
+            other => panic!("{other:?}"),
+        }
+    }
+}

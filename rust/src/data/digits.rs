@@ -1,0 +1,258 @@
+//! Procedural MNIST-like / USPS-like digit domains.
+//!
+//! The paper's RSL experiment (§6.3, Figure 2) pairs MNIST (28×28 = 784-d)
+//! with USPS (16×16 = 256-d) images. Those files are not available in this
+//! offline environment, so we synthesize the same *structure*: ten digit
+//! classes rendered as seven-segment-style glyphs on the two grid sizes,
+//! with per-sample stroke jitter, translation, blur and pixel noise. What
+//! the experiment exercises — two domains of different dimensionality whose
+//! samples share or don't share a class label, driving a rank-5
+//! `W ∈ R^{784×256}` bilinear similarity — is preserved exactly
+//! (DESIGN.md §Substitutions).
+
+use crate::linalg::Matrix;
+use crate::rng::{Pcg64, Rng};
+
+/// Which glyph segments are lit for each digit 0-9 (seven-segment coding:
+/// top, top-left, top-right, middle, bottom-left, bottom-right, bottom).
+const SEGMENTS: [[bool; 7]; 10] = [
+    [true, true, true, false, true, true, true],    // 0
+    [false, false, true, false, false, true, false], // 1
+    [true, false, true, true, true, false, true],   // 2
+    [true, false, true, true, false, true, true],   // 3
+    [false, true, true, true, false, true, false],  // 4
+    [true, true, false, true, false, true, true],   // 5
+    [true, true, false, true, true, true, true],    // 6
+    [true, false, true, false, false, true, false], // 7
+    [true, true, true, true, true, true, true],     // 8
+    [true, true, true, true, false, true, true],    // 9
+];
+
+/// A rendered dataset: `x` is `n_samples x dim` (rows are flattened
+/// images scaled to `[0, 1]`), `labels[i] ∈ 0..10`.
+#[derive(Debug, Clone)]
+pub struct DigitDataset {
+    /// Row-per-sample design matrix.
+    pub x: Matrix,
+    /// Class label per row.
+    pub labels: Vec<u8>,
+    /// Image side length (dim = side²).
+    pub side: usize,
+}
+
+/// Rendering knobs; defaults mimic the qualitative messiness of the real
+/// datasets (MNIST is cleaner, USPS smaller and blurrier).
+#[derive(Debug, Clone)]
+pub struct DigitStyle {
+    /// Image side (28 for MNIST-like, 16 for USPS-like).
+    pub side: usize,
+    /// Stroke half-width in pixels.
+    pub stroke: f64,
+    /// Max translation jitter (pixels).
+    pub jitter: f64,
+    /// Gaussian blur radius (pixels).
+    pub blur: f64,
+    /// Additive pixel noise sd.
+    pub noise: f64,
+}
+
+impl DigitStyle {
+    /// 28×28, thicker strokes, mild noise — stands in for MNIST.
+    pub fn mnist_like() -> Self {
+        DigitStyle { side: 28, stroke: 1.6, jitter: 2.0, blur: 0.8, noise: 0.05 }
+    }
+    /// 16×16, thinner strokes, blurrier — stands in for USPS.
+    pub fn usps_like() -> Self {
+        DigitStyle { side: 16, stroke: 1.0, jitter: 1.2, blur: 0.6, noise: 0.08 }
+    }
+}
+
+/// Render `n` samples with uniformly random labels.
+pub fn generate(n: usize, style: &DigitStyle, rng: &mut Pcg64) -> DigitDataset {
+    let dim = style.side * style.side;
+    let mut x = Matrix::zeros(n, dim);
+    let mut labels = Vec::with_capacity(n);
+    let mut img = vec![0.0f64; dim];
+    for i in 0..n {
+        let digit = rng.next_below(10) as u8;
+        labels.push(digit);
+        render_digit(digit, style, rng, &mut img);
+        x.row_mut(i).copy_from_slice(&img);
+    }
+    DigitDataset { x, labels, side: style.side }
+}
+
+/// Render one digit into `out` (length side²).
+pub fn render_digit(digit: u8, style: &DigitStyle, rng: &mut Pcg64, out: &mut [f64]) {
+    let s = style.side as f64;
+    out.fill(0.0);
+    // Glyph box with jittered origin.
+    let jx = (rng.next_f64() * 2.0 - 1.0) * style.jitter;
+    let jy = (rng.next_f64() * 2.0 - 1.0) * style.jitter;
+    let x0 = 0.25 * s + jx;
+    let x1 = 0.75 * s + jx;
+    let y0 = 0.15 * s + jy;
+    let ym = 0.50 * s + jy;
+    let y1 = 0.85 * s + jy;
+    // Per-sample stroke-width variation.
+    let stroke = style.stroke * (0.8 + 0.4 * rng.next_f64());
+
+    // Segment endpoints: (x_start, y_start, x_end, y_end).
+    let segs = [
+        (x0, y0, x1, y0), // top
+        (x0, y0, x0, ym), // top-left
+        (x1, y0, x1, ym), // top-right
+        (x0, ym, x1, ym), // middle
+        (x0, ym, x0, y1), // bottom-left
+        (x1, ym, x1, y1), // bottom-right
+        (x0, y1, x1, y1), // bottom
+    ];
+    let lit = &SEGMENTS[digit as usize % 10];
+    let side = style.side;
+    for (seg, &on) in segs.iter().zip(lit) {
+        if !on {
+            continue;
+        }
+        draw_segment(out, side, *seg, stroke);
+    }
+    if style.blur > 0.0 {
+        box_blur(out, side, style.blur);
+    }
+    // Noise + clamp.
+    for px in out.iter_mut() {
+        *px += style.noise * rng.next_gaussian();
+        *px = px.clamp(0.0, 1.0);
+    }
+}
+
+/// Rasterize a line segment with soft edges (distance-based intensity).
+fn draw_segment(img: &mut [f64], side: usize, (ax, ay, bx, by): (f64, f64, f64, f64), w: f64) {
+    let (minx, maxx) = ((ax.min(bx) - w).floor(), (ax.max(bx) + w).ceil());
+    let (miny, maxy) = ((ay.min(by) - w).floor(), (ay.max(by) + w).ceil());
+    let dx = bx - ax;
+    let dy = by - ay;
+    let len2 = (dx * dx + dy * dy).max(1e-12);
+    for py in (miny.max(0.0) as usize)..=(maxy.min(side as f64 - 1.0) as usize) {
+        for px in (minx.max(0.0) as usize)..=(maxx.min(side as f64 - 1.0) as usize) {
+            let fx = px as f64;
+            let fy = py as f64;
+            // Distance from pixel to the segment.
+            let t = (((fx - ax) * dx + (fy - ay) * dy) / len2).clamp(0.0, 1.0);
+            let cx = ax + t * dx;
+            let cy = ay + t * dy;
+            let d = ((fx - cx).powi(2) + (fy - cy).powi(2)).sqrt();
+            let v = (1.0 - (d / w)).clamp(0.0, 1.0);
+            let cell = &mut img[py * side + px];
+            *cell = cell.max(v);
+        }
+    }
+}
+
+/// Cheap separable box blur approximating a gaussian of radius `r`.
+fn box_blur(img: &mut [f64], side: usize, r: f64) {
+    let k = r.ceil() as usize;
+    if k == 0 {
+        return;
+    }
+    let norm = 1.0 / (2 * k + 1) as f64;
+    let mut tmp = vec![0.0f64; img.len()];
+    // Horizontal.
+    for y in 0..side {
+        for x in 0..side {
+            let mut s = 0.0;
+            for dx in -(k as isize)..=(k as isize) {
+                let xx = (x as isize + dx).clamp(0, side as isize - 1) as usize;
+                s += img[y * side + xx];
+            }
+            tmp[y * side + x] = s * norm;
+        }
+    }
+    // Vertical.
+    for y in 0..side {
+        for x in 0..side {
+            let mut s = 0.0;
+            for dy in -(k as isize)..=(k as isize) {
+                let yy = (y as isize + dy).clamp(0, side as isize - 1) as usize;
+                s += tmp[yy * side + x];
+            }
+            img[y * side + x] = s * norm;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::vecops::dot;
+
+    #[test]
+    fn generates_requested_shape() {
+        let mut rng = Pcg64::seed_from_u64(130);
+        let ds = generate(50, &DigitStyle::mnist_like(), &mut rng);
+        assert_eq!(ds.x.shape(), (50, 784));
+        assert_eq!(ds.labels.len(), 50);
+        assert!(ds.labels.iter().all(|&l| l < 10));
+        let usps = generate(20, &DigitStyle::usps_like(), &mut rng);
+        assert_eq!(usps.x.shape(), (20, 256));
+    }
+
+    #[test]
+    fn pixels_in_unit_range_and_nontrivial() {
+        let mut rng = Pcg64::seed_from_u64(131);
+        let ds = generate(30, &DigitStyle::mnist_like(), &mut rng);
+        let s = ds.x.as_slice();
+        assert!(s.iter().all(|&p| (0.0..=1.0).contains(&p)));
+        // Images are not blank and not saturated.
+        let mean: f64 = s.iter().sum::<f64>() / s.len() as f64;
+        assert!(mean > 0.01 && mean < 0.6, "mean={mean}");
+    }
+
+    #[test]
+    fn same_class_is_more_similar_than_cross_class() {
+        // Render many 0s and 1s; intra-class dot products should dominate.
+        let mut rng = Pcg64::seed_from_u64(132);
+        let style = DigitStyle { noise: 0.02, jitter: 0.5, ..DigitStyle::mnist_like() };
+        let mut zeros = Vec::new();
+        let mut ones = Vec::new();
+        let mut img = vec![0.0; 784];
+        for _ in 0..10 {
+            render_digit(0, &style, &mut rng, &mut img);
+            zeros.push(img.clone());
+            render_digit(1, &style, &mut rng, &mut img);
+            ones.push(img.clone());
+        }
+        let intra = dot(&zeros[0], &zeros[1]);
+        let cross = dot(&zeros[0], &ones[1]);
+        assert!(intra > cross, "intra={intra} cross={cross}");
+    }
+
+    #[test]
+    fn all_ten_digits_render_distinctly() {
+        let mut rng = Pcg64::seed_from_u64(133);
+        let style = DigitStyle { noise: 0.0, jitter: 0.0, ..DigitStyle::usps_like() };
+        let mut imgs = Vec::new();
+        let mut img = vec![0.0; 256];
+        for d in 0..10u8 {
+            render_digit(d, &style, &mut rng, &mut img);
+            imgs.push(img.clone());
+        }
+        // Pairwise distinct (normalized distance above a floor), except
+        // shared-segment pairs are naturally closer.
+        for i in 0..10 {
+            for j in (i + 1)..10 {
+                let d = crate::linalg::vecops::max_abs_diff(&imgs[i], &imgs[j]);
+                assert!(d > 0.05, "digits {i} and {j} identical (d={d})");
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_with_seed() {
+        let mut r1 = Pcg64::seed_from_u64(134);
+        let mut r2 = Pcg64::seed_from_u64(134);
+        let a = generate(5, &DigitStyle::usps_like(), &mut r1);
+        let b = generate(5, &DigitStyle::usps_like(), &mut r2);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.labels, b.labels);
+    }
+}

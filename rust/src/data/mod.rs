@@ -1,0 +1,11 @@
+//! Workload generators.
+//!
+//! * [`synth`] — synthetic fixed-rank and decaying-spectrum matrices, the
+//!   inputs of Tables 1a/1b/2 and Figure 1.
+//! * [`digits`] — the MNIST-like / USPS-like procedural digit domains used
+//!   by the RSL experiment (Figure 2). See DESIGN.md §Substitutions.
+//! * [`pairs`] — similarity-labelled pair sampler over the two domains.
+
+pub mod digits;
+pub mod pairs;
+pub mod synth;

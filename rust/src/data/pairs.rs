@@ -1,0 +1,142 @@
+//! Similarity-labelled pair sampler (paper eq. 18).
+//!
+//! Draws training triples `(x_i, v_j, y)` with `x` from the first domain,
+//! `v` from the second, and `y = +1` if the class labels match, `−1`
+//! otherwise. Balanced sampling (half similar, half dissimilar) keeps the
+//! hinge loss from collapsing to the majority class.
+
+use super::digits::DigitDataset;
+use crate::rng::{Pcg64, Rng};
+
+/// One training triple of paper eq. (18).
+#[derive(Debug, Clone)]
+pub struct Pair {
+    /// Row index into the X-domain dataset.
+    pub xi: usize,
+    /// Row index into the V-domain dataset.
+    pub vj: usize,
+    /// Label: `+1.0` similar (same class), `−1.0` dissimilar.
+    pub y: f64,
+}
+
+/// Balanced pair sampler over two labelled datasets.
+pub struct PairSampler<'a> {
+    dx: &'a DigitDataset,
+    dv: &'a DigitDataset,
+    /// Indices of X-domain rows per class.
+    by_class_x: Vec<Vec<usize>>,
+    /// Indices of V-domain rows per class.
+    by_class_v: Vec<Vec<usize>>,
+}
+
+impl<'a> PairSampler<'a> {
+    /// Build the per-class index. Requires both datasets to contain at
+    /// least one sample of at least two shared classes.
+    pub fn new(dx: &'a DigitDataset, dv: &'a DigitDataset) -> Self {
+        let mut by_class_x = vec![Vec::new(); 10];
+        for (i, &l) in dx.labels.iter().enumerate() {
+            by_class_x[l as usize].push(i);
+        }
+        let mut by_class_v = vec![Vec::new(); 10];
+        for (j, &l) in dv.labels.iter().enumerate() {
+            by_class_v[l as usize].push(j);
+        }
+        PairSampler { dx, dv, by_class_x, by_class_v }
+    }
+
+    /// Classes present in both domains.
+    fn shared_classes(&self) -> Vec<usize> {
+        (0..10)
+            .filter(|&c| !self.by_class_x[c].is_empty() && !self.by_class_v[c].is_empty())
+            .collect()
+    }
+
+    /// Sample one balanced pair.
+    pub fn sample(&self, rng: &mut Pcg64) -> Pair {
+        let shared = self.shared_classes();
+        assert!(
+            shared.len() >= 2,
+            "need >= 2 classes shared between domains"
+        );
+        let similar = rng.next_f64() < 0.5;
+        if similar {
+            let c = shared[rng.next_below(shared.len() as u64) as usize];
+            let xi = self.by_class_x[c][rng.next_below(self.by_class_x[c].len() as u64) as usize];
+            let vj = self.by_class_v[c][rng.next_below(self.by_class_v[c].len() as u64) as usize];
+            Pair { xi, vj, y: 1.0 }
+        } else {
+            loop {
+                let cx = shared[rng.next_below(shared.len() as u64) as usize];
+                let cv = shared[rng.next_below(shared.len() as u64) as usize];
+                if cx == cv {
+                    continue;
+                }
+                let xi =
+                    self.by_class_x[cx][rng.next_below(self.by_class_x[cx].len() as u64) as usize];
+                let vj =
+                    self.by_class_v[cv][rng.next_below(self.by_class_v[cv].len() as u64) as usize];
+                return Pair { xi, vj, y: -1.0 };
+            }
+        }
+    }
+
+    /// Sample a mini-batch of `b` pairs (paper Algorithm 4 line 4).
+    pub fn sample_batch(&self, b: usize, rng: &mut Pcg64) -> Vec<Pair> {
+        (0..b).map(|_| self.sample(rng)).collect()
+    }
+
+    /// X-domain feature row for a pair.
+    pub fn x_row(&self, p: &Pair) -> &[f64] {
+        self.dx.x.row(p.xi)
+    }
+
+    /// V-domain feature row for a pair.
+    pub fn v_row(&self, p: &Pair) -> &[f64] {
+        self.dv.x.row(p.vj)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::digits::{generate, DigitStyle};
+
+    fn datasets() -> (DigitDataset, DigitDataset) {
+        let mut rng = Pcg64::seed_from_u64(140);
+        let dx = generate(100, &DigitStyle::mnist_like(), &mut rng);
+        let dv = generate(100, &DigitStyle::usps_like(), &mut rng);
+        (dx, dv)
+    }
+
+    #[test]
+    fn labels_match_similarity() {
+        let (dx, dv) = datasets();
+        let sampler = PairSampler::new(&dx, &dv);
+        let mut rng = Pcg64::seed_from_u64(141);
+        for _ in 0..200 {
+            let p = sampler.sample(&mut rng);
+            let same = dx.labels[p.xi] == dv.labels[p.vj];
+            assert_eq!(same, p.y > 0.0);
+        }
+    }
+
+    #[test]
+    fn batches_are_roughly_balanced() {
+        let (dx, dv) = datasets();
+        let sampler = PairSampler::new(&dx, &dv);
+        let mut rng = Pcg64::seed_from_u64(142);
+        let batch = sampler.sample_batch(1000, &mut rng);
+        let pos = batch.iter().filter(|p| p.y > 0.0).count();
+        assert!((350..=650).contains(&pos), "positives={pos}");
+    }
+
+    #[test]
+    fn feature_rows_have_domain_dims() {
+        let (dx, dv) = datasets();
+        let sampler = PairSampler::new(&dx, &dv);
+        let mut rng = Pcg64::seed_from_u64(143);
+        let p = sampler.sample(&mut rng);
+        assert_eq!(sampler.x_row(&p).len(), 784);
+        assert_eq!(sampler.v_row(&p).len(), 256);
+    }
+}

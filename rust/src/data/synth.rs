@@ -1,0 +1,128 @@
+//! Synthetic matrices with controlled rank and spectrum.
+//!
+//! The paper builds its evaluation inputs as products `M·N` of independent
+//! gaussian factors (`M ∈ R^{m x l}`, `N ∈ R^{l x n}`) so the result has
+//! numerical rank exactly `l` with high probability (§6.1). Figure 1 also
+//! needs a matrix with many non-negligible singular values; the
+//! decaying-spectrum generators cover the slow-decay regime the paper
+//! argues R-SVD handles poorly.
+
+use crate::linalg::Matrix;
+use crate::rng::{Pcg64, Rng};
+use crate::Result;
+
+/// `m x n` gaussian-product matrix of rank `min(l, m, n)` — the paper's
+/// Table 1/2 workload.
+pub fn low_rank_gaussian(m: usize, n: usize, l: usize, rng: &mut impl Rng) -> Matrix {
+    let l = l.min(m).min(n);
+    let a = Matrix::gaussian(m, l, rng);
+    let b = Matrix::gaussian(l, n, rng);
+    a.matmul(&b).expect("shape by construction")
+}
+
+/// Like [`low_rank_gaussian`] plus iid gaussian noise of scale `noise`,
+/// giving a matrix with *numerical* (not exact) rank `l`.
+pub fn noisy_low_rank(m: usize, n: usize, l: usize, noise: f64, rng: &mut impl Rng) -> Matrix {
+    let mut a = low_rank_gaussian(m, n, l, rng);
+    let s = a.as_mut_slice();
+    for x in s.iter_mut() {
+        *x += noise * rng.next_gaussian();
+    }
+    a
+}
+
+/// Matrix with a prescribed singular spectrum: `A = U · diag(sigma) · Vᵀ`
+/// where `U`, `V` are random orthonormal (from QR of gaussians).
+///
+/// This is how Figure 1's rank-1000 slow-decay input is modelled at scale.
+pub fn with_spectrum(m: usize, n: usize, sigma: &[f64], rng: &mut Pcg64) -> Result<Matrix> {
+    let r = sigma.len().min(m).min(n);
+    let gu = Matrix::gaussian(m, r, rng);
+    let gv = Matrix::gaussian(n, r, rng);
+    let u = crate::linalg::qr::orthonormalize(&gu)?;
+    let v = crate::linalg::qr::orthonormalize(&gv)?;
+    // U * diag(sigma) then * V^T.
+    let mut us = u;
+    for i in 0..us.rows() {
+        let row = us.row_mut(i);
+        for (j, &s) in sigma.iter().take(r).enumerate() {
+            row[j] *= s;
+        }
+    }
+    us.matmul_nt(&v)
+}
+
+/// Flat spectrum of `r` ones followed by zeros (sharp cliff).
+pub fn flat_spectrum(r: usize) -> Vec<f64> {
+    vec![1.0; r]
+}
+
+/// Linearly decaying spectrum `sigma_i = 1 - i/r` over `r` values — the
+/// "slow decay" regime where the paper says the oversampling parameter of
+/// R-SVD cannot be ignored.
+pub fn linear_decay_spectrum(r: usize) -> Vec<f64> {
+    (0..r).map(|i| 1.0 - i as f64 / r as f64).collect()
+}
+
+/// Geometrically decaying spectrum `sigma_i = rho^i` (fast decay — the
+/// friendly case for R-SVD; used in ablations).
+pub fn geometric_spectrum(r: usize, rho: f64) -> Vec<f64> {
+    (0..r).map(|i| rho.powi(i as i32)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::svd::svd;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn low_rank_gaussian_has_exact_rank() {
+        let mut rng = Pcg64::seed_from_u64(70);
+        let a = low_rank_gaussian(60, 40, 7, &mut rng);
+        let s = svd(&a).unwrap();
+        assert_eq!(s.rank(1e-9 * s.sigma[0]), 7);
+    }
+
+    #[test]
+    fn rank_is_clamped_to_dims() {
+        let mut rng = Pcg64::seed_from_u64(71);
+        let a = low_rank_gaussian(10, 5, 100, &mut rng);
+        assert_eq!(a.shape(), (10, 5));
+        let s = svd(&a).unwrap();
+        assert_eq!(s.rank(1e-9 * s.sigma[0]), 5);
+    }
+
+    #[test]
+    fn noisy_low_rank_has_noise_floor() {
+        let mut rng = Pcg64::seed_from_u64(72);
+        let a = noisy_low_rank(50, 30, 5, 1e-6, &mut rng);
+        let s = svd(&a).unwrap();
+        // 5 large values, the rest tiny but nonzero.
+        assert!(s.sigma[4] > 1.0);
+        assert!(s.sigma[5] < 1e-3);
+        assert!(s.sigma[5] > 0.0);
+    }
+
+    #[test]
+    fn with_spectrum_reproduces_sigma() {
+        let mut rng = Pcg64::seed_from_u64(73);
+        let sigma = vec![4.0, 2.0, 1.0, 0.5];
+        let a = with_spectrum(20, 15, &sigma, &mut rng).unwrap();
+        let s = svd(&a).unwrap();
+        for (got, want) in s.sigma.iter().zip(&sigma) {
+            assert!((got - want).abs() < 1e-10, "{got} vs {want}");
+        }
+        assert!(s.sigma[4] < 1e-10);
+    }
+
+    #[test]
+    fn spectra_shapes() {
+        assert_eq!(flat_spectrum(3), vec![1.0; 3]);
+        let lin = linear_decay_spectrum(4);
+        assert_eq!(lin.len(), 4);
+        assert!(lin[0] > lin[3]);
+        let geo = geometric_spectrum(5, 0.5);
+        assert!((geo[4] - 0.0625).abs() < 1e-12);
+    }
+}

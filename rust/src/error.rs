@@ -1,0 +1,79 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Errors produced by fastlr.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Dimension mismatch between operands.
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+
+    /// An algorithm received an invalid parameter.
+    #[error("invalid argument: {0}")]
+    InvalidArg(String),
+
+    /// An iterative method failed to converge within its budget.
+    #[error("no convergence: {0}")]
+    NoConvergence(String),
+
+    /// Numerical breakdown (e.g. division by a vanishing norm outside the
+    /// sanctioned termination path).
+    #[error("numerical breakdown: {0}")]
+    Breakdown(String),
+
+    /// The PJRT runtime layer failed (missing artifact, compile error, ...).
+    #[error("runtime: {0}")]
+    Runtime(String),
+
+    /// Coordinator/service level failure (queue closed, worker panic, ...).
+    #[error("service: {0}")]
+    Service(String),
+
+    /// Underlying I/O error.
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+
+    /// Error bubbled up from the xla crate.
+    #[error("xla: {0}")]
+    Xla(String),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Convenience alias used throughout the crate.
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[macro_export]
+/// Bail with [`Error::Shape`] unless a dimension predicate holds.
+macro_rules! ensure_shape {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::Error::Shape(format!($($arg)*)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_display_includes_context() {
+        let e = Error::Shape("2x3 vs 4x5".into());
+        assert!(e.to_string().contains("2x3 vs 4x5"));
+        let e = Error::NoConvergence("QL sweep 31".into());
+        assert!(e.to_string().contains("QL sweep 31"));
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let ioe = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
+        let e: Error = ioe.into();
+        assert!(e.to_string().contains("gone"));
+    }
+}

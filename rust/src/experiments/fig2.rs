@@ -1,0 +1,161 @@
+//! Figure 2 — RSL training: wall time (a) and accuracy (b) vs RSGD
+//! iterations, for the three retraction backends the paper compares:
+//! standard SVD, F-SVD "lower iter" (k = 20) and F-SVD "higher iter"
+//! (k = 35). Paper runs 5k–20k iterations on MNIST x USPS with rank 5 and
+//! the median of 3 executions; scaled here to checkpointed runs on the
+//! procedural digit domains (same dimensionalities 784 x 256).
+
+use super::Scale;
+use crate::bench_harness::Table;
+use crate::data::digits::{generate, DigitStyle};
+use crate::data::pairs::PairSampler;
+use crate::manifold::SvdBackend;
+use crate::rng::Pcg64;
+use crate::rsl::model::NativeGradEngine;
+use crate::rsl::trainer::{train, RsgdOptions};
+use crate::Result;
+
+struct Fig2Params {
+    train_n: usize,
+    test_n: usize,
+    iters: usize,
+    eval_every: usize,
+    reps: usize,
+    batch: usize,
+}
+
+fn params(scale: Scale) -> Fig2Params {
+    match scale {
+        Scale::Smoke => Fig2Params {
+            train_n: 120,
+            test_n: 60,
+            iters: 40,
+            eval_every: 20,
+            reps: 1,
+            batch: 16,
+        },
+        Scale::Paper => Fig2Params {
+            train_n: 400,
+            test_n: 200,
+            iters: 400,
+            eval_every: 50,
+            reps: 3,
+            batch: 32,
+        },
+    }
+}
+
+fn median(mut v: Vec<f64>) -> f64 {
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    v[v.len() / 2]
+}
+
+/// Run Figure 2: one table per panel (time, accuracy).
+pub fn run_fig2(scale: Scale) -> Result<Vec<Table>> {
+    let p = params(scale);
+    let mut rng = Pcg64::seed_from_u64(0xF162);
+    let trx = generate(p.train_n, &DigitStyle::mnist_like(), &mut rng);
+    let trv = generate(p.train_n, &DigitStyle::usps_like(), &mut rng);
+    let tex = generate(p.test_n, &DigitStyle::mnist_like(), &mut rng);
+    let tev = generate(p.test_n, &DigitStyle::usps_like(), &mut rng);
+    let tr = PairSampler::new(&trx, &trv);
+    let te = PairSampler::new(&tex, &tev);
+
+    let backends: [(&str, SvdBackend); 3] = [
+        ("SVD", SvdBackend::Full),
+        ("F-SVD lower iter (k=20)", SvdBackend::Fsvd { k: 20, reorth_passes: 1, seed: 0 }),
+        ("F-SVD higher iter (k=35)", SvdBackend::Fsvd { k: 35, reorth_passes: 1, seed: 0 }),
+    ];
+
+    // history[backend][checkpoint] = (median time, median accuracy)
+    let mut checkpoints: Vec<usize> = vec![];
+    let mut results: Vec<Vec<(f64, f64)>> = Vec::new();
+    for (_, backend) in &backends {
+        // reps runs; collect per-checkpoint vectors, take medians.
+        let mut per_rep: Vec<Vec<(f64, f64)>> = Vec::new();
+        for rep in 0..p.reps {
+            let (_, hist) = train(
+                &tr,
+                &te,
+                &NativeGradEngine,
+                &RsgdOptions {
+                    rank: 5,
+                    iters: p.iters,
+                    batch: p.batch,
+                    eta: 1.0,
+                    lambda: 1e-4,
+                    backend: backend.clone(),
+                    seed: 0xF162 + rep as u64,
+                    eval_every: p.eval_every,
+                    eval_pairs: 300,
+                },
+            )?;
+            if checkpoints.is_empty() {
+                checkpoints = hist.records.iter().map(|r| r.iter).collect();
+            }
+            per_rep.push(
+                hist.records
+                    .iter()
+                    .map(|r| (r.elapsed_sec, r.test_accuracy))
+                    .collect(),
+            );
+        }
+        let merged: Vec<(f64, f64)> = (0..checkpoints.len())
+            .map(|ci| {
+                let times: Vec<f64> = per_rep.iter().map(|r| r[ci].0).collect();
+                let accs: Vec<f64> = per_rep.iter().map(|r| r[ci].1).collect();
+                (median(times), median(accs))
+            })
+            .collect();
+        results.push(merged);
+    }
+
+    let mut time_table = Table::new(
+        "Figure 2a — RSGD wall time (sec) vs iterations (median of reps)",
+        &["iterations", backends[0].0, backends[1].0, backends[2].0],
+    );
+    let mut acc_table = Table::new(
+        "Figure 2b — RSL pair accuracy vs iterations (median of reps)",
+        &["iterations", backends[0].0, backends[1].0, backends[2].0],
+    );
+    for (ci, &it) in checkpoints.iter().enumerate() {
+        time_table.push_row(vec![
+            it.to_string(),
+            format!("{:.3}", results[0][ci].0),
+            format!("{:.3}", results[1][ci].0),
+            format!("{:.3}", results[2][ci].0),
+        ]);
+        acc_table.push_row(vec![
+            it.to_string(),
+            format!("{:.4}", results[0][ci].1),
+            format!("{:.4}", results[1][ci].1),
+            format!("{:.4}", results[2][ci].1),
+        ]);
+    }
+    Ok(vec![time_table, acc_table])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig2_smoke_fsvd_is_faster_same_accuracy() {
+        let tables = run_fig2(Scale::Smoke).unwrap();
+        let time = &tables[0];
+        let acc = &tables[1];
+        let last = time.rows.last().unwrap();
+        let t_svd: f64 = last[1].parse().unwrap();
+        let t_lower: f64 = last[2].parse().unwrap();
+        // Figure 2a: F-SVD lower-iter beats standard SVD on wall time.
+        assert!(
+            t_lower < t_svd,
+            "F-SVD k=20 ({t_lower}s) should beat SVD ({t_svd}s)"
+        );
+        // Figure 2b: accuracies within a few points of each other.
+        let lacc = acc.rows.last().unwrap();
+        let a_svd: f64 = lacc[1].parse().unwrap();
+        let a_lower: f64 = lacc[2].parse().unwrap();
+        assert!((a_svd - a_lower).abs() < 0.2, "{a_svd} vs {a_lower}");
+    }
+}

@@ -1,0 +1,184 @@
+//! Tables 1a and 1b — execution time of rank estimation and partial SVD.
+//!
+//! * **Table 1a** compares the time to determine the numerical rank by:
+//!   traditional SVD (factor + count σ > ε), Algorithm 1 alone (its
+//!   iteration count `k'` is the *preliminary* estimate) and Algorithm 3
+//!   (Algorithm 1 + eig of `BᵀB` = the *accurate* rank). The last column
+//!   is Algorithm 1's iteration count — the paper reports 102–105 for
+//!   true rank 100 across all sizes.
+//! * **Table 1b** compares wall time for the `r = 20` dominant triplets:
+//!   traditional SVD, F-SVD, R-SVD (default `p = 10`), R-SVD
+//!   (oversampled `p = rank − r + 10` — the "knowing the required p"
+//!   scenario).
+
+use super::Scale;
+use crate::bench_harness::{auto_reps, fmt_secs, time_reps, Table};
+use crate::data::synth::low_rank_gaussian;
+use crate::krylov::fsvd::{fsvd, FsvdOptions};
+use crate::krylov::gk::{gk_bidiagonalize, GkOptions};
+use crate::krylov::rank::{estimate_rank, RankOptions};
+use crate::linalg::svd::svd;
+use crate::rng::Pcg64;
+use crate::rsvd::{rsvd, RsvdOptions};
+use crate::Result;
+use std::time::Duration;
+
+const EPS: f64 = 1e-8;
+
+/// Table 1a — rank estimation times + Algorithm 1 iteration count.
+pub fn run_table1a(scale: Scale) -> Result<Vec<Table>> {
+    let mut table = Table::new(
+        "Table 1a — numerical rank estimation: time (sec) and Alg 1 iterations",
+        &["size", "true rank", "SVD", "Alg 1", "Alg 3", "Alg1 iters", "Alg3 rank"],
+    );
+    let mut rng = Pcg64::seed_from_u64(0x7AB1EA);
+    for (m, n, rank) in scale.table_grid() {
+        let a = low_rank_gaussian(m, n, rank, &mut rng);
+
+        // Traditional SVD: factor, then count σ_i > ε (what "using
+        // python's practical method" amounts to).
+        let svd_time = if m * n <= scale.full_svd_numel_cutoff() {
+            let (t, s) = time_reps(1, || svd(&a).unwrap());
+            assert_eq!(s.rank(EPS), rank, "SVD rank mismatch at {m}x{n}");
+            Some(t.median_secs())
+        } else {
+            None
+        };
+
+        // Algorithm 1 alone (preliminary estimate = iteration count).
+        let (t1_est, gk) = time_reps(1, || {
+            gk_bidiagonalize(
+                &a,
+                &GkOptions { k: m.min(n), eps: EPS, ..Default::default() },
+            )
+            .unwrap()
+        });
+        let reps = auto_reps(t1_est.median());
+        let (t1, gk) = if reps > 1 {
+            time_reps(reps, || {
+                gk_bidiagonalize(
+                    &a,
+                    &GkOptions { k: m.min(n), eps: EPS, ..Default::default() },
+                )
+                .unwrap()
+            })
+        } else {
+            (t1_est, gk)
+        };
+
+        // Algorithm 3 (Algorithm 1 + accurate eig-count). With the paper's
+        // single reorthogonalization pass the estimate can drift by ±1 at
+        // the largest sizes (lost orthogonality admits one spurious
+        // near-ε eigenvalue); we report it rather than hide it.
+        let (t3, est) = time_reps(reps, || {
+            estimate_rank(&a, &RankOptions { eps: EPS, ..Default::default() }).unwrap()
+        });
+        assert!(
+            est.rank.abs_diff(rank) <= 2,
+            "Alg 3 rank {} vs true {rank} at {m}x{n}",
+            est.rank
+        );
+
+        table.push_row(vec![
+            format!("{m}x{n}"),
+            rank.to_string(),
+            fmt_secs(svd_time),
+            fmt_secs(Some(t1.median_secs())),
+            fmt_secs(Some(t3.median_secs())),
+            gk.k_used.to_string(),
+            est.rank.to_string(),
+        ]);
+    }
+    Ok(vec![table])
+}
+
+/// Table 1b — time to the `r` dominant triplets for the four algorithms.
+pub fn run_table1b(scale: Scale) -> Result<Vec<Table>> {
+    let r = scale.r_triplets();
+    let mut table = Table::new(
+        &format!("Table 1b — execution time (sec) for the {r} dominant triplets"),
+        &["size", "SVD", "F-SVD", "R-SVD (default)", "R-SVD (oversampled)"],
+    );
+    let mut rng = Pcg64::seed_from_u64(0x7AB1EB);
+    for (m, n, rank) in scale.table_grid() {
+        let a = low_rank_gaussian(m, n, rank, &mut rng);
+
+        let svd_time = if m * n <= scale.full_svd_numel_cutoff() {
+            let (t, _) = time_reps(1, || svd(&a).unwrap().truncate(r));
+            Some(t.median_secs())
+        } else {
+            None
+        };
+
+        // F-SVD: Algorithm 1 with the ε-stop (terminates ≈ rank iters).
+        let fsvd_once = || {
+            fsvd(
+                &a,
+                &FsvdOptions { k: m.min(n), r, eps: EPS, ..Default::default() },
+            )
+            .unwrap()
+        };
+        let (t_est, _) = time_reps(1, fsvd_once);
+        let reps = auto_reps(t_est.median());
+        let t_fsvd = if reps > 1 { time_reps(reps, fsvd_once).0 } else { t_est };
+
+        // R-SVD default p = 10.
+        let (t_def, _) = time_reps(reps.max(2), || {
+            rsvd(&a, &RsvdOptions { r, oversample: 10, ..Default::default() }).unwrap()
+        });
+        // R-SVD oversampled: p chosen knowing the rank.
+        let p_over = rank.saturating_sub(r) + 10;
+        let (t_over, _) = time_reps(reps.max(2), || {
+            rsvd(&a, &RsvdOptions { r, oversample: p_over, ..Default::default() }).unwrap()
+        });
+
+        table.push_row(vec![
+            format!("{m}x{n}"),
+            fmt_secs(svd_time),
+            fmt_secs(Some(t_fsvd.median_secs())),
+            fmt_secs(Some(t_def.median_secs())),
+            fmt_secs(Some(t_over.median_secs())),
+        ]);
+    }
+    Ok(vec![table])
+}
+
+/// Shared sanity bound used by the bench targets: F-SVD must beat full SVD
+/// by at least this factor on square matrices ≥ 1000 (paper: ~50x at 1e4).
+pub fn expected_min_speedup() -> f64 {
+    10.0
+}
+
+#[allow(dead_code)]
+fn unused(_: Duration) {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1a_smoke_produces_full_grid() {
+        let tables = run_table1a(Scale::Smoke).unwrap();
+        assert_eq!(tables.len(), 1);
+        let t = &tables[0];
+        assert_eq!(t.rows.len(), Scale::Smoke.table_grid().len());
+        // Iterations column ≈ true rank; Alg3 rank exact at smoke scale.
+        for row in &t.rows {
+            let rank: usize = row[1].parse().unwrap();
+            let iters: usize = row[5].parse().unwrap();
+            assert!(iters >= rank && iters <= rank + 4, "{row:?}");
+            let est: usize = row[6].parse().unwrap();
+            assert_eq!(est, rank, "{row:?}");
+        }
+    }
+
+    #[test]
+    fn table1b_smoke_has_no_na_at_smoke_scale() {
+        let tables = run_table1b(Scale::Smoke).unwrap();
+        for row in &tables[0].rows {
+            for cell in &row[1..] {
+                assert_ne!(cell, "NA");
+            }
+        }
+    }
+}

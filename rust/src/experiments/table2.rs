@@ -1,0 +1,160 @@
+//! Table 2 — residual and relative errors of the four SVD algorithms.
+//!
+//! Error definitions (paper §6.1):
+//!
+//! * residual `err_res = ‖A − U·Σ·Vᵀ‖_F`
+//! * relative `err_rel = ‖Aᵀ·U − V·Σ‖_F / ‖Σ‖_F`
+//!
+//! Conventions reproduced from the paper's numbers: the traditional SVD
+//! and F-SVD rows use **all** computed triplets (min(m,n) and k'
+//! respectively — that is the only way their reported residuals reach
+//! 1e-11), while the R-SVD rows keep only the `r` requested triplets —
+//! whose rank-truncation residual is huge (thousands) for BOTH the
+//! default and the oversampled variant, exactly as Table 2 reports
+//! (2664 vs 2656 at 1e3x1e3), even though the *relative* error stays
+//! ~1e-15. The asymmetry (F-SVD's k' iterations capture the whole
+//! numerical rank "for free"; the sketch must be re-run wider) is the
+//! paper's headline criticism of sketch-based methods.
+
+use super::Scale;
+use crate::bench_harness::{fmt_err, Table};
+use crate::data::synth::low_rank_gaussian;
+use crate::krylov::fsvd::{fsvd, FsvdOptions};
+use crate::linalg::svd::{svd, Svd};
+use crate::linalg::Matrix;
+use crate::rng::Pcg64;
+use crate::rsvd::{rsvd, RsvdOptions};
+use crate::Result;
+
+const EPS: f64 = 1e-8;
+
+/// `(residual, relative)` for a factor triple.
+pub fn errors(a: &Matrix, u: &Matrix, sigma: &[f64], v: &Matrix) -> Result<(f64, f64)> {
+    // Residual ‖A − U Σ Vᵀ‖.
+    let mut us = u.clone();
+    for i in 0..us.rows() {
+        let row = us.row_mut(i);
+        for (j, &s) in sigma.iter().enumerate() {
+            row[j] *= s;
+        }
+    }
+    let recon = us.matmul_nt(v)?;
+    let residual = a.sub(&recon)?.fro_norm();
+    // Relative ‖Aᵀ U − V Σ‖ / ‖Σ‖.
+    let atu = a.matmul_tn(u)?;
+    let mut vs = v.clone();
+    for i in 0..vs.rows() {
+        let row = vs.row_mut(i);
+        for (j, &s) in sigma.iter().enumerate() {
+            row[j] *= s;
+        }
+    }
+    let num = atu.sub(&vs)?.fro_norm();
+    let den: f64 = sigma.iter().map(|s| s * s).sum::<f64>().sqrt();
+    Ok((residual, num / den.max(f64::MIN_POSITIVE)))
+}
+
+fn svd_errors(a: &Matrix, s: &Svd) -> Result<(f64, f64)> {
+    errors(a, &s.u, &s.sigma, &s.v)
+}
+
+/// Run Table 2.
+pub fn run_table2(scale: Scale) -> Result<Vec<Table>> {
+    let r = scale.r_triplets();
+    let mut table = Table::new(
+        "Table 2 — residual and relative errors of the four SVD algorithms",
+        &[
+            "size",
+            "SVD res",
+            "SVD rel",
+            "F-SVD res",
+            "F-SVD rel",
+            "R-SVD(over) res",
+            "R-SVD(over) rel",
+            "R-SVD(def) res",
+            "R-SVD(def) rel",
+        ],
+    );
+    let mut rng = Pcg64::seed_from_u64(0x7AB1E2);
+    for (m, n, rank) in scale.table_grid() {
+        let a = low_rank_gaussian(m, n, rank, &mut rng);
+
+        // Traditional SVD, all triplets.
+        let (svd_res, svd_rel) = if m * n <= scale.full_svd_numel_cutoff() {
+            let s = svd(&a)?;
+            let (res, rel) = svd_errors(&a, &s)?;
+            (Some(res), Some(rel))
+        } else {
+            (None, None)
+        };
+
+        // F-SVD with the ε-stop, keeping ALL k' triplets (paper convention).
+        let f = fsvd(
+            &a,
+            &FsvdOptions { k: m.min(n), r: m.min(n), eps: EPS, ..Default::default() },
+        )?;
+        let (f_res, f_rel) = errors(&a, &f.u, &f.sigma, &f.v)?;
+
+        // R-SVD keeps the r requested triplets (paper convention — see
+        // the module docs).
+        let p_over = rank.saturating_sub(r) + 10;
+        let over = rsvd(&a, &RsvdOptions { r, oversample: p_over, ..Default::default() })?
+            .truncate(r);
+        let (o_res, o_rel) = svd_errors(&a, &over)?;
+        let def = rsvd(&a, &RsvdOptions { r, oversample: 10, ..Default::default() })?.truncate(r);
+        let (d_res, d_rel) = svd_errors(&a, &def)?;
+
+        table.push_row(vec![
+            format!("{m}x{n}"),
+            fmt_err(svd_res),
+            fmt_err(svd_rel),
+            fmt_err(Some(f_res)),
+            fmt_err(Some(f_rel)),
+            fmt_err(Some(o_res)),
+            fmt_err(Some(o_rel)),
+            fmt_err(Some(d_res)),
+            fmt_err(Some(d_rel)),
+        ]);
+    }
+    Ok(vec![table])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_metrics_zero_for_exact_factorization() {
+        let mut rng = Pcg64::seed_from_u64(400);
+        let a = low_rank_gaussian(40, 30, 5, &mut rng);
+        let s = svd(&a).unwrap();
+        let (res, rel) = svd_errors(&a, &s).unwrap();
+        assert!(res < 1e-9, "res {res}");
+        assert!(rel < 1e-12, "rel {rel}");
+    }
+
+    #[test]
+    fn table2_smoke_shape_holds() {
+        // The paper's qualitative claims on the smoke grid:
+        //  - F-SVD residual tiny (captures the whole rank),
+        //  - R-SVD default residual comparatively huge when l < rank...
+        //    at smoke scale rank=20, r=5, p=10 -> l=15 < 20: misses rank.
+        let tables = run_table2(Scale::Smoke).unwrap();
+        let t = &tables[0];
+        for row in &t.rows {
+            let f_res: f64 = row[3].parse().unwrap();
+            let o_res: f64 = row[5].parse().unwrap();
+            let d_res: f64 = row[7].parse().unwrap();
+            assert!(f_res < 1e-6, "F-SVD residual {f_res}");
+            assert!(d_res > 1.0, "R-SVD default residual should be large, got {d_res}");
+            // Paper: the oversampled variant's residual is just as large
+            // (both rows are truncated to r triplets).
+            assert!(o_res > 1.0, "R-SVD oversampled residual, got {o_res}");
+            // Relative errors all small.
+            for idx in [2usize, 4, 6, 8] {
+                let rel: f64 = row[idx].parse().unwrap();
+                assert!(rel < 1e-6, "col {idx} rel {rel}");
+            }
+        }
+    }
+}

@@ -1,0 +1,240 @@
+//! **Algorithm 2** — accurate and fast partial SVD (F-SVD).
+//!
+//! Pipeline (paper §3): run Algorithm 1 to get `B_{k'+1,k'}, P_{k'},
+//! Q_{k'+1}`; eigendecompose the small tridiagonal `BᵀB` (paper eq. 15 — the
+//! Ritz problem of `AᵀA` restricted to `span(P)`); map the top-`r` Ritz
+//! vectors back, `v_i = P·g_i`; recover `σ_i = √θ_i` and the left vectors
+//! via `u_i = A·v_i / σ_i` (paper eq. 16, Algorithm 2 line 7).
+
+use super::gk::{gk_bidiagonalize, GkOptions, GkResult};
+use super::LinOp;
+use crate::linalg::tridiag::btb_eig;
+use crate::linalg::Matrix;
+use crate::{Error, Result};
+
+/// Options for [`fsvd`].
+#[derive(Debug, Clone)]
+pub struct FsvdOptions {
+    /// Krylov iterations (`k` of Algorithm 1). More iterations → more
+    /// accurate small triplets; the paper uses `k ≈ rank/2` for Figure 1.
+    pub k: usize,
+    /// Number of desired leading singular triplets (`r`).
+    pub r: usize,
+    /// ε for Algorithm 1 termination.
+    pub eps: f64,
+    /// Reorthogonalization passes (see [`GkOptions::reorth_passes`]).
+    pub reorth_passes: usize,
+    /// Start-vector seed.
+    pub seed: u64,
+}
+
+impl Default for FsvdOptions {
+    fn default() -> Self {
+        FsvdOptions { k: 100, r: 20, eps: 1e-8, reorth_passes: 1, seed: 0x5eed }
+    }
+}
+
+/// Output of F-SVD: the `r` leading singular triplets plus diagnostics.
+#[derive(Debug, Clone)]
+pub struct FsvdOutput {
+    /// `m x r` left singular vectors.
+    pub u: Matrix,
+    /// Leading singular values, descending, length `r`.
+    pub sigma: Vec<f64>,
+    /// `n x r` right singular vectors.
+    pub v: Matrix,
+    /// All `k'` Ritz values of `AᵀA` (descending) — σ² estimates.
+    pub theta: Vec<f64>,
+    /// Iterations Algorithm 1 actually used.
+    pub k_used: usize,
+    /// Whether Algorithm 1 hit the ε-criterion.
+    pub terminated_early: bool,
+}
+
+/// Run F-SVD (Algorithm 2) against any linear operator.
+pub fn fsvd(a: &dyn LinOp, opts: &FsvdOptions) -> Result<FsvdOutput> {
+    if opts.r == 0 {
+        return Err(Error::InvalidArg("fsvd: r must be >= 1".into()));
+    }
+    let gk = gk_bidiagonalize(
+        a,
+        &GkOptions {
+            k: opts.k,
+            eps: opts.eps,
+            reorth_passes: opts.reorth_passes,
+            seed: opts.seed,
+        },
+    )?;
+    fsvd_from_gk(a, &gk, opts.r)
+}
+
+/// Algorithm 2 lines 2–9, reusing an existing Algorithm 1 run. Exposed so
+/// the rank estimator and the benches can share one bidiagonalization.
+pub fn fsvd_from_gk(a: &dyn LinOp, gk: &GkResult, r: usize) -> Result<FsvdOutput> {
+    let kp = gk.alpha.len();
+    let r = r.min(kp);
+    // Line 2: eigendecomposition of B^T B (tridiagonal, O(k'^2)).
+    let (theta, g) = btb_eig(&gk.alpha, &gk.beta)?;
+    // Lines 3–4: V_2 = P·V_1, keep top r columns.
+    let g_r = g.submatrix(0..kp, 0..r);
+    let v_r = gk.p.matmul(&g_r)?; // n x r
+    // Line 5: Σ_r = sqrt of Ritz values (clamp tiny negatives from
+    // round-off before the sqrt).
+    let sigma: Vec<f64> = theta[..r].iter().map(|&t| t.max(0.0).sqrt()).collect();
+    // Lines 6–8: u_i = A·v_i / σ_i.
+    let (m, _n) = a.shape();
+    let mut u = Matrix::zeros(m, r);
+    for i in 0..r {
+        let vi = v_r.col(i);
+        let avi = a.apply(&vi)?;
+        if sigma[i] > 0.0 {
+            let inv = 1.0 / sigma[i];
+            for (row, &x) in avi.iter().enumerate() {
+                u[(row, i)] = x * inv;
+            }
+        }
+    }
+    Ok(FsvdOutput {
+        u,
+        sigma,
+        v: v_r,
+        theta,
+        k_used: gk.k_used,
+        terminated_early: gk.terminated_early,
+    })
+}
+
+impl FsvdOutput {
+    /// Reconstruct the rank-`r` approximation `U·diag(σ)·Vᵀ`.
+    pub fn reconstruct(&self) -> Result<Matrix> {
+        let mut us = self.u.clone();
+        for i in 0..us.rows() {
+            let row = us.row_mut(i);
+            for (j, &s) in self.sigma.iter().enumerate() {
+                row[j] *= s;
+            }
+        }
+        us.matmul_nt(&self.v)
+    }
+
+    /// Relative error of the paper's Table 2:
+    /// `‖AᵀU − VΣ‖_F / ‖Σ‖_F`.
+    pub fn relative_error(&self, a: &Matrix) -> Result<f64> {
+        let atu = a.matmul_tn(&self.u)?; // n x r
+        let mut vs = self.v.clone();
+        for i in 0..vs.rows() {
+            let row = vs.row_mut(i);
+            for (j, &s) in self.sigma.iter().enumerate() {
+                row[j] *= s;
+            }
+        }
+        let num = atu.sub(&vs)?.fro_norm();
+        let den: f64 = self.sigma.iter().map(|s| s * s).sum::<f64>().sqrt();
+        Ok(num / den.max(f64::MIN_POSITIVE))
+    }
+
+    /// Residual error of the paper's Table 2: `‖A − UΣVᵀ‖_F`.
+    pub fn residual_error(&self, a: &Matrix) -> Result<f64> {
+        Ok(a.sub(&self.reconstruct()?)?.fro_norm())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::{low_rank_gaussian, with_spectrum};
+    use crate::linalg::svd::svd;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn matches_full_svd_on_low_rank() {
+        let mut rng = Pcg64::seed_from_u64(100);
+        let a = low_rank_gaussian(120, 80, 12, &mut rng);
+        let full = svd(&a).unwrap();
+        let out = fsvd(
+            &a,
+            &FsvdOptions { k: 40, r: 12, reorth_passes: 2, ..Default::default() },
+        )
+        .unwrap();
+        for i in 0..12 {
+            let rel = (out.sigma[i] - full.sigma[i]).abs() / full.sigma[i];
+            assert!(rel < 1e-8, "sigma[{i}]: {} vs {}", out.sigma[i], full.sigma[i]);
+        }
+        // Rank-12 matrix: rank-12 approximation must reconstruct A.
+        let res = out.residual_error(&a).unwrap();
+        assert!(res < 1e-6 * a.fro_norm(), "residual {res}");
+    }
+
+    #[test]
+    fn singular_vectors_align_with_full_svd() {
+        let mut rng = Pcg64::seed_from_u64(101);
+        let sigma: Vec<f64> = (0..10).map(|i| 10.0 - i as f64).collect();
+        let a = with_spectrum(60, 50, &sigma, &mut rng).unwrap();
+        let full = svd(&a).unwrap();
+        let out = fsvd(
+            &a,
+            &FsvdOptions { k: 30, r: 5, reorth_passes: 2, ..Default::default() },
+        )
+        .unwrap();
+        // Figure 1's quality metric: diag(U_svd^T U_alg) · diag(V_svd^T V_alg).
+        for i in 0..5 {
+            let ui = out.u.col(i);
+            let vi = out.v.col(i);
+            let ufull = full.u.col(i);
+            let vfull = full.v.col(i);
+            let du = crate::linalg::vecops::dot(&ui, &ufull);
+            let dv = crate::linalg::vecops::dot(&vi, &vfull);
+            let q = du * dv;
+            assert!(q > 1.0 - 1e-8, "triplet {i} quality {q}");
+        }
+    }
+
+    #[test]
+    fn relative_error_is_tiny_like_table2() {
+        let mut rng = Pcg64::seed_from_u64(102);
+        let a = low_rank_gaussian(200, 150, 20, &mut rng);
+        let out = fsvd(
+            &a,
+            &FsvdOptions { k: 60, r: 20, reorth_passes: 2, ..Default::default() },
+        )
+        .unwrap();
+        let rel = out.relative_error(&a).unwrap();
+        // Paper Table 2 reports ~1e-16/1e-17 for F-SVD.
+        assert!(rel < 1e-12, "relative error {rel}");
+    }
+
+    #[test]
+    fn r_larger_than_kprime_is_clamped() {
+        let mut rng = Pcg64::seed_from_u64(103);
+        let a = low_rank_gaussian(40, 30, 5, &mut rng);
+        let out = fsvd(
+            &a,
+            &FsvdOptions { k: 30, r: 25, eps: 1e-8, reorth_passes: 2, ..Default::default() },
+        )
+        .unwrap();
+        // Algorithm 1 stops near rank 5, so at most ~7 triplets exist.
+        assert!(out.sigma.len() <= 8);
+        assert!(out.terminated_early);
+    }
+
+    #[test]
+    fn rejects_r_zero() {
+        let a = Matrix::eye(4);
+        assert!(fsvd(&a, &FsvdOptions { r: 0, ..Default::default() }).is_err());
+    }
+
+    #[test]
+    fn u_columns_are_unit_norm() {
+        let mut rng = Pcg64::seed_from_u64(104);
+        let a = low_rank_gaussian(70, 50, 10, &mut rng);
+        let out = fsvd(
+            &a,
+            &FsvdOptions { k: 30, r: 8, reorth_passes: 2, ..Default::default() },
+        )
+        .unwrap();
+        for i in 0..8 {
+            let n = crate::linalg::vecops::norm2(&out.u.col(i));
+            assert!((n - 1.0).abs() < 1e-8, "u[{i}] norm {n}");
+        }
+    }
+}

@@ -1,0 +1,302 @@
+//! **Algorithm 1** — Golub–Kahan bidiagonalization with reorthogonalization
+//! and numerical-rank-aware termination.
+//!
+//! Produces orthonormal Krylov bases `Q_{k'+1}` (of `K(AAᵀ, q₁)`) and
+//! `P_{k'}` (of `K(AᵀA, p₁)`) and the lower-bidiagonal `B_{k'+1,k'}`
+//! satisfying the paper's relations (10):
+//!
+//! ```text
+//! A·P_k  = Q_{k+1}·B_{k+1,k}
+//! Aᵀ·Q_{k+1} = P_k·Bᵀ_{k+1,k} + α_{k+1}·p_{k+1}·eᵀ_{k+1}
+//! ```
+//!
+//! The loop stops early when `β_{k'+1} = ‖q_{k'+1}‖ < ε`, which by the
+//! Lanczos/LSQR theory the paper cites ([22], [23]) signals that the Krylov
+//! space has captured the whole column space — `k'` is then a first
+//! estimate of the numerical rank (refined by Algorithm 3).
+
+use super::LinOp;
+use crate::linalg::vecops::{axpy, dot, norm2, scal};
+use crate::linalg::Matrix;
+use crate::rng::{Pcg64, Rng};
+use crate::{Error, Result};
+
+/// Options for [`gk_bidiagonalize`].
+#[derive(Debug, Clone)]
+pub struct GkOptions {
+    /// Maximum number of iterations (`k` in the paper). Clamped to
+    /// `min(m, n)`.
+    pub k: usize,
+    /// Termination threshold ε for `‖q_{k'+1}‖` (paper line 9).
+    pub eps: f64,
+    /// Classical Gram–Schmidt reorthogonalization passes per new vector.
+    /// 1 matches the paper's Algorithm 1 (lines 6 and 13); 2 gives
+    /// near-machine orthogonality when `k` approaches the spectrum edge.
+    pub reorth_passes: usize,
+    /// Seed for the `q₁ ~ N(2, 1)` start vector (paper line 1).
+    pub seed: u64,
+}
+
+impl Default for GkOptions {
+    fn default() -> Self {
+        GkOptions { k: 100, eps: 1e-8, reorth_passes: 1, seed: 0x5eed }
+    }
+}
+
+/// Output of Algorithm 1.
+#[derive(Debug, Clone)]
+pub struct GkResult {
+    /// Diagonal of `B`: `α_1 .. α_{k'}`.
+    pub alpha: Vec<f64>,
+    /// Subdiagonal of `B`: `β_2 .. β_{k'+1}` (`beta[i] = B[i+1, i]`).
+    pub beta: Vec<f64>,
+    /// `n x k'` orthonormal basis of `K(AᵀA, p₁)`.
+    pub p: Matrix,
+    /// `m x (k'+1)` orthonormal basis of `K(AAᵀ, q₁)`.
+    pub q: Matrix,
+    /// Iterations completed (`k' = min(k, approx numerical rank)`).
+    pub k_used: usize,
+    /// True if the ε-criterion fired (so `k_used` estimates the rank).
+    pub terminated_early: bool,
+}
+
+impl GkResult {
+    /// Materialize `B_{k'+1,k'}` densely (tests & diagnostics).
+    pub fn b_dense(&self) -> Matrix {
+        let k = self.alpha.len();
+        let mut b = Matrix::zeros(k + 1, k);
+        for i in 0..k {
+            b[(i, i)] = self.alpha[i];
+            b[(i + 1, i)] = self.beta[i];
+        }
+        b
+    }
+}
+
+/// Run Algorithm 1 on any linear operator.
+pub fn gk_bidiagonalize(a: &dyn LinOp, opts: &GkOptions) -> Result<GkResult> {
+    let (m, n) = a.shape();
+    if m == 0 || n == 0 {
+        return Err(Error::InvalidArg("gk: empty operator".into()));
+    }
+    if opts.eps < 0.0 || !opts.eps.is_finite() {
+        return Err(Error::InvalidArg(format!("gk: bad eps {}", opts.eps)));
+    }
+    let kmax = opts.k.min(m.min(n));
+    if kmax == 0 {
+        return Err(Error::InvalidArg("gk: k must be >= 1".into()));
+    }
+    let mut rng = Pcg64::seed_from_u64(opts.seed);
+
+    // Column-major bases: q_cols[j] has length m, p_cols[j] length n.
+    let mut q_cols: Vec<Vec<f64>> = Vec::with_capacity(kmax + 1);
+    let mut p_cols: Vec<Vec<f64>> = Vec::with_capacity(kmax);
+    let mut alpha = Vec::with_capacity(kmax);
+    let mut beta = Vec::with_capacity(kmax);
+
+    // Line 1: q₁ ~ N(2, 1), normalized.
+    let mut q1: Vec<f64> = (0..m).map(|_| rng.next_gaussian_with(2.0, 1.0)).collect();
+    let b1 = norm2(&q1);
+    if b1 == 0.0 {
+        return Err(Error::Breakdown("gk: zero start vector".into()));
+    }
+    scal(1.0 / b1, &mut q1);
+    q_cols.push(q1);
+
+    // Line 2: p₁ = Aᵀq₁ normalized.
+    let mut p1 = a.apply_t(&q_cols[0])?;
+    let a1 = norm2(&p1);
+    if a1 == 0.0 {
+        return Err(Error::Breakdown("gk: A^T q1 = 0 (A is zero?)".into()));
+    }
+    scal(1.0 / a1, &mut p1);
+    p_cols.push(p1);
+    alpha.push(a1);
+
+    let mut terminated_early = false;
+    let mut k_used = 0;
+
+    // Main loop (paper lines 4–17). Iteration j (0-based) extends the
+    // bases by (q_{j+2}, p_{j+2}) from (p_{j+1}, q_{j+1}).
+    for j in 0..kmax {
+        // Line 5: q_new = A·p_j − α_j·q_j.
+        let mut q_new = a.apply(&p_cols[j])?;
+        axpy(-alpha[j], &q_cols[j], &mut q_new);
+        // Line 6: full reorthogonalization against Q.
+        reorthogonalize(&q_cols, &mut q_new, opts.reorth_passes);
+        // Lines 7–8.
+        let b_new = norm2(&q_new);
+        beta.push(b_new);
+        k_used = j + 1;
+        // Line 9: termination — the Krylov space is exhausted.
+        if b_new < opts.eps {
+            terminated_early = true;
+            // Keep Q at k'+1 columns by appending the (non-informative)
+            // normalized residual direction as a zero column placeholder:
+            // the algebra downstream only uses Q_{1..k'}.
+            q_cols.push(vec![0.0; m]);
+            break;
+        }
+        scal(1.0 / b_new, &mut q_new);
+        q_cols.push(q_new);
+
+        if j + 1 == kmax {
+            break;
+        }
+
+        // Line 12: p_new = Aᵀ·q_{j+1} − β·p_j.
+        let mut p_new = a.apply_t(&q_cols[j + 1])?;
+        axpy(-beta[j], &p_cols[j], &mut p_new);
+        // Line 13: full reorthogonalization against P.
+        reorthogonalize(&p_cols, &mut p_new, opts.reorth_passes);
+        // Line 14.
+        let a_new = norm2(&p_new);
+        if a_new < opts.eps {
+            // Row space exhausted: equivalent rank signal.
+            terminated_early = true;
+            break;
+        }
+        scal(1.0 / a_new, &mut p_new);
+        alpha.push(a_new);
+        p_cols.push(p_new);
+    }
+
+    debug_assert_eq!(alpha.len(), p_cols.len());
+    debug_assert_eq!(beta.len(), alpha.len());
+
+    let p = Matrix::from_columns(n, &p_cols)?;
+    let q = Matrix::from_columns(m, &q_cols)?;
+    Ok(GkResult { alpha, beta, p, q, k_used, terminated_early })
+}
+
+/// Classical Gram–Schmidt: `w -= V·(Vᵀ·w)`, repeated `passes` times.
+///
+/// This is the fused operation the L1 Pallas kernel `reorth.py` implements
+/// for the AOT path; the native version iterates columns so each basis
+/// vector is streamed exactly once per pass.
+pub fn reorthogonalize(basis: &[Vec<f64>], w: &mut [f64], passes: usize) {
+    for _ in 0..passes.max(1) {
+        for v in basis {
+            let c = dot(v, w);
+            if c != 0.0 {
+                axpy(-c, v, w);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::low_rank_gaussian;
+    use crate::rng::Pcg64;
+
+    fn ortho_error(m: &Matrix) -> f64 {
+        let g = m.matmul_tn(m).unwrap();
+        g.sub(&Matrix::eye(m.cols())).unwrap().max_abs()
+    }
+
+    #[test]
+    fn bases_are_orthonormal() {
+        let mut rng = Pcg64::seed_from_u64(90);
+        let a = Matrix::gaussian(60, 40, &mut rng);
+        let r = gk_bidiagonalize(&a, &GkOptions { k: 20, ..Default::default() }).unwrap();
+        assert_eq!(r.k_used, 20);
+        assert!(!r.terminated_early);
+        assert_eq!(r.p.shape(), (40, 20));
+        assert_eq!(r.q.shape(), (60, 21));
+        assert!(ortho_error(&r.p) < 1e-12, "P ortho {}", ortho_error(&r.p));
+        assert!(ortho_error(&r.q) < 1e-12, "Q ortho {}", ortho_error(&r.q));
+    }
+
+    #[test]
+    fn satisfies_recurrence_ap_eq_qb() {
+        // A·P_k = Q_{k+1}·B_{k+1,k} (paper eq. 10, second relation).
+        let mut rng = Pcg64::seed_from_u64(91);
+        let a = Matrix::gaussian(30, 25, &mut rng);
+        let r = gk_bidiagonalize(&a, &GkOptions { k: 10, ..Default::default() }).unwrap();
+        let ap = a.matmul(&r.p).unwrap();
+        let qb = r.q.matmul(&r.b_dense()).unwrap();
+        let diff = ap.sub(&qb).unwrap().max_abs();
+        assert!(diff < 1e-10, "recurrence violated: {diff}");
+    }
+
+    #[test]
+    fn terminates_at_numerical_rank() {
+        let mut rng = Pcg64::seed_from_u64(92);
+        let a = low_rank_gaussian(80, 60, 9, &mut rng);
+        let r = gk_bidiagonalize(
+            &a,
+            &GkOptions { k: 60, eps: 1e-8, reorth_passes: 2, ..Default::default() },
+        )
+        .unwrap();
+        assert!(r.terminated_early, "should hit the eps criterion");
+        // Paper: k' is within a couple of iterations of the true rank.
+        assert!(
+            (9..=12).contains(&r.k_used),
+            "k_used = {} for true rank 9",
+            r.k_used
+        );
+    }
+
+    #[test]
+    fn full_rank_runs_all_iterations() {
+        let mut rng = Pcg64::seed_from_u64(93);
+        let a = Matrix::gaussian(25, 20, &mut rng);
+        let r = gk_bidiagonalize(&a, &GkOptions { k: 20, ..Default::default() }).unwrap();
+        assert_eq!(r.k_used, 20);
+        assert!(!r.terminated_early);
+    }
+
+    #[test]
+    fn singular_value_estimates_converge() {
+        // The largest Ritz value of B^T B converges to sigma_1^2.
+        let mut rng = Pcg64::seed_from_u64(94);
+        let a = low_rank_gaussian(100, 70, 15, &mut rng);
+        let full = crate::linalg::svd::svd(&a).unwrap();
+        let r = gk_bidiagonalize(
+            &a,
+            &GkOptions { k: 30, reorth_passes: 2, ..Default::default() },
+        )
+        .unwrap();
+        let (theta, _) = crate::linalg::tridiag::btb_eig(&r.alpha, &r.beta).unwrap();
+        let sigma1 = theta[0].sqrt();
+        assert!(
+            (sigma1 - full.sigma[0]).abs() / full.sigma[0] < 1e-8,
+            "{sigma1} vs {}",
+            full.sigma[0]
+        );
+    }
+
+    #[test]
+    fn reorthogonalize_removes_components() {
+        let basis = vec![vec![1.0, 0.0, 0.0], vec![0.0, 1.0, 0.0]];
+        let mut w = vec![3.0, 4.0, 5.0];
+        reorthogonalize(&basis, &mut w, 1);
+        assert!((w[0]).abs() < 1e-15);
+        assert!((w[1]).abs() < 1e-15);
+        assert!((w[2] - 5.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn invalid_args_rejected() {
+        let a = Matrix::zeros(4, 4);
+        assert!(gk_bidiagonalize(&a, &GkOptions { k: 0, ..Default::default() }).is_err());
+        // Zero matrix breaks down at p1.
+        assert!(gk_bidiagonalize(&a, &GkOptions::default()).is_err());
+        let mut rng = Pcg64::seed_from_u64(95);
+        let b = Matrix::gaussian(4, 4, &mut rng);
+        assert!(gk_bidiagonalize(&b, &GkOptions { eps: f64::NAN, ..Default::default() }).is_err());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let mut rng = Pcg64::seed_from_u64(96);
+        let a = Matrix::gaussian(30, 20, &mut rng);
+        let o = GkOptions { k: 10, seed: 1234, ..Default::default() };
+        let r1 = gk_bidiagonalize(&a, &o).unwrap();
+        let r2 = gk_bidiagonalize(&a, &o).unwrap();
+        assert_eq!(r1.alpha, r2.alpha);
+        assert_eq!(r1.beta, r2.beta);
+    }
+}

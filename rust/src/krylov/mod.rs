@@ -1,0 +1,58 @@
+//! The paper's core contribution: Krylov-subspace partial SVD.
+//!
+//! * [`gk`]   — **Algorithm 1**: Golub–Kahan bidiagonalization with full
+//!   reorthogonalization and the `‖q_{k'+1}‖ < ε` termination criterion.
+//! * [`fsvd`] — **Algorithm 2**: accurate & fast partial SVD (F-SVD).
+//! * [`rank`] — **Algorithm 3**: accurate numerical-rank determination.
+//!
+//! All three run against any [`LinOp`], so the same code path serves a
+//! native in-memory matrix and a PJRT-compiled executable loaded from
+//! `artifacts/` (see [`crate::runtime::backend`]).
+
+pub mod fsvd;
+pub mod gk;
+pub mod rank;
+
+use crate::linalg::Matrix;
+use crate::Result;
+
+/// A linear operator `A` exposing the two products the Golub–Kahan process
+/// needs. Shapes are `(m, n)`; `apply` is `A·x` (`n → m`), `apply_t` is
+/// `Aᵀ·y` (`m → n`).
+pub trait LinOp {
+    /// `(rows, cols)` of the operator.
+    fn shape(&self) -> (usize, usize);
+    /// `y = A · x`.
+    fn apply(&self, x: &[f64]) -> Result<Vec<f64>>;
+    /// `x = Aᵀ · y`.
+    fn apply_t(&self, y: &[f64]) -> Result<Vec<f64>>;
+}
+
+impl LinOp for Matrix {
+    fn shape(&self) -> (usize, usize) {
+        Matrix::shape(self)
+    }
+    fn apply(&self, x: &[f64]) -> Result<Vec<f64>> {
+        self.matvec(x)
+    }
+    fn apply_t(&self, y: &[f64]) -> Result<Vec<f64>> {
+        self.matvec_t(y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn matrix_linop_matches_matvec() {
+        let mut rng = Pcg64::seed_from_u64(80);
+        let a = Matrix::gaussian(8, 5, &mut rng);
+        let x = vec![1.0; 5];
+        let y = vec![1.0; 8];
+        assert_eq!(LinOp::apply(&a, &x).unwrap(), a.matvec(&x).unwrap());
+        assert_eq!(LinOp::apply_t(&a, &y).unwrap(), a.matvec_t(&y).unwrap());
+        assert_eq!(LinOp::shape(&a), (8, 5));
+    }
+}

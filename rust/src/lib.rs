@@ -1,0 +1,54 @@
+//! # fastlr
+//!
+//! Accurate and fast matrix factorization for low-rank learning.
+//!
+//! This crate reproduces Godaz et al. (2021): a Krylov-subspace partial SVD
+//! engine (**F-SVD**, Algorithm 2 of the paper) built on Golub–Kahan
+//! bidiagonalization (Algorithm 1), a fast numerical-rank estimator
+//! (Algorithm 3), the randomized-SVD baseline of Halko et al. that the paper
+//! compares against, a from-scratch traditional dense SVD, and the paper's
+//! downstream application: Riemannian similarity learning (RSL) on the
+//! manifold of fixed-rank matrices trained with RSGD (Algorithm 4).
+//!
+//! ## Architecture
+//!
+//! The system is three layers; Python is never on the request path:
+//!
+//! * **L3 (this crate)** — the coordinator: a factorization service with a
+//!   job queue, routing policy and worker pool ([`coordinator`]), plus native
+//!   implementations of every algorithm ([`krylov`], [`rsvd`], [`linalg`],
+//!   [`manifold`], [`rsl`]).
+//! * **L2/L1 (python, build time)** — JAX compute graphs calling Pallas
+//!   kernels, AOT-lowered to HLO text under `artifacts/`.
+//! * **runtime** — [`runtime`] loads those artifacts through the PJRT C API
+//!   (`xla` crate) so the hot loops can execute them natively.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use fastlr::data::synth::low_rank_gaussian;
+//! use fastlr::krylov::fsvd::{fsvd, FsvdOptions};
+//! use fastlr::rng::Pcg64;
+//!
+//! let mut rng = Pcg64::seed_from_u64(7);
+//! let a = low_rank_gaussian(1000, 800, 40, &mut rng);
+//! let out = fsvd(&a, &FsvdOptions { k: 60, r: 10, ..Default::default() }).unwrap();
+//! println!("sigma_1 = {}", out.sigma[0]);
+//! ```
+
+pub mod bench_harness;
+pub mod cli;
+pub mod coordinator;
+pub mod data;
+pub mod error;
+pub mod experiments;
+pub mod krylov;
+pub mod linalg;
+pub mod manifold;
+pub mod rng;
+pub mod rsl;
+pub mod rsvd;
+pub mod runtime;
+pub mod testing;
+
+pub use error::{Error, Result};

@@ -1,0 +1,267 @@
+//! Householder bidiagonalization: `A = U · B · Vᵀ` with `B` upper
+//! bidiagonal.
+//!
+//! This is phase 1 of the traditional (Golub–Reinsch) SVD baseline the
+//! paper compares against. It is the *direct* counterpart of the Krylov
+//! process in [`crate::krylov::gk`]: both reduce `A` to bidiagonal form,
+//! but this one touches all of `A` with dense reflectors — the O(mn²) cost
+//! that motivates the paper — while GK only needs matrix-vector products.
+
+use super::matrix::Matrix;
+use crate::{ensure_shape, Result};
+
+/// Output of [`bidiagonalize`]: `A = U · B · Vᵀ`.
+#[derive(Debug, Clone)]
+pub struct Bidiag {
+    /// `m x n`, orthonormal columns.
+    pub u: Matrix,
+    /// Diagonal of `B`, length `n`.
+    pub d: Vec<f64>,
+    /// Superdiagonal of `B`: `e[i] = B[i, i+1]`, length `n-1` (empty for n<2).
+    pub e: Vec<f64>,
+    /// `n x n`, orthogonal.
+    pub v: Matrix,
+}
+
+/// Householder bidiagonalization of `a` (`m x n`, requires `m >= n`).
+pub fn bidiagonalize(a: &Matrix) -> Result<Bidiag> {
+    let (m, n) = a.shape();
+    ensure_shape!(m >= n, "bidiagonalize: need m >= n, got {m}x{n}");
+    let mut work = a.clone();
+    // Left reflector j: vector in column j, rows j..m (overwrites work).
+    let mut beta_l = vec![0.0f64; n];
+    // Right reflector j: vector in row j, cols j+1..n.
+    let mut beta_r = vec![0.0f64; n];
+    let mut d = vec![0.0f64; n];
+    let mut e = vec![0.0f64; n.saturating_sub(1)];
+
+    // Row-major scratch: s[c] accumulators for reflector applications
+    // (rank-1 update form A ← A − β·v·(vᵀA), streamed row-wise so every
+    // memory access is contiguous — the naive column-wise form is ~8x
+    // slower at n = 1000; see EXPERIMENTS.md §Perf).
+    let mut s_buf = vec![0.0f64; n];
+
+    for j in 0..n {
+        // --- Left reflector: annihilate work[j+1.., j]. ---
+        let mut norm2 = 0.0;
+        for i in j..m {
+            norm2 += work[(i, j)] * work[(i, j)];
+        }
+        if norm2 > 0.0 {
+            let a0 = work[(j, j)];
+            let alpha = if a0 >= 0.0 { -norm2.sqrt() } else { norm2.sqrt() };
+            let v0 = a0 - alpha;
+            work[(j, j)] = v0;
+            let vtv = norm2 - a0 * a0 + v0 * v0;
+            beta_l[j] = if vtv > 0.0 { 2.0 / vtv } else { 0.0 };
+            d[j] = alpha;
+            // Apply to trailing columns, two row-contiguous passes:
+            // pass 1: s = vᵀ·A_trail;  pass 2: A_trail −= β·v·sᵀ.
+            if beta_l[j] != 0.0 && j + 1 < n {
+                let ncols = n;
+                let w = work.as_mut_slice();
+                let s = &mut s_buf[j + 1..n];
+                s.fill(0.0);
+                for i in j..m {
+                    let vi = w[i * ncols + j];
+                    if vi != 0.0 {
+                        let row = &w[i * ncols + j + 1..i * ncols + n];
+                        for (sc, &ac) in s.iter_mut().zip(row) {
+                            *sc += vi * ac;
+                        }
+                    }
+                }
+                let beta = beta_l[j];
+                for i in j..m {
+                    let vi = w[i * ncols + j];
+                    if vi != 0.0 {
+                        let f = beta * vi;
+                        let row = &mut w[i * ncols + j + 1..i * ncols + n];
+                        for (ac, &sc) in row.iter_mut().zip(s.iter()) {
+                            *ac -= f * sc;
+                        }
+                    }
+                }
+            }
+        } else {
+            beta_l[j] = 0.0;
+            d[j] = 0.0;
+        }
+
+        // --- Right reflector: annihilate work[j, j+2..]. ---
+        if j + 1 < n {
+            let mut norm2 = 0.0;
+            for c in j + 1..n {
+                norm2 += work[(j, c)] * work[(j, c)];
+            }
+            if norm2 > 0.0 {
+                let a0 = work[(j, j + 1)];
+                let alpha = if a0 >= 0.0 { -norm2.sqrt() } else { norm2.sqrt() };
+                let v0 = a0 - alpha;
+                work[(j, j + 1)] = v0;
+                let vtv = norm2 - a0 * a0 + v0 * v0;
+                beta_r[j] = if vtv > 0.0 { 2.0 / vtv } else { 0.0 };
+                e[j] = alpha;
+                // Apply to trailing rows.
+                for r in j + 1..m {
+                    let mut s = 0.0;
+                    for c in j + 1..n {
+                        s += work[(j, c)] * work[(r, c)];
+                    }
+                    let f = beta_r[j] * s;
+                    if f != 0.0 {
+                        for c in j + 1..n {
+                            let vjc = work[(j, c)];
+                            work[(r, c)] -= f * vjc;
+                        }
+                    }
+                }
+            } else {
+                beta_r[j] = 0.0;
+                e[j] = 0.0;
+            }
+        }
+    }
+
+    // --- Back-accumulate thin U = H_0 ... H_{n-1} · I(m x n). ---
+    // Same two-pass row-streamed rank-1 update as above.
+    let mut u = Matrix::zeros(m, n);
+    for i in 0..n {
+        u[(i, i)] = 1.0;
+    }
+    for j in (0..n).rev() {
+        if beta_l[j] == 0.0 {
+            continue;
+        }
+        let us = u.as_mut_slice();
+        let w = work.as_slice();
+        let s = &mut s_buf[j..n];
+        s.fill(0.0);
+        for i in j..m {
+            let vi = w[i * n + j];
+            if vi != 0.0 {
+                let row = &us[i * n + j..i * n + n];
+                for (sc, &uc) in s.iter_mut().zip(row) {
+                    *sc += vi * uc;
+                }
+            }
+        }
+        let beta = beta_l[j];
+        for i in j..m {
+            let vi = w[i * n + j];
+            if vi != 0.0 {
+                let f = beta * vi;
+                let row = &mut us[i * n + j..i * n + n];
+                for (uc, &sc) in row.iter_mut().zip(s.iter()) {
+                    *uc -= f * sc;
+                }
+            }
+        }
+    }
+
+    // --- Back-accumulate V = G_0 ... G_{n-1} · I(n x n). ---
+    // G_j is supported on indices j+1..n, so apply from j = n-1 downward.
+    let mut v = Matrix::eye(n);
+    for j in (0..n.saturating_sub(1)).rev() {
+        if beta_r[j] == 0.0 {
+            continue;
+        }
+        // v-vector lives in work[j, j+1..n].
+        for c in j + 1..n {
+            let mut s = 0.0;
+            for r in j + 1..n {
+                s += work[(j, r)] * v[(r, c)];
+            }
+            let f = beta_r[j] * s;
+            if f != 0.0 {
+                for r in j + 1..n {
+                    let vjr = work[(j, r)];
+                    v[(r, c)] -= f * vjr;
+                }
+            }
+        }
+    }
+
+    Ok(Bidiag { u, d, e, v })
+}
+
+impl Bidiag {
+    /// Materialize `B` as a dense `n x n` upper-bidiagonal matrix.
+    pub fn b_dense(&self) -> Matrix {
+        let n = self.d.len();
+        let mut b = Matrix::zeros(n, n);
+        for i in 0..n {
+            b[(i, i)] = self.d[i];
+            if i + 1 < n {
+                b[(i, i + 1)] = self.e[i];
+            }
+        }
+        b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn assert_close(a: &Matrix, b: &Matrix, tol: f64) {
+        let d = a.sub(b).unwrap().max_abs();
+        assert!(d < tol, "max diff {d}");
+    }
+
+    #[test]
+    fn reconstructs_a() {
+        let mut rng = Pcg64::seed_from_u64(41);
+        for (m, n) in [(4, 4), (10, 6), (50, 20), (5, 1)] {
+            let a = Matrix::gaussian(m, n, &mut rng);
+            let bd = bidiagonalize(&a).unwrap();
+            let back = bd.u.matmul(&bd.b_dense()).unwrap().matmul_nt(&bd.v).unwrap();
+            assert_close(&back, &a, 1e-10);
+        }
+    }
+
+    #[test]
+    fn u_and_v_are_orthonormal() {
+        let mut rng = Pcg64::seed_from_u64(42);
+        let a = Matrix::gaussian(40, 15, &mut rng);
+        let bd = bidiagonalize(&a).unwrap();
+        assert_close(&bd.u.matmul_tn(&bd.u).unwrap(), &Matrix::eye(15), 1e-12);
+        assert_close(&bd.v.matmul_tn(&bd.v).unwrap(), &Matrix::eye(15), 1e-12);
+    }
+
+    #[test]
+    fn utav_is_bidiagonal() {
+        let mut rng = Pcg64::seed_from_u64(43);
+        let a = Matrix::gaussian(25, 12, &mut rng);
+        let bd = bidiagonalize(&a).unwrap();
+        let utav = bd.u.matmul_tn(&a.matmul(&bd.v).unwrap()).unwrap();
+        for i in 0..12 {
+            for j in 0..12 {
+                if j != i && j != i + 1 {
+                    assert!(
+                        utav[(i, j)].abs() < 1e-10,
+                        "U^T A V [{i},{j}] = {}",
+                        utav[(i, j)]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wide_matrix_rejected_and_zero_ok() {
+        assert!(bidiagonalize(&Matrix::zeros(2, 5)).is_err());
+        let bd = bidiagonalize(&Matrix::zeros(6, 3)).unwrap();
+        assert_eq!(bd.d, vec![0.0; 3]);
+    }
+
+    #[test]
+    fn preserves_singular_values() {
+        // Frobenius norm of B must equal that of A.
+        let mut rng = Pcg64::seed_from_u64(44);
+        let a = Matrix::gaussian(30, 10, &mut rng);
+        let bd = bidiagonalize(&a).unwrap();
+        assert!((bd.b_dense().fro_norm() - a.fro_norm()).abs() < 1e-10);
+    }
+}

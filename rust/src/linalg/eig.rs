@@ -1,0 +1,250 @@
+//! Dense symmetric eigendecomposition: Householder tridiagonalization
+//! (EISPACK `tred2` lineage) + implicit-QL ([`super::tridiag::tql2`]).
+//!
+//! Used to eigendecompose the small dense `BᵀB` exactly as the paper's
+//! Algorithm 2 line 2 states it (the tridiagonal fast path in
+//! [`super::tridiag::btb_eig`] is the optimized equivalent — an ablation
+//! bench compares the two), and as a reference oracle in tests.
+
+use super::matrix::Matrix;
+use super::tridiag::tql2;
+use crate::{ensure_shape, Result};
+
+/// Eigendecomposition `A = Z · diag(lambda) · Zᵀ` of a symmetric matrix.
+#[derive(Debug, Clone)]
+pub struct SymEig {
+    /// Eigenvalues, ascending.
+    pub values: Vec<f64>,
+    /// `n x n`; column `j` is the eigenvector for `values[j]`.
+    pub vectors: Matrix,
+}
+
+/// Symmetric eigendecomposition. Only the lower triangle of `a` is read.
+pub fn sym_eig(a: &Matrix) -> Result<SymEig> {
+    let (m, n) = a.shape();
+    ensure_shape!(m == n, "sym_eig: square matrix required, got {m}x{n}");
+    if n == 0 {
+        return Ok(SymEig { values: vec![], vectors: Matrix::zeros(0, 0) });
+    }
+    let mut z = a.clone();
+    let mut d = vec![0.0f64; n];
+    let mut e = vec![0.0f64; n];
+    tred2(&mut z, &mut d, &mut e);
+    // tred2 produces e[i] coupling (i-1, i); tql2 wants e[i] coupling
+    // (i, i+1): shift left.
+    for i in 1..n {
+        e[i - 1] = e[i];
+    }
+    e[n - 1] = 0.0;
+    tql2(&mut d, &mut e, Some(&mut z))?;
+    Ok(SymEig { values: d, vectors: z })
+}
+
+/// Householder tridiagonalization with accumulation (JAMA `tred2`).
+///
+/// On return `z` holds the orthogonal transformation, `d` the diagonal and
+/// `e[1..]` the subdiagonal (`e[i]` couples `i-1` and `i`; `e[0] = 0`).
+fn tred2(z: &mut Matrix, d: &mut [f64], e: &mut [f64]) {
+    let n = d.len();
+    for j in 0..n {
+        d[j] = z[(n - 1, j)];
+    }
+
+    for i in (1..n).rev() {
+        let l = i - 1;
+        let mut h = 0.0f64;
+        let mut scale = 0.0f64;
+        for item in d.iter().take(i) {
+            scale += item.abs();
+        }
+        if scale == 0.0 {
+            e[i] = d[l];
+            for j in 0..i {
+                d[j] = z[(l, j)];
+                z[(i, j)] = 0.0;
+                z[(j, i)] = 0.0;
+            }
+        } else {
+            for dk in d.iter_mut().take(i) {
+                *dk /= scale;
+                h += *dk * *dk;
+            }
+            let f = d[l];
+            let mut g = h.sqrt();
+            if f > 0.0 {
+                g = -g;
+            }
+            e[i] = scale * g;
+            h -= f * g;
+            d[l] = f - g;
+            for ej in e.iter_mut().take(i) {
+                *ej = 0.0;
+            }
+            // Apply similarity transformation to remaining columns.
+            for j in 0..i {
+                let f = d[j];
+                z[(j, i)] = f;
+                let mut g = e[j] + z[(j, j)] * f;
+                for k in j + 1..i {
+                    g += z[(k, j)] * d[k];
+                    e[k] += z[(k, j)] * f;
+                }
+                e[j] = g;
+            }
+            let mut f = 0.0;
+            for j in 0..i {
+                e[j] /= h;
+                f += e[j] * d[j];
+            }
+            let hh = f / (h + h);
+            for j in 0..i {
+                e[j] -= hh * d[j];
+            }
+            for j in 0..i {
+                let f = d[j];
+                let g = e[j];
+                for k in j..i {
+                    let upd = f * e[k] + g * d[k];
+                    z[(k, j)] -= upd;
+                }
+                d[j] = z[(l, j)];
+                z[(i, j)] = 0.0;
+            }
+        }
+        d[i] = h;
+    }
+
+    // Accumulate transformations.
+    for i in 0..n - 1 {
+        z[(n - 1, i)] = z[(i, i)];
+        z[(i, i)] = 1.0;
+        let h = d[i + 1];
+        if h != 0.0 {
+            for k in 0..=i {
+                d[k] = z[(k, i + 1)] / h;
+            }
+            for j in 0..=i {
+                let mut g = 0.0;
+                for k in 0..=i {
+                    g += z[(k, i + 1)] * z[(k, j)];
+                }
+                for k in 0..=i {
+                    let upd = g * d[k];
+                    z[(k, j)] -= upd;
+                }
+            }
+        }
+        for k in 0..=i {
+            z[(k, i + 1)] = 0.0;
+        }
+    }
+    for j in 0..n {
+        d[j] = z[(n - 1, j)];
+        z[(n - 1, j)] = 0.0;
+    }
+    z[(n - 1, n - 1)] = 1.0;
+    e[0] = 0.0;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn random_symmetric(n: usize, rng: &mut Pcg64) -> Matrix {
+        let g = Matrix::gaussian(n, n, rng);
+        let gt = g.transpose();
+        let mut s = g.add(&gt).unwrap();
+        s.scale(0.5);
+        s
+    }
+
+    fn assert_close(a: &Matrix, b: &Matrix, tol: f64) {
+        let d = a.sub(b).unwrap().max_abs();
+        assert!(d < tol, "max diff {d}");
+    }
+
+    #[test]
+    fn reconstructs_symmetric_matrices() {
+        let mut rng = Pcg64::seed_from_u64(61);
+        for n in [1usize, 2, 5, 20, 40] {
+            let a = random_symmetric(n, &mut rng);
+            let eg = sym_eig(&a).unwrap();
+            // Z diag(lambda) Z^T == A
+            let mut zl = eg.vectors.clone();
+            for i in 0..n {
+                for j in 0..n {
+                    zl[(i, j)] *= eg.values[j];
+                }
+            }
+            let back = zl.matmul_nt(&eg.vectors).unwrap();
+            assert_close(&back, &a, 1e-9);
+        }
+    }
+
+    #[test]
+    fn eigenvectors_orthonormal_and_values_sorted() {
+        let mut rng = Pcg64::seed_from_u64(62);
+        let a = random_symmetric(25, &mut rng);
+        let eg = sym_eig(&a).unwrap();
+        assert_close(
+            &eg.vectors.matmul_tn(&eg.vectors).unwrap(),
+            &Matrix::eye(25),
+            1e-10,
+        );
+        for w in eg.values.windows(2) {
+            assert!(w[0] <= w[1] + 1e-12);
+        }
+    }
+
+    #[test]
+    fn diagonal_matrix_eigenvalues() {
+        let a = Matrix::from_diag(&[3.0, -1.0, 2.0]);
+        let eg = sym_eig(&a).unwrap();
+        let want = [-1.0, 2.0, 3.0];
+        for (g, w) in eg.values.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn psd_gram_matrix_has_nonnegative_eigs() {
+        let mut rng = Pcg64::seed_from_u64(63);
+        let g = Matrix::gaussian(30, 10, &mut rng);
+        let gram = g.matmul_tn(&g).unwrap(); // 10x10 PSD
+        let eg = sym_eig(&gram).unwrap();
+        assert!(eg.values.iter().all(|&l| l > -1e-9));
+    }
+
+    #[test]
+    fn agrees_with_btb_eig_fast_path() {
+        // The dense route on B^T B must match the tridiagonal fast path.
+        let mut rng = Pcg64::seed_from_u64(64);
+        let k = 10;
+        let alpha: Vec<f64> = (0..k).map(|i| 1.0 + (i as f64 * 0.37).sin().abs()).collect();
+        let beta: Vec<f64> = (0..k).map(|i| 0.5 + (i as f64 * 0.73).cos().abs()).collect();
+        let _ = &mut rng;
+        let mut b = Matrix::zeros(k + 1, k);
+        for i in 0..k {
+            b[(i, i)] = alpha[i];
+            b[(i + 1, i)] = beta[i];
+        }
+        let btb = b.matmul_tn(&b).unwrap();
+        let dense = sym_eig(&btb).unwrap();
+        let (theta, _) = crate::linalg::tridiag::btb_eig(&alpha, &beta).unwrap();
+        // dense ascending vs theta descending.
+        for i in 0..k {
+            let want = dense.values[k - 1 - i];
+            assert!(
+                (theta[i] - want).abs() < 1e-9 * (1.0 + want.abs()),
+                "i={i}: {} vs {want}",
+                theta[i]
+            );
+        }
+    }
+
+    #[test]
+    fn non_square_rejected() {
+        assert!(sym_eig(&Matrix::zeros(2, 3)).is_err());
+    }
+}

@@ -1,0 +1,310 @@
+//! Threaded, cache-blocked GEMM variants.
+//!
+//! Three entry points, all row-major and allocation-minimal:
+//!
+//! * [`gemm`]      — `C = A · B`
+//! * [`gemm_tn`]   — `C = Aᵀ · B` (no explicit transpose is formed)
+//! * [`gemm_nt`]   — `C = A · Bᵀ` (row·row dot products — the cheap one)
+//!
+//! The kernel is an `i-k-j` loop nest over `(MC, KC)` panels: for each `k`
+//! the scalar `A[i,k]` multiplies a contiguous row of `B`, which LLVM turns
+//! into FMA vector code. Threads split the rows of `C`; there is no
+//! inter-thread reduction except in `gemm_tn`, which gives each thread a
+//! private accumulator panel.
+
+use super::matrix::Matrix;
+use super::{num_threads, partition_ranges};
+use crate::{ensure_shape, Result};
+
+/// Below this many multiply-adds the threaded path is pure overhead.
+const PAR_THRESHOLD: usize = 1 << 16;
+/// K-panel height: keeps the streamed rows of `B` resident in L2.
+const KC: usize = 256;
+
+/// `C = A · B`.
+pub fn gemm(a: &Matrix, b: &Matrix) -> Result<Matrix> {
+    ensure_shape!(
+        a.cols() == b.rows(),
+        "gemm: {:?} x {:?}",
+        a.shape(),
+        b.shape()
+    );
+    let (m, k) = a.shape();
+    let n = b.cols();
+    let mut c = Matrix::zeros(m, n);
+    if m * n * k == 0 {
+        return Ok(c);
+    }
+    let work = m * n * k;
+    let nt = if work < PAR_THRESHOLD { 1 } else { num_threads() };
+    let ranges = partition_ranges(m, nt);
+    if ranges.len() <= 1 {
+        gemm_block(a.as_slice(), b.as_slice(), c.as_mut_slice(), 0, m, k, n);
+        return Ok(c);
+    }
+    let (a_s, b_s) = (a.as_slice(), b.as_slice());
+    // Split C into disjoint row chunks so every thread owns its output.
+    let mut chunks: Vec<&mut [f64]> = Vec::with_capacity(ranges.len());
+    let mut rest = c.as_mut_slice();
+    let mut consumed = 0;
+    for &(s, e) in &ranges {
+        let (head, tail) = rest.split_at_mut((e - s) * n);
+        debug_assert_eq!(s, consumed);
+        consumed = e;
+        chunks.push(head);
+        rest = tail;
+    }
+    std::thread::scope(|scope| {
+        for (&(s, e), chunk) in ranges.iter().zip(chunks) {
+            scope.spawn(move || {
+                gemm_rows(a_s, b_s, chunk, s, e, k, n);
+            });
+        }
+    });
+    Ok(c)
+}
+
+/// Serial kernel writing rows `[r0, r1)` of `C` (full-length `c` buffer).
+fn gemm_block(a: &[f64], b: &[f64], c: &mut [f64], r0: usize, r1: usize, k: usize, n: usize) {
+    let c_rows = &mut c[r0 * n..r1 * n];
+    gemm_rows(a, b, c_rows, r0, r1, k, n);
+}
+
+/// Kernel for rows `[r0, r1)`; `c_rows` is exactly those rows of `C`.
+///
+/// (A 4-row micro-kernel variant — four FMA streams per `B`-row load —
+/// was tried during the perf pass and measured at parity/slightly worse
+/// on this box, so the simple form stays; see EXPERIMENTS.md §Perf.)
+fn gemm_rows(a: &[f64], b: &[f64], c_rows: &mut [f64], r0: usize, r1: usize, k: usize, n: usize) {
+    for kb in (0..k).step_by(KC) {
+        let kend = (kb + KC).min(k);
+        for i in r0..r1 {
+            let a_row = &a[i * k..(i + 1) * k];
+            let c_row = &mut c_rows[(i - r0) * n..(i - r0 + 1) * n];
+            for kk in kb..kend {
+                let aik = a_row[kk];
+                if aik == 0.0 {
+                    continue;
+                }
+                let b_row = &b[kk * n..(kk + 1) * n];
+                // Contiguous FMA over j — autovectorized.
+                for (cj, bj) in c_row.iter_mut().zip(b_row) {
+                    *cj += aik * bj;
+                }
+            }
+        }
+    }
+}
+
+/// `C = Aᵀ · B` where `A` is `k x m` and `B` is `k x n` → `C` is `m x n`.
+///
+/// Iterates the shared `k` dimension in the outer loop so both inputs are
+/// read row-contiguously; each thread reduces a private panel.
+pub fn gemm_tn(a: &Matrix, b: &Matrix) -> Result<Matrix> {
+    ensure_shape!(
+        a.rows() == b.rows(),
+        "gemm_tn: {:?}^T x {:?}",
+        a.shape(),
+        b.shape()
+    );
+    let (k, m) = a.shape();
+    let n = b.cols();
+    let mut c = Matrix::zeros(m, n);
+    if m * n * k == 0 {
+        return Ok(c);
+    }
+    let nt = if m * n * k < PAR_THRESHOLD { 1 } else { num_threads() };
+    let ranges = partition_ranges(k, nt);
+    if ranges.len() <= 1 {
+        gemm_tn_rows(a.as_slice(), b.as_slice(), c.as_mut_slice(), 0, k, m, n);
+        return Ok(c);
+    }
+    let (a_s, b_s) = (a.as_slice(), b.as_slice());
+    let partials: Vec<Vec<f64>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = ranges
+            .iter()
+            .map(|&(s, e)| {
+                scope.spawn(move || {
+                    let mut part = vec![0.0; m * n];
+                    gemm_tn_rows(a_s, b_s, &mut part, s, e, m, n);
+                    part
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("gemm_tn worker")).collect()
+    });
+    let cm = c.as_mut_slice();
+    for part in &partials {
+        for (ci, pi) in cm.iter_mut().zip(part) {
+            *ci += pi;
+        }
+    }
+    Ok(c)
+}
+
+fn gemm_tn_rows(a: &[f64], b: &[f64], c: &mut [f64], k0: usize, k1: usize, m: usize, n: usize) {
+    for l in k0..k1 {
+        let a_row = &a[l * m..(l + 1) * m];
+        let b_row = &b[l * n..(l + 1) * n];
+        for i in 0..m {
+            let ali = a_row[i];
+            if ali == 0.0 {
+                continue;
+            }
+            let c_row = &mut c[i * n..(i + 1) * n];
+            for (cj, bj) in c_row.iter_mut().zip(b_row) {
+                *cj += ali * bj;
+            }
+        }
+    }
+}
+
+/// `C = A · Bᵀ` where `A` is `m x k`, `B` is `n x k` → `C` is `m x n`.
+pub fn gemm_nt(a: &Matrix, b: &Matrix) -> Result<Matrix> {
+    ensure_shape!(
+        a.cols() == b.cols(),
+        "gemm_nt: {:?} x {:?}^T",
+        a.shape(),
+        b.shape()
+    );
+    let (m, k) = a.shape();
+    let n = b.rows();
+    let mut c = Matrix::zeros(m, n);
+    if m * n * k == 0 {
+        return Ok(c);
+    }
+    let nt = if m * n * k < PAR_THRESHOLD { 1 } else { num_threads() };
+    let ranges = partition_ranges(m, nt);
+    let (a_s, b_s) = (a.as_slice(), b.as_slice());
+    if ranges.len() <= 1 {
+        gemm_nt_rows(a_s, b_s, c.as_mut_slice(), 0, m, k, n);
+        return Ok(c);
+    }
+    let mut chunks: Vec<&mut [f64]> = Vec::with_capacity(ranges.len());
+    let mut rest = c.as_mut_slice();
+    for &(s, e) in &ranges {
+        let (head, tail) = rest.split_at_mut((e - s) * n);
+        chunks.push(head);
+        rest = tail;
+    }
+    std::thread::scope(|scope| {
+        for (&(s, e), chunk) in ranges.iter().zip(chunks) {
+            scope.spawn(move || {
+                for i in s..e {
+                    let a_row = &a_s[i * k..(i + 1) * k];
+                    let c_row = &mut chunk[(i - s) * n..(i - s + 1) * n];
+                    for (j, cj) in c_row.iter_mut().enumerate() {
+                        *cj = super::vecops::dot(a_row, &b_s[j * k..(j + 1) * k]);
+                    }
+                }
+            });
+        }
+    });
+    Ok(c)
+}
+
+fn gemm_nt_rows(a: &[f64], b: &[f64], c: &mut [f64], r0: usize, r1: usize, k: usize, n: usize) {
+    for i in r0..r1 {
+        let a_row = &a[i * k..(i + 1) * k];
+        let c_row = &mut c[(i - r0) * n..(i - r0 + 1) * n];
+        for (j, cj) in c_row.iter_mut().enumerate() {
+            *cj = super::vecops::dot(a_row, &b[j * k..(j + 1) * k]);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    /// Naive triple loop as the oracle.
+    fn gemm_naive(a: &Matrix, b: &Matrix) -> Matrix {
+        let (m, k) = a.shape();
+        let n = b.cols();
+        let mut c = Matrix::zeros(m, n);
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0;
+                for l in 0..k {
+                    s += a[(i, l)] * b[(l, j)];
+                }
+                c[(i, j)] = s;
+            }
+        }
+        c
+    }
+
+    fn assert_close(a: &Matrix, b: &Matrix, tol: f64) {
+        assert_eq!(a.shape(), b.shape());
+        let d = a.sub(b).unwrap().max_abs();
+        assert!(d < tol, "max diff {d}");
+    }
+
+    #[test]
+    fn gemm_matches_naive_various_shapes() {
+        let mut rng = Pcg64::seed_from_u64(2);
+        for (m, k, n) in [(1, 1, 1), (3, 4, 5), (17, 1, 9), (64, 64, 64), (129, 65, 33)] {
+            let a = Matrix::gaussian(m, k, &mut rng);
+            let b = Matrix::gaussian(k, n, &mut rng);
+            assert_close(&gemm(&a, &b).unwrap(), &gemm_naive(&a, &b), 1e-10);
+        }
+    }
+
+    #[test]
+    fn gemm_threaded_path_matches() {
+        let mut rng = Pcg64::seed_from_u64(3);
+        // Big enough to cross PAR_THRESHOLD.
+        let a = Matrix::gaussian(130, 90, &mut rng);
+        let b = Matrix::gaussian(90, 70, &mut rng);
+        assert_close(&gemm(&a, &b).unwrap(), &gemm_naive(&a, &b), 1e-9);
+    }
+
+    #[test]
+    fn gemm_tn_matches_explicit_transpose() {
+        let mut rng = Pcg64::seed_from_u64(4);
+        for (k, m, n) in [(5, 3, 4), (100, 40, 30), (300, 64, 20)] {
+            let a = Matrix::gaussian(k, m, &mut rng);
+            let b = Matrix::gaussian(k, n, &mut rng);
+            let expect = gemm(&a.transpose(), &b).unwrap();
+            assert_close(&gemm_tn(&a, &b).unwrap(), &expect, 1e-9);
+        }
+    }
+
+    #[test]
+    fn gemm_nt_matches_explicit_transpose() {
+        let mut rng = Pcg64::seed_from_u64(5);
+        for (m, k, n) in [(4, 6, 3), (50, 80, 40), (120, 130, 60)] {
+            let a = Matrix::gaussian(m, k, &mut rng);
+            let b = Matrix::gaussian(n, k, &mut rng);
+            let expect = gemm(&a, &b.transpose()).unwrap();
+            assert_close(&gemm_nt(&a, &b).unwrap(), &expect, 1e-9);
+        }
+    }
+
+    #[test]
+    fn gemm_identity_is_noop() {
+        let mut rng = Pcg64::seed_from_u64(6);
+        let a = Matrix::gaussian(20, 20, &mut rng);
+        assert_close(&gemm(&a, &Matrix::eye(20)).unwrap(), &a, 1e-14);
+        assert_close(&gemm(&Matrix::eye(20), &a).unwrap(), &a, 1e-14);
+    }
+
+    #[test]
+    fn shape_mismatch_is_error() {
+        let a = Matrix::zeros(2, 3);
+        let b = Matrix::zeros(4, 2);
+        assert!(gemm(&a, &b).is_err());
+        assert!(gemm_tn(&a, &b).is_err());
+        let c = Matrix::zeros(5, 4);
+        assert!(gemm_nt(&a, &c).is_err());
+    }
+
+    #[test]
+    fn empty_dimensions_yield_zero_matrix() {
+        let a = Matrix::zeros(0, 4);
+        let b = Matrix::zeros(4, 3);
+        let c = gemm(&a, &b).unwrap();
+        assert_eq!(c.shape(), (0, 3));
+    }
+}

@@ -1,0 +1,178 @@
+//! Threaded GEMV / GEMVᵀ — the Golub–Kahan hot path.
+//!
+//! Algorithm 1 of the paper does one `A·p` and one `Aᵀ·q` per iteration on a
+//! matrix that dwarfs every other operand, so these two kernels dominate
+//! end-to-end time (the paper's O(mnk') term). Both read `A` strictly
+//! row-contiguously:
+//!
+//! * [`gemv`]  (`y = A·x`): each output element is a row·x dot product;
+//!   threads split rows, no reduction.
+//! * [`gemv_t`] (`y = Aᵀ·x`): row `i` contributes `x[i]·A[i,:]`; threads
+//!   accumulate private `y` buffers over row chunks, then reduce.
+
+use super::matrix::Matrix;
+use super::vecops::{axpy, dot};
+use super::{num_threads, partition_ranges};
+use crate::{ensure_shape, Result};
+
+/// Below this many flops the scoped-thread fan-out costs more than it saves.
+const PAR_THRESHOLD: usize = 1 << 17;
+
+/// `y = A · x`.
+pub fn gemv(a: &Matrix, x: &[f64]) -> Result<Vec<f64>> {
+    ensure_shape!(
+        a.cols() == x.len(),
+        "gemv: {:?} x vec[{}]",
+        a.shape(),
+        x.len()
+    );
+    let (m, n) = a.shape();
+    let mut y = vec![0.0; m];
+    if m == 0 || n == 0 {
+        return Ok(y);
+    }
+    let nt = if m * n < PAR_THRESHOLD { 1 } else { num_threads() };
+    let ranges = partition_ranges(m, nt);
+    let a_s = a.as_slice();
+    if ranges.len() <= 1 {
+        for (i, yi) in y.iter_mut().enumerate() {
+            *yi = dot(&a_s[i * n..(i + 1) * n], x);
+        }
+        return Ok(y);
+    }
+    let mut chunks: Vec<&mut [f64]> = Vec::with_capacity(ranges.len());
+    let mut rest = y.as_mut_slice();
+    for &(s, e) in &ranges {
+        let (head, tail) = rest.split_at_mut(e - s);
+        chunks.push(head);
+        rest = tail;
+    }
+    std::thread::scope(|scope| {
+        for (&(s, e), chunk) in ranges.iter().zip(chunks) {
+            scope.spawn(move || {
+                for i in s..e {
+                    chunk[i - s] = dot(&a_s[i * n..(i + 1) * n], x);
+                }
+            });
+        }
+    });
+    Ok(y)
+}
+
+/// `y = Aᵀ · x`.
+pub fn gemv_t(a: &Matrix, x: &[f64]) -> Result<Vec<f64>> {
+    ensure_shape!(
+        a.rows() == x.len(),
+        "gemv_t: {:?}^T x vec[{}]",
+        a.shape(),
+        x.len()
+    );
+    let (m, n) = a.shape();
+    if m == 0 || n == 0 {
+        return Ok(vec![0.0; n]);
+    }
+    let nt = if m * n < PAR_THRESHOLD { 1 } else { num_threads() };
+    let ranges = partition_ranges(m, nt);
+    let a_s = a.as_slice();
+    if ranges.len() <= 1 {
+        let mut y = vec![0.0; n];
+        for i in 0..m {
+            let xi = x[i];
+            if xi != 0.0 {
+                axpy(xi, &a_s[i * n..(i + 1) * n], &mut y);
+            }
+        }
+        return Ok(y);
+    }
+    let partials: Vec<Vec<f64>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = ranges
+            .iter()
+            .map(|&(s, e)| {
+                scope.spawn(move || {
+                    let mut part = vec![0.0; n];
+                    for i in s..e {
+                        let xi = x[i];
+                        if xi != 0.0 {
+                            axpy(xi, &a_s[i * n..(i + 1) * n], &mut part);
+                        }
+                    }
+                    part
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("gemv_t worker")).collect()
+    });
+    let mut y = vec![0.0; n];
+    for part in &partials {
+        axpy(1.0, part, &mut y);
+    }
+    Ok(y)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn gemv_naive(a: &Matrix, x: &[f64]) -> Vec<f64> {
+        (0..a.rows())
+            .map(|i| (0..a.cols()).map(|j| a[(i, j)] * x[j]).sum())
+            .collect()
+    }
+
+    fn gemv_t_naive(a: &Matrix, x: &[f64]) -> Vec<f64> {
+        (0..a.cols())
+            .map(|j| (0..a.rows()).map(|i| a[(i, j)] * x[i]).sum())
+            .collect()
+    }
+
+    #[test]
+    fn gemv_matches_naive_small_and_large() {
+        let mut rng = Pcg64::seed_from_u64(10);
+        for (m, n) in [(1, 1), (7, 5), (64, 64), (700, 300)] {
+            let a = Matrix::gaussian(m, n, &mut rng);
+            let x: Vec<f64> = (0..n).map(|i| (i % 7) as f64 - 3.0).collect();
+            let got = gemv(&a, &x).unwrap();
+            let want = gemv_naive(&a, &x);
+            let diff = crate::linalg::vecops::max_abs_diff(&got, &want);
+            assert!(diff < 1e-9, "({m},{n}): {diff}");
+        }
+    }
+
+    #[test]
+    fn gemv_t_matches_naive_small_and_large() {
+        let mut rng = Pcg64::seed_from_u64(11);
+        for (m, n) in [(1, 1), (5, 7), (64, 64), (700, 300)] {
+            let a = Matrix::gaussian(m, n, &mut rng);
+            let x: Vec<f64> = (0..m).map(|i| (i % 5) as f64 - 2.0).collect();
+            let got = gemv_t(&a, &x).unwrap();
+            let want = gemv_t_naive(&a, &x);
+            let diff = crate::linalg::vecops::max_abs_diff(&got, &want);
+            assert!(diff < 1e-9, "({m},{n}): {diff}");
+        }
+    }
+
+    #[test]
+    fn gemv_t_equals_transpose_gemv() {
+        let mut rng = Pcg64::seed_from_u64(12);
+        let a = Matrix::gaussian(321, 123, &mut rng);
+        let x: Vec<f64> = (0..321).map(|i| (i as f64).sin()).collect();
+        let got = gemv_t(&a, &x).unwrap();
+        let want = gemv(&a.transpose(), &x).unwrap();
+        assert!(crate::linalg::vecops::max_abs_diff(&got, &want) < 1e-10);
+    }
+
+    #[test]
+    fn shape_mismatch_is_error() {
+        let a = Matrix::zeros(3, 4);
+        assert!(gemv(&a, &[1.0; 3]).is_err());
+        assert!(gemv_t(&a, &[1.0; 4]).is_err());
+    }
+
+    #[test]
+    fn empty_matrix_gives_zero_vector() {
+        let a = Matrix::zeros(0, 4);
+        assert_eq!(gemv(&a, &[1.0; 4]).unwrap().len(), 0);
+        assert_eq!(gemv_t(&a, &[]).unwrap(), vec![0.0; 4]);
+    }
+}

@@ -1,0 +1,382 @@
+//! Dense row-major `f64` matrix.
+
+use crate::rng::Rng;
+use crate::{ensure_shape, Result};
+use std::fmt;
+use std::ops::{Index, IndexMut};
+
+/// Dense, row-major, heap-allocated `f64` matrix.
+///
+/// This is the single storage type used across the crate: data matrices,
+/// Krylov bases (`P`, `Q` grown column-blockwise), factors `U`/`V`, and the
+/// RSL parameter matrix all use it. Hot kernels live in [`super::gemm`] and
+/// [`super::gemv`] and operate on the raw slice.
+#[derive(Clone, PartialEq)]
+pub struct Matrix {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Matrix {
+    /// `rows x cols` matrix of zeros.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Matrix { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity matrix of order `n`.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Matrix::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a closure over `(row, col)`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                data.push(f(i, j));
+            }
+        }
+        Matrix { rows, cols, data }
+    }
+
+    /// Wrap an existing row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Result<Self> {
+        ensure_shape!(
+            data.len() == rows * cols,
+            "from_vec: {} elements for {}x{}",
+            data.len(),
+            rows,
+            cols
+        );
+        Ok(Matrix { rows, cols, data })
+    }
+
+    /// Standard-gaussian random matrix.
+    pub fn gaussian(rows: usize, cols: usize, rng: &mut impl Rng) -> Self {
+        let mut m = Matrix::zeros(rows, cols);
+        rng.fill_gaussian(&mut m.data);
+        m
+    }
+
+    /// Diagonal matrix from a slice.
+    pub fn from_diag(d: &[f64]) -> Self {
+        let mut m = Matrix::zeros(d.len(), d.len());
+        for (i, &v) in d.iter().enumerate() {
+            m[(i, i)] = v;
+        }
+        m
+    }
+
+    /// Number of rows.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns.
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// `(rows, cols)`.
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Raw row-major storage.
+    #[inline]
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Mutable raw storage.
+    #[inline]
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Row `i` as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        debug_assert!(i < self.rows);
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutable row `i`.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        debug_assert!(i < self.rows);
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Copy of column `j`.
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        debug_assert!(j < self.cols);
+        (0..self.rows).map(|i| self.data[i * self.cols + j]).collect()
+    }
+
+    /// Overwrite column `j`.
+    pub fn set_col(&mut self, j: usize, v: &[f64]) {
+        debug_assert_eq!(v.len(), self.rows);
+        for (i, &x) in v.iter().enumerate() {
+            self.data[i * self.cols + j] = x;
+        }
+    }
+
+    /// Explicit transpose (cache-blocked).
+    pub fn transpose(&self) -> Matrix {
+        const B: usize = 32;
+        let mut t = Matrix::zeros(self.cols, self.rows);
+        for ib in (0..self.rows).step_by(B) {
+            for jb in (0..self.cols).step_by(B) {
+                for i in ib..(ib + B).min(self.rows) {
+                    for j in jb..(jb + B).min(self.cols) {
+                        t.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// Copy of the leading `rows x cols` block.
+    pub fn submatrix(&self, rows: std::ops::Range<usize>, cols: std::ops::Range<usize>) -> Matrix {
+        debug_assert!(rows.end <= self.rows && cols.end <= self.cols);
+        let mut out = Matrix::zeros(rows.len(), cols.len());
+        for (oi, i) in rows.clone().enumerate() {
+            out.row_mut(oi).copy_from_slice(&self.row(i)[cols.clone()]);
+        }
+        out
+    }
+
+    /// Horizontal concatenation of column vectors (each of length `rows`)
+    /// into a `rows x vs.len()` matrix.
+    pub fn from_columns(rows: usize, vs: &[Vec<f64>]) -> Result<Matrix> {
+        let mut m = Matrix::zeros(rows, vs.len());
+        for (j, v) in vs.iter().enumerate() {
+            ensure_shape!(v.len() == rows, "from_columns: column {j} has length {}", v.len());
+            m.set_col(j, v);
+        }
+        Ok(m)
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        // Two-pass scaled sum to avoid overflow on huge entries.
+        let mx = self.data.iter().fold(0.0f64, |a, &x| a.max(x.abs()));
+        if mx == 0.0 || !mx.is_finite() {
+            return mx;
+        }
+        let s: f64 = self.data.iter().map(|&x| (x / mx) * (x / mx)).sum();
+        mx * s.sqrt()
+    }
+
+    /// Max-abs entry.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |a, &x| a.max(x.abs()))
+    }
+
+    /// Elementwise `self - other`.
+    pub fn sub(&self, other: &Matrix) -> Result<Matrix> {
+        ensure_shape!(
+            self.shape() == other.shape(),
+            "sub: {:?} vs {:?}",
+            self.shape(),
+            other.shape()
+        );
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect();
+        Ok(Matrix { rows: self.rows, cols: self.cols, data })
+    }
+
+    /// Elementwise `self + other`.
+    pub fn add(&self, other: &Matrix) -> Result<Matrix> {
+        ensure_shape!(
+            self.shape() == other.shape(),
+            "add: {:?} vs {:?}",
+            self.shape(),
+            other.shape()
+        );
+        let data = self.data.iter().zip(&other.data).map(|(a, b)| a + b).collect();
+        Ok(Matrix { rows: self.rows, cols: self.cols, data })
+    }
+
+    /// In-place `self += alpha * other`.
+    pub fn axpy(&mut self, alpha: f64, other: &Matrix) -> Result<()> {
+        ensure_shape!(
+            self.shape() == other.shape(),
+            "axpy: {:?} vs {:?}",
+            self.shape(),
+            other.shape()
+        );
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+        Ok(())
+    }
+
+    /// Scale every entry in place.
+    pub fn scale(&mut self, alpha: f64) {
+        for x in &mut self.data {
+            *x *= alpha;
+        }
+    }
+
+    /// Returns `self * other` (threaded GEMM).
+    pub fn matmul(&self, other: &Matrix) -> Result<Matrix> {
+        super::gemm::gemm(self, other)
+    }
+
+    /// Returns `self^T * other` without forming the transpose.
+    pub fn matmul_tn(&self, other: &Matrix) -> Result<Matrix> {
+        super::gemm::gemm_tn(self, other)
+    }
+
+    /// Returns `self * other^T` without forming the transpose.
+    pub fn matmul_nt(&self, other: &Matrix) -> Result<Matrix> {
+        super::gemm::gemm_nt(self, other)
+    }
+
+    /// Matrix-vector product `self * x`.
+    pub fn matvec(&self, x: &[f64]) -> Result<Vec<f64>> {
+        super::gemv::gemv(self, x)
+    }
+
+    /// Transposed matrix-vector product `self^T * x`.
+    pub fn matvec_t(&self, x: &[f64]) -> Result<Vec<f64>> {
+        super::gemv::gemv_t(self, x)
+    }
+}
+
+impl Index<(usize, usize)> for Matrix {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Matrix {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+impl fmt::Debug for Matrix {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Matrix {}x{} [", self.rows, self.cols)?;
+        let show_r = self.rows.min(6);
+        let show_c = self.cols.min(8);
+        for i in 0..show_r {
+            write!(f, "  ")?;
+            for j in 0..show_c {
+                write!(f, "{:>11.4e} ", self[(i, j)])?;
+            }
+            writeln!(f, "{}", if self.cols > show_c { "..." } else { "" })?;
+        }
+        if self.rows > show_r {
+            writeln!(f, "  ...")?;
+        }
+        write!(f, "]")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn construction_and_indexing() {
+        let mut m = Matrix::zeros(2, 3);
+        m[(0, 1)] = 5.0;
+        m[(1, 2)] = -2.0;
+        assert_eq!(m[(0, 1)], 5.0);
+        assert_eq!(m[(1, 2)], -2.0);
+        assert_eq!(m.shape(), (2, 3));
+    }
+
+    #[test]
+    fn from_vec_validates_length() {
+        assert!(Matrix::from_vec(2, 2, vec![1.0; 3]).is_err());
+        assert!(Matrix::from_vec(2, 2, vec![1.0; 4]).is_ok());
+    }
+
+    #[test]
+    fn transpose_round_trips() {
+        let mut rng = Pcg64::seed_from_u64(5);
+        let m = Matrix::gaussian(37, 53, &mut rng);
+        let t = m.transpose();
+        assert_eq!(t.shape(), (53, 37));
+        assert_eq!(t.transpose(), m);
+        for i in 0..5 {
+            for j in 0..5 {
+                assert_eq!(m[(i, j)], t[(j, i)]);
+            }
+        }
+    }
+
+    #[test]
+    fn col_set_col_round_trip() {
+        let mut m = Matrix::zeros(4, 3);
+        let v = vec![1.0, 2.0, 3.0, 4.0];
+        m.set_col(1, &v);
+        assert_eq!(m.col(1), v);
+        assert_eq!(m.col(0), vec![0.0; 4]);
+    }
+
+    #[test]
+    fn fro_norm_matches_manual() {
+        let m = Matrix::from_vec(2, 2, vec![3.0, 0.0, 0.0, 4.0]).unwrap();
+        assert!((m.fro_norm() - 5.0).abs() < 1e-12);
+        assert_eq!(Matrix::zeros(3, 3).fro_norm(), 0.0);
+    }
+
+    #[test]
+    fn eye_and_diag() {
+        let i = Matrix::eye(3);
+        assert_eq!(i[(0, 0)], 1.0);
+        assert_eq!(i[(0, 1)], 0.0);
+        let d = Matrix::from_diag(&[2.0, 7.0]);
+        assert_eq!(d[(1, 1)], 7.0);
+        assert_eq!(d[(1, 0)], 0.0);
+    }
+
+    #[test]
+    fn submatrix_extracts_block() {
+        let m = Matrix::from_fn(5, 5, |i, j| (i * 10 + j) as f64);
+        let s = m.submatrix(1..3, 2..5);
+        assert_eq!(s.shape(), (2, 3));
+        assert_eq!(s[(0, 0)], 12.0);
+        assert_eq!(s[(1, 2)], 24.0);
+    }
+
+    #[test]
+    fn add_sub_axpy() {
+        let a = Matrix::from_fn(3, 3, |i, j| (i + j) as f64);
+        let b = Matrix::eye(3);
+        let c = a.add(&b).unwrap().sub(&b).unwrap();
+        assert_eq!(c, a);
+        let mut d = a.clone();
+        d.axpy(2.0, &b).unwrap();
+        assert_eq!(d[(1, 1)], a[(1, 1)] + 2.0);
+        assert!(a.add(&Matrix::zeros(2, 2)).is_err());
+    }
+
+    #[test]
+    fn from_columns_builds_matrix() {
+        let m = Matrix::from_columns(2, &[vec![1.0, 2.0], vec![3.0, 4.0]]).unwrap();
+        assert_eq!(m[(0, 1)], 3.0);
+        assert_eq!(m[(1, 0)], 2.0);
+        assert!(Matrix::from_columns(2, &[vec![1.0]]).is_err());
+    }
+}

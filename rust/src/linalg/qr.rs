@@ -1,0 +1,175 @@
+//! Householder thin QR.
+//!
+//! Used by the R-SVD baseline's range finder (`Q = qr(A·Ω).Q`) and by the
+//! orthogonality checks in the test-suite. For `A` of shape `m x n`
+//! (`m >= n`) it returns `Q` (`m x n`, orthonormal columns) and `R`
+//! (`n x n`, upper triangular) with `A = Q·R`.
+
+use super::matrix::Matrix;
+use crate::{ensure_shape, Result};
+
+/// Result of a thin QR factorization.
+#[derive(Debug, Clone)]
+pub struct Qr {
+    /// `m x n` with orthonormal columns.
+    pub q: Matrix,
+    /// `n x n` upper triangular.
+    pub r: Matrix,
+}
+
+/// Householder thin QR of `a` (`m x n`, requires `m >= n`).
+pub fn qr_thin(a: &Matrix) -> Result<Qr> {
+    let (m, n) = a.shape();
+    ensure_shape!(m >= n, "qr_thin: need m >= n, got {m}x{n}");
+    // `work` holds Householder vectors below the diagonal and the
+    // strictly-upper part of R above it; R's diagonal lives in `rdiag`.
+    let mut work = a.clone();
+    let mut betas = vec![0.0f64; n];
+    let mut rdiag = vec![0.0f64; n];
+
+    for j in 0..n {
+        // Reflector annihilating column j below the diagonal.
+        let mut norm2 = 0.0;
+        for i in j..m {
+            norm2 += work[(i, j)] * work[(i, j)];
+        }
+        let norm = norm2.sqrt();
+        if norm == 0.0 {
+            betas[j] = 0.0;
+            rdiag[j] = 0.0;
+            continue;
+        }
+        let a0 = work[(j, j)];
+        let alpha = if a0 >= 0.0 { -norm } else { norm };
+        let v0 = a0 - alpha;
+        work[(j, j)] = v0;
+        let vtv = norm2 - a0 * a0 + v0 * v0;
+        let beta = if vtv > 0.0 { 2.0 / vtv } else { 0.0 };
+        betas[j] = beta;
+        rdiag[j] = alpha;
+        // Apply H = I - beta·v·vᵀ to the trailing columns.
+        for c in j + 1..n {
+            let mut s = 0.0;
+            for i in j..m {
+                s += work[(i, j)] * work[(i, c)];
+            }
+            let f = beta * s;
+            if f != 0.0 {
+                for i in j..m {
+                    let vij = work[(i, j)];
+                    work[(i, c)] -= f * vij;
+                }
+            }
+        }
+    }
+
+    // Extract R.
+    let mut r = Matrix::zeros(n, n);
+    for i in 0..n {
+        r[(i, i)] = rdiag[i];
+        for j in i + 1..n {
+            r[(i, j)] = work[(i, j)];
+        }
+    }
+
+    // Back-accumulate thin Q = H_0 · H_1 ... H_{n-1} · I_{m x n}.
+    let mut q = Matrix::zeros(m, n);
+    for i in 0..n {
+        q[(i, i)] = 1.0;
+    }
+    for j in (0..n).rev() {
+        let beta = betas[j];
+        if beta == 0.0 {
+            continue;
+        }
+        for c in j..n {
+            let mut s = 0.0;
+            for i in j..m {
+                s += work[(i, j)] * q[(i, c)];
+            }
+            let f = beta * s;
+            if f != 0.0 {
+                for i in j..m {
+                    let vij = work[(i, j)];
+                    q[(i, c)] -= f * vij;
+                }
+            }
+        }
+    }
+
+    Ok(Qr { q, r })
+}
+
+/// Orthonormalize the columns of `a` (`m x n`, `m >= n`), i.e. return just
+/// the `Q` factor. This is the R-SVD range-finder primitive.
+pub fn orthonormalize(a: &Matrix) -> Result<Matrix> {
+    Ok(qr_thin(a)?.q)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn assert_close(a: &Matrix, b: &Matrix, tol: f64) {
+        let d = a.sub(b).unwrap().max_abs();
+        assert!(d < tol, "max diff {d}");
+    }
+
+    #[test]
+    fn reconstructs_a() {
+        let mut rng = Pcg64::seed_from_u64(21);
+        for (m, n) in [(5, 5), (20, 7), (100, 40), (3, 1)] {
+            let a = Matrix::gaussian(m, n, &mut rng);
+            let qr = qr_thin(&a).unwrap();
+            let back = qr.q.matmul(&qr.r).unwrap();
+            assert_close(&back, &a, 1e-10);
+        }
+    }
+
+    #[test]
+    fn q_has_orthonormal_columns() {
+        let mut rng = Pcg64::seed_from_u64(22);
+        let a = Matrix::gaussian(60, 25, &mut rng);
+        let q = qr_thin(&a).unwrap().q;
+        let qtq = q.matmul_tn(&q).unwrap();
+        assert_close(&qtq, &Matrix::eye(25), 1e-12);
+    }
+
+    #[test]
+    fn r_is_upper_triangular() {
+        let mut rng = Pcg64::seed_from_u64(23);
+        let a = Matrix::gaussian(30, 12, &mut rng);
+        let r = qr_thin(&a).unwrap().r;
+        for i in 0..12 {
+            for j in 0..i {
+                assert_eq!(r[(i, j)], 0.0, "R[{i},{j}] nonzero");
+            }
+        }
+    }
+
+    #[test]
+    fn rank_deficient_input_does_not_panic() {
+        // Two identical columns.
+        let mut rng = Pcg64::seed_from_u64(24);
+        let mut a = Matrix::gaussian(20, 3, &mut rng);
+        let c0 = a.col(0);
+        a.set_col(2, &c0);
+        let qr = qr_thin(&a).unwrap();
+        let back = qr.q.matmul(&qr.r).unwrap();
+        assert_close(&back, &a, 1e-10);
+    }
+
+    #[test]
+    fn zero_matrix_ok() {
+        let a = Matrix::zeros(10, 4);
+        let qr = qr_thin(&a).unwrap();
+        assert_eq!(qr.r.max_abs(), 0.0);
+    }
+
+    #[test]
+    fn wide_matrix_rejected() {
+        let a = Matrix::zeros(3, 5);
+        assert!(qr_thin(&a).is_err());
+    }
+}

@@ -1,0 +1,194 @@
+//! Traditional dense SVD — the paper's accuracy gold standard and slow
+//! baseline (`O(mn·min(m,n))`).
+//!
+//! Golub–Reinsch: Householder bidiagonalization
+//! ([`super::bidiagonalize`]) followed by implicit-shift QR on the
+//! bidiagonal ([`super::tridiag::bidiag_qr_svd`]). Both halves are written
+//! from scratch; there is no LAPACK in this environment.
+
+use super::bidiagonalize::bidiagonalize;
+use super::matrix::Matrix;
+use super::tridiag::{bidiag_qr_svd, sort_svd_desc};
+use crate::Result;
+
+/// Thin SVD `A = U · diag(sigma) · Vᵀ`.
+#[derive(Debug, Clone)]
+pub struct Svd {
+    /// `m x p` (`p = min(m, n)`), orthonormal columns.
+    pub u: Matrix,
+    /// Singular values, descending, length `p`.
+    pub sigma: Vec<f64>,
+    /// `n x p`, orthonormal columns (note: `V`, not `Vᵀ`).
+    pub v: Matrix,
+}
+
+impl Svd {
+    /// Keep only the leading `r` triplets.
+    pub fn truncate(mut self, r: usize) -> Svd {
+        let p = self.sigma.len();
+        let r = r.min(p);
+        self.sigma.truncate(r);
+        self.u = self.u.submatrix(0..self.u.rows(), 0..r);
+        self.v = self.v.submatrix(0..self.v.rows(), 0..r);
+        self
+    }
+
+    /// Reconstruct `U · diag(sigma) · Vᵀ`.
+    pub fn reconstruct(&self) -> Result<Matrix> {
+        let mut us = self.u.clone();
+        for i in 0..us.rows() {
+            let row = us.row_mut(i);
+            for (j, &s) in self.sigma.iter().enumerate() {
+                row[j] *= s;
+            }
+        }
+        us.matmul_nt(&self.v)
+    }
+
+    /// Numerical rank: number of `sigma_i > tol`.
+    pub fn rank(&self, tol: f64) -> usize {
+        self.sigma.iter().filter(|&&s| s > tol).count()
+    }
+}
+
+/// Full (thin) SVD of `a` by Golub–Reinsch. Handles any aspect ratio.
+pub fn svd(a: &Matrix) -> Result<Svd> {
+    let (m, n) = a.shape();
+    if m >= n {
+        svd_tall(a)
+    } else {
+        // SVD of the transpose, then swap factors.
+        let t = svd_tall(&a.transpose())?;
+        Ok(Svd { u: t.v, sigma: t.sigma, v: t.u })
+    }
+}
+
+fn svd_tall(a: &Matrix) -> Result<Svd> {
+    let (_m, n) = a.shape();
+    let bd = bidiagonalize(a)?;
+    let mut w = bd.d;
+    // bidiag_qr_svd wants rv1[i] = B[i-1, i]; bidiagonalize returns
+    // e[i] = B[i, i+1], so shift by one.
+    let mut rv1 = vec![0.0f64; n];
+    for i in 1..n {
+        rv1[i] = bd.e[i - 1];
+    }
+    // Phase 2 rotates vector *pairs*; run it on transposed factors so each
+    // rotation touches two contiguous rows (see tridiag.rs docs).
+    let mut ut = bd.u.transpose();
+    let mut vt = bd.v.transpose();
+    bidiag_qr_svd(&mut w, &mut rv1, &mut ut, &mut vt)?;
+    sort_svd_desc(&mut w, &mut ut, &mut vt);
+    Ok(Svd { u: ut.transpose(), sigma: w, v: vt.transpose() })
+}
+
+/// Singular values only (still runs the full reduction; kept as a separate
+/// entry point so call sites read clearly).
+pub fn singular_values(a: &Matrix) -> Result<Vec<f64>> {
+    Ok(svd(a)?.sigma)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn assert_close(a: &Matrix, b: &Matrix, tol: f64) {
+        let d = a.sub(b).unwrap().max_abs();
+        assert!(d < tol, "max diff {d}");
+    }
+
+    #[test]
+    fn reconstructs_random_matrices() {
+        let mut rng = Pcg64::seed_from_u64(51);
+        for (m, n) in [(5, 5), (20, 8), (8, 20), (60, 30), (1, 4), (4, 1)] {
+            let a = Matrix::gaussian(m, n, &mut rng);
+            let s = svd(&a).unwrap();
+            assert_close(&s.reconstruct().unwrap(), &a, 1e-9);
+            // Descending, non-negative.
+            for wnd in s.sigma.windows(2) {
+                assert!(wnd[0] >= wnd[1] - 1e-12);
+            }
+            assert!(s.sigma.iter().all(|&x| x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn factors_are_orthonormal() {
+        let mut rng = Pcg64::seed_from_u64(52);
+        let a = Matrix::gaussian(40, 17, &mut rng);
+        let s = svd(&a).unwrap();
+        assert_close(&s.u.matmul_tn(&s.u).unwrap(), &Matrix::eye(17), 1e-10);
+        assert_close(&s.v.matmul_tn(&s.v).unwrap(), &Matrix::eye(17), 1e-10);
+    }
+
+    #[test]
+    fn known_singular_values_diagonal() {
+        let a = Matrix::from_diag(&[5.0, 3.0, 1.0]);
+        let s = svd(&a).unwrap();
+        for (got, want) in s.sigma.iter().zip(&[5.0, 3.0, 1.0]) {
+            assert!((got - want).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn known_singular_values_orthogonal_scaled() {
+        // A = c * Q for orthogonal Q has all singular values = |c|.
+        let mut rng = Pcg64::seed_from_u64(53);
+        let g = Matrix::gaussian(10, 10, &mut rng);
+        let q = crate::linalg::qr::qr_thin(&g).unwrap().q;
+        let mut a = q.clone();
+        a.scale(2.5);
+        let s = svd(&a).unwrap();
+        for &sv in &s.sigma {
+            assert!((sv - 2.5).abs() < 1e-10, "sv={sv}");
+        }
+    }
+
+    #[test]
+    fn low_rank_matrix_has_trailing_zeros() {
+        let mut rng = Pcg64::seed_from_u64(54);
+        let m = Matrix::gaussian(30, 4, &mut rng);
+        let n = Matrix::gaussian(4, 25, &mut rng);
+        let a = m.matmul(&n).unwrap();
+        let s = svd(&a).unwrap();
+        assert_eq!(s.rank(1e-8 * s.sigma[0]), 4);
+        for &sv in &s.sigma[4..] {
+            assert!(sv < 1e-9 * s.sigma[0], "trailing sv={sv}");
+        }
+    }
+
+    #[test]
+    fn truncate_keeps_leading_triplets() {
+        let mut rng = Pcg64::seed_from_u64(55);
+        let a = Matrix::gaussian(20, 10, &mut rng);
+        let s = svd(&a).unwrap();
+        let first = s.sigma[0];
+        let t = s.truncate(3);
+        assert_eq!(t.sigma.len(), 3);
+        assert_eq!(t.u.cols(), 3);
+        assert_eq!(t.v.cols(), 3);
+        assert_eq!(t.sigma[0], first);
+    }
+
+    #[test]
+    fn matches_frobenius_identity() {
+        // sum sigma_i^2 == ||A||_F^2.
+        let mut rng = Pcg64::seed_from_u64(56);
+        let a = Matrix::gaussian(25, 18, &mut rng);
+        let s = svd(&a).unwrap();
+        let sum_sq: f64 = s.sigma.iter().map(|x| x * x).sum();
+        let fro2 = a.fro_norm().powi(2);
+        assert!((sum_sq - fro2).abs() / fro2 < 1e-12);
+    }
+
+    #[test]
+    fn gaussian_singular_value_spread_sane() {
+        // Marchenko–Pastur sanity: sigma_max ~ sqrt(m) + sqrt(n).
+        let mut rng = Pcg64::seed_from_u64(57);
+        let a = Matrix::gaussian(100, 50, &mut rng);
+        let s = svd(&a).unwrap();
+        let expect = (100f64).sqrt() + (50f64).sqrt();
+        assert!((s.sigma[0] - expect).abs() / expect < 0.25, "sigma1={}", s.sigma[0]);
+    }
+}

@@ -1,0 +1,501 @@
+//! Symmetric tridiagonal eigensolver (implicit-shift QL, EISPACK `tql2`
+//! lineage) and the implicit-shift QR diagonalization of a bidiagonal
+//! matrix (the second phase of Golub–Reinsch SVD).
+//!
+//! These are the small-dense workhorses of the paper: Algorithm 2 line 2
+//! takes the eigendecomposition of `Bᵀ·B`, which for the lower-bidiagonal
+//! `B` produced by GK-bidiagonalization is symmetric *tridiagonal*, so the
+//! cost is `O(k'^2)` as the paper's complexity analysis claims.
+
+use crate::linalg::matrix::Matrix;
+use crate::{Error, Result};
+
+/// Machine epsilon for f64.
+const EPS: f64 = 2.220_446_049_250_313e-16;
+
+/// Eigendecomposition of a symmetric tridiagonal matrix.
+///
+/// * `d` — diagonal, length `n`; on return holds eigenvalues (ascending).
+/// * `e` — subdiagonal, `e[i]` couples `i` and `i+1`; length `n` with
+///   `e[n-1]` ignored (scratch). Destroyed.
+/// * `z` — if `Some`, an `n x n` (or `m x n` projection) matrix whose
+///   columns are rotated alongside; pass identity to get eigenvectors.
+///
+/// Follows the JAMA/EISPACK `tql2` algorithm.
+pub fn tql2(d: &mut [f64], e: &mut [f64], mut z: Option<&mut Matrix>) -> Result<()> {
+    let n = d.len();
+    if n == 0 {
+        return Ok(());
+    }
+    assert!(e.len() >= n, "subdiagonal buffer too short");
+    if let Some(zm) = z.as_deref() {
+        assert_eq!(zm.cols(), n, "rotation target must have n columns");
+    }
+    e[n - 1] = 0.0;
+
+    let mut f = 0.0f64;
+    let mut tst1 = 0.0f64;
+    for l in 0..n {
+        tst1 = tst1.max(d[l].abs() + e[l].abs());
+        let mut m = l;
+        while m < n {
+            if e[m].abs() <= EPS * tst1 {
+                break;
+            }
+            m += 1;
+        }
+        if m == n {
+            m = n - 1;
+        }
+        if m > l {
+            let mut iter = 0;
+            loop {
+                iter += 1;
+                if iter > 64 {
+                    return Err(Error::NoConvergence(format!(
+                        "tql2: eigenvalue {l} after {iter} sweeps"
+                    )));
+                }
+                // Form implicit shift.
+                let g = d[l];
+                let mut p = (d[l + 1] - g) / (2.0 * e[l]);
+                let mut r = p.hypot(1.0);
+                if p < 0.0 {
+                    r = -r;
+                }
+                d[l] = e[l] / (p + r);
+                d[l + 1] = e[l] * (p + r);
+                let dl1 = d[l + 1];
+                let mut h = g - d[l];
+                for i in l + 2..n {
+                    d[i] -= h;
+                }
+                f += h;
+                // Implicit QL sweep.
+                p = d[m];
+                let mut c = 1.0f64;
+                let mut c2 = c;
+                let mut c3 = c;
+                let el1 = e[l + 1];
+                let mut s = 0.0f64;
+                let mut s2 = 0.0f64;
+                for i in (l..m).rev() {
+                    c3 = c2;
+                    c2 = c;
+                    s2 = s;
+                    let gg = c * e[i];
+                    h = c * p;
+                    r = p.hypot(e[i]);
+                    e[i + 1] = s * r;
+                    s = e[i] / r;
+                    c = p / r;
+                    p = c * d[i] - s * gg;
+                    d[i + 1] = h + s * (c * gg + s * d[i]);
+                    // Accumulate the rotation into z's columns i and i+1.
+                    if let Some(zm) = z.as_deref_mut() {
+                        let rows = zm.rows();
+                        let ncols = zm.cols();
+                        let zs = zm.as_mut_slice();
+                        for k in 0..rows {
+                            let base = k * ncols;
+                            let h2 = zs[base + i + 1];
+                            zs[base + i + 1] = s * zs[base + i] + c * h2;
+                            zs[base + i] = c * zs[base + i] - s * h2;
+                        }
+                    }
+                }
+                p = -s * s2 * c3 * el1 * e[l] / dl1;
+                e[l] = s * p;
+                d[l] = c * p;
+                if e[l].abs() <= EPS * tst1 {
+                    break;
+                }
+            }
+        }
+        d[l] += f;
+        e[l] = 0.0;
+    }
+
+    // Sort eigenvalues ascending, permuting z columns to match.
+    for i in 0..n.saturating_sub(1) {
+        let mut k = i;
+        let mut p = d[i];
+        for j in i + 1..n {
+            if d[j] < p {
+                k = j;
+                p = d[j];
+            }
+        }
+        if k != i {
+            d.swap(i, k);
+            if let Some(zm) = z.as_deref_mut() {
+                let rows = zm.rows();
+                let ncols = zm.cols();
+                let zs = zm.as_mut_slice();
+                for r in 0..rows {
+                    zs.swap(r * ncols + i, r * ncols + k);
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Eigendecomposition of the tridiagonal `BᵀB` for a **lower-bidiagonal**
+/// `B` given by its diagonal `alpha[0..k]` and subdiagonal
+/// `beta[0..k]` (`beta[i] = B[i+1, i]`, with `beta[k-1]` the trailing
+/// `β_{k'+1}` row when `B` is `(k+1) x k`).
+///
+/// Returns `(theta, g)`: eigenvalues **descending** and the corresponding
+/// eigenvector matrix (`k x k`, columns are `g_i` of paper eq. (15)).
+pub fn btb_eig(alpha: &[f64], beta: &[f64]) -> Result<(Vec<f64>, Matrix)> {
+    let k = alpha.len();
+    assert!(beta.len() >= k, "need beta[0..k] (beta[i] = B[i+1,i])");
+    // T = BᵀB: T[i,i] = alpha_i^2 + beta_i^2, T[i,i+1] = alpha_{i+1}*beta_i.
+    let mut d: Vec<f64> = (0..k).map(|i| alpha[i] * alpha[i] + beta[i] * beta[i]).collect();
+    let mut e: Vec<f64> = (0..k)
+        .map(|i| if i + 1 < k { alpha[i + 1] * beta[i] } else { 0.0 })
+        .collect();
+    let mut z = Matrix::eye(k);
+    tql2(&mut d, &mut e, Some(&mut z))?;
+    // tql2 sorts ascending; flip to descending.
+    d.reverse();
+    let mut zr = Matrix::zeros(k, k);
+    for j in 0..k {
+        for i in 0..k {
+            zr[(i, j)] = z[(i, k - 1 - j)];
+        }
+    }
+    Ok((d, zr))
+}
+
+/// Implicit-shift QR diagonalization of an **upper-bidiagonal** matrix
+/// (Golub–Reinsch phase 2, Numerical Recipes lineage).
+///
+/// * `w` — diagonal entries (length `n`); on return the singular values
+///   (unsorted, non-negative once [`sort_svd_desc`] has run).
+/// * `rv1` — superdiagonal with NR's convention `rv1[i] = B[i-1, i]`,
+///   `rv1[0]` arbitrary. Destroyed.
+/// * `ut` — **transposed** left factor, `n x m`: row `i` is left vector
+///   `u_i`. Givens rotations touch row *pairs*, which in this layout are
+///   contiguous slices — the column-major formulation is ~6x slower at
+///   n = 1000 (EXPERIMENTS.md §Perf).
+/// * `vt` — transposed right factor, `n x p` (pass identity for plain SVD).
+pub fn bidiag_qr_svd(
+    w: &mut [f64],
+    rv1: &mut [f64],
+    ut: &mut Matrix,
+    vt: &mut Matrix,
+) -> Result<()> {
+    let n = w.len();
+    if n == 0 {
+        return Ok(());
+    }
+    assert!(rv1.len() >= n);
+    assert_eq!(ut.rows(), n);
+    assert_eq!(vt.rows(), n);
+    let u = ut;
+    let v = vt;
+    let anorm = (0..n).map(|i| w[i].abs() + rv1[i].abs()).fold(0.0f64, f64::max);
+    if anorm == 0.0 {
+        return Ok(());
+    }
+
+    for k in (0..n).rev() {
+        for its in 0..64 {
+            // Test for splitting: find l such that rv1[l] is negligible.
+            let mut l = k;
+            let mut flag = true;
+            loop {
+                if rv1[l].abs() <= EPS * anorm {
+                    flag = false;
+                    break;
+                }
+                // l >= 1 here because rv1[0] is conventionally negligible.
+                if w[l - 1].abs() <= EPS * anorm {
+                    break;
+                }
+                l -= 1;
+            }
+            if flag {
+                // Cancellation of rv1[l] when w[l-1] is negligible.
+                let mut c = 0.0f64;
+                let mut s = 1.0f64;
+                let nm = l - 1;
+                for i in l..=k {
+                    let f = s * rv1[i];
+                    rv1[i] *= c;
+                    if f.abs() <= EPS * anorm {
+                        break;
+                    }
+                    let g = w[i];
+                    let h = f.hypot(g);
+                    w[i] = h;
+                    let hinv = 1.0 / h;
+                    c = g * hinv;
+                    s = -f * hinv;
+                    rotate_cols(u, nm, i, c, s);
+                }
+            }
+            let z = w[k];
+            if l == k {
+                // Converged; enforce non-negative singular value.
+                if z < 0.0 {
+                    w[k] = -z;
+                    negate_col(v, k);
+                }
+                break;
+            }
+            if its == 63 {
+                return Err(Error::NoConvergence(format!(
+                    "bidiag_qr_svd: sv {k} after 64 sweeps"
+                )));
+            }
+            // Shift from bottom 2x2 minor.
+            let x = w[l];
+            let nm = k - 1;
+            let y = w[nm];
+            let mut g = rv1[nm];
+            let mut h = rv1[k];
+            let mut f = ((y - z) * (y + z) + (g - h) * (g + h)) / (2.0 * h * y);
+            g = f.hypot(1.0);
+            f = ((x - z) * (x + z) + h * (y / (f + g.copysign(f)) - h)) / x;
+            // Next QR transformation.
+            let mut c = 1.0f64;
+            let mut s = 1.0f64;
+            let mut x = x;
+            let mut y;
+            let mut z2;
+            for j in l..=nm {
+                let i = j + 1;
+                g = rv1[i];
+                y = w[i];
+                h = s * g;
+                g *= c;
+                z2 = f.hypot(h);
+                rv1[j] = z2;
+                c = f / z2;
+                s = h / z2;
+                f = x * c + g * s;
+                g = g * c - x * s;
+                h = y * s;
+                y *= c;
+                rotate_cols(v, j, i, c, s);
+                z2 = f.hypot(h);
+                w[j] = z2;
+                if z2 != 0.0 {
+                    let zi = 1.0 / z2;
+                    c = f * zi;
+                    s = h * zi;
+                }
+                f = c * g + s * y;
+                x = c * y - s * g;
+                rotate_cols(u, j, i, c, s);
+            }
+            rv1[l] = 0.0;
+            rv1[k] = f;
+            w[k] = x;
+        }
+    }
+    Ok(())
+}
+
+/// Apply the Givens rotation `(c, s)` to **rows** `a` and `b` of the
+/// transposed factor — two contiguous slices, fully vectorizable.
+#[inline]
+fn rotate_cols(m: &mut Matrix, a: usize, b: usize, c: f64, s: f64) {
+    debug_assert_ne!(a, b);
+    let ncols = m.cols();
+    let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+    let ms = m.as_mut_slice();
+    let (head, tail) = ms.split_at_mut(hi * ncols);
+    let row_lo = &mut head[lo * ncols..lo * ncols + ncols];
+    let row_hi = &mut tail[..ncols];
+    let (ra, rb) = if a < b { (row_lo, row_hi) } else { (row_hi, row_lo) };
+    for (xa, xb) in ra.iter_mut().zip(rb.iter_mut()) {
+        let ya = *xa;
+        let yb = *xb;
+        *xa = ya * c + yb * s;
+        *xb = yb * c - ya * s;
+    }
+}
+
+fn negate_col(m: &mut Matrix, j: usize) {
+    // Transposed layout: "column" j of the factor is row j here.
+    for x in m.row_mut(j) {
+        *x = -*x;
+    }
+}
+
+/// Sort `(w, Uᵀ, Vᵀ)` by singular value descending (selection sort with
+/// row swaps — rows are contiguous so each swap is one memswap).
+pub fn sort_svd_desc(w: &mut [f64], ut: &mut Matrix, vt: &mut Matrix) {
+    let n = w.len();
+    for i in 0..n.saturating_sub(1) {
+        let mut k = i;
+        for j in i + 1..n {
+            if w[j] > w[k] {
+                k = j;
+            }
+        }
+        if k != i {
+            w.swap(i, k);
+            swap_rows(ut, i, k);
+            swap_rows(vt, i, k);
+        }
+    }
+}
+
+fn swap_rows(m: &mut Matrix, a: usize, b: usize) {
+    if a == b {
+        return;
+    }
+    let ncols = m.cols();
+    let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+    let ms = m.as_mut_slice();
+    let (head, tail) = ms.split_at_mut(hi * ncols);
+    head[lo * ncols..lo * ncols + ncols].swap_with_slice(&mut tail[..ncols]);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Pcg64, Rng};
+
+    /// Dense multiply T·z_col for a tridiagonal T given by (d, e).
+    fn tridiag_apply(d: &[f64], e: &[f64], x: &[f64]) -> Vec<f64> {
+        let n = d.len();
+        let mut y = vec![0.0; n];
+        for i in 0..n {
+            y[i] = d[i] * x[i];
+            if i > 0 {
+                y[i] += e[i - 1] * x[i - 1];
+            }
+            if i + 1 < n {
+                y[i] += e[i] * x[i + 1];
+            }
+        }
+        y
+    }
+
+    #[test]
+    fn tql2_diagonal_matrix_is_fixed_point() {
+        let mut d = vec![3.0, 1.0, 2.0];
+        let mut e = vec![0.0, 0.0, 0.0];
+        let mut z = Matrix::eye(3);
+        tql2(&mut d, &mut e, Some(&mut z)).unwrap();
+        assert_eq!(d, vec![1.0, 2.0, 3.0]);
+        // Permutation matrix.
+        assert!((z.matmul_tn(&z).unwrap().sub(&Matrix::eye(3)).unwrap().max_abs()) < 1e-14);
+    }
+
+    #[test]
+    fn tql2_random_tridiagonal_eigenpairs() {
+        let mut rng = Pcg64::seed_from_u64(31);
+        for n in [2usize, 3, 10, 50] {
+            let d0: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+            let e0: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+            let mut d = d0.clone();
+            let mut e = e0.clone();
+            let mut z = Matrix::eye(n);
+            tql2(&mut d, &mut e, Some(&mut z)).unwrap();
+            // Ascending.
+            for wnd in d.windows(2) {
+                assert!(wnd[0] <= wnd[1] + 1e-12);
+            }
+            // Residual ||T v - lambda v|| small for each pair.
+            for j in 0..n {
+                let v = z.col(j);
+                let tv = tridiag_apply(&d0, &e0, &v);
+                let mut res = 0.0f64;
+                for i in 0..n {
+                    res = res.max((tv[i] - d[j] * v[i]).abs());
+                }
+                assert!(res < 1e-10, "n={n} j={j} res={res}");
+            }
+            // Orthogonality.
+            let ztz = z.matmul_tn(&z).unwrap();
+            assert!(ztz.sub(&Matrix::eye(n)).unwrap().max_abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn btb_eig_matches_dense_reference() {
+        let mut rng = Pcg64::seed_from_u64(32);
+        let k = 12;
+        let alpha: Vec<f64> = (0..k).map(|_| rng.next_gaussian().abs() + 0.1).collect();
+        let beta: Vec<f64> = (0..k).map(|_| rng.next_gaussian().abs() + 0.1).collect();
+        // Dense B (k+1 x k) lower bidiagonal.
+        let mut b = Matrix::zeros(k + 1, k);
+        for i in 0..k {
+            b[(i, i)] = alpha[i];
+            b[(i + 1, i)] = beta[i];
+        }
+        let btb = b.matmul_tn(&b).unwrap();
+        let (theta, g) = btb_eig(&alpha, &beta).unwrap();
+        // Descending.
+        for wnd in theta.windows(2) {
+            assert!(wnd[0] >= wnd[1] - 1e-12);
+        }
+        // Check B^T B g_i = theta_i g_i.
+        for j in 0..k {
+            let gj = g.col(j);
+            let bg = btb.matvec(&gj).unwrap();
+            let mut res = 0.0f64;
+            for i in 0..k {
+                res = res.max((bg[i] - theta[j] * gj[i]).abs());
+            }
+            assert!(res < 1e-9 * (1.0 + theta[0]), "j={j} res={res}");
+        }
+    }
+
+    #[test]
+    fn bidiag_qr_svd_matches_reconstruction() {
+        let mut rng = Pcg64::seed_from_u64(33);
+        for n in [2usize, 5, 20] {
+            let d: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+            let sup: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+            // Dense upper-bidiagonal B.
+            let mut b = Matrix::zeros(n, n);
+            for i in 0..n {
+                b[(i, i)] = d[i];
+                if i > 0 {
+                    b[(i - 1, i)] = sup[i];
+                }
+            }
+            let mut w = d.clone();
+            let mut rv1 = sup.clone();
+            rv1[0] = 0.0;
+            // Transposed convention: row i of ut/vt is the i-th vector.
+            let mut ut = Matrix::eye(n);
+            let mut vt = Matrix::eye(n);
+            bidiag_qr_svd(&mut w, &mut rv1, &mut ut, &mut vt).unwrap();
+            sort_svd_desc(&mut w, &mut ut, &mut vt);
+            // Reconstruct: B = sum_l w_l * u_l v_l^T with u_l = ut.row(l).
+            let mut usv = Matrix::zeros(n, n);
+            for i in 0..n {
+                for j in 0..n {
+                    let mut s = 0.0;
+                    for l in 0..n {
+                        s += ut[(l, i)] * w[l] * vt[(l, j)];
+                    }
+                    usv[(i, j)] = s;
+                }
+            }
+            let diff = usv.sub(&b).unwrap().max_abs();
+            assert!(diff < 1e-10, "n={n} diff={diff}");
+            assert!(w.iter().all(|&x| x >= 0.0));
+        }
+    }
+
+    #[test]
+    fn tql2_empty_and_single() {
+        let mut d: Vec<f64> = vec![];
+        let mut e: Vec<f64> = vec![];
+        tql2(&mut d, &mut e, None).unwrap();
+        let mut d = vec![4.0];
+        let mut e = vec![0.0];
+        tql2(&mut d, &mut e, None).unwrap();
+        assert_eq!(d, vec![4.0]);
+    }
+}

@@ -1,0 +1,1 @@
+fn main() { fastlr::cli::run_main(); }

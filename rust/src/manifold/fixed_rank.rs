@@ -1,0 +1,232 @@
+//! Tangent projection and retraction on the fixed-rank manifold.
+
+use super::point::FixedRankPoint;
+use crate::krylov::fsvd::{fsvd, FsvdOptions};
+use crate::linalg::svd::svd;
+use crate::linalg::Matrix;
+use crate::{Error, Result};
+
+/// Which SVD implementation the retraction uses — the comparison knob of
+/// the paper's Figure 2 ("standard SVD" vs "F-SVD lower iter" vs
+/// "F-SVD higher iter").
+#[derive(Debug, Clone)]
+pub enum SvdBackend {
+    /// Traditional Golub–Reinsch SVD (accurate, `O(d1·d2·min(d1,d2))`).
+    Full,
+    /// F-SVD (Algorithm 2) with `k` inner Krylov iterations.
+    Fsvd {
+        /// Inner iterations of Algorithm 1 (paper uses 20 and 35).
+        k: usize,
+        /// Reorthogonalization passes.
+        reorth_passes: usize,
+        /// Start-vector seed (varied per call by the trainer).
+        seed: u64,
+    },
+}
+
+impl SvdBackend {
+    /// Leading-`r` truncated SVD of a dense matrix through this backend.
+    pub fn truncated(&self, a: &Matrix, r: usize) -> Result<(Matrix, Vec<f64>, Matrix)> {
+        match self {
+            SvdBackend::Full => {
+                let s = svd(a)?.truncate(r);
+                Ok((s.u, s.sigma, s.v))
+            }
+            SvdBackend::Fsvd { k, reorth_passes, seed } => {
+                // k must be at least r for r Ritz pairs to exist. ε is set
+                // to the smallest positive value so Algorithm 1 runs the
+                // full k iterations (the paper's Figure 2 compares fixed
+                // inner-iteration budgets of 20 vs 35, not ε-terminated
+                // runs); only exact breakdown (β = 0) stops early.
+                let k = (*k).max(r);
+                let out = fsvd(
+                    a,
+                    &FsvdOptions {
+                        k,
+                        r,
+                        eps: f64::MIN_POSITIVE,
+                        reorth_passes: *reorth_passes,
+                        seed: *seed,
+                    },
+                )?;
+                Ok((out.u, out.sigma, out.v))
+            }
+        }
+    }
+}
+
+/// Project an ambient gradient `gr` onto the tangent space at `w`
+/// (paper eq. 27):
+///
+/// ```text
+/// Z = P_U·Gr·P_V + (I − P_U)·Gr·P_V + P_U·Gr·(I − P_V)
+///   = P_U·Gr + Gr·P_V − P_U·Gr·P_V,       P_U = U·Uᵀ, P_V = V·Vᵀ
+/// ```
+///
+/// computed as `U·A₁ + A₂·Vᵀ − U·A₃·Vᵀ` with the small intermediates
+/// `A₁ = Uᵀ·Gr` (r×d2), `A₂ = Gr·V` (d1×r), `A₃ = A₁·V` (r×r), so the cost
+/// is `O(d1·d2·r)` and never forms a `d1×d1` projector.
+pub fn project_tangent(w: &FixedRankPoint, gr: &Matrix) -> Result<Matrix> {
+    let (d1, d2) = w.shape();
+    if gr.shape() != (d1, d2) {
+        return Err(Error::Shape(format!(
+            "project_tangent: gradient {:?} vs point {:?}",
+            gr.shape(),
+            (d1, d2)
+        )));
+    }
+    let a1 = gr.matmul_tn_left(&w.u)?; // r x d2 : U^T Gr
+    let a2 = gr.matmul(&w.v)?; // d1 x r : Gr V
+    let a3 = a1.matmul(&w.v)?; // r x r  : U^T Gr V
+    // Z = U·A1 + A2·V^T − U·A3·V^T = U·(A1 − A3·Vᵀ) + A2·Vᵀ
+    let a3vt = a3.matmul_nt(&w.v)?; // r x d2
+    let inner = a1.sub(&a3vt)?; // r x d2
+    let term1 = w.u.matmul(&inner)?; // d1 x d2
+    let term2 = a2.matmul_nt(&w.v)?; // d1 x d2
+    term1.add(&term2)
+}
+
+impl Matrix {
+    /// `lhsᵀ · self` — readability helper for the projection math.
+    fn matmul_tn_left(&self, lhs: &Matrix) -> Result<Matrix> {
+        crate::linalg::gemm::gemm_tn(lhs, self)
+    }
+}
+
+/// Metric-projection retraction (paper eq. 24–25): the rank-`r` truncated
+/// SVD of `W + ξ`, computed through the chosen backend.
+///
+/// `step` is passed separately so callers write
+/// `retract(&w, &z, -eta, backend)` for a descent step `W − η·Z`.
+pub fn retract(
+    w: &FixedRankPoint,
+    xi: &Matrix,
+    step: f64,
+    backend: &SvdBackend,
+) -> Result<FixedRankPoint> {
+    let mut target = w.to_dense()?;
+    target.axpy(step, xi)?;
+    let r = w.rank();
+    let (u, sigma, v) = backend.truncated(&target, r)?;
+    FixedRankPoint::new(u, sigma, v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::qr::orthonormalize;
+    use crate::rng::Pcg64;
+
+    fn random_point(d1: usize, d2: usize, r: usize, seed: u64) -> FixedRankPoint {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let u = orthonormalize(&Matrix::gaussian(d1, r, &mut rng)).unwrap();
+        let v = orthonormalize(&Matrix::gaussian(d2, r, &mut rng)).unwrap();
+        let sigma: Vec<f64> = (0..r).map(|i| (r - i) as f64 * 2.0).collect();
+        FixedRankPoint::new(u, sigma, v).unwrap()
+    }
+
+    /// Dense oracle for eq. 27.
+    fn project_naive(w: &FixedRankPoint, gr: &Matrix) -> Matrix {
+        let (d1, d2) = w.shape();
+        let pu = w.u.matmul_nt(&w.u).unwrap(); // d1 x d1
+        let pv = w.v.matmul_nt(&w.v).unwrap(); // d2 x d2
+        let qu = Matrix::eye(d1).sub(&pu).unwrap();
+        let qv = Matrix::eye(d2).sub(&pv).unwrap();
+        let t1 = pu.matmul(gr).unwrap().matmul(&pv).unwrap();
+        let t2 = qu.matmul(gr).unwrap().matmul(&pv).unwrap();
+        let t3 = pu.matmul(gr).unwrap().matmul(&qv).unwrap();
+        t1.add(&t2).unwrap().add(&t3).unwrap()
+    }
+
+    #[test]
+    fn projection_matches_dense_oracle() {
+        let w = random_point(15, 12, 3, 160);
+        let mut rng = Pcg64::seed_from_u64(161);
+        let gr = Matrix::gaussian(15, 12, &mut rng);
+        let fast = project_tangent(&w, &gr).unwrap();
+        let slow = project_naive(&w, &gr);
+        assert!(fast.sub(&slow).unwrap().max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn projection_is_idempotent() {
+        let w = random_point(18, 14, 4, 162);
+        let mut rng = Pcg64::seed_from_u64(163);
+        let gr = Matrix::gaussian(18, 14, &mut rng);
+        let z1 = project_tangent(&w, &gr).unwrap();
+        let z2 = project_tangent(&w, &z1).unwrap();
+        assert!(z1.sub(&z2).unwrap().max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn tangent_vectors_are_fixed_points() {
+        // U·M·Vᵀ + U_P·Vᵀ + U·V_Pᵀ form (paper eq. 26) survives projection.
+        let w = random_point(10, 8, 2, 164);
+        let mut rng = Pcg64::seed_from_u64(165);
+        let m = Matrix::gaussian(2, 2, &mut rng);
+        let umv = w.u.matmul(&m).unwrap().matmul_nt(&w.v).unwrap();
+        let z = project_tangent(&w, &umv).unwrap();
+        assert!(z.sub(&umv).unwrap().max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn retract_zero_step_recovers_w() {
+        let w = random_point(12, 10, 3, 166);
+        let xi = Matrix::zeros(12, 10);
+        let w2 = retract(&w, &xi, 1.0, &SvdBackend::Full).unwrap();
+        let diff = w.to_dense().unwrap().sub(&w2.to_dense().unwrap()).unwrap().max_abs();
+        assert!(diff < 1e-10);
+    }
+
+    #[test]
+    fn retract_keeps_rank_and_orthonormality() {
+        let w = random_point(20, 16, 4, 167);
+        let mut rng = Pcg64::seed_from_u64(168);
+        let xi = Matrix::gaussian(20, 16, &mut rng);
+        for backend in [
+            SvdBackend::Full,
+            SvdBackend::Fsvd { k: 12, reorth_passes: 2, seed: 7 },
+        ] {
+            let w2 = retract(&w, &xi, -0.1, &backend).unwrap();
+            assert_eq!(w2.rank(), 4);
+            let utu = w2.u.matmul_tn(&w2.u).unwrap();
+            assert!(utu.sub(&Matrix::eye(4)).unwrap().max_abs() < 1e-8);
+            // Descending, positive.
+            for s in w2.sigma.windows(2) {
+                assert!(s[0] >= s[1] - 1e-12);
+            }
+            assert!(w2.sigma.iter().all(|&s| s >= 0.0));
+        }
+    }
+
+    #[test]
+    fn fsvd_retraction_approximates_full_retraction() {
+        // The Figure 2 premise: F-SVD retraction ≈ SVD retraction.
+        let w = random_point(30, 24, 5, 169);
+        let mut rng = Pcg64::seed_from_u64(170);
+        let xi = Matrix::gaussian(30, 24, &mut rng);
+        let full = retract(&w, &xi, -0.05, &SvdBackend::Full).unwrap();
+        let fast = retract(
+            &w,
+            &xi,
+            -0.05,
+            &SvdBackend::Fsvd { k: 20, reorth_passes: 2, seed: 3 },
+        )
+        .unwrap();
+        let d = full
+            .to_dense()
+            .unwrap()
+            .sub(&fast.to_dense().unwrap())
+            .unwrap()
+            .fro_norm()
+            / full.to_dense().unwrap().fro_norm();
+        assert!(d < 1e-6, "relative retraction gap {d}");
+    }
+
+    #[test]
+    fn gradient_shape_mismatch_rejected() {
+        let w = random_point(5, 4, 2, 171);
+        let gr = Matrix::zeros(4, 5);
+        assert!(project_tangent(&w, &gr).is_err());
+    }
+}

@@ -1,0 +1,15 @@
+//! Riemannian geometry of the fixed-rank matrix manifold
+//! `M_r = { W ∈ R^{d1 x d2} : rank(W) = r }` (paper §5.2–5.3, after
+//! Vandereycken 2013 and Absil–Mahony–Sepulchre).
+//!
+//! * [`point`]      — the factored representation `W = U·Σ·Vᵀ`.
+//! * [`fixed_rank`] — tangent-space projection (paper eq. 27) and the
+//!   metric-projection retraction (eq. 24–25), with a pluggable SVD
+//!   backend so the retraction can run through traditional SVD or the
+//!   paper's F-SVD (Algorithm 2) — the substitution Figure 2 measures.
+
+pub mod fixed_rank;
+pub mod point;
+
+pub use fixed_rank::{project_tangent, retract, SvdBackend};
+pub use point::FixedRankPoint;

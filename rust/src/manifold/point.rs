@@ -1,0 +1,121 @@
+//! Factored point on the fixed-rank manifold.
+
+use crate::linalg::Matrix;
+use crate::{ensure_shape, Result};
+
+/// A point `W = U·diag(sigma)·Vᵀ` on `M_r`.
+#[derive(Debug, Clone)]
+pub struct FixedRankPoint {
+    /// `d1 x r`, orthonormal columns.
+    pub u: Matrix,
+    /// Singular values, length `r` (kept positive & descending by the
+    /// retraction).
+    pub sigma: Vec<f64>,
+    /// `d2 x r`, orthonormal columns.
+    pub v: Matrix,
+}
+
+impl FixedRankPoint {
+    /// Construct, validating dimensions.
+    pub fn new(u: Matrix, sigma: Vec<f64>, v: Matrix) -> Result<Self> {
+        ensure_shape!(
+            u.cols() == sigma.len() && v.cols() == sigma.len(),
+            "FixedRankPoint: U {:?}, V {:?}, sigma len {}",
+            u.shape(),
+            v.shape(),
+            sigma.len()
+        );
+        Ok(FixedRankPoint { u, sigma, v })
+    }
+
+    /// Manifold rank `r`.
+    pub fn rank(&self) -> usize {
+        self.sigma.len()
+    }
+
+    /// Ambient dimensions `(d1, d2)`.
+    pub fn shape(&self) -> (usize, usize) {
+        (self.u.rows(), self.v.rows())
+    }
+
+    /// Materialize the dense `d1 x d2` matrix `U·Σ·Vᵀ`.
+    pub fn to_dense(&self) -> Result<Matrix> {
+        let mut us = self.u.clone();
+        for i in 0..us.rows() {
+            let row = us.row_mut(i);
+            for (j, &s) in self.sigma.iter().enumerate() {
+                row[j] *= s;
+            }
+        }
+        us.matmul_nt(&self.v)
+    }
+
+    /// Bilinear form `xᵀ·W·v` evaluated **without** materializing `W`:
+    /// `(xᵀU)·Σ·(Vᵀv)` — `O((d1 + d2)·r)`. This is the request-path
+    /// score of the RSL model.
+    pub fn bilinear(&self, x: &[f64], v: &[f64]) -> Result<f64> {
+        let xu = self.u.matvec_t(x)?; // r
+        let vv = self.v.matvec_t(v)?; // r
+        Ok(xu
+            .iter()
+            .zip(&vv)
+            .zip(&self.sigma)
+            .map(|((a, b), s)| a * b * s)
+            .sum())
+    }
+
+    /// Frobenius norm of `W` = `‖sigma‖₂` (factors are orthonormal).
+    pub fn fro_norm(&self) -> f64 {
+        crate::linalg::vecops::norm2(&self.sigma)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::qr::orthonormalize;
+    use crate::rng::Pcg64;
+
+    fn random_point(d1: usize, d2: usize, r: usize, seed: u64) -> FixedRankPoint {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let u = orthonormalize(&Matrix::gaussian(d1, r, &mut rng)).unwrap();
+        let v = orthonormalize(&Matrix::gaussian(d2, r, &mut rng)).unwrap();
+        let sigma: Vec<f64> = (0..r).map(|i| (r - i) as f64).collect();
+        FixedRankPoint::new(u, sigma, v).unwrap()
+    }
+
+    #[test]
+    fn bilinear_matches_dense() {
+        let p = random_point(20, 15, 3, 150);
+        let w = p.to_dense().unwrap();
+        let mut rng = Pcg64::seed_from_u64(151);
+        let x: Vec<f64> = Matrix::gaussian(20, 1, &mut rng).as_slice().to_vec();
+        let v: Vec<f64> = Matrix::gaussian(15, 1, &mut rng).as_slice().to_vec();
+        let fast = p.bilinear(&x, &v).unwrap();
+        let wx = w.matvec_t(&x).unwrap();
+        let dense: f64 = wx.iter().zip(&v).map(|(a, b)| a * b).sum();
+        assert!((fast - dense).abs() < 1e-10, "{fast} vs {dense}");
+    }
+
+    #[test]
+    fn fro_norm_matches_dense() {
+        let p = random_point(12, 9, 4, 152);
+        let w = p.to_dense().unwrap();
+        assert!((p.fro_norm() - w.fro_norm()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn dimension_validation() {
+        let u = Matrix::zeros(5, 2);
+        let v = Matrix::zeros(4, 3);
+        assert!(FixedRankPoint::new(u, vec![1.0, 2.0], v).is_err());
+    }
+
+    #[test]
+    fn to_dense_has_requested_rank() {
+        let p = random_point(25, 18, 5, 153);
+        let w = p.to_dense().unwrap();
+        let s = crate::linalg::svd::svd(&w).unwrap();
+        assert_eq!(s.rank(1e-9 * s.sigma[0]), 5);
+    }
+}

@@ -1,0 +1,152 @@
+//! Self-contained pseudo-random number generation.
+//!
+//! The vendored crate set has no `rand`, so the substrate ships its own
+//! generators: [`SplitMix64`] (seeding), [`Pcg64`] (the workhorse stream),
+//! and Box–Muller gaussian sampling on top. All experiments seed explicitly
+//! so every table/figure in `EXPERIMENTS.md` is bit-reproducible.
+
+mod pcg;
+
+pub use pcg::{Pcg64, SplitMix64};
+
+/// Minimal uniform-source trait so the gaussian layer and the tests can be
+/// generic over generators.
+pub trait Rng {
+    /// Next 64 uniformly random bits.
+    fn next_u64(&mut self) -> u64;
+
+    /// Uniform in `[0, 1)` with 53-bit resolution.
+    fn next_f64(&mut self) -> f64 {
+        // Take the top 53 bits -> [0, 2^53), scale.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in `[0, bound)` via Lemire-style rejection.
+    fn next_below(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0, "bound must be positive");
+        // Rejection zone to kill modulo bias.
+        let zone = u64::MAX - (u64::MAX % bound);
+        loop {
+            let v = self.next_u64();
+            if v < zone {
+                return v % bound;
+            }
+        }
+    }
+
+    /// Standard normal via Box–Muller (uses two uniforms, returns one value;
+    /// the twin is cached by [`GaussianCache`] when bulk sampling).
+    fn next_gaussian(&mut self) -> f64 {
+        loop {
+            let u1 = self.next_f64();
+            if u1 <= f64::MIN_POSITIVE {
+                continue; // avoid ln(0)
+            }
+            let u2 = self.next_f64();
+            let r = (-2.0 * u1.ln()).sqrt();
+            return r * (std::f64::consts::TAU * u2).cos();
+        }
+    }
+
+    /// Normal with the paper's Algorithm 1 line 1 convention `N(mu, sd)`.
+    fn next_gaussian_with(&mut self, mu: f64, sd: f64) -> f64 {
+        mu + sd * self.next_gaussian()
+    }
+
+    /// Fill a slice with standard gaussians, using both Box–Muller outputs.
+    fn fill_gaussian(&mut self, out: &mut [f64]) {
+        let mut i = 0;
+        while i + 1 < out.len() {
+            let (a, b) = self.gaussian_pair();
+            out[i] = a;
+            out[i + 1] = b;
+            i += 2;
+        }
+        if i < out.len() {
+            out[i] = self.next_gaussian();
+        }
+    }
+
+    /// One Box–Muller draw returning both independent normals.
+    fn gaussian_pair(&mut self) -> (f64, f64) {
+        loop {
+            let u1 = self.next_f64();
+            if u1 <= f64::MIN_POSITIVE {
+                continue;
+            }
+            let u2 = self.next_f64();
+            let r = (-2.0 * u1.ln()).sqrt();
+            let th = std::f64::consts::TAU * u2;
+            return (r * th.cos(), r * th.sin());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_mean_and_range() {
+        let mut rng = Pcg64::seed_from_u64(42);
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let x = rng.next_f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut rng = Pcg64::seed_from_u64(7);
+        let n = 200_000;
+        let mut m1 = 0.0;
+        let mut m2 = 0.0;
+        for _ in 0..n {
+            let x = rng.next_gaussian();
+            m1 += x;
+            m2 += x * x;
+        }
+        m1 /= n as f64;
+        m2 /= n as f64;
+        assert!(m1.abs() < 0.02, "mean={m1}");
+        assert!((m2 - 1.0).abs() < 0.03, "var={m2}");
+    }
+
+    #[test]
+    fn fill_gaussian_covers_odd_lengths() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let mut buf = vec![0.0; 7];
+        rng.fill_gaussian(&mut buf);
+        assert!(buf.iter().all(|x| x.is_finite()));
+        assert!(buf.iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn next_below_is_in_range_and_hits_all() {
+        let mut rng = Pcg64::seed_from_u64(3);
+        let mut seen = [false; 5];
+        for _ in 0..1000 {
+            let v = rng.next_below(5) as usize;
+            assert!(v < 5);
+            seen[v] = true;
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn gaussian_with_shifts_and_scales() {
+        let mut rng = Pcg64::seed_from_u64(11);
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            sum += rng.next_gaussian_with(2.0, 1.0);
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 2.0).abs() < 0.02, "mean={mean}");
+    }
+}

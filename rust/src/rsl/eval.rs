@@ -1,0 +1,95 @@
+//! Evaluation utilities for the RSL model (Figure 2b's accuracy metric).
+
+use crate::data::pairs::PairSampler;
+use crate::manifold::FixedRankPoint;
+use crate::rng::Pcg64;
+use crate::Result;
+
+/// Pair-classification accuracy: fraction of sampled pairs where
+/// `sign(f_W(x, v))` matches the similarity label.
+pub fn pair_accuracy(
+    w: &FixedRankPoint,
+    sampler: &PairSampler,
+    n_pairs: usize,
+    rng: &mut Pcg64,
+) -> Result<f64> {
+    if n_pairs == 0 {
+        return Ok(0.0);
+    }
+    let mut correct = 0usize;
+    for _ in 0..n_pairs {
+        let p = sampler.sample(rng);
+        let f = w.bilinear(sampler.x_row(&p), sampler.v_row(&p))?;
+        let pred = if f >= 0.0 { 1.0 } else { -1.0 };
+        if pred == p.y {
+            correct += 1;
+        }
+    }
+    Ok(correct as f64 / n_pairs as f64)
+}
+
+/// Mean hinge loss over sampled pairs (diagnostic counterpart of accuracy).
+pub fn mean_hinge_loss(
+    w: &FixedRankPoint,
+    sampler: &PairSampler,
+    n_pairs: usize,
+    rng: &mut Pcg64,
+) -> Result<f64> {
+    if n_pairs == 0 {
+        return Ok(0.0);
+    }
+    let mut total = 0.0;
+    for _ in 0..n_pairs {
+        let p = sampler.sample(rng);
+        let f = w.bilinear(sampler.x_row(&p), sampler.v_row(&p))?;
+        total += super::model::hinge_loss(f, p.y);
+    }
+    Ok(total / n_pairs as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::digits::{generate, DigitStyle};
+    use crate::linalg::qr::orthonormalize;
+    use crate::linalg::Matrix;
+
+    #[test]
+    fn random_model_is_near_chance() {
+        let mut rng = Pcg64::seed_from_u64(200);
+        let dx = generate(80, &DigitStyle::mnist_like(), &mut rng);
+        let dv = generate(80, &DigitStyle::usps_like(), &mut rng);
+        let sampler = PairSampler::new(&dx, &dv);
+        let u = orthonormalize(&Matrix::gaussian(784, 5, &mut rng)).unwrap();
+        let v = orthonormalize(&Matrix::gaussian(256, 5, &mut rng)).unwrap();
+        let w = FixedRankPoint::new(u, vec![1.0; 5], v).unwrap();
+        let acc = pair_accuracy(&w, &sampler, 500, &mut rng).unwrap();
+        assert!((0.3..0.7).contains(&acc), "chance-level expected, got {acc}");
+    }
+
+    #[test]
+    fn zero_pairs_is_zero() {
+        let mut rng = Pcg64::seed_from_u64(201);
+        let dx = generate(10, &DigitStyle::mnist_like(), &mut rng);
+        let dv = generate(10, &DigitStyle::usps_like(), &mut rng);
+        let sampler = PairSampler::new(&dx, &dv);
+        let u = orthonormalize(&Matrix::gaussian(784, 2, &mut rng)).unwrap();
+        let v = orthonormalize(&Matrix::gaussian(256, 2, &mut rng)).unwrap();
+        let w = FixedRankPoint::new(u, vec![1.0; 2], v).unwrap();
+        assert_eq!(pair_accuracy(&w, &sampler, 0, &mut rng).unwrap(), 0.0);
+        assert_eq!(mean_hinge_loss(&w, &sampler, 0, &mut rng).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn loss_nonnegative() {
+        let mut rng = Pcg64::seed_from_u64(202);
+        let dx = generate(20, &DigitStyle::mnist_like(), &mut rng);
+        let dv = generate(20, &DigitStyle::usps_like(), &mut rng);
+        let sampler = PairSampler::new(&dx, &dv);
+        let u = orthonormalize(&Matrix::gaussian(784, 3, &mut rng)).unwrap();
+        let v = orthonormalize(&Matrix::gaussian(256, 3, &mut rng)).unwrap();
+        let w = FixedRankPoint::new(u, vec![2.0, 1.0, 0.5], v).unwrap();
+        let l = mean_hinge_loss(&w, &sampler, 200, &mut rng).unwrap();
+        assert!(l >= 0.0);
+    }
+}

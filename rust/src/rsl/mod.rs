@@ -1,0 +1,13 @@
+//! Riemannian similarity learning (RSL) — the paper's §5/§6.3 application.
+//!
+//! Learns a rank-`r` bilinear similarity `f_W(x, v) = xᵀ·W·v` between two
+//! data domains of different dimensionality by Riemannian mini-batch SGD
+//! on the fixed-rank manifold (Algorithm 4), with the retraction's SVD
+//! computed either traditionally or by F-SVD — the comparison of Figure 2.
+
+pub mod eval;
+pub mod model;
+pub mod trainer;
+
+pub use model::{batch_euclidean_gradient, hinge_loss, BatchGradEngine, NativeGradEngine};
+pub use trainer::{train, RsgdOptions, TrainHistory, TrainRecord};

@@ -1,0 +1,255 @@
+//! **Algorithm 4** — fast Riemannian mini-batch gradient descent for RSL.
+//!
+//! Per iteration: sample a balanced pair batch, compute the Euclidean
+//! gradient (line 5–6), project onto the tangent space at `W` (line 8,
+//! eq. 27), retract `W − η·Z` back to the manifold via the chosen SVD
+//! backend (lines 9–10, eq. 25). The backend is the experiment knob of
+//! Figure 2: `Full` vs `Fsvd{k:20}` ("lower iter") vs `Fsvd{k:35}`
+//! ("higher iter").
+
+use super::eval::pair_accuracy;
+use super::model::BatchGradEngine;
+use crate::data::pairs::PairSampler;
+use crate::linalg::qr::orthonormalize;
+use crate::linalg::Matrix;
+use crate::manifold::{project_tangent, retract, FixedRankPoint, SvdBackend};
+use crate::rng::Pcg64;
+use crate::{Error, Result};
+use std::time::Instant;
+
+/// Options for [`train`].
+#[derive(Debug, Clone)]
+pub struct RsgdOptions {
+    /// Manifold rank `r` (paper uses 5).
+    pub rank: usize,
+    /// Iterations `K`.
+    pub iters: usize,
+    /// Mini-batch size `b`.
+    pub batch: usize,
+    /// Step size `η`.
+    pub eta: f64,
+    /// Weight decay `λ` (Algorithm 4 line 6).
+    pub lambda: f64,
+    /// Retraction SVD backend.
+    pub backend: SvdBackend,
+    /// RNG seed (init + batch sampling).
+    pub seed: u64,
+    /// Evaluate train loss / test accuracy every this many iterations
+    /// (0 = only at the end).
+    pub eval_every: usize,
+    /// Number of held-out pairs used per accuracy evaluation.
+    pub eval_pairs: usize,
+}
+
+impl Default for RsgdOptions {
+    fn default() -> Self {
+        RsgdOptions {
+            rank: 5,
+            iters: 500,
+            batch: 32,
+            eta: 0.5,
+            lambda: 1e-4,
+            backend: SvdBackend::Full,
+            seed: 0xA11CE,
+            eval_every: 50,
+            eval_pairs: 400,
+        }
+    }
+}
+
+/// One evaluation snapshot along the run.
+#[derive(Debug, Clone)]
+pub struct TrainRecord {
+    /// Iteration index (1-based; 0 is the untouched init).
+    pub iter: usize,
+    /// Wall-clock seconds since training started.
+    pub elapsed_sec: f64,
+    /// Mean hinge loss of the last training batch.
+    pub train_loss: f64,
+    /// Held-out pair-classification accuracy.
+    pub test_accuracy: f64,
+}
+
+/// Full training trace.
+#[derive(Debug, Clone)]
+pub struct TrainHistory {
+    /// Snapshots (every `eval_every` iterations plus the final one).
+    pub records: Vec<TrainRecord>,
+    /// Total wall time.
+    pub total_sec: f64,
+}
+
+/// Train a rank-`r` bilinear similarity with RSGD (Algorithm 4).
+///
+/// `train_sampler` drives optimization; `test_sampler` (over held-out
+/// datasets) drives the accuracy curve.
+pub fn train(
+    train_sampler: &PairSampler,
+    test_sampler: &PairSampler,
+    engine: &dyn BatchGradEngine,
+    opts: &RsgdOptions,
+) -> Result<(FixedRankPoint, TrainHistory)> {
+    if opts.rank == 0 || opts.batch == 0 || opts.iters == 0 {
+        return Err(Error::InvalidArg(
+            "rsgd: rank, batch and iters must be >= 1".into(),
+        ));
+    }
+    let (d1, d2) = {
+        let mut rng = Pcg64::seed_from_u64(opts.seed);
+        let p = train_sampler.sample(&mut rng);
+        (train_sampler.x_row(&p).len(), train_sampler.v_row(&p).len())
+    };
+
+    let mut rng = Pcg64::seed_from_u64(opts.seed);
+    // Line 1: W ~ N(0,1)^{d1 x d2}, realized directly in factored rank-r
+    // form (gaussian factors + QR) to avoid a d1×d2 SVD at init.
+    let u = orthonormalize(&Matrix::gaussian(d1, opts.rank, &mut rng))?;
+    let v = orthonormalize(&Matrix::gaussian(d2, opts.rank, &mut rng))?;
+    let sigma = vec![0.1; opts.rank];
+    let mut w = FixedRankPoint::new(u, sigma, v)?;
+
+    let mut records = Vec::new();
+    let t0 = Instant::now();
+    for it in 1..=opts.iters {
+        // Line 4: draw mini-batch.
+        let batch = train_sampler.sample_batch(opts.batch, &mut rng);
+        // Lines 5–6: Euclidean gradient + weight decay.
+        let (gr, loss) = engine.batch_grad(&w, train_sampler, &batch, opts.lambda)?;
+        // Line 8: tangent projection (eq. 27).
+        let z = project_tangent(&w, &gr)?;
+        // Lines 9–10: retraction of W − η·Z via the backend SVD.
+        // Vary the F-SVD start-vector seed per step so failures can't lock
+        // onto one unlucky Krylov start.
+        let backend = match &opts.backend {
+            SvdBackend::Fsvd { k, reorth_passes, .. } => SvdBackend::Fsvd {
+                k: *k,
+                reorth_passes: *reorth_passes,
+                seed: opts.seed ^ (it as u64).wrapping_mul(0x9E37_79B9),
+            },
+            b => b.clone(),
+        };
+        w = retract(&w, &z, -opts.eta, &backend)?;
+
+        let should_eval = opts.eval_every > 0 && it % opts.eval_every == 0;
+        if should_eval || it == opts.iters {
+            let mut eval_rng = Pcg64::seed_from_u64(opts.seed ^ 0xEA15_EED0);
+            let acc = pair_accuracy(&w, test_sampler, opts.eval_pairs, &mut eval_rng)?;
+            records.push(TrainRecord {
+                iter: it,
+                elapsed_sec: t0.elapsed().as_secs_f64(),
+                train_loss: loss,
+                test_accuracy: acc,
+            });
+        }
+    }
+
+    Ok((
+        w,
+        TrainHistory { records, total_sec: t0.elapsed().as_secs_f64() },
+    ))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::digits::{generate, DigitStyle};
+    use crate::rsl::model::NativeGradEngine;
+
+    fn samplers() -> (
+        crate::data::digits::DigitDataset,
+        crate::data::digits::DigitDataset,
+        crate::data::digits::DigitDataset,
+        crate::data::digits::DigitDataset,
+    ) {
+        let mut rng = Pcg64::seed_from_u64(190);
+        let trx = generate(150, &DigitStyle::mnist_like(), &mut rng);
+        let trv = generate(150, &DigitStyle::usps_like(), &mut rng);
+        let tex = generate(60, &DigitStyle::mnist_like(), &mut rng);
+        let tev = generate(60, &DigitStyle::usps_like(), &mut rng);
+        (trx, trv, tex, tev)
+    }
+
+    #[test]
+    fn learns_better_than_chance() {
+        let (trx, trv, tex, tev) = samplers();
+        let tr = PairSampler::new(&trx, &trv);
+        let te = PairSampler::new(&tex, &tev);
+        let (w, hist) = train(
+            &tr,
+            &te,
+            &NativeGradEngine,
+            &RsgdOptions {
+                iters: 120,
+                batch: 24,
+                eta: 1.0,
+                eval_every: 40,
+                eval_pairs: 300,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(w.rank(), 5);
+        let final_acc = hist.records.last().unwrap().test_accuracy;
+        assert!(final_acc > 0.6, "accuracy {final_acc}");
+    }
+
+    #[test]
+    fn fsvd_backend_tracks_full_backend() {
+        let (trx, trv, tex, tev) = samplers();
+        let tr = PairSampler::new(&trx, &trv);
+        let te = PairSampler::new(&tex, &tev);
+        let base = RsgdOptions {
+            iters: 60,
+            batch: 16,
+            eta: 1.0,
+            eval_every: 0,
+            eval_pairs: 200,
+            ..Default::default()
+        };
+        let (_, h_full) = train(&tr, &te, &NativeGradEngine, &base).unwrap();
+        let (_, h_fast) = train(
+            &tr,
+            &te,
+            &NativeGradEngine,
+            &RsgdOptions {
+                backend: SvdBackend::Fsvd { k: 20, reorth_passes: 1, seed: 0 },
+                ..base
+            },
+        )
+        .unwrap();
+        let a_full = h_full.records.last().unwrap().test_accuracy;
+        let a_fast = h_fast.records.last().unwrap().test_accuracy;
+        // Figure 2b: same accuracy within a few points.
+        assert!(
+            (a_full - a_fast).abs() < 0.15,
+            "full {a_full} vs fsvd {a_fast}"
+        );
+    }
+
+    #[test]
+    fn history_records_are_monotone_in_time() {
+        let (trx, trv, tex, tev) = samplers();
+        let tr = PairSampler::new(&trx, &trv);
+        let te = PairSampler::new(&tex, &tev);
+        let (_, hist) = train(
+            &tr,
+            &te,
+            &NativeGradEngine,
+            &RsgdOptions { iters: 30, eval_every: 10, eval_pairs: 100, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(hist.records.len(), 3);
+        for w in hist.records.windows(2) {
+            assert!(w[0].elapsed_sec <= w[1].elapsed_sec);
+            assert!(w[0].iter < w[1].iter);
+        }
+    }
+
+    #[test]
+    fn invalid_options_rejected() {
+        let (trx, trv, ..) = samplers();
+        let tr = PairSampler::new(&trx, &trv);
+        let bad = RsgdOptions { rank: 0, ..Default::default() };
+        assert!(train(&tr, &tr, &NativeGradEngine, &bad).is_err());
+    }
+}

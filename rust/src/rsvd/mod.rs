@@ -1,0 +1,6 @@
+//! Randomized SVD baseline (Halko, Martinsson & Tropp 2011) — the method
+//! the paper compares F-SVD against in Tables 1b/2 and Figure 1.
+
+pub mod halko;
+
+pub use halko::{rsvd, RsvdOptions};

@@ -1,0 +1,146 @@
+//! Adapters from compiled artifacts to the crate's algorithm interfaces.
+//!
+//! * [`PjrtLinOp`] — a fixed-shape matrix operator whose `A·x` / `Aᵀ·y`
+//!   products run through the `gk_matvec*` artifacts, so Algorithms 1/2/3
+//!   execute their hot products on the compiled L1 Pallas kernels.
+//! * [`PjrtGradEngine`] — the RSL batch gradient through the
+//!   `rsl_batch_grad*` artifact, plugging into Algorithm 4's trainer.
+//!
+//! Precision note: artifacts are f32 (the TPU-shaped kernels' natural
+//! dtype); the native path stays f64. The integration tests bound the
+//! disagreement and the paper-accuracy claims are made on the native path.
+
+use super::pjrt::TensorF32;
+use super::registry::{CompiledArtifact, Registry};
+use crate::data::pairs::{Pair, PairSampler};
+use crate::krylov::LinOp;
+use crate::linalg::Matrix;
+use crate::manifold::FixedRankPoint;
+use crate::rsl::model::BatchGradEngine;
+use crate::{Error, Result};
+use std::sync::Arc;
+
+/// A dense operator executing its matvecs through PJRT artifacts.
+pub struct PjrtLinOp {
+    a: TensorF32,
+    m: usize,
+    n: usize,
+    matvec: Arc<CompiledArtifact>,
+    matvec_t: Arc<CompiledArtifact>,
+}
+
+impl PjrtLinOp {
+    /// Wrap `a`, looking up `gk_matvec_{m}x{n}` / `gk_matvec_t_{m}x{n}`.
+    pub fn new(registry: &Registry, a: &Matrix) -> Result<Self> {
+        let (m, n) = a.shape();
+        let mv = registry.get(&format!("gk_matvec_{m}x{n}"))?;
+        let mvt = registry.get(&format!("gk_matvec_t_{m}x{n}"))?;
+        Ok(PjrtLinOp {
+            a: TensorF32::from_matrix(a),
+            m,
+            n,
+            matvec: mv,
+            matvec_t: mvt,
+        })
+    }
+}
+
+impl LinOp for PjrtLinOp {
+    fn shape(&self) -> (usize, usize) {
+        (self.m, self.n)
+    }
+
+    fn apply(&self, x: &[f64]) -> Result<Vec<f64>> {
+        if x.len() != self.n {
+            return Err(Error::Shape(format!(
+                "PjrtLinOp::apply: vec[{}] for {}x{}",
+                x.len(),
+                self.m,
+                self.n
+            )));
+        }
+        let out = self.matvec.run(&[self.a.clone(), TensorF32::from_f64(x)])?;
+        Ok(out[0].to_f64())
+    }
+
+    fn apply_t(&self, y: &[f64]) -> Result<Vec<f64>> {
+        if y.len() != self.m {
+            return Err(Error::Shape(format!(
+                "PjrtLinOp::apply_t: vec[{}] for {}x{}",
+                y.len(),
+                self.m,
+                self.n
+            )));
+        }
+        let out = self
+            .matvec_t
+            .run(&[self.a.clone(), TensorF32::from_f64(y)])?;
+        Ok(out[0].to_f64())
+    }
+}
+
+/// RSL batch gradient through the compiled `rsl_batch_grad` artifact.
+pub struct PjrtGradEngine {
+    artifact: Arc<CompiledArtifact>,
+    b: usize,
+    d1: usize,
+    d2: usize,
+}
+
+impl PjrtGradEngine {
+    /// Look up `rsl_batch_grad_b{b}_{d1}x{d2}`.
+    pub fn new(registry: &Registry, b: usize, d1: usize, d2: usize) -> Result<Self> {
+        let artifact = registry.get(&format!("rsl_batch_grad_b{b}_{d1}x{d2}"))?;
+        Ok(PjrtGradEngine { artifact, b, d1, d2 })
+    }
+}
+
+impl BatchGradEngine for PjrtGradEngine {
+    fn batch_grad(
+        &self,
+        w: &FixedRankPoint,
+        sampler: &PairSampler,
+        batch: &[Pair],
+        lambda: f64,
+    ) -> Result<(Matrix, f64)> {
+        let (d1, d2) = w.shape();
+        if (d1, d2) != (self.d1, self.d2) || batch.len() != self.b {
+            return Err(Error::Runtime(format!(
+                "PjrtGradEngine: artifact is b{}_{}x{}, got b{}_{}x{}",
+                self.b,
+                self.d1,
+                self.d2,
+                batch.len(),
+                d1,
+                d2
+            )));
+        }
+        // Pack the batch: X (b, d1), V (b, d2), y (b,).
+        let mut xb = vec![0.0f32; self.b * d1];
+        let mut vb = vec![0.0f32; self.b * d2];
+        let mut y = vec![0.0f32; self.b];
+        for (i, p) in batch.iter().enumerate() {
+            for (j, &v) in sampler.x_row(p).iter().enumerate() {
+                xb[i * d1 + j] = v as f32;
+            }
+            for (j, &v) in sampler.v_row(p).iter().enumerate() {
+                vb[i * d2 + j] = v as f32;
+            }
+            y[i] = p.y as f32;
+        }
+        let w_dense = TensorF32::from_matrix(&w.to_dense()?);
+        let outs = self.artifact.run(&[
+            w_dense,
+            TensorF32::new(vec![self.b, d1], xb)?,
+            TensorF32::new(vec![self.b, d2], vb)?,
+            TensorF32::new(vec![self.b], y)?,
+            TensorF32::scalar(lambda as f32),
+        ])?;
+        let gr = Matrix::from_vec(d1, d2, outs[0].to_f64())?;
+        let loss = outs[1].data[0] as f64;
+        Ok((gr, loss))
+    }
+}
+
+// Integration tests for these adapters live in rust/tests/runtime_artifacts.rs
+// (they need compiled artifacts on disk).

@@ -1,0 +1,24 @@
+//! PJRT runtime: load and execute the AOT-compiled artifacts.
+//!
+//! `make artifacts` runs the Python/JAX/Pallas compile path once, leaving
+//! HLO-text modules + `manifest.tsv` under `artifacts/`. This module is the
+//! request-path side: [`pjrt`] wraps the `xla` crate's PJRT CPU client,
+//! [`registry`] parses the manifest and compiles named executables, and
+//! [`backend`] adapts compiled artifacts to the crate's algorithm
+//! interfaces ([`crate::krylov::LinOp`], [`crate::rsl::BatchGradEngine`])
+//! so the same Algorithm 1/2/3/4 code runs through either the native f64
+//! kernels or the compiled f32 artifacts.
+
+pub mod backend;
+pub mod pjrt;
+pub mod registry;
+
+pub use pjrt::{PjrtEngine, TensorF32};
+pub use registry::{ArtifactMeta, Registry, TensorSpec};
+
+/// Default artifact directory, overridable with `FASTLR_ARTIFACTS`.
+pub fn default_artifact_dir() -> std::path::PathBuf {
+    std::env::var("FASTLR_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}

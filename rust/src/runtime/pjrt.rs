@@ -1,0 +1,155 @@
+//! Thin wrapper over the `xla` crate's PJRT CPU client.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
+//! → `XlaComputation::from_proto` → `client.compile` → `execute`. HLO *text*
+//! is the interchange format (64-bit-id protos from jax ≥ 0.5 are rejected
+//! by xla_extension 0.5.1; the text parser reassigns ids).
+
+use crate::{Error, Result};
+use std::path::Path;
+
+/// A host-side f32 tensor (row-major) passed to / returned from artifacts.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorF32 {
+    /// Dimensions (empty = scalar).
+    pub dims: Vec<usize>,
+    /// Row-major data; `len == dims.iter().product()`.
+    pub data: Vec<f32>,
+}
+
+impl TensorF32 {
+    /// Construct, checking the element count.
+    pub fn new(dims: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let expect: usize = dims.iter().product();
+        if data.len() != expect {
+            return Err(Error::Shape(format!(
+                "TensorF32: {} elements for dims {:?}",
+                data.len(),
+                dims
+            )));
+        }
+        Ok(TensorF32 { dims, data })
+    }
+
+    /// Scalar tensor.
+    pub fn scalar(x: f32) -> Self {
+        TensorF32 { dims: vec![], data: vec![x] }
+    }
+
+    /// From an f64 matrix (lossy narrowing — the PJRT artifacts are f32).
+    pub fn from_matrix(m: &crate::linalg::Matrix) -> Self {
+        TensorF32 {
+            dims: vec![m.rows(), m.cols()],
+            data: m.as_slice().iter().map(|&x| x as f32).collect(),
+        }
+    }
+
+    /// From an f64 slice as a rank-1 tensor.
+    pub fn from_f64(v: &[f64]) -> Self {
+        TensorF32 { dims: vec![v.len()], data: v.iter().map(|&x| x as f32).collect() }
+    }
+
+    /// Back to f64.
+    pub fn to_f64(&self) -> Vec<f64> {
+        self.data.iter().map(|&x| x as f64).collect()
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&self.data);
+        if self.dims.is_empty() {
+            // Rank-0: reshape the 1-element vector to a scalar.
+            Ok(lit.reshape(&[])?)
+        } else {
+            let dims: Vec<i64> = self.dims.iter().map(|&d| d as i64).collect();
+            Ok(lit.reshape(&dims)?)
+        }
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>()?;
+        TensorF32::new(dims, data)
+    }
+}
+
+/// Owns the PJRT client; compiles HLO-text modules into executables.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+}
+
+impl PjrtEngine {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        Ok(PjrtEngine { client: xla::PjRtClient::cpu()? })
+    }
+
+    /// Backend platform name (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile an HLO-text file into an executable.
+    pub fn compile_file(&self, path: &Path) -> Result<Executable> {
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| Error::Runtime(format!("non-utf8 path {path:?}")))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        Ok(Executable { exe })
+    }
+}
+
+/// A compiled artifact ready to run.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with host tensors; returns the flattened output tuple.
+    ///
+    /// All shipped artifacts are lowered with `return_tuple=True`, so the
+    /// single device literal is always a tuple, possibly of one element.
+    pub fn run(&self, inputs: &[TensorF32]) -> Result<Vec<TensorF32>> {
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        parts.iter().map(TensorF32::from_literal).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_construction_validates() {
+        assert!(TensorF32::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(TensorF32::new(vec![2, 3], vec![0.0; 5]).is_err());
+        let s = TensorF32::scalar(4.5);
+        assert_eq!(s.dims, Vec::<usize>::new());
+        assert_eq!(s.data, vec![4.5]);
+    }
+
+    #[test]
+    fn f64_round_trip() {
+        let v = vec![1.5f64, -2.25, 3.0];
+        let t = TensorF32::from_f64(&v);
+        assert_eq!(t.to_f64(), v);
+    }
+
+    #[test]
+    fn matrix_conversion_preserves_layout() {
+        let m = crate::linalg::Matrix::from_fn(2, 3, |i, j| (i * 3 + j) as f64);
+        let t = TensorF32::from_matrix(&m);
+        assert_eq!(t.dims, vec![2, 3]);
+        assert_eq!(t.data, vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+    }
+
+    // Engine tests that need the PJRT runtime live in rust/tests/ as
+    // integration tests gated on artifacts being built.
+}

@@ -1,0 +1,237 @@
+//! Artifact manifest parsing and executable registry.
+//!
+//! `manifest.tsv` format (written by `python/compile/aot.py`):
+//!
+//! ```text
+//! name <TAB> file <TAB> in_specs <TAB> out_specs
+//! ```
+//!
+//! where a spec list is `;`-joined `dtype[d0,d1,...]` entries (`dtype[]`
+//! for scalars). The registry validates every call's tensor shapes against
+//! the manifest before touching PJRT, so shape bugs surface as typed errors
+//! rather than runtime aborts inside XLA.
+
+use super::pjrt::{Executable, PjrtEngine, TensorF32};
+use crate::{Error, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Parsed `dtype[dims]` spec.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorSpec {
+    /// Element type name as written by jax (e.g. `float32`).
+    pub dtype: String,
+    /// Dimensions; empty for scalars.
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    /// Parse one `dtype[d0,d1]` spec.
+    pub fn parse(s: &str) -> Result<Self> {
+        let open = s
+            .find('[')
+            .ok_or_else(|| Error::Runtime(format!("bad tensor spec {s:?}")))?;
+        if !s.ends_with(']') {
+            return Err(Error::Runtime(format!("bad tensor spec {s:?}")));
+        }
+        let dtype = s[..open].to_string();
+        let body = &s[open + 1..s.len() - 1];
+        let dims = if body.is_empty() {
+            vec![]
+        } else {
+            body.split(',')
+                .map(|d| {
+                    d.trim()
+                        .parse::<usize>()
+                        .map_err(|e| Error::Runtime(format!("bad dim {d:?}: {e}")))
+                })
+                .collect::<Result<_>>()?
+        };
+        Ok(TensorSpec { dtype, dims })
+    }
+
+    /// Parse a `;`-joined spec list.
+    pub fn parse_list(s: &str) -> Result<Vec<Self>> {
+        s.split(';').map(TensorSpec::parse).collect()
+    }
+
+    /// Total element count.
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+/// One manifest row.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    /// Artifact name (e.g. `gk_matvec_1024x512`).
+    pub name: String,
+    /// HLO text file, relative to the artifact dir.
+    pub file: PathBuf,
+    /// Input tensor specs, in call order.
+    pub inputs: Vec<TensorSpec>,
+    /// Output tensor specs (the flattened result tuple).
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Loads the manifest and lazily compiles named artifacts.
+pub struct Registry {
+    dir: PathBuf,
+    metas: HashMap<String, ArtifactMeta>,
+    engine: PjrtEngine,
+    compiled: std::sync::Mutex<HashMap<String, std::sync::Arc<CompiledArtifact>>>,
+}
+
+/// A compiled artifact plus its manifest row, shape-checked on every call.
+pub struct CompiledArtifact {
+    /// Manifest metadata.
+    pub meta: ArtifactMeta,
+    exe: Executable,
+}
+
+impl CompiledArtifact {
+    /// Execute with shape validation against the manifest.
+    pub fn run(&self, inputs: &[TensorF32]) -> Result<Vec<TensorF32>> {
+        if inputs.len() != self.meta.inputs.len() {
+            return Err(Error::Runtime(format!(
+                "{}: {} inputs, manifest wants {}",
+                self.meta.name,
+                inputs.len(),
+                self.meta.inputs.len()
+            )));
+        }
+        for (i, (t, spec)) in inputs.iter().zip(&self.meta.inputs).enumerate() {
+            if t.dims != spec.dims {
+                return Err(Error::Runtime(format!(
+                    "{} input {i}: dims {:?}, manifest wants {:?}",
+                    self.meta.name, t.dims, spec.dims
+                )));
+            }
+        }
+        let outs = self.exe.run(inputs)?;
+        if outs.len() != self.meta.outputs.len() {
+            return Err(Error::Runtime(format!(
+                "{}: {} outputs, manifest declares {}",
+                self.meta.name,
+                outs.len(),
+                self.meta.outputs.len()
+            )));
+        }
+        Ok(outs)
+    }
+}
+
+impl Registry {
+    /// Load `manifest.tsv` from `dir` and initialize a PJRT CPU engine.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let mpath = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&mpath).map_err(|e| {
+            Error::Runtime(format!(
+                "cannot read {} (run `make artifacts` first): {e}",
+                mpath.display()
+            ))
+        })?;
+        let mut metas = HashMap::new();
+        for (lineno, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let cols: Vec<&str> = line.split('\t').collect();
+            if cols.len() != 4 {
+                return Err(Error::Runtime(format!(
+                    "manifest line {}: {} columns",
+                    lineno + 1,
+                    cols.len()
+                )));
+            }
+            let meta = ArtifactMeta {
+                name: cols[0].to_string(),
+                file: PathBuf::from(cols[1]),
+                inputs: TensorSpec::parse_list(cols[2])?,
+                outputs: TensorSpec::parse_list(cols[3])?,
+            };
+            metas.insert(meta.name.clone(), meta);
+        }
+        Ok(Registry {
+            dir: dir.to_path_buf(),
+            metas,
+            engine: PjrtEngine::cpu()?,
+            compiled: std::sync::Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Artifact names available.
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.metas.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Manifest row for a name.
+    pub fn meta(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.metas.get(name)
+    }
+
+    /// Compile (or fetch the cached) artifact.
+    pub fn get(&self, name: &str) -> Result<std::sync::Arc<CompiledArtifact>> {
+        if let Some(c) = self.compiled.lock().expect("registry lock").get(name) {
+            return Ok(c.clone());
+        }
+        let meta = self
+            .metas
+            .get(name)
+            .ok_or_else(|| Error::Runtime(format!("unknown artifact {name:?}")))?
+            .clone();
+        let exe = self.engine.compile_file(&self.dir.join(&meta.file))?;
+        let arc = std::sync::Arc::new(CompiledArtifact { meta, exe });
+        self.compiled
+            .lock()
+            .expect("registry lock")
+            .insert(name.to_string(), arc.clone());
+        Ok(arc)
+    }
+
+    /// The underlying engine (platform diagnostics).
+    pub fn engine(&self) -> &PjrtEngine {
+        &self.engine
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_spec_parses() {
+        let s = TensorSpec::parse("float32[1024,512]").unwrap();
+        assert_eq!(s.dtype, "float32");
+        assert_eq!(s.dims, vec![1024, 512]);
+        assert_eq!(s.numel(), 1024 * 512);
+        let scalar = TensorSpec::parse("float32[]").unwrap();
+        assert!(scalar.dims.is_empty());
+        assert_eq!(scalar.numel(), 1);
+    }
+
+    #[test]
+    fn tensor_spec_rejects_garbage() {
+        assert!(TensorSpec::parse("float32").is_err());
+        assert!(TensorSpec::parse("float32[1,x]").is_err());
+        assert!(TensorSpec::parse("float32[1,2").is_err());
+    }
+
+    #[test]
+    fn spec_list_parses() {
+        let l = TensorSpec::parse_list("float32[3];float32[];float32[2,2]").unwrap();
+        assert_eq!(l.len(), 3);
+        assert_eq!(l[2].dims, vec![2, 2]);
+    }
+
+    #[test]
+    fn missing_manifest_is_typed_error() {
+        let err = match Registry::load(Path::new("/nonexistent-dir-xyz")) {
+            Err(e) => e,
+            Ok(_) => panic!("expected error"),
+        };
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

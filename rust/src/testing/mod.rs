@@ -1,0 +1,7 @@
+//! Test support: a miniature property-testing framework.
+//!
+//! proptest is not in the vendored crate set, so [`prop`] provides the
+//! 80% that matters here: seeded generators, N-case sweeps, and
+//! smallest-failure reporting via bisection shrinking on sizes.
+
+pub mod prop;

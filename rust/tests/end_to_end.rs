@@ -1,0 +1,127 @@
+//! Cross-module integration: every paper algorithm against every other,
+//! plus the coordinator and the smoke-scale experiment pipelines.
+
+use fastlr::coordinator::{
+    AccuracyClass, FactorizationService, JobRequest, JobSpec, ServiceConfig,
+};
+use fastlr::data::synth::{geometric_spectrum, low_rank_gaussian, with_spectrum};
+use fastlr::experiments::{run as run_experiment, Scale};
+use fastlr::krylov::fsvd::{fsvd, FsvdOptions};
+use fastlr::krylov::rank::{estimate_rank, RankOptions};
+use fastlr::linalg::svd::svd;
+use fastlr::linalg::vecops::dot;
+use fastlr::rng::Pcg64;
+use fastlr::rsvd::{rsvd, RsvdOptions};
+use std::sync::Arc;
+
+/// The three SVD engines agree on the dominant triplets of a benign
+/// (fast-decay) matrix — the regime where everything should work.
+#[test]
+fn all_three_engines_agree_on_fast_decay() {
+    let mut rng = Pcg64::seed_from_u64(500);
+    let sigma: Vec<f64> = geometric_spectrum(30, 0.7).iter().map(|s| s * 100.0).collect();
+    let a = with_spectrum(300, 250, &sigma, &mut rng).unwrap();
+    let full = svd(&a).unwrap();
+    let f = fsvd(
+        &a,
+        &FsvdOptions { k: 60, r: 8, reorth_passes: 2, ..Default::default() },
+    )
+    .unwrap();
+    let r = rsvd(&a, &RsvdOptions { r: 8, oversample: 22, power_iters: 2, ..Default::default() })
+        .unwrap();
+    for i in 0..8 {
+        let e_f = (f.sigma[i] - full.sigma[i]).abs() / full.sigma[i];
+        let e_r = (r.sigma[i] - full.sigma[i]).abs() / full.sigma[i];
+        assert!(e_f < 1e-9, "fsvd sigma[{i}] rel err {e_f}");
+        assert!(e_r < 1e-6, "rsvd sigma[{i}] rel err {e_r}");
+        // Vector alignment (up to sign): |<u_f, u_full>| ~ 1.
+        let au = dot(&f.u.col(i), &full.u.col(i)).abs();
+        assert!(au > 1.0 - 1e-6, "fsvd u[{i}] alignment {au}");
+    }
+}
+
+/// Rank estimation is consistent with what full SVD reports, across
+/// several spectra.
+#[test]
+fn rank_estimate_matches_full_svd_count() {
+    let mut rng = Pcg64::seed_from_u64(501);
+    for rank in [3usize, 17, 40] {
+        let a = low_rank_gaussian(250, 200, rank, &mut rng);
+        let est = estimate_rank(
+            &a,
+            &RankOptions { reorth_passes: 2, ..Default::default() },
+        )
+        .unwrap();
+        let s = svd(&a).unwrap();
+        let svd_rank = s.sigma.iter().filter(|&&x| x * x > 1e-8).count();
+        assert_eq!(est.rank, svd_rank, "rank {rank}");
+    }
+}
+
+/// The full service path produces the same numbers as calling the
+/// algorithm directly (routing adds no numerical change).
+#[test]
+fn service_results_match_direct_calls() {
+    let mut rng = Pcg64::seed_from_u64(502);
+    let a = Arc::new(low_rank_gaussian(600, 480, 9, &mut rng));
+    let svc = FactorizationService::new(ServiceConfig {
+        workers: 2,
+        seed: 0x5eed,
+        ..Default::default()
+    })
+    .unwrap();
+    let res = svc
+        .run(JobRequest {
+            spec: JobSpec::PartialSvd { matrix: a.clone(), r: 9 },
+            accuracy: AccuracyClass::Balanced,
+        })
+        .unwrap();
+    let out = match res.outcome.unwrap() {
+        fastlr::coordinator::job::JobOutcome::Svd(s) => s,
+        other => panic!("{other:?}"),
+    };
+    // Direct call with the same seed derivation the worker used (seed ^ id)
+    // and the same routed k (r + default slack 10).
+    let direct = fsvd(
+        a.as_ref(),
+        &FsvdOptions { k: 19, r: 9, seed: 0x5eed ^ res.id, ..Default::default() },
+    )
+    .unwrap();
+    for i in 0..9 {
+        assert!(
+            (out.sigma[i] - direct.sigma[i]).abs() < 1e-12 * direct.sigma[0],
+            "sigma[{i}]: {} vs {}",
+            out.sigma[i],
+            direct.sigma[i]
+        );
+    }
+}
+
+/// Smoke-scale experiment pipelines run end to end and keep their
+/// paper-shape invariants (each module's own tests assert the details;
+/// this guards the composition).
+#[test]
+fn experiment_pipelines_run_at_smoke_scale() {
+    for id in ["table1a", "table1b", "table2"] {
+        let tables = run_experiment(id, Scale::Smoke).unwrap();
+        assert!(!tables.is_empty(), "{id}");
+        assert!(!tables[0].rows.is_empty(), "{id}");
+    }
+}
+
+/// F-SVD wins the Table-1b comparison at any scale where SVD is feasible.
+#[test]
+fn fsvd_beats_full_svd_on_wall_time() {
+    let mut rng = Pcg64::seed_from_u64(503);
+    let a = low_rank_gaussian(800, 700, 30, &mut rng);
+    let t0 = std::time::Instant::now();
+    let _ = svd(&a).unwrap();
+    let t_svd = t0.elapsed();
+    let t0 = std::time::Instant::now();
+    let _ = fsvd(&a, &FsvdOptions { k: 700, r: 10, eps: 1e-8, ..Default::default() }).unwrap();
+    let t_fsvd = t0.elapsed();
+    assert!(
+        t_fsvd * 3 < t_svd,
+        "F-SVD {t_fsvd:?} should be >=3x faster than SVD {t_svd:?}"
+    );
+}

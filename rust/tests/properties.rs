@@ -1,0 +1,184 @@
+//! Property-based tests over the numerical core (seeded mini-framework in
+//! `fastlr::testing::prop` — proptest is not available offline).
+
+use fastlr::krylov::fsvd::{fsvd, FsvdOptions};
+use fastlr::krylov::gk::{gk_bidiagonalize, GkOptions};
+use fastlr::krylov::rank::{estimate_rank, RankOptions};
+use fastlr::linalg::qr::qr_thin;
+use fastlr::linalg::svd::svd;
+use fastlr::linalg::vecops::{dot, norm2};
+use fastlr::linalg::Matrix;
+use fastlr::manifold::{project_tangent, FixedRankPoint};
+use fastlr::testing::prop::{check, Gen};
+
+fn ortho_error(m: &Matrix) -> f64 {
+    let g = m.matmul_tn(m).unwrap();
+    g.sub(&Matrix::eye(m.cols())).unwrap().max_abs()
+}
+
+#[test]
+fn prop_gemm_is_associative_with_vectors() {
+    // (A·B)·x == A·(B·x)
+    check("gemm-gemv-assoc", 24, |g: &mut Gen| {
+        let m = g.usize_in(1, 40);
+        let k = g.usize_in(1, 40);
+        let n = g.usize_in(1, 40);
+        let a = g.matrix(m, k);
+        let b = g.matrix(k, n);
+        let x = g.vec_f64(n, 1.0);
+        let ab_x = a.matmul(&b).unwrap().matvec(&x).unwrap();
+        let a_bx = a.matvec(&b.matvec(&x).unwrap()).unwrap();
+        let scale = norm2(&ab_x).max(1.0);
+        for (p, q) in ab_x.iter().zip(&a_bx) {
+            assert!((p - q).abs() < 1e-9 * scale);
+        }
+    });
+}
+
+#[test]
+fn prop_transpose_dualities() {
+    // <A x, y> == <x, A^T y> for all shapes.
+    check("gemv-adjoint", 24, |g: &mut Gen| {
+        let m = g.usize_in(1, 60);
+        let n = g.usize_in(1, 60);
+        let a = g.matrix(m, n);
+        let x = g.vec_f64(n, 1.0);
+        let y = g.vec_f64(m, 1.0);
+        let lhs = dot(&a.matvec(&x).unwrap(), &y);
+        let rhs = dot(&x, &a.matvec_t(&y).unwrap());
+        assert!((lhs - rhs).abs() < 1e-9 * (1.0 + lhs.abs()));
+    });
+}
+
+#[test]
+fn prop_svd_reconstruction_and_invariants() {
+    check("svd-invariants", 12, |g: &mut Gen| {
+        let m = g.usize_in(1, 30);
+        let n = g.usize_in(1, 30);
+        let a = g.matrix(m, n);
+        let s = svd(&a).unwrap();
+        // Reconstruction.
+        let diff = s.reconstruct().unwrap().sub(&a).unwrap().max_abs();
+        assert!(diff < 1e-9, "reconstruction {diff}");
+        // sigma descending, non-negative.
+        for w in s.sigma.windows(2) {
+            assert!(w[0] >= w[1] - 1e-12);
+        }
+        assert!(s.sigma.iter().all(|&x| x >= 0.0));
+        // Frobenius identity.
+        let fro2 = a.fro_norm().powi(2);
+        let sum2: f64 = s.sigma.iter().map(|x| x * x).sum();
+        assert!((fro2 - sum2).abs() <= 1e-9 * (1.0 + fro2));
+        // Orthogonality.
+        assert!(ortho_error(&s.u) < 1e-9);
+        assert!(ortho_error(&s.v) < 1e-9);
+    });
+}
+
+#[test]
+fn prop_qr_invariants() {
+    check("qr-invariants", 16, |g: &mut Gen| {
+        let n = g.usize_in(1, 30);
+        let m = n + g.usize_in(0, 30);
+        let a = g.matrix(m, n);
+        let qr = qr_thin(&a).unwrap();
+        assert!(ortho_error(&qr.q) < 1e-10);
+        let back = qr.q.matmul(&qr.r).unwrap();
+        assert!(back.sub(&a).unwrap().max_abs() < 1e-9);
+    });
+}
+
+#[test]
+fn prop_gk_recurrence_and_orthogonality() {
+    // A·P_k = Q_{k+1}·B for random matrices and random iteration budgets.
+    check("gk-recurrence", 12, |g: &mut Gen| {
+        let m = g.usize_in(2, 50);
+        let n = g.usize_in(2, 50);
+        let a = g.matrix(m, n);
+        let k = g.usize_in(1, m.min(n));
+        let r = gk_bidiagonalize(
+            &a,
+            &GkOptions { k, reorth_passes: 2, ..Default::default() },
+        )
+        .unwrap();
+        let ap = a.matmul(&r.p).unwrap();
+        let qb = r.q.matmul(&r.b_dense()).unwrap();
+        let diff = ap.sub(&qb).unwrap().max_abs();
+        assert!(diff < 1e-8 * (1.0 + a.fro_norm()), "recurrence {diff}");
+        assert!(ortho_error(&r.p) < 1e-8);
+    });
+}
+
+#[test]
+fn prop_fsvd_sigma_below_full_and_rank_detected() {
+    check("fsvd-vs-rank", 10, |g: &mut Gen| {
+        let m = g.usize_in(5, 60) + 5;
+        let n = g.usize_in(5, 60) + 5;
+        let rank = g.usize_in(1, m.min(n) / 2 + 1).max(1);
+        let a = g.low_rank(m, n, rank);
+        let est = estimate_rank(
+            &a,
+            &RankOptions { reorth_passes: 2, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(est.rank, rank.min(m).min(n));
+        let full = svd(&a).unwrap();
+        let f = fsvd(
+            &a,
+            &FsvdOptions { k: m.min(n), r: rank, eps: 1e-8, reorth_passes: 2, ..Default::default() },
+        )
+        .unwrap();
+        for i in 0..rank.min(f.sigma.len()) {
+            // Ritz values never exceed true singular values (interlacing),
+            // and here they converge.
+            assert!(f.sigma[i] <= full.sigma[i] * (1.0 + 1e-8));
+            let rel = (f.sigma[i] - full.sigma[i]).abs() / full.sigma[i];
+            assert!(rel < 1e-6, "sigma[{i}] rel {rel}");
+        }
+    });
+}
+
+#[test]
+fn prop_tangent_projection_is_idempotent_projection() {
+    check("tangent-proj", 12, |g: &mut Gen| {
+        let d1 = g.usize_in(3, 25) + 2;
+        let d2 = g.usize_in(3, 25) + 2;
+        let r = g.usize_in(1, d1.min(d2) / 2 + 1).max(1);
+        let u = fastlr::linalg::qr::orthonormalize(&g.matrix(d1, r)).unwrap();
+        let v = fastlr::linalg::qr::orthonormalize(&g.matrix(d2, r)).unwrap();
+        let sigma: Vec<f64> = (0..r).map(|i| (r - i) as f64).collect();
+        let w = FixedRankPoint::new(u, sigma, v).unwrap();
+        let gr = g.matrix(d1, d2);
+        let z1 = project_tangent(&w, &gr).unwrap();
+        let z2 = project_tangent(&w, &z1).unwrap();
+        assert!(z1.sub(&z2).unwrap().max_abs() < 1e-9);
+        // Projection is a contraction in Frobenius norm.
+        assert!(z1.fro_norm() <= gr.fro_norm() * (1.0 + 1e-12));
+    });
+}
+
+#[test]
+fn prop_rsvd_residual_monotone_in_oversampling() {
+    // More oversampling never (statistically) hurts: compare p=2 vs p=rank.
+    check("rsvd-oversampling", 8, |g: &mut Gen| {
+        let m = g.usize_in(20, 80) + 20;
+        let n = g.usize_in(20, 80) + 20;
+        let rank = 16.min(m.min(n) / 2);
+        let a = g.low_rank(m, n, rank);
+        let small = fastlr::rsvd::rsvd(
+            &a,
+            &fastlr::rsvd::RsvdOptions { r: 4, oversample: 2, ..Default::default() },
+        )
+        .unwrap();
+        let big = fastlr::rsvd::rsvd(
+            &a,
+            &fastlr::rsvd::RsvdOptions { r: 4, oversample: rank + 10, ..Default::default() },
+        )
+        .unwrap();
+        let res_small = small.reconstruct().unwrap().sub(&a).unwrap().fro_norm();
+        let res_big = big.reconstruct().unwrap().sub(&a).unwrap().fro_norm();
+        // big sketch covers the whole rank -> near-zero residual; small
+        // sketch of a rank-16 matrix with l=6 cannot.
+        assert!(res_big <= res_small + 1e-9, "{res_big} vs {res_small}");
+    });
+}

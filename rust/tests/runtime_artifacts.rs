@@ -1,0 +1,142 @@
+//! Integration: the AOT artifacts round-trip through the rust PJRT runtime
+//! and the algorithm adapters. The full three-layer composition test —
+//! Pallas kernel (L1) inside a JAX graph (L2) compiled once, executed from
+//! the rust hot path (L3).
+//!
+//! Requires `make artifacts`; every test is skipped (with a notice) when
+//! the manifest is missing so `cargo test` stays green pre-build.
+
+use fastlr::data::digits::{generate, DigitStyle};
+use fastlr::data::pairs::PairSampler;
+use fastlr::krylov::fsvd::{fsvd, FsvdOptions};
+use fastlr::krylov::LinOp;
+use fastlr::linalg::Matrix;
+use fastlr::rng::Pcg64;
+use fastlr::rsl::model::{BatchGradEngine, NativeGradEngine};
+use fastlr::runtime::backend::{PjrtGradEngine, PjrtLinOp};
+use fastlr::runtime::{default_artifact_dir, Registry, TensorF32};
+
+fn registry() -> Option<Registry> {
+    let dir = default_artifact_dir();
+    match Registry::load(&dir) {
+        Ok(r) => Some(r),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_lists_expected_artifacts() {
+    let Some(reg) = registry() else { return };
+    let names = reg.names();
+    for want in [
+        "gk_matvec_1024x512",
+        "gk_matvec_t_1024x512",
+        "gk_reorth_1024x64",
+        "rsl_scores_b32_784x256",
+        "rsl_batch_grad_b32_784x256",
+    ] {
+        assert!(names.iter().any(|n| n == want), "missing {want}: {names:?}");
+    }
+}
+
+#[test]
+fn gk_matvec_artifact_matches_native() {
+    let Some(reg) = registry() else { return };
+    let mut rng = Pcg64::seed_from_u64(300);
+    let a = Matrix::gaussian(1024, 512, &mut rng);
+    let op = PjrtLinOp::new(&reg, &a).expect("artifact");
+    let x: Vec<f64> = (0..512).map(|i| ((i as f64) * 0.37).sin()).collect();
+    let y: Vec<f64> = (0..1024).map(|i| ((i as f64) * 0.11).cos()).collect();
+    let got = op.apply(&x).unwrap();
+    let want = a.matvec(&x).unwrap();
+    let scale = want.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+    for (g, w) in got.iter().zip(&want) {
+        assert!((g - w).abs() < 1e-3 * scale.max(1.0), "{g} vs {w}");
+    }
+    let got_t = op.apply_t(&y).unwrap();
+    let want_t = a.matvec_t(&y).unwrap();
+    for (g, w) in got_t.iter().zip(&want_t) {
+        assert!((g - w).abs() < 1e-3 * scale.max(1.0), "{g} vs {w}");
+    }
+}
+
+#[test]
+fn fsvd_runs_end_to_end_through_pjrt() {
+    // Algorithm 2 with every A·p / Aᵀ·q product executed by the compiled
+    // Pallas GEMV artifacts.
+    let Some(reg) = registry() else { return };
+    let mut rng = Pcg64::seed_from_u64(301);
+    let a = fastlr::data::synth::low_rank_gaussian(1024, 512, 8, &mut rng);
+    let op = PjrtLinOp::new(&reg, &a).expect("artifact");
+    let out = fsvd(
+        &op,
+        &FsvdOptions { k: 24, r: 8, reorth_passes: 2, eps: 1e-6, ..Default::default() },
+    )
+    .unwrap();
+    let native = fsvd(
+        &a,
+        &FsvdOptions { k: 24, r: 8, reorth_passes: 2, eps: 1e-6, ..Default::default() },
+    )
+    .unwrap();
+    // f32 artifacts vs f64 native: singular values agree to f32 precision.
+    for i in 0..8 {
+        let rel = (out.sigma[i] - native.sigma[i]).abs() / native.sigma[i];
+        assert!(rel < 1e-3, "sigma[{i}]: {} vs {}", out.sigma[i], native.sigma[i]);
+    }
+}
+
+#[test]
+fn reorth_artifact_matches_native() {
+    let Some(reg) = registry() else { return };
+    let art = reg.get("gk_reorth_1024x64").expect("artifact");
+    let mut rng = Pcg64::seed_from_u64(302);
+    let q = fastlr::linalg::qr::orthonormalize(&Matrix::gaussian(1024, 64, &mut rng)).unwrap();
+    let w: Vec<f64> = (0..1024).map(|i| ((i * i) as f64 * 1e-4).sin()).collect();
+    let out = art
+        .run(&[TensorF32::from_matrix(&q), TensorF32::from_f64(&w)])
+        .unwrap();
+    let mut want = w.clone();
+    fastlr::krylov::gk::reorthogonalize(
+        &(0..64).map(|j| q.col(j)).collect::<Vec<_>>(),
+        &mut want,
+        1,
+    );
+    let got = out[0].to_f64();
+    for (g, v) in got.iter().zip(&want) {
+        assert!((g - v).abs() < 1e-4, "{g} vs {v}");
+    }
+}
+
+#[test]
+fn rsl_grad_artifact_matches_native_engine() {
+    let Some(reg) = registry() else { return };
+    let engine = PjrtGradEngine::new(&reg, 32, 784, 256).expect("artifact");
+    let mut rng = Pcg64::seed_from_u64(303);
+    let dx = generate(64, &DigitStyle::mnist_like(), &mut rng);
+    let dv = generate(64, &DigitStyle::usps_like(), &mut rng);
+    let sampler = PairSampler::new(&dx, &dv);
+    let batch = sampler.sample_batch(32, &mut rng);
+    let u = fastlr::linalg::qr::orthonormalize(&Matrix::gaussian(784, 5, &mut rng)).unwrap();
+    let v = fastlr::linalg::qr::orthonormalize(&Matrix::gaussian(256, 5, &mut rng)).unwrap();
+    let w = fastlr::manifold::FixedRankPoint::new(u, vec![0.5; 5], v).unwrap();
+
+    let (gr_pjrt, loss_pjrt) = engine.batch_grad(&w, &sampler, &batch, 1e-3).unwrap();
+    let (gr_native, loss_native) =
+        NativeGradEngine.batch_grad(&w, &sampler, &batch, 1e-3).unwrap();
+    assert!((loss_pjrt - loss_native).abs() < 1e-4, "{loss_pjrt} vs {loss_native}");
+    let diff = gr_pjrt.sub(&gr_native).unwrap().max_abs();
+    assert!(diff < 1e-4, "gradient max diff {diff}");
+}
+
+#[test]
+fn wrong_shape_is_typed_error() {
+    let Some(reg) = registry() else { return };
+    let art = reg.get("gk_matvec_1024x512").expect("artifact");
+    let bad = TensorF32::new(vec![3], vec![0.0; 3]).unwrap();
+    let a = TensorF32::new(vec![1024, 512], vec![0.0; 1024 * 512]).unwrap();
+    let err = art.run(&[a, bad]).unwrap_err();
+    assert!(err.to_string().contains("dims"), "{err}");
+}
