@@ -1,0 +1,17 @@
+# Developer entry points. The Rust workspace needs none of this —
+# `cargo build --release && cargo test -q` is self-contained.
+
+.PHONY: artifacts verify pytest
+
+# AOT-lower the JAX/Pallas kernels to HLO-text artifacts + manifest
+# (the optional `--features pjrt` runtime path consumes these).
+artifacts:
+	cd python && python -m compile.aot --out ../artifacts
+
+# Tier-1 verify.
+verify:
+	cargo build --release && cargo test -q
+
+# The Python kernel/compile test-suite (needs JAX).
+pytest:
+	cd python && pytest tests/

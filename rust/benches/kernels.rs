@@ -1,15 +1,19 @@
-//! Microbenchmarks of the L3 hot-path kernels (GEMV/GEMVᵀ/GEMM/reorth and
+//! Microbenchmarks of the L3 hot-path kernels (GEMV/GEMVᵀ/SPMV/GEMM and
 //! the GK loop) with roofline context — the §Perf evidence in
 //! EXPERIMENTS.md. Also runs the batching ablation (service with/without
 //! the micro-batcher) and the BᵀB-eig ablation (tridiagonal fast path vs
 //! dense eig), the two design choices DESIGN.md calls out.
+//!
+//! `cargo bench --bench kernels -- --smoke` (or FASTLR_BENCH_SCALE=smoke)
+//! runs the whole file on tiny shapes with one rep — the CI smoke gate
+//! that catches kernel regressions without minutes of runtime.
 
-use fastlr::bench_harness::{time_reps, Table};
+use fastlr::bench_harness::{smoke_mode, time_reps, Table};
 use fastlr::coordinator::batcher::{Batcher, BatcherConfig};
 use fastlr::coordinator::{
     AccuracyClass, FactorizationService, JobRequest, JobSpec, ServiceConfig,
 };
-use fastlr::data::synth::low_rank_gaussian;
+use fastlr::data::synth::{low_rank_gaussian, sparse_low_rank_noise};
 use fastlr::krylov::gk::{gk_bidiagonalize, GkOptions};
 use fastlr::linalg::{eig::sym_eig, tridiag::btb_eig, Matrix};
 use fastlr::rng::Pcg64;
@@ -24,6 +28,11 @@ fn gflops(flops: usize, secs: f64) -> f64 {
 }
 
 fn main() {
+    let smoke = smoke_mode();
+    if smoke {
+        eprintln!("== kernels (smoke mode: tiny shapes, 1 rep) ==");
+    }
+    let reps = if smoke { 1 } else { 9 };
     let mut rng = Pcg64::seed_from_u64(0xBE7C);
     let mut table = Table::new(
         "Kernel microbenchmarks (median of reps)",
@@ -31,13 +40,15 @@ fn main() {
     );
 
     // --- GEMV / GEMV^T: the GK hot products (memory-bound). ---
-    for (m, n) in [(2000usize, 2000usize), (4096, 4096)] {
+    let gemv_shapes: &[(usize, usize)] =
+        if smoke { &[(128, 96)] } else { &[(2000, 2000), (4096, 4096)] };
+    for &(m, n) in gemv_shapes {
         let a = Matrix::gaussian(m, n, &mut rng);
         let x: Vec<f64> = (0..n).map(|i| (i as f64).sin()).collect();
         let y: Vec<f64> = (0..m).map(|i| (i as f64).cos()).collect();
         let bytes = m * n * 8;
         let flops = 2 * m * n;
-        let (t, _) = time_reps(9, || a.matvec(&x).unwrap());
+        let (t, _) = time_reps(reps, || a.matvec(&x).unwrap());
         table.push_row(vec![
             "gemv".into(),
             format!("{m}x{n}"),
@@ -45,7 +56,7 @@ fn main() {
             format!("{:.2}", gb_per_s(bytes, t.median_secs())),
             format!("{:.2}", gflops(flops, t.median_secs())),
         ]);
-        let (tt, _) = time_reps(9, || a.matvec_t(&y).unwrap());
+        let (tt, _) = time_reps(reps, || a.matvec_t(&y).unwrap());
         table.push_row(vec![
             "gemv_t".into(),
             format!("{m}x{n}"),
@@ -55,12 +66,40 @@ fn main() {
         ]);
     }
 
+    // --- SPMV / SPMV^T: the sparse huge-matrix products. ---
+    let (sp_m, sp_n, sp_r, sp_density) =
+        if smoke { (200, 150, 5, 0.05) } else { (4000, 4000, 50, 0.01) };
+    let sp = sparse_low_rank_noise(sp_m, sp_n, sp_r, sp_density, 1e-6, &mut rng)
+        .expect("sparse generator");
+    let xs: Vec<f64> = (0..sp_n).map(|i| (i as f64).sin()).collect();
+    let ys: Vec<f64> = (0..sp_m).map(|i| (i as f64).cos()).collect();
+    // CSR traffic: 8B value + 8B column index per entry, plus the gather.
+    let sp_bytes = sp.nnz() * 16;
+    let sp_flops = 2 * sp.nnz();
+    let (ts, _) = time_reps(reps, || sp.spmv(&xs).unwrap());
+    table.push_row(vec![
+        "spmv".into(),
+        format!("{sp_m}x{sp_n} nnz={}", sp.nnz()),
+        format!("{:.3}", ts.median_secs() * 1e3),
+        format!("{:.2}", gb_per_s(sp_bytes, ts.median_secs())),
+        format!("{:.2}", gflops(sp_flops, ts.median_secs())),
+    ]);
+    let (tst, _) = time_reps(reps, || sp.spmv_t(&ys).unwrap());
+    table.push_row(vec![
+        "spmv_t".into(),
+        format!("{sp_m}x{sp_n} nnz={}", sp.nnz()),
+        format!("{:.3}", tst.median_secs() * 1e3),
+        format!("{:.2}", gb_per_s(sp_bytes, tst.median_secs())),
+        format!("{:.2}", gflops(sp_flops, tst.median_secs())),
+    ]);
+
     // --- GEMM (compute-bound). ---
-    for s in [512usize, 1024] {
+    let gemm_sizes: &[usize] = if smoke { &[96] } else { &[512, 1024] };
+    for &s in gemm_sizes {
         let a = Matrix::gaussian(s, s, &mut rng);
         let b = Matrix::gaussian(s, s, &mut rng);
         let flops = 2 * s * s * s;
-        let (t, _) = time_reps(5, || a.matmul(&b).unwrap());
+        let (t, _) = time_reps(if smoke { 1 } else { 5 }, || a.matmul(&b).unwrap());
         table.push_row(vec![
             "gemm".into(),
             format!("{s}x{s}x{s}"),
@@ -71,15 +110,16 @@ fn main() {
     }
 
     // --- Full GK loop (Algorithm 1) at bench scale. ---
-    let a = low_rank_gaussian(4000, 2000, 100, &mut rng);
-    let (t, gk) = time_reps(3, || {
-        gk_bidiagonalize(&a, &GkOptions { k: 2000, eps: 1e-8, ..Default::default() }).unwrap()
+    let (gk_m, gk_n, gk_rank) = if smoke { (200, 150, 10) } else { (4000, 2000, 100) };
+    let a = low_rank_gaussian(gk_m, gk_n, gk_rank, &mut rng);
+    let (t, gk) = time_reps(if smoke { 1 } else { 3 }, || {
+        gk_bidiagonalize(&a, &GkOptions { k: gk_n, eps: 1e-8, ..Default::default() }).unwrap()
     });
     // ~2 matvec passes/iter over the matrix.
-    let bytes = 2 * gk.k_used * 4000 * 2000 * 8;
+    let bytes = 2 * gk.k_used * gk_m * gk_n * 8;
     table.push_row(vec![
         "gk loop".into(),
-        format!("4000x2000 k'={}", gk.k_used),
+        format!("{gk_m}x{gk_n} k'={}", gk.k_used),
         format!("{:.3}", t.median_secs() * 1e3),
         format!("{:.2}", gb_per_s(bytes, t.median_secs())),
         "-".into(),
@@ -92,10 +132,12 @@ fn main() {
         "Ablation — eig of B^T B: tridiagonal fast path vs dense",
         &["k'", "tridiag (ms)", "dense (ms)", "speedup"],
     );
-    for k in [100usize, 300, 600] {
+    let eig_ks: &[usize] = if smoke { &[40] } else { &[100, 300, 600] };
+    for &k in eig_ks {
         let alpha: Vec<f64> = (0..k).map(|i| 1.0 + ((i * 7) % 13) as f64).collect();
         let beta: Vec<f64> = (0..k).map(|i| 0.3 + ((i * 5) % 11) as f64 * 0.1).collect();
-        let (t_tri, _) = time_reps(5, || btb_eig(&alpha, &beta).unwrap());
+        let (t_tri, _) =
+            time_reps(if smoke { 1 } else { 5 }, || btb_eig(&alpha, &beta).unwrap());
         // Dense route (what the paper's Algorithm 2 line 2 literally says).
         let mut b = Matrix::zeros(k + 1, k);
         for i in 0..k {
@@ -103,7 +145,7 @@ fn main() {
             b[(i + 1, i)] = beta[i];
         }
         let btb = b.matmul_tn(&b).unwrap();
-        let (t_dense, _) = time_reps(3, || sym_eig(&btb).unwrap());
+        let (t_dense, _) = time_reps(if smoke { 1 } else { 3 }, || sym_eig(&btb).unwrap());
         ab.push_row(vec![
             k.to_string(),
             format!("{:.3}", t_tri.median_secs() * 1e3),
@@ -123,16 +165,17 @@ fn main() {
         })
         .unwrap(),
     );
-    let jobs = 24usize;
+    let jobs = if smoke { 6 } else { 24 };
+    let (jm, jn, jr) = if smoke { (60, 50, 3) } else { (100, 80, 4) };
     let mats: Vec<Arc<Matrix>> = (0..jobs)
-        .map(|_| Arc::new(low_rank_gaussian(100, 80, 4, &mut rng)))
+        .map(|_| Arc::new(low_rank_gaussian(jm, jn, jr, &mut rng)))
         .collect();
-    let (t_direct, _) = time_reps(3, || {
+    let (t_direct, _) = time_reps(if smoke { 1 } else { 3 }, || {
         let hs: Vec<_> = mats
             .iter()
             .map(|m| {
                 svc.submit(JobRequest {
-                    spec: JobSpec::PartialSvd { matrix: m.clone(), r: 4 },
+                    spec: JobSpec::PartialSvd { matrix: m.clone(), r: jr },
                     accuracy: AccuracyClass::Balanced,
                 })
                 .unwrap()
@@ -146,12 +189,12 @@ fn main() {
         svc.clone(),
         BatcherConfig { max_batch: 8, max_delay: std::time::Duration::from_millis(2) },
     );
-    let (t_batched, _) = time_reps(3, || {
+    let (t_batched, _) = time_reps(if smoke { 1 } else { 3 }, || {
         let rs: Vec<_> = mats
             .iter()
             .map(|m| {
                 batcher.submit(JobRequest {
-                    spec: JobSpec::PartialSvd { matrix: m.clone(), r: 4 },
+                    spec: JobSpec::PartialSvd { matrix: m.clone(), r: jr },
                     accuracy: AccuracyClass::Balanced,
                 })
             })
@@ -161,7 +204,7 @@ fn main() {
         }
     });
     let mut svc_table = Table::new(
-        "Ablation — service dispatch: direct vs micro-batched (24 small jobs)",
+        "Ablation — service dispatch: direct vs micro-batched small jobs",
         &["mode", "total (ms)", "per-job (us)"],
     );
     svc_table.push_row(vec![

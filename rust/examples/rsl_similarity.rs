@@ -80,7 +80,10 @@ fn main() -> fastlr::Result<()> {
         hist.total_sec,
         last.test_accuracy,
     );
-    println!("singular values of W: {:?}", w.sigma.iter().map(|s| (s * 1e3).round() / 1e3).collect::<Vec<_>>());
+    println!(
+        "singular values of W: {:?}",
+        w.sigma.iter().map(|s| (s * 1e3).round() / 1e3).collect::<Vec<_>>()
+    );
     assert!(last.test_accuracy > 0.6, "end-to-end sanity: should beat chance");
     Ok(())
 }

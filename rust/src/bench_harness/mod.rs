@@ -62,6 +62,16 @@ pub fn time_reps<T>(reps: usize, mut f: impl FnMut() -> T) -> (Timing, T) {
     (Timing { samples }, out)
 }
 
+/// True when the bench binary should run in CI-smoke mode: tiny shapes,
+/// a single rep, seconds of total runtime. Enabled by passing `--smoke`
+/// to the bench target (`cargo bench --bench kernels -- --smoke`) or by
+/// setting `FASTLR_BENCH_SCALE=smoke`; the experiment benches reuse the
+/// same env var through [`crate::experiments::Scale`].
+pub fn smoke_mode() -> bool {
+    std::env::args().any(|a| a == "--smoke")
+        || std::env::var("FASTLR_BENCH_SCALE").is_ok_and(|v| v == "smoke")
+}
+
 /// Adaptive reps: more repetitions for fast operations, fewer for slow.
 pub fn auto_reps(estimate: Duration) -> usize {
     if estimate > Duration::from_secs(20) {

@@ -1,6 +1,6 @@
 //! Job specifications and results for the factorization service.
 
-use crate::linalg::Matrix;
+use crate::linalg::{Matrix, SparseMatrix};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -30,6 +30,21 @@ pub enum JobSpec {
         /// Input matrix.
         matrix: Arc<Matrix>,
     },
+    /// Leading-`r` partial SVD of a sparse CSR matrix. Always served
+    /// matrix-free (F-SVD): the dense baselines would have to densify.
+    SparsePartialSvd {
+        /// Input (shared CSR, never copied into the queue).
+        matrix: Arc<SparseMatrix>,
+        /// Number of leading triplets.
+        r: usize,
+    },
+    /// Numerical rank estimate (Algorithm 3) of a sparse CSR matrix.
+    SparseRankEstimate {
+        /// Input CSR matrix.
+        matrix: Arc<SparseMatrix>,
+        /// Eigenvalue threshold ε.
+        eps: f64,
+    },
 }
 
 impl JobSpec {
@@ -39,13 +54,25 @@ impl JobSpec {
             JobSpec::PartialSvd { matrix, .. }
             | JobSpec::RankEstimate { matrix, .. }
             | JobSpec::FullSvd { matrix } => matrix.shape(),
+            JobSpec::SparsePartialSvd { matrix, .. }
+            | JobSpec::SparseRankEstimate { matrix, .. } => matrix.shape(),
         }
     }
 
-    /// Number of matrix entries (routing feature).
+    /// Number of matrix entries (routing feature; ambient `m·n` even for
+    /// sparse inputs — sparsity is reported by [`JobSpec::nnz`]).
     pub fn numel(&self) -> usize {
         let (m, n) = self.shape();
         m * n
+    }
+
+    /// Stored nonzeros for sparse inputs, `None` for dense ones.
+    pub fn nnz(&self) -> Option<usize> {
+        match self {
+            JobSpec::SparsePartialSvd { matrix, .. }
+            | JobSpec::SparseRankEstimate { matrix, .. } => Some(matrix.nnz()),
+            _ => None,
+        }
     }
 }
 
@@ -126,8 +153,22 @@ mod tests {
         let s = JobSpec::PartialSvd { matrix: m.clone(), r: 5 };
         assert_eq!(s.shape(), (30, 20));
         assert_eq!(s.numel(), 600);
+        assert_eq!(s.nnz(), None);
         let r = JobSpec::RankEstimate { matrix: m, eps: 1e-8 };
         assert_eq!(r.numel(), 600);
+    }
+
+    #[test]
+    fn sparse_spec_shape_and_nnz() {
+        let sp = Arc::new(
+            SparseMatrix::from_triplets(8, 6, &[(0, 0, 1.0), (7, 5, 2.0)]).unwrap(),
+        );
+        let s = JobSpec::SparsePartialSvd { matrix: sp.clone(), r: 2 };
+        assert_eq!(s.shape(), (8, 6));
+        assert_eq!(s.numel(), 48);
+        assert_eq!(s.nnz(), Some(2));
+        let r = JobSpec::SparseRankEstimate { matrix: sp, eps: 1e-8 };
+        assert_eq!(r.nnz(), Some(2));
     }
 
     #[test]

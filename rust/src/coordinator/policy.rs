@@ -60,6 +60,15 @@ impl RoutePolicy {
                 // F-SVD with the full iteration budget.
                 SvdMethod::Fsvd { k: m.min(n) }
             }
+            JobSpec::SparseRankEstimate { .. } => SvdMethod::Fsvd { k: m.min(n) },
+            JobSpec::SparsePartialSvd { r, .. } => {
+                // Sparse inputs are served matrix-free regardless of the
+                // accuracy class: traditional SVD and the R-SVD sketch
+                // both need the dense matrix, F-SVD only needs the two
+                // CSR products.
+                let k = (r + self.fsvd_slack).min(self.fsvd_max_k).min(m.min(n));
+                SvdMethod::Fsvd { k }
+            }
             JobSpec::PartialSvd { r, .. } => match accuracy {
                 AccuracyClass::Exact => SvdMethod::Full,
                 AccuracyClass::Balanced => {
@@ -142,6 +151,25 @@ mod tests {
         let p2 = RoutePolicy { fsvd_max_k: 50, fsvd_slack: 100, ..Default::default() };
         match p2.select(&spec(2000, 1000, 20), AccuracyClass::Balanced) {
             SvdMethod::Fsvd { k } => assert_eq!(k, 50),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn sparse_jobs_always_route_matrix_free() {
+        use crate::linalg::SparseMatrix;
+        let p = RoutePolicy::default();
+        let sp = Arc::new(SparseMatrix::from_triplets(2000, 1500, &[(0, 0, 1.0)]).unwrap());
+        let s = JobSpec::SparsePartialSvd { matrix: sp.clone(), r: 10 };
+        for acc in [AccuracyClass::Exact, AccuracyClass::Balanced, AccuracyClass::Fast] {
+            match p.select(&s, acc) {
+                SvdMethod::Fsvd { k } => assert_eq!(k, 20),
+                other => panic!("sparse job routed to {other:?}"),
+            }
+        }
+        let r = JobSpec::SparseRankEstimate { matrix: sp, eps: 1e-8 };
+        match p.select(&r, AccuracyClass::Balanced) {
+            SvdMethod::Fsvd { k } => assert_eq!(k, 1500),
             other => panic!("{other:?}"),
         }
     }

@@ -181,6 +181,33 @@ pub fn execute(request: &JobRequest, policy: &RoutePolicy, seed: u64) -> Result<
             )?;
             Ok(JobOutcome::Rank { rank: est.rank, k_iterations: est.k_iterations })
         }
+        JobSpec::SparseRankEstimate { matrix, eps } => {
+            let est = estimate_rank(
+                matrix.as_ref(),
+                &RankOptions { eps: *eps, seed, ..Default::default() },
+            )?;
+            Ok(JobOutcome::Rank { rank: est.rank, k_iterations: est.k_iterations })
+        }
+        JobSpec::SparsePartialSvd { matrix, r } => {
+            // The policy always routes sparse partial SVDs to F-SVD; the
+            // fallback recomputes the same budget from the policy knobs
+            // so the two can never diverge.
+            let (m, n) = matrix.shape();
+            let k = match method {
+                SvdMethod::Fsvd { k } => k,
+                _ => (*r + policy.fsvd_slack).min(policy.fsvd_max_k).min(m.min(n)),
+            };
+            let out = fsvd(
+                matrix.as_ref(),
+                &FsvdOptions { k, r: *r, seed, ..Default::default() },
+            )?;
+            Ok(JobOutcome::Svd(SvdResult {
+                u: out.u,
+                sigma: out.sigma,
+                v: out.v,
+                method: SvdMethod::Fsvd { k },
+            }))
+        }
         JobSpec::FullSvd { matrix } => {
             let s = svd(matrix)?;
             Ok(JobOutcome::Svd(SvdResult {
@@ -315,6 +342,61 @@ mod tests {
         assert_eq!(svc.metrics.completed.load(Ordering::Relaxed), 6);
         assert_eq!(svc.metrics.failed.load(Ordering::Relaxed), 0);
         assert_eq!(svc.metrics.exec_time.count(), 6);
+    }
+
+    #[test]
+    fn sparse_partial_svd_job_round_trips() {
+        let mut rng = Pcg64::seed_from_u64(214);
+        let a = Arc::new(
+            crate::data::synth::sparse_low_rank_noise(400, 300, 6, 0.05, 0.0, &mut rng)
+                .unwrap(),
+        );
+        let svc = service();
+        let res = svc
+            .run(JobRequest {
+                spec: JobSpec::SparsePartialSvd { matrix: a.clone(), r: 6 },
+                accuracy: AccuracyClass::Balanced,
+            })
+            .unwrap();
+        let out = match res.outcome.unwrap() {
+            JobOutcome::Svd(s) => s,
+            other => panic!("{other:?}"),
+        };
+        assert_eq!(out.sigma.len(), 6);
+        assert!(matches!(out.method, SvdMethod::Fsvd { .. }));
+        // The matrix-free result matches the dense path on the same data.
+        let full = crate::linalg::svd::svd(&a.to_dense()).unwrap();
+        for i in 0..6 {
+            assert!(
+                (out.sigma[i] - full.sigma[i]).abs() / full.sigma[i] < 1e-6,
+                "sigma[{i}]: {} vs {}",
+                out.sigma[i],
+                full.sigma[i]
+            );
+        }
+    }
+
+    #[test]
+    fn sparse_rank_job_round_trips() {
+        let mut rng = Pcg64::seed_from_u64(215);
+        let a = Arc::new(
+            crate::data::synth::sparse_low_rank_noise(300, 250, 5, 0.05, 0.0, &mut rng)
+                .unwrap(),
+        );
+        let svc = service();
+        let res = svc
+            .run(JobRequest {
+                spec: JobSpec::SparseRankEstimate { matrix: a, eps: 1e-8 },
+                accuracy: AccuracyClass::Balanced,
+            })
+            .unwrap();
+        match res.outcome.unwrap() {
+            JobOutcome::Rank { rank, k_iterations } => {
+                assert_eq!(rank, 5);
+                assert!(k_iterations >= 5);
+            }
+            other => panic!("{other:?}"),
+        }
     }
 
     #[test]

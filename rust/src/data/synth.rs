@@ -7,9 +7,9 @@
 //! decaying-spectrum generators cover the slow-decay regime the paper
 //! argues R-SVD handles poorly.
 
-use crate::linalg::Matrix;
+use crate::linalg::{Matrix, SparseMatrix};
 use crate::rng::{Pcg64, Rng};
-use crate::Result;
+use crate::{Error, Result};
 
 /// `m x n` gaussian-product matrix of rank `min(l, m, n)` — the paper's
 /// Table 1/2 workload.
@@ -50,6 +50,64 @@ pub fn with_spectrum(m: usize, n: usize, sigma: &[f64], rng: &mut Pcg64) -> Resu
         }
     }
     us.matmul_nt(&v)
+}
+
+/// Sparse low-rank-plus-noise matrix in CSR form — the huge-matrix
+/// workload of the sparse/matrix-free path.
+///
+/// Built as `A = U·Vᵀ` from **sparse** gaussian factors: each entry of
+/// `U ∈ R^{m x r}`, `V ∈ R^{n x r}` is kept with probability
+/// `q = sqrt(density / r)`, so the product has ≈`density` stored fraction
+/// while staying *exactly* rank ≤ `r` (with distinct singular values
+/// a.s.) — the same gaussian-product construction as
+/// [`low_rank_gaussian`], sparsified. `noise > 0` adds iid gaussian
+/// perturbation to every stored entry, turning the exact rank into a
+/// numerical rank (the pattern — and hence the sparsity — is unchanged).
+pub fn sparse_low_rank_noise(
+    m: usize,
+    n: usize,
+    r: usize,
+    density: f64,
+    noise: f64,
+    rng: &mut Pcg64,
+) -> Result<SparseMatrix> {
+    if !(0.0..=1.0).contains(&density) || !density.is_finite() {
+        return Err(Error::InvalidArg(format!(
+            "sparse_low_rank_noise: density {density} outside [0, 1]"
+        )));
+    }
+    let r = r.min(m).min(n);
+    let q = if r == 0 { 0.0 } else { (density / r as f64).sqrt().min(1.0) };
+    let mut triplets: Vec<(usize, usize, f64)> = Vec::new();
+    for _ in 0..r {
+        // Sparse factor columns u_k, v_k; their outer product contributes
+        // |u_k|·|v_k| triplets, merged (duplicates summed) by the CSR
+        // builder.
+        let mut uk: Vec<(usize, f64)> = Vec::new();
+        for i in 0..m {
+            if rng.next_f64() < q {
+                uk.push((i, rng.next_gaussian()));
+            }
+        }
+        let mut vk: Vec<(usize, f64)> = Vec::new();
+        for j in 0..n {
+            if rng.next_f64() < q {
+                vk.push((j, rng.next_gaussian()));
+            }
+        }
+        for &(i, ui) in &uk {
+            for &(j, vj) in &vk {
+                triplets.push((i, j, ui * vj));
+            }
+        }
+    }
+    let mut a = SparseMatrix::from_triplets(m, n, &triplets)?;
+    if noise > 0.0 {
+        for v in a.values_mut() {
+            *v += noise * rng.next_gaussian();
+        }
+    }
+    Ok(a)
 }
 
 /// Flat spectrum of `r` ones followed by zeros (sharp cliff).
@@ -114,6 +172,49 @@ mod tests {
             assert!((got - want).abs() < 1e-10, "{got} vs {want}");
         }
         assert!(s.sigma[4] < 1e-10);
+    }
+
+    #[test]
+    fn sparse_low_rank_is_sparse_and_low_rank() {
+        let mut rng = Pcg64::seed_from_u64(74);
+        let a = sparse_low_rank_noise(300, 200, 5, 0.05, 0.0, &mut rng).unwrap();
+        assert_eq!(a.shape(), (300, 200));
+        // Density lands in the right ballpark.
+        let d = a.density();
+        assert!(d > 0.01 && d < 0.15, "density {d}");
+        // Exact rank ≤ 5 (and = 5 a.s. at this size).
+        let s = svd(&a.to_dense()).unwrap();
+        assert_eq!(s.rank(1e-9 * s.sigma[0]), 5);
+    }
+
+    #[test]
+    fn sparse_noise_preserves_pattern_and_rank_structure() {
+        let mut rng = Pcg64::seed_from_u64(75);
+        let clean = sparse_low_rank_noise(200, 150, 4, 0.05, 0.0, &mut rng).unwrap();
+        let mut rng = Pcg64::seed_from_u64(75);
+        let noisy = sparse_low_rank_noise(200, 150, 4, 0.05, 1e-8, &mut rng).unwrap();
+        // Same pattern (same rng stream for structure), perturbed values.
+        assert_eq!(clean.nnz(), noisy.nnz());
+        let s = svd(&noisy.to_dense()).unwrap();
+        // 4 dominant values, then a ~1e-8 noise floor.
+        assert!(s.sigma[3] > 1e-3 * s.sigma[0]);
+        assert!(s.sigma[4] < 1e-6 * s.sigma[0], "sigma[4] = {}", s.sigma[4]);
+    }
+
+    #[test]
+    fn sparse_generator_rejects_bad_density() {
+        let mut rng = Pcg64::seed_from_u64(76);
+        assert!(sparse_low_rank_noise(10, 10, 2, -0.1, 0.0, &mut rng).is_err());
+        assert!(sparse_low_rank_noise(10, 10, 2, 1.5, 0.0, &mut rng).is_err());
+    }
+
+    #[test]
+    fn sparse_generator_deterministic_with_seed() {
+        let mut r1 = Pcg64::seed_from_u64(77);
+        let mut r2 = Pcg64::seed_from_u64(77);
+        let a = sparse_low_rank_noise(50, 40, 3, 0.1, 1e-6, &mut r1).unwrap();
+        let b = sparse_low_rank_noise(50, 40, 3, 0.1, 1e-6, &mut r2).unwrap();
+        assert_eq!(a, b);
     }
 
     #[test]

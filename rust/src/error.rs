@@ -1,44 +1,80 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled (no `thiserror`): the default build of this crate has zero
+//! external dependencies, so the derive-macro convenience is traded for a
+//! plain `Display`/`Error` impl.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors produced by fastlr.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Dimension mismatch between operands.
-    #[error("shape mismatch: {0}")]
     Shape(String),
 
     /// An algorithm received an invalid parameter.
-    #[error("invalid argument: {0}")]
     InvalidArg(String),
 
     /// An iterative method failed to converge within its budget.
-    #[error("no convergence: {0}")]
     NoConvergence(String),
 
     /// Numerical breakdown (e.g. division by a vanishing norm outside the
     /// sanctioned termination path).
-    #[error("numerical breakdown: {0}")]
     Breakdown(String),
 
-    /// The PJRT runtime layer failed (missing artifact, compile error, ...).
-    #[error("runtime: {0}")]
+    /// The PJRT runtime layer failed (compile error, disabled feature, ...).
     Runtime(String),
 
+    /// A compiled artifact (or the whole `artifacts/` manifest) is absent.
+    /// Typed separately from [`Error::Runtime`] so callers — and the
+    /// default no-`pjrt` build — can detect "not built yet" and skip or
+    /// fall back instead of failing hard.
+    ArtifactMissing(String),
+
     /// Coordinator/service level failure (queue closed, worker panic, ...).
-    #[error("service: {0}")]
     Service(String),
 
     /// Underlying I/O error.
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
     /// Error bubbled up from the xla crate.
-    #[error("xla: {0}")]
     Xla(String),
 }
 
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Shape(m) => write!(f, "shape mismatch: {m}"),
+            Error::InvalidArg(m) => write!(f, "invalid argument: {m}"),
+            Error::NoConvergence(m) => write!(f, "no convergence: {m}"),
+            Error::Breakdown(m) => write!(f, "numerical breakdown: {m}"),
+            Error::Runtime(m) => write!(f, "runtime: {m}"),
+            Error::ArtifactMissing(p) => {
+                write!(f, "artifact missing: {p} (run `make artifacts` first)")
+            }
+            Error::Service(m) => write!(f, "service: {m}"),
+            Error::Io(e) => write!(f, "{e}"),
+            Error::Xla(m) => write!(f, "xla: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())
@@ -75,5 +111,14 @@ mod tests {
         let ioe = std::io::Error::new(std::io::ErrorKind::NotFound, "gone");
         let e: Error = ioe.into();
         assert!(e.to_string().contains("gone"));
+        assert!(std::error::Error::source(&e).is_some());
+    }
+
+    #[test]
+    fn artifact_missing_points_at_the_build_step() {
+        let e = Error::ArtifactMissing("artifacts/manifest.tsv".into());
+        let s = e.to_string();
+        assert!(s.contains("artifacts/manifest.tsv"));
+        assert!(s.contains("make artifacts"));
     }
 }

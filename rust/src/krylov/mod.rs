@@ -6,14 +6,16 @@
 //! * [`rank`] — **Algorithm 3**: accurate numerical-rank determination.
 //!
 //! All three run against any [`LinOp`], so the same code path serves a
-//! native in-memory matrix and a PJRT-compiled executable loaded from
-//! `artifacts/` (see [`crate::runtime::backend`]).
+//! native in-memory dense matrix, a sparse CSR matrix
+//! ([`crate::linalg::SparseMatrix`] — the huge-matrix route, where only
+//! `A·x` / `Aᵀ·y` ever touch the data), and a PJRT-compiled executable
+//! loaded from `artifacts/` (see [`crate::runtime::backend`]).
 
 pub mod fsvd;
 pub mod gk;
 pub mod rank;
 
-use crate::linalg::Matrix;
+use crate::linalg::{Matrix, SparseMatrix};
 use crate::Result;
 
 /// A linear operator `A` exposing the two products the Golub–Kahan process
@@ -40,6 +42,18 @@ impl LinOp for Matrix {
     }
 }
 
+impl LinOp for SparseMatrix {
+    fn shape(&self) -> (usize, usize) {
+        SparseMatrix::shape(self)
+    }
+    fn apply(&self, x: &[f64]) -> Result<Vec<f64>> {
+        self.spmv(x)
+    }
+    fn apply_t(&self, y: &[f64]) -> Result<Vec<f64>> {
+        self.spmv_t(y)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -54,5 +68,23 @@ mod tests {
         assert_eq!(LinOp::apply(&a, &x).unwrap(), a.matvec(&x).unwrap());
         assert_eq!(LinOp::apply_t(&a, &y).unwrap(), a.matvec_t(&y).unwrap());
         assert_eq!(LinOp::shape(&a), (8, 5));
+    }
+
+    #[test]
+    fn sparse_linop_matches_dense_linop() {
+        let mut rng = Pcg64::seed_from_u64(81);
+        let d = Matrix::gaussian(9, 6, &mut rng);
+        let s = SparseMatrix::from_dense(&d, 0.0);
+        let x = vec![0.5; 6];
+        let y = vec![-0.25; 9];
+        assert_eq!(LinOp::shape(&s), (9, 6));
+        let dx = LinOp::apply(&d, &x).unwrap();
+        let sx = LinOp::apply(&s, &x).unwrap();
+        let diff = crate::linalg::vecops::max_abs_diff(&dx, &sx);
+        assert!(diff < 1e-12, "apply diff {diff}");
+        let dy = LinOp::apply_t(&d, &y).unwrap();
+        let sy = LinOp::apply_t(&s, &y).unwrap();
+        let diff_t = crate::linalg::vecops::max_abs_diff(&dy, &sy);
+        assert!(diff_t < 1e-12, "apply_t diff {diff_t}");
     }
 }

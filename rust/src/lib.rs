@@ -21,7 +21,27 @@
 //! * **L2/L1 (python, build time)** — JAX compute graphs calling Pallas
 //!   kernels, AOT-lowered to HLO text under `artifacts/`.
 //! * **runtime** — [`runtime`] loads those artifacts through the PJRT C API
-//!   (`xla` crate) so the hot loops can execute them natively.
+//!   (`xla` crate, behind the off-by-default `pjrt` cargo feature) so the
+//!   hot loops can execute them natively. The default build has zero
+//!   external dependencies and stubs this layer with typed errors.
+//!
+//! ## Dense vs sparse entry points
+//!
+//! Algorithms 1–3 are *matrix-free*: [`krylov::gk::gk_bidiagonalize`],
+//! [`krylov::fsvd::fsvd`] and [`krylov::rank::estimate_rank`] accept any
+//! [`krylov::LinOp`] — they only ever ask for `A·x` and `Aᵀ·y`. Two
+//! operator implementations ship:
+//!
+//! * [`linalg::Matrix`] — dense row-major f64, threaded GEMV/GEMM; and
+//! * [`linalg::SparseMatrix`] — CSR with threaded `spmv`/`spmv_t`
+//!   ([`linalg::sparse`]), the huge-matrix route where the dense form
+//!   would not fit in memory.
+//!
+//! The coordinator mirrors the split: [`coordinator::JobSpec::PartialSvd`]
+//! / [`coordinator::JobSpec::RankEstimate`] take dense inputs,
+//! [`coordinator::JobSpec::SparsePartialSvd`] /
+//! [`coordinator::JobSpec::SparseRankEstimate`] take CSR inputs and are
+//! always routed matrix-free.
 //!
 //! ## Quickstart
 //!

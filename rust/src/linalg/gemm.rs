@@ -306,5 +306,32 @@ mod tests {
         let b = Matrix::zeros(4, 3);
         let c = gemm(&a, &b).unwrap();
         assert_eq!(c.shape(), (0, 3));
+        // Inner dimension 0: a well-formed all-zero result.
+        let d = gemm(&Matrix::zeros(3, 0), &Matrix::zeros(0, 2)).unwrap();
+        assert_eq!(d.shape(), (3, 2));
+        assert_eq!(d.max_abs(), 0.0);
+    }
+
+    #[test]
+    fn degenerate_vector_like_shapes() {
+        let mut rng = Pcg64::seed_from_u64(7);
+        for (m, k, n) in [(1usize, 9usize, 65usize), (65, 9, 1), (1, 1, 1), (1, 64, 1)] {
+            let a = Matrix::gaussian(m, k, &mut rng);
+            let b = Matrix::gaussian(k, n, &mut rng);
+            assert_close(&gemm(&a, &b).unwrap(), &gemm_naive(&a, &b), 1e-12);
+        }
+    }
+
+    #[test]
+    fn par_threshold_boundary_matches() {
+        // m*k*n straddles PAR_THRESHOLD = 1<<16: 40^3 = 64000 stays on
+        // the serial path, 41*40*40 = 65600 takes the threaded one.
+        let mut rng = Pcg64::seed_from_u64(8);
+        for (m, k, n) in [(40usize, 40usize, 40usize), (41, 40, 40)] {
+            assert!((m * k * n < PAR_THRESHOLD) == (m == 40));
+            let a = Matrix::gaussian(m, k, &mut rng);
+            let b = Matrix::gaussian(k, n, &mut rng);
+            assert_close(&gemm(&a, &b).unwrap(), &gemm_naive(&a, &b), 1e-10);
+        }
     }
 }

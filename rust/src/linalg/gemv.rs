@@ -162,6 +162,41 @@ mod tests {
         assert!(crate::linalg::vecops::max_abs_diff(&got, &want) < 1e-10);
     }
 
+    fn assert_both_match_naive(a: &Matrix, tol: f64) {
+        let (m, n) = a.shape();
+        let x: Vec<f64> = (0..n).map(|i| ((i as f64) * 0.13).cos()).collect();
+        let y: Vec<f64> = (0..m).map(|i| ((i as f64) * 0.29).sin()).collect();
+        let got = gemv(a, &x).unwrap();
+        let want = gemv_naive(a, &x);
+        let d = crate::linalg::vecops::max_abs_diff(&got, &want);
+        assert!(d < tol, "gemv ({m},{n}): {d}");
+        let got_t = gemv_t(a, &y).unwrap();
+        let want_t = gemv_t_naive(a, &y);
+        let dt = crate::linalg::vecops::max_abs_diff(&got_t, &want_t);
+        assert!(dt < tol, "gemv_t ({m},{n}): {dt}");
+    }
+
+    #[test]
+    fn one_by_n_and_n_by_one_shapes() {
+        let mut rng = Pcg64::seed_from_u64(13);
+        for (m, n) in [(1usize, 257usize), (257, 1)] {
+            let a = Matrix::gaussian(m, n, &mut rng);
+            assert_both_match_naive(&a, 1e-12);
+        }
+    }
+
+    #[test]
+    fn par_threshold_boundary_matches() {
+        // m*n straddles PAR_THRESHOLD = 1<<17: 361*363 = 131043 stays on
+        // the serial path, 362*363 = 131406 takes the threaded one.
+        let mut rng = Pcg64::seed_from_u64(14);
+        for (m, n) in [(361usize, 363usize), (362, 363)] {
+            assert!((m * n < PAR_THRESHOLD) == (m == 361));
+            let a = Matrix::gaussian(m, n, &mut rng);
+            assert_both_match_naive(&a, 1e-9);
+        }
+    }
+
     #[test]
     fn shape_mismatch_is_error() {
         let a = Matrix::zeros(3, 4);

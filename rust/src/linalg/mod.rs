@@ -10,6 +10,10 @@
 //! Everything is `f64`, row-major. There is no external BLAS/LAPACK in this
 //! environment; these routines *are* the BLAS/LAPACK of the system, and the
 //! performance pass in `EXPERIMENTS.md` §Perf profiles them directly.
+//!
+//! The huge-matrix counterpart lives in [`sparse`]: a CSR matrix with
+//! threaded `spmv`/`spmv_t` that plugs into the same matrix-free Krylov
+//! layer through [`crate::krylov::LinOp`].
 
 pub mod bidiagonalize;
 pub mod eig;
@@ -17,11 +21,13 @@ pub mod gemm;
 pub mod gemv;
 pub mod matrix;
 pub mod qr;
+pub mod sparse;
 pub mod svd;
 pub mod tridiag;
 pub mod vecops;
 
 pub use matrix::Matrix;
+pub use sparse::SparseMatrix;
 
 /// Number of worker threads used by the threaded kernels.
 ///

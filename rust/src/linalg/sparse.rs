@@ -1,0 +1,398 @@
+//! Sparse CSR matrix with threaded `A·x` / `Aᵀ·y` products.
+//!
+//! This is the huge-matrix entry point of the crate: the paper's
+//! Algorithms 1–3 are *matrix-free* — Golub–Kahan bidiagonalization only
+//! needs the two products a [`crate::krylov::LinOp`] exposes — so a CSR
+//! operator lets F-SVD and rank estimation run on matrices whose dense
+//! form would never fit in memory. [`SparseMatrix`] implements `LinOp` in
+//! [`crate::krylov`], right next to the dense impl.
+//!
+//! Kernel shapes mirror the dense ones in [`super::gemv`]:
+//!
+//! * [`SparseMatrix::spmv`]   (`y = A·x`): each output element is a
+//!   row·x gather-dot; threads split rows, no reduction.
+//! * [`SparseMatrix::spmv_t`] (`y = Aᵀ·x`): row `i` scatters
+//!   `x[i]·A[i,:]`; threads accumulate private `y` buffers over row
+//!   chunks, then reduce.
+//!
+//! Both reuse [`super::partition_ranges`] / [`super::num_threads`] so the
+//! `FASTLR_THREADS` override applies uniformly across dense and sparse
+//! paths.
+
+use super::matrix::Matrix;
+use super::{num_threads, partition_ranges};
+use crate::{ensure_shape, Result};
+
+/// Below this many stored nonzeros the scoped-thread fan-out costs more
+/// than it saves (mirrors the dense kernels' flop heuristic: an spmv does
+/// ~2 flops per stored entry).
+pub const PAR_THRESHOLD: usize = 1 << 16;
+
+/// Compressed sparse row (CSR) `f64` matrix.
+///
+/// Invariants: `indptr` has `rows + 1` monotone entries;
+/// `indices[indptr[i]..indptr[i+1]]` are the column indices of row `i`,
+/// strictly increasing; `values` is parallel to `indices`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SparseMatrix {
+    rows: usize,
+    cols: usize,
+    indptr: Vec<usize>,
+    indices: Vec<usize>,
+    values: Vec<f64>,
+}
+
+impl SparseMatrix {
+    /// Build from `(row, col, value)` triplets. Duplicates are summed;
+    /// entries are sorted within each row. Explicit zeros are kept (they
+    /// are the caller's statement of structure).
+    pub fn from_triplets(
+        rows: usize,
+        cols: usize,
+        triplets: &[(usize, usize, f64)],
+    ) -> Result<Self> {
+        let mut per_row: Vec<Vec<(usize, f64)>> = vec![Vec::new(); rows];
+        for &(r, c, v) in triplets {
+            ensure_shape!(
+                r < rows && c < cols,
+                "from_triplets: entry ({r}, {c}) outside {rows}x{cols}"
+            );
+            per_row[r].push((c, v));
+        }
+        let mut indptr = Vec::with_capacity(rows + 1);
+        let mut indices = Vec::with_capacity(triplets.len());
+        let mut values = Vec::with_capacity(triplets.len());
+        indptr.push(0);
+        for row in &mut per_row {
+            row.sort_unstable_by_key(|&(c, _)| c);
+            let mut last: Option<usize> = None;
+            for &(c, v) in row.iter() {
+                if last == Some(c) {
+                    *values.last_mut().expect("entry exists") += v;
+                } else {
+                    indices.push(c);
+                    values.push(v);
+                    last = Some(c);
+                }
+            }
+            indptr.push(indices.len());
+        }
+        Ok(SparseMatrix { rows, cols, indptr, indices, values })
+    }
+
+    /// Compress a dense matrix, dropping entries with `|a_ij| <= tol`.
+    pub fn from_dense(a: &Matrix, tol: f64) -> Self {
+        let (m, n) = a.shape();
+        let mut indptr = Vec::with_capacity(m + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        indptr.push(0);
+        for i in 0..m {
+            for (j, &v) in a.row(i).iter().enumerate() {
+                if v.abs() > tol {
+                    indices.push(j);
+                    values.push(v);
+                }
+            }
+            indptr.push(indices.len());
+        }
+        SparseMatrix { rows: m, cols: n, indptr, indices, values }
+    }
+
+    /// Materialize densely (tests, small matrices, diagnostics).
+    pub fn to_dense(&self) -> Matrix {
+        let mut out = Matrix::zeros(self.rows, self.cols);
+        for (i, w) in self.indptr.windows(2).enumerate() {
+            let row = out.row_mut(i);
+            for (&c, &v) in self.indices[w[0]..w[1]].iter().zip(&self.values[w[0]..w[1]]) {
+                row[c] = v;
+            }
+        }
+        out
+    }
+
+    /// `(rows, cols)`.
+    #[inline]
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    /// Number of rows.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns.
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Number of stored entries.
+    #[inline]
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Stored-entry fraction `nnz / (rows·cols)` (0 for empty shapes).
+    pub fn density(&self) -> f64 {
+        let numel = self.rows * self.cols;
+        if numel == 0 {
+            return 0.0;
+        }
+        self.nnz() as f64 / numel as f64
+    }
+
+    /// Column indices and values of row `i`.
+    pub fn row_entries(&self, i: usize) -> (&[usize], &[f64]) {
+        debug_assert!(i < self.rows);
+        let lo = self.indptr[i];
+        let hi = self.indptr[i + 1];
+        (&self.indices[lo..hi], &self.values[lo..hi])
+    }
+
+    /// Mutable view of the stored values (pattern is fixed; used by
+    /// generators to perturb entries in place).
+    pub fn values_mut(&mut self) -> &mut [f64] {
+        &mut self.values
+    }
+
+    /// Frobenius norm over the stored entries (overflow-safe).
+    pub fn fro_norm(&self) -> f64 {
+        let mx = self.values.iter().fold(0.0f64, |a, &x| a.max(x.abs()));
+        if mx == 0.0 || !mx.is_finite() {
+            return mx;
+        }
+        let s: f64 = self.values.iter().map(|&x| (x / mx) * (x / mx)).sum();
+        mx * s.sqrt()
+    }
+
+    /// `y = A · x`.
+    pub fn spmv(&self, x: &[f64]) -> Result<Vec<f64>> {
+        ensure_shape!(
+            self.cols == x.len(),
+            "spmv: {:?} x vec[{}]",
+            self.shape(),
+            x.len()
+        );
+        let m = self.rows;
+        let mut y = vec![0.0; m];
+        if self.values.is_empty() {
+            return Ok(y);
+        }
+        let nt = if self.nnz() < PAR_THRESHOLD { 1 } else { num_threads() };
+        let ranges = partition_ranges(m, nt);
+        if ranges.len() <= 1 {
+            for (i, yi) in y.iter_mut().enumerate() {
+                *yi = self.row_dot(i, x);
+            }
+            return Ok(y);
+        }
+        let mut chunks: Vec<&mut [f64]> = Vec::with_capacity(ranges.len());
+        let mut rest = y.as_mut_slice();
+        for &(s, e) in &ranges {
+            let (head, tail) = rest.split_at_mut(e - s);
+            chunks.push(head);
+            rest = tail;
+        }
+        std::thread::scope(|scope| {
+            for (&(s, e), chunk) in ranges.iter().zip(chunks) {
+                scope.spawn(move || {
+                    for i in s..e {
+                        chunk[i - s] = self.row_dot(i, x);
+                    }
+                });
+            }
+        });
+        Ok(y)
+    }
+
+    /// `y = Aᵀ · x`.
+    pub fn spmv_t(&self, x: &[f64]) -> Result<Vec<f64>> {
+        ensure_shape!(
+            self.rows == x.len(),
+            "spmv_t: {:?}^T x vec[{}]",
+            self.shape(),
+            x.len()
+        );
+        let n = self.cols;
+        if self.values.is_empty() {
+            return Ok(vec![0.0; n]);
+        }
+        let nt = if self.nnz() < PAR_THRESHOLD { 1 } else { num_threads() };
+        let ranges = partition_ranges(self.rows, nt);
+        if ranges.len() <= 1 {
+            let mut y = vec![0.0; n];
+            self.scatter_rows(0, self.rows, x, &mut y);
+            return Ok(y);
+        }
+        let partials: Vec<Vec<f64>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = ranges
+                .iter()
+                .map(|&(s, e)| {
+                    scope.spawn(move || {
+                        let mut part = vec![0.0; n];
+                        self.scatter_rows(s, e, x, &mut part);
+                        part
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("spmv_t worker")).collect()
+        });
+        let mut y = vec![0.0; n];
+        for part in &partials {
+            for (yi, pi) in y.iter_mut().zip(part) {
+                *yi += pi;
+            }
+        }
+        Ok(y)
+    }
+
+    /// Gather-dot of row `i` with `x`.
+    #[inline]
+    fn row_dot(&self, i: usize, x: &[f64]) -> f64 {
+        let (cols, vals) = self.row_entries(i);
+        cols.iter().zip(vals).map(|(&c, &v)| v * x[c]).sum()
+    }
+
+    /// Scatter rows `[r0, r1)` scaled by `x` into `out` (length `cols`).
+    fn scatter_rows(&self, r0: usize, r1: usize, x: &[f64], out: &mut [f64]) {
+        let starts = &self.indptr[r0..r1];
+        let ends = &self.indptr[r0 + 1..=r1];
+        for ((&lo, &hi), &xi) in starts.iter().zip(ends).zip(&x[r0..r1]) {
+            if xi == 0.0 {
+                continue;
+            }
+            for (&c, &v) in self.indices[lo..hi].iter().zip(&self.values[lo..hi]) {
+                out[c] += xi * v;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::vecops::max_abs_diff;
+    use crate::rng::{Pcg64, Rng};
+
+    /// Random dense matrix with roughly `density` nonzeros.
+    fn random_sparse_dense(m: usize, n: usize, density: f64, rng: &mut Pcg64) -> Matrix {
+        Matrix::from_fn(m, n, |_, _| {
+            if rng.next_f64() < density {
+                rng.next_gaussian()
+            } else {
+                0.0
+            }
+        })
+    }
+
+    fn assert_matvecs_match(a: &Matrix, tol: f64) {
+        let sp = SparseMatrix::from_dense(a, 0.0);
+        let (m, n) = a.shape();
+        let x: Vec<f64> = (0..n).map(|i| ((i as f64) * 0.37).sin()).collect();
+        let y: Vec<f64> = (0..m).map(|i| ((i as f64) * 0.11).cos()).collect();
+        let d = max_abs_diff(&sp.spmv(&x).unwrap(), &a.matvec(&x).unwrap());
+        assert!(d < tol, "spmv {:?}: {d}", a.shape());
+        let dt = max_abs_diff(&sp.spmv_t(&y).unwrap(), &a.matvec_t(&y).unwrap());
+        assert!(dt < tol, "spmv_t {:?}: {dt}", a.shape());
+    }
+
+    #[test]
+    fn from_triplets_sorts_and_sums_duplicates() {
+        let t = [(1usize, 2usize, 1.0f64), (0, 1, 2.0), (1, 0, 3.0), (1, 2, 0.5)];
+        let a = SparseMatrix::from_triplets(2, 3, &t).unwrap();
+        assert_eq!(a.nnz(), 3);
+        let (cols, vals) = a.row_entries(1);
+        assert_eq!(cols, &[0, 2]);
+        assert_eq!(vals, &[3.0, 1.5]);
+        let d = a.to_dense();
+        assert_eq!(d[(0, 1)], 2.0);
+        assert_eq!(d[(1, 2)], 1.5);
+    }
+
+    #[test]
+    fn from_triplets_rejects_out_of_range() {
+        assert!(SparseMatrix::from_triplets(2, 2, &[(2, 0, 1.0)]).is_err());
+        assert!(SparseMatrix::from_triplets(2, 2, &[(0, 2, 1.0)]).is_err());
+    }
+
+    #[test]
+    fn dense_round_trip() {
+        let mut rng = Pcg64::seed_from_u64(700);
+        let a = random_sparse_dense(23, 17, 0.2, &mut rng);
+        let sp = SparseMatrix::from_dense(&a, 0.0);
+        assert_eq!(sp.to_dense(), a);
+        assert!(sp.density() < 0.5);
+    }
+
+    #[test]
+    fn spmv_matches_dense_on_random_csr() {
+        let mut rng = Pcg64::seed_from_u64(701);
+        for (m, n, density) in [(13, 9, 0.3), (64, 64, 0.1), (200, 150, 0.05)] {
+            let a = random_sparse_dense(m, n, density, &mut rng);
+            assert_matvecs_match(&a, 1e-12);
+        }
+    }
+
+    #[test]
+    fn one_by_n_and_n_by_one_shapes() {
+        let mut rng = Pcg64::seed_from_u64(702);
+        for (m, n) in [(1usize, 257usize), (257, 1), (1, 1)] {
+            let a = random_sparse_dense(m, n, 0.5, &mut rng);
+            assert_matvecs_match(&a, 1e-12);
+        }
+    }
+
+    #[test]
+    fn empty_shapes_and_empty_pattern() {
+        let z = SparseMatrix::from_triplets(0, 4, &[]).unwrap();
+        assert_eq!(z.spmv(&[1.0; 4]).unwrap().len(), 0);
+        assert_eq!(z.spmv_t(&[]).unwrap(), vec![0.0; 4]);
+        let z2 = SparseMatrix::from_triplets(3, 0, &[]).unwrap();
+        assert_eq!(z2.spmv(&[]).unwrap(), vec![0.0; 3]);
+        assert_eq!(z2.spmv_t(&[1.0; 3]).unwrap().len(), 0);
+        // Nonempty shape, zero stored entries.
+        let z3 = SparseMatrix::from_triplets(5, 6, &[]).unwrap();
+        assert_eq!(z3.nnz(), 0);
+        assert_eq!(z3.spmv(&[1.0; 6]).unwrap(), vec![0.0; 5]);
+        assert_eq!(z3.density(), 0.0);
+    }
+
+    #[test]
+    fn par_threshold_boundary_matches_dense() {
+        // 255x255 dense = 65025 nnz (< 1<<16, serial path);
+        // 300x300 dense = 90000 nnz (> 1<<16, threaded path).
+        let mut rng = Pcg64::seed_from_u64(703);
+        for s in [255usize, 300] {
+            let a = Matrix::gaussian(s, s, &mut rng);
+            assert_matvecs_match(&a, 1e-10);
+        }
+    }
+
+    #[test]
+    fn shape_mismatch_is_error() {
+        let a = SparseMatrix::from_triplets(3, 4, &[(0, 0, 1.0)]).unwrap();
+        assert!(a.spmv(&[1.0; 3]).is_err());
+        assert!(a.spmv_t(&[1.0; 4]).is_err());
+    }
+
+    #[test]
+    fn fro_norm_matches_dense() {
+        let mut rng = Pcg64::seed_from_u64(704);
+        let a = random_sparse_dense(40, 30, 0.2, &mut rng);
+        let sp = SparseMatrix::from_dense(&a, 0.0);
+        assert!((sp.fro_norm() - a.fro_norm()).abs() < 1e-12);
+        assert_eq!(SparseMatrix::from_triplets(3, 3, &[]).unwrap().fro_norm(), 0.0);
+    }
+
+    #[test]
+    fn values_mut_perturbs_in_place() {
+        let mut a = SparseMatrix::from_triplets(2, 2, &[(0, 0, 1.0), (1, 1, 2.0)]).unwrap();
+        for v in a.values_mut() {
+            *v *= 10.0;
+        }
+        assert_eq!(a.to_dense()[(1, 1)], 20.0);
+    }
+}

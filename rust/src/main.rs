@@ -1,1 +1,3 @@
-fn main() { fastlr::cli::run_main(); }
+fn main() {
+    fastlr::cli::run_main();
+}

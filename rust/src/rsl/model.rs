@@ -105,12 +105,11 @@ impl BatchGradEngine for NativeGradEngine {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::data::digits::{generate, DigitStyle};
+    use crate::data::digits::{generate, DigitDataset, DigitStyle};
     use crate::linalg::qr::orthonormalize;
     use crate::rng::Pcg64;
 
-    fn setup() -> (FixedRankPoint, crate::data::digits::DigitDataset, crate::data::digits::DigitDataset)
-    {
+    fn setup() -> (FixedRankPoint, DigitDataset, DigitDataset) {
         let mut rng = Pcg64::seed_from_u64(180);
         let dx = generate(40, &DigitStyle::mnist_like(), &mut rng);
         let dv = generate(40, &DigitStyle::usps_like(), &mut rng);

@@ -8,6 +8,13 @@
 //! interfaces ([`crate::krylov::LinOp`], [`crate::rsl::BatchGradEngine`])
 //! so the same Algorithm 1/2/3/4 code runs through either the native f64
 //! kernels or the compiled f32 artifacts.
+//!
+//! The whole layer sits behind the off-by-default `pjrt` cargo feature:
+//! without it these types still compile (so call sites don't need cfg
+//! noise) but every engine operation returns a typed
+//! [`crate::Error::Runtime`] / [`crate::Error::ArtifactMissing`], and the
+//! default build has zero external dependencies and never touches
+//! `artifacts/`.
 
 pub mod backend;
 pub mod pjrt;

@@ -1,12 +1,24 @@
-//! Thin wrapper over the `xla` crate's PJRT CPU client.
+//! PJRT engine wrapper with a stub fallback.
 //!
-//! Pattern follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
-//! → `XlaComputation::from_proto` → `client.compile` → `execute`. HLO *text*
-//! is the interchange format (64-bit-id protos from jax ≥ 0.5 are rejected
-//! by xla_extension 0.5.1; the text parser reassigns ids).
+//! Two build modes, selected by the off-by-default `pjrt` cargo feature:
+//!
+//! * **`pjrt` on** — thin wrapper over the `xla` crate's PJRT CPU client.
+//!   Pattern follows /opt/xla-example/load_hlo:
+//!   `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//!   `client.compile` → `execute`. HLO *text* is the interchange format
+//!   (64-bit-id protos from jax ≥ 0.5 are rejected by xla_extension
+//!   0.5.1; the text parser reassigns ids).
+//! * **`pjrt` off (default)** — the same public API, but every engine
+//!   operation returns [`crate::Error::Runtime`]. The default build thus
+//!   has zero external dependencies and never needs `artifacts/`; callers
+//!   that probe the runtime ([`super::registry::Registry::load`]) fail
+//!   with a typed error and fall back to the native f64 kernels.
+//!
+//! [`TensorF32`] — the host-side tensor type — is pure and identical in
+//! both modes, so the [`super::registry`] and [`super::backend`] layers
+//! compile unconditionally.
 
 use crate::{Error, Result};
-use std::path::Path;
 
 /// A host-side f32 tensor (row-major) passed to / returned from artifacts.
 #[derive(Debug, Clone, PartialEq)]
@@ -53,74 +65,131 @@ impl TensorF32 {
     pub fn to_f64(&self) -> Vec<f64> {
         self.data.iter().map(|&x| x as f64).collect()
     }
+}
 
-    fn to_literal(&self) -> Result<xla::Literal> {
-        let lit = xla::Literal::vec1(&self.data);
-        if self.dims.is_empty() {
+#[cfg(feature = "pjrt")]
+mod engine {
+    use super::TensorF32;
+    use crate::{Error, Result};
+    use std::path::Path;
+
+    fn to_literal(t: &TensorF32) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&t.data);
+        if t.dims.is_empty() {
             // Rank-0: reshape the 1-element vector to a scalar.
             Ok(lit.reshape(&[])?)
         } else {
-            let dims: Vec<i64> = self.dims.iter().map(|&d| d as i64).collect();
+            let dims: Vec<i64> = t.dims.iter().map(|&d| d as i64).collect();
             Ok(lit.reshape(&dims)?)
         }
     }
 
-    fn from_literal(lit: &xla::Literal) -> Result<Self> {
+    fn from_literal(lit: &xla::Literal) -> Result<TensorF32> {
         let shape = lit.array_shape()?;
         let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
         let data = lit.to_vec::<f32>()?;
         TensorF32::new(dims, data)
     }
-}
 
-/// Owns the PJRT client; compiles HLO-text modules into executables.
-pub struct PjrtEngine {
-    client: xla::PjRtClient,
-}
-
-impl PjrtEngine {
-    /// Create a CPU PJRT client.
-    pub fn cpu() -> Result<Self> {
-        Ok(PjrtEngine { client: xla::PjRtClient::cpu()? })
+    /// Owns the PJRT client; compiles HLO-text modules into executables.
+    pub struct PjrtEngine {
+        client: xla::PjRtClient,
     }
 
-    /// Backend platform name (diagnostics).
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    impl PjrtEngine {
+        /// Create a CPU PJRT client.
+        pub fn cpu() -> Result<Self> {
+            Ok(PjrtEngine { client: xla::PjRtClient::cpu()? })
+        }
+
+        /// Backend platform name (diagnostics).
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Compile an HLO-text file into an executable.
+        pub fn compile_file(&self, path: &Path) -> Result<Executable> {
+            let path_str = path
+                .to_str()
+                .ok_or_else(|| Error::Runtime(format!("non-utf8 path {path:?}")))?;
+            let proto = xla::HloModuleProto::from_text_file(path_str)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            Ok(Executable { exe })
+        }
     }
 
-    /// Compile an HLO-text file into an executable.
-    pub fn compile_file(&self, path: &Path) -> Result<Executable> {
-        let path_str = path
-            .to_str()
-            .ok_or_else(|| Error::Runtime(format!("non-utf8 path {path:?}")))?;
-        let proto = xla::HloModuleProto::from_text_file(path_str)?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
-        Ok(Executable { exe })
+    /// A compiled artifact ready to run.
+    pub struct Executable {
+        exe: xla::PjRtLoadedExecutable,
+    }
+
+    impl Executable {
+        /// Execute with host tensors; returns the flattened output tuple.
+        ///
+        /// All shipped artifacts are lowered with `return_tuple=True`, so
+        /// the single device literal is always a tuple, possibly of one
+        /// element.
+        pub fn run(&self, inputs: &[TensorF32]) -> Result<Vec<TensorF32>> {
+            let lits: Vec<xla::Literal> = inputs.iter().map(to_literal).collect::<Result<_>>()?;
+            let result = self.exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
+            let parts = result.to_tuple()?;
+            parts.iter().map(from_literal).collect()
+        }
     }
 }
 
-/// A compiled artifact ready to run.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-}
+#[cfg(not(feature = "pjrt"))]
+mod engine {
+    use super::TensorF32;
+    use crate::{Error, Result};
+    use std::path::Path;
 
-impl Executable {
-    /// Execute with host tensors; returns the flattened output tuple.
-    ///
-    /// All shipped artifacts are lowered with `return_tuple=True`, so the
-    /// single device literal is always a tuple, possibly of one element.
-    pub fn run(&self, inputs: &[TensorF32]) -> Result<Vec<TensorF32>> {
-        let lits: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|t| t.to_literal())
-            .collect::<Result<_>>()?;
-        let result = self.exe.execute::<xla::Literal>(&lits)?[0][0].to_literal_sync()?;
-        let parts = result.to_tuple()?;
-        parts.iter().map(TensorF32::from_literal).collect()
+    fn disabled<T>(what: &str) -> Result<T> {
+        Err(Error::Runtime(format!(
+            "{what}: fastlr was built without the `pjrt` feature; rebuild \
+             with `--features pjrt` to load compiled artifacts"
+        )))
+    }
+
+    /// Stub engine compiled when the `pjrt` feature is off. Construction
+    /// fails with a typed error, so the methods below are unreachable at
+    /// runtime but keep the API surface identical across builds.
+    pub struct PjrtEngine {
+        _priv: (),
+    }
+
+    impl PjrtEngine {
+        /// Always fails: the runtime is not compiled in.
+        pub fn cpu() -> Result<Self> {
+            disabled("PjrtEngine::cpu")
+        }
+
+        /// Backend platform name (diagnostics).
+        pub fn platform(&self) -> String {
+            "disabled".to_string()
+        }
+
+        /// Always fails: the runtime is not compiled in.
+        pub fn compile_file(&self, _path: &Path) -> Result<Executable> {
+            disabled("PjrtEngine::compile_file")
+        }
+    }
+
+    /// Stub executable (never constructed in this mode).
+    pub struct Executable {
+        _priv: (),
+    }
+
+    impl Executable {
+        /// Always fails: the runtime is not compiled in.
+        pub fn run(&self, _inputs: &[TensorF32]) -> Result<Vec<TensorF32>> {
+            disabled("Executable::run")
+        }
     }
 }
+
+pub use engine::{Executable, PjrtEngine};
 
 #[cfg(test)]
 mod tests {
@@ -148,6 +217,13 @@ mod tests {
         let t = TensorF32::from_matrix(&m);
         assert_eq!(t.dims, vec![2, 3]);
         assert_eq!(t.data, vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_engine_reports_disabled_feature() {
+        let err = PjrtEngine::cpu().unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
     }
 
     // Engine tests that need the PJRT runtime live in rust/tests/ as

@@ -123,14 +123,18 @@ impl CompiledArtifact {
 
 impl Registry {
     /// Load `manifest.tsv` from `dir` and initialize a PJRT CPU engine.
+    ///
+    /// Returns the typed [`Error::ArtifactMissing`] when `artifacts/` (or
+    /// its manifest) does not exist, so the default no-`pjrt` build and CI
+    /// — which never generate artifacts — can detect "not built yet" and
+    /// skip instead of failing hard.
     pub fn load(dir: &Path) -> Result<Self> {
         let mpath = dir.join("manifest.tsv");
-        let text = std::fs::read_to_string(&mpath).map_err(|e| {
-            Error::Runtime(format!(
-                "cannot read {} (run `make artifacts` first): {e}",
-                mpath.display()
-            ))
-        })?;
+        if !mpath.is_file() {
+            return Err(Error::ArtifactMissing(mpath.display().to_string()));
+        }
+        let text = std::fs::read_to_string(&mpath)
+            .map_err(|e| Error::Runtime(format!("cannot read {}: {e}", mpath.display())))?;
         let mut metas = HashMap::new();
         for (lineno, line) in text.lines().enumerate() {
             if line.trim().is_empty() {
@@ -172,7 +176,9 @@ impl Registry {
         self.metas.get(name)
     }
 
-    /// Compile (or fetch the cached) artifact.
+    /// Compile (or fetch the cached) artifact. Unknown names and names
+    /// whose HLO file vanished from disk come back as
+    /// [`Error::ArtifactMissing`].
     pub fn get(&self, name: &str) -> Result<std::sync::Arc<CompiledArtifact>> {
         if let Some(c) = self.compiled.lock().expect("registry lock").get(name) {
             return Ok(c.clone());
@@ -180,9 +186,13 @@ impl Registry {
         let meta = self
             .metas
             .get(name)
-            .ok_or_else(|| Error::Runtime(format!("unknown artifact {name:?}")))?
+            .ok_or_else(|| Error::ArtifactMissing(format!("{name} (not in manifest)")))?
             .clone();
-        let exe = self.engine.compile_file(&self.dir.join(&meta.file))?;
+        let fpath = self.dir.join(&meta.file);
+        if !fpath.is_file() {
+            return Err(Error::ArtifactMissing(fpath.display().to_string()));
+        }
+        let exe = self.engine.compile_file(&fpath)?;
         let arc = std::sync::Arc::new(CompiledArtifact { meta, exe });
         self.compiled
             .lock()
@@ -232,6 +242,7 @@ mod tests {
             Err(e) => e,
             Ok(_) => panic!("expected error"),
         };
+        assert!(matches!(err, Error::ArtifactMissing(_)), "{err:?}");
         assert!(err.to_string().contains("make artifacts"));
     }
 }

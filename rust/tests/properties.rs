@@ -125,7 +125,13 @@ fn prop_fsvd_sigma_below_full_and_rank_detected() {
         let full = svd(&a).unwrap();
         let f = fsvd(
             &a,
-            &FsvdOptions { k: m.min(n), r: rank, eps: 1e-8, reorth_passes: 2, ..Default::default() },
+            &FsvdOptions {
+                k: m.min(n),
+                r: rank,
+                eps: 1e-8,
+                reorth_passes: 2,
+                ..Default::default()
+            },
         )
         .unwrap();
         for i in 0..rank.min(f.sigma.len()) {

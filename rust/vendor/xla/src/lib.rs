@@ -1,0 +1,157 @@
+//! API **stub** of the `xla` crate's PJRT surface, as consumed by
+//! `fastlr`'s `runtime::pjrt` module.
+//!
+//! This crate exists so the `pjrt` cargo feature type-checks and builds in
+//! environments where the real `xla` crate (PJRT C-API bindings) is not
+//! vendored. Every operation that would touch PJRT returns [`Error`] with
+//! a message explaining how to enable real execution: replace this
+//! directory with the actual `xla` crate checkout (the path dependency in
+//! `rust/Cargo.toml` stays the same).
+//!
+//! The surface mirrors exactly what `fastlr` calls — nothing more.
+
+use std::fmt;
+
+/// Error type standing in for `xla::Error`.
+#[derive(Debug)]
+pub struct Error(String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Result alias matching the real crate.
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>(what: &str) -> Result<T> {
+    Err(Error(format!(
+        "{what}: this build links the fastlr stub `xla` crate; replace \
+         rust/vendor/xla with the real xla crate to execute PJRT artifacts"
+    )))
+}
+
+/// Host literal (stub: carries no data).
+#[derive(Debug, Clone)]
+pub struct Literal {}
+
+impl Literal {
+    /// Rank-1 f32 literal.
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal {}
+    }
+
+    /// Reshape to the given dimensions.
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        unavailable("Literal::reshape")
+    }
+
+    /// Shape of an array literal.
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        unavailable("Literal::array_shape")
+    }
+
+    /// Copy out as a host vector.
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable("Literal::to_vec")
+    }
+
+    /// Destructure a tuple literal.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        unavailable("Literal::to_tuple")
+    }
+}
+
+/// Array shape (dims only — all fastlr needs).
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    /// Dimension sizes.
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO module.
+#[derive(Debug)]
+pub struct HloModuleProto {}
+
+impl HloModuleProto {
+    /// Parse an HLO-text file.
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable("HloModuleProto::from_text_file")
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+#[derive(Debug)]
+pub struct XlaComputation {}
+
+impl XlaComputation {
+    /// Wrap a parsed module.
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {}
+    }
+}
+
+/// A PJRT client.
+#[derive(Debug)]
+pub struct PjRtClient {}
+
+impl PjRtClient {
+    /// Create the CPU client.
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable("PjRtClient::cpu")
+    }
+
+    /// Backend platform name.
+    pub fn platform_name(&self) -> String {
+        "xla-stub".to_string()
+    }
+
+    /// Compile a computation.
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable("PjRtClient::compile")
+    }
+}
+
+/// A device buffer handle.
+#[derive(Debug)]
+pub struct PjRtBuffer {}
+
+impl PjRtBuffer {
+    /// Copy the buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable("PjRtBuffer::to_literal_sync")
+    }
+}
+
+/// A compiled executable.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {}
+
+impl PjRtLoadedExecutable {
+    /// Execute with the given arguments (one buffer list per device).
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable("PjRtLoadedExecutable::execute")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_operations_error_with_guidance() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("vendor/xla"));
+        let err = Literal::vec1(&[1.0]).reshape(&[1]).unwrap_err();
+        assert!(err.to_string().contains("stub"));
+    }
+}
