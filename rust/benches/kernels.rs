@@ -126,6 +126,14 @@ fn main() {
     ]);
     println!("{}", table.render_markdown());
     table.write_csv("kernels").expect("csv");
+    // Machine-readable copy at the repo root: CI uploads it as an
+    // artifact so the perf trajectory is diffable across commits.
+    let json_path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("workspace root")
+        .join("BENCH_kernels.json");
+    table.write_json(&json_path).expect("json");
+    eprintln!("wrote {}", json_path.display());
 
     // --- Ablation 1: B^T B eig — tridiagonal QL vs dense sym_eig. ---
     let mut ab = Table::new(

@@ -1,0 +1,61 @@
+//! A complete tour of the serving edge from the client side.
+//!
+//! Self-contained: starts a `fastlr` server in-process on an ephemeral
+//! port, then talks to it exactly the way an external client would —
+//! over TCP with JSON bodies. Point the same calls at a standalone
+//! `fastlr serve --port 7878` to drive a real deployment.
+//!
+//! ```text
+//! cargo run --release --example http_client
+//! ```
+
+use fastlr::server::http::{client_call, client_connect};
+use fastlr::server::json::Json;
+use fastlr::server::{start, ServeOptions};
+
+fn main() -> fastlr::Result<()> {
+    let srv = start(ServeOptions { port: 0, workers: 2, ..Default::default() })?;
+    println!("serving on http://{}\n", srv.local_addr());
+    let mut conn = client_connect(&srv.local_addr())?;
+
+    // --- Liveness. ---
+    let (status, body) = client_call(&mut conn, "GET", "/v1/healthz", None)?;
+    println!("GET /v1/healthz -> {status} {body}\n");
+
+    // --- Partial SVD of an inline dense matrix. ---
+    let dense = r#"{"rows":2,"cols":3,"data":[3,0,0,0,2,0],"r":2,"return_vectors":true}"#;
+    let (status, body) = client_call(&mut conn, "POST", "/v1/svd", Some(dense))?;
+    let v = Json::parse(&body)?;
+    println!("POST /v1/svd (inline dense) -> {status}");
+    println!("  method = {}", v.get("method").and_then(Json::as_str).unwrap_or("?"));
+    println!("  sigma  = {}\n", v.get("sigma").unwrap_or(&Json::Null));
+
+    // --- The cache in action: same synthetic job twice. ---
+    let synth = r#"{"synth":{"kind":"low_rank_gaussian","rows":500,"cols":400,"rank":12,"seed":7},"r":12}"#;
+    for attempt in 1..=2 {
+        let (status, body) = client_call(&mut conn, "POST", "/v1/svd", Some(synth))?;
+        let v = Json::parse(&body)?;
+        println!(
+            "POST /v1/svd (synth, attempt {attempt}) -> {status} cached={} exec_ms={}",
+            v.get("cached").unwrap_or(&Json::Null),
+            v.get("exec_ms").unwrap_or(&Json::Null),
+        );
+    }
+    println!();
+
+    // --- Rank estimation of a sparse CSR payload. ---
+    let sparse = r#"{"rows":1000,"cols":800,"triplets":[[0,0,2.0],[1,1,1.0],[999,799,0.5]],"eps":1e-8}"#;
+    let (status, body) = client_call(&mut conn, "POST", "/v1/rank", Some(sparse))?;
+    let v = Json::parse(&body)?;
+    println!(
+        "POST /v1/rank (sparse triplets) -> {status} rank={}",
+        v.get("rank").unwrap_or(&Json::Null)
+    );
+
+    // --- Service + cache telemetry. ---
+    let (status, body) = client_call(&mut conn, "GET", "/v1/stats", None)?;
+    println!("\nGET /v1/stats -> {status}\n{body}");
+
+    srv.shutdown();
+    Ok(())
+}

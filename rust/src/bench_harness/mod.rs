@@ -168,6 +168,26 @@ impl Table {
         std::fs::write(&path, self.render_csv())?;
         Ok(path)
     }
+
+    /// Machine-readable form: `{"title", "headers", "rows"}` through the
+    /// serving edge's JSON codec — one codec for the wire and the
+    /// perf-trajectory artifacts.
+    pub fn to_json(&self) -> crate::server::json::Json {
+        use crate::server::json::Json;
+        let strs = |xs: &[String]| Json::Arr(xs.iter().map(|s| Json::Str(s.clone())).collect());
+        Json::obj(vec![
+            ("title", Json::Str(self.title.clone())),
+            ("headers", strs(&self.headers)),
+            ("rows", Json::Arr(self.rows.iter().map(|r| strs(r)).collect())),
+        ])
+    }
+
+    /// Write the JSON rendering to an explicit path (CI uploads these as
+    /// artifacts to seed the perf trajectory).
+    pub fn write_json(&self, path: &std::path::Path) -> crate::Result<()> {
+        std::fs::write(path, format!("{}\n", self.to_json()))?;
+        Ok(())
+    }
 }
 
 /// Format seconds like the paper's tables (3 significant decimals, `NA`
@@ -223,6 +243,23 @@ mod tests {
         let csv = t.render_csv();
         assert!(csv.starts_with("size,time\n"));
         assert!(csv.contains("1000x1000,0.17"));
+    }
+
+    #[test]
+    fn table_json_round_trips() {
+        use crate::server::json::Json;
+        let mut t = Table::new("Demo", &["size", "time"]);
+        t.push_row(vec!["1000x1000".into(), "0.17".into()]);
+        let v = Json::parse(&t.to_json().to_string()).unwrap();
+        assert_eq!(v.get("title").and_then(Json::as_str), Some("Demo"));
+        let rows = v.get("rows").and_then(Json::as_array).unwrap();
+        assert_eq!(rows[0].as_array().unwrap()[0].as_str(), Some("1000x1000"));
+        let dir = std::env::temp_dir().join("fastlr_bench_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("demo.json");
+        t.write_json(&path).unwrap();
+        let back = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(Json::parse(back.trim()).unwrap(), v);
     }
 
     #[test]

@@ -1,11 +1,12 @@
 //! Command-line interface (hand-rolled parser — no clap offline).
 //!
 //! ```text
-//! fastlr svd   --rows M --cols N --rank L --r R [--method fsvd|rsvd|full]
-//! fastlr rank  --rows M --cols N --rank L [--eps E]
-//! fastlr rsl   [--iters K] [--backend full|fsvd20|fsvd35] [--pjrt]
-//! fastlr serve [--jobs N] [--workers W]
-//! fastlr exp   <table1a|table1b|table2|fig1|fig2> [--scale smoke|paper]
+//! fastlr svd     --rows M --cols N --rank L --r R [--method fsvd|rsvd|full]
+//! fastlr rank    --rows M --cols N --rank L [--eps E]
+//! fastlr rsl     [--iters K] [--backend full|fsvd20|fsvd35] [--pjrt]
+//! fastlr serve   [--port P] [--workers W] | --demo [--jobs N]
+//! fastlr loadgen [--clients N] [--requests R] [--addr HOST:PORT]
+//! fastlr exp     <table1a|table1b|table2|fig1|fig2> [--scale smoke|paper]
 //! fastlr artifacts
 //! ```
 
@@ -24,11 +25,18 @@ use std::sync::Arc;
 const USAGE: &str = "fastlr — accurate & fast matrix factorization for low-rank learning
 
 USAGE:
-  fastlr svd   --rows M --cols N --rank L --r R [--method fsvd|rsvd|full] [--seed S]
-  fastlr rank  --rows M --cols N --rank L [--eps E] [--seed S]
-  fastlr rsl   [--iters K] [--backend full|fsvd20|fsvd35] [--pjrt]
-  fastlr serve [--jobs N] [--workers W]
-  fastlr exp   <table1a|table1b|table2|fig1|fig2> [--scale smoke|paper]
+  fastlr svd     --rows M --cols N --rank L --r R [--method fsvd|rsvd|full] [--seed S]
+  fastlr rank    --rows M --cols N --rank L [--eps E] [--seed S]
+  fastlr rsl     [--iters K] [--backend full|fsvd20|fsvd35] [--pjrt]
+  fastlr serve   [--host H] [--port P] [--workers W] [--conn-threads C] [--cache E]
+                 binds the HTTP factorization API (POST /v1/svd, POST /v1/rank,
+                 GET /v1/healthz, GET /v1/stats) and runs until killed
+  fastlr serve   --demo [--jobs N] [--workers W]
+                 legacy in-process demo loop (no network)
+  fastlr loadgen [--clients N] [--requests R] [--addr HOST:PORT] [--seed S]
+                 drives mixed svd/rank/cache-hit traffic against --addr, or
+                 against an in-process server when no --addr is given
+  fastlr exp     <table1a|table1b|table2|fig1|fig2> [--scale smoke|paper]
   fastlr artifacts
 
 Run `make artifacts` once before `--pjrt` / `artifacts` subcommands.";
@@ -57,6 +65,7 @@ pub fn dispatch(argv: &[String]) -> crate::Result<i32> {
         "rank" => cmd_rank(&args),
         "rsl" => cmd_rsl(&args),
         "serve" => cmd_serve(&args),
+        "loadgen" => cmd_loadgen(&args),
         "exp" => cmd_exp(&args),
         "artifacts" => cmd_artifacts(),
         "help" | "--help" | "-h" => {
@@ -186,6 +195,30 @@ fn cmd_rsl(args: &Args) -> crate::Result<i32> {
 }
 
 fn cmd_serve(args: &Args) -> crate::Result<i32> {
+    if args.has_flag("demo") {
+        return cmd_serve_demo(args);
+    }
+    let port = args.get_usize("port", 7878)?;
+    if port > u16::MAX as usize {
+        return Err(crate::Error::InvalidArg(format!("--port {port}: not a valid TCP port")));
+    }
+    let opts = crate::server::ServeOptions {
+        host: args.get_str("host", "127.0.0.1"),
+        port: port as u16,
+        workers: args.get_usize("workers", crate::linalg::num_threads().min(4))?,
+        conn_workers: args.get_usize("conn-threads", 32)?,
+        cache_capacity: args.get_usize("cache", 128)?,
+        seed: args.get_u64("seed", 0x5eed)?,
+        ..Default::default()
+    };
+    let server = crate::server::start(opts)?;
+    println!("fastlr serving on http://{}", server.local_addr());
+    println!("  POST /v1/svd   POST /v1/rank   GET /v1/healthz   GET /v1/stats");
+    server.serve_forever();
+    Ok(0)
+}
+
+fn cmd_serve_demo(args: &Args) -> crate::Result<i32> {
     let jobs = args.get_usize("jobs", 12)?;
     let workers = args.get_usize("workers", 4)?;
     let svc = FactorizationService::new(ServiceConfig { workers, ..Default::default() })?;
@@ -220,6 +253,29 @@ fn cmd_serve(args: &Args) -> crate::Result<i32> {
     }
     println!("\n{}", svc.metrics.render());
     Ok(0)
+}
+
+fn cmd_loadgen(args: &Args) -> crate::Result<i32> {
+    let addr = match args.options.get("addr") {
+        None => None,
+        Some(s) => {
+            let a = s.parse().map_err(|e| crate::Error::InvalidArg(format!("--addr {s:?}: {e}")))?;
+            Some(a)
+        }
+    };
+    let opts = crate::server::loadgen::LoadgenOptions {
+        clients: args.get_usize("clients", 8)?,
+        requests_per_client: args.get_usize("requests", 12)?,
+        addr,
+        seed: args.get_u64("seed", 0x10ad)?,
+    };
+    match &opts.addr {
+        Some(a) => eprintln!("loadgen: {} clients against {a} ...", opts.clients),
+        None => eprintln!("loadgen: {} clients against an in-process server ...", opts.clients),
+    }
+    let report = crate::server::loadgen::run(&opts)?;
+    println!("{}", report.table().render_markdown());
+    Ok(if report.failures == 0 { 0 } else { 1 })
 }
 
 fn cmd_exp(args: &Args) -> crate::Result<i32> {
@@ -312,5 +368,27 @@ mod tests {
     fn exp_requires_id() {
         assert!(dispatch(&sv(&["exp"])).is_err());
         assert!(dispatch(&sv(&["exp", "nope", "--scale", "smoke"])).is_err());
+    }
+
+    #[test]
+    fn serve_demo_small_runs() {
+        let code = dispatch(&sv(&["serve", "--demo", "--jobs", "2", "--workers", "2"])).unwrap();
+        assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn loadgen_smoke_runs_in_process() {
+        let code = dispatch(&sv(&["loadgen", "--clients", "2", "--requests", "3"])).unwrap();
+        assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn loadgen_rejects_bad_addr() {
+        assert!(dispatch(&sv(&["loadgen", "--addr", "not-an-addr"])).is_err());
+    }
+
+    #[test]
+    fn serve_rejects_out_of_range_port() {
+        assert!(dispatch(&sv(&["serve", "--port", "70000"])).is_err());
     }
 }

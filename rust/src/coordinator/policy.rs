@@ -61,14 +61,18 @@ impl RoutePolicy {
                 SvdMethod::Fsvd { k: m.min(n) }
             }
             JobSpec::SparseRankEstimate { .. } => SvdMethod::Fsvd { k: m.min(n) },
-            JobSpec::SparsePartialSvd { r, .. } => {
-                // Sparse inputs are served matrix-free regardless of the
-                // accuracy class: traditional SVD and the R-SVD sketch
-                // both need the dense matrix, F-SVD only needs the two
-                // CSR products.
-                let k = (r + self.fsvd_slack).min(self.fsvd_max_k).min(m.min(n));
-                SvdMethod::Fsvd { k }
-            }
+            JobSpec::SparsePartialSvd { r, .. } => match accuracy {
+                // Sparse inputs are always served matrix-free: F-SVD and
+                // R-SVD both run off the two CSR products now that the
+                // sketch is LinOp-generic. `Fast` takes the randomized
+                // route; everything else (including `Exact`, which would
+                // need to densify for traditional SVD) takes F-SVD.
+                AccuracyClass::Fast => SvdMethod::Rsvd { oversample: self.rsvd_oversample },
+                _ => {
+                    let k = (r + self.fsvd_slack).min(self.fsvd_max_k).min(m.min(n));
+                    SvdMethod::Fsvd { k }
+                }
+            },
             JobSpec::PartialSvd { r, .. } => match accuracy {
                 AccuracyClass::Exact => SvdMethod::Full,
                 AccuracyClass::Balanced => {
@@ -161,12 +165,16 @@ mod tests {
         let p = RoutePolicy::default();
         let sp = Arc::new(SparseMatrix::from_triplets(2000, 1500, &[(0, 0, 1.0)]).unwrap());
         let s = JobSpec::SparsePartialSvd { matrix: sp.clone(), r: 10 };
-        for acc in [AccuracyClass::Exact, AccuracyClass::Balanced, AccuracyClass::Fast] {
+        // Accuracy-sensitive classes take F-SVD; never traditional SVD
+        // (which would have to densify).
+        for acc in [AccuracyClass::Exact, AccuracyClass::Balanced] {
             match p.select(&s, acc) {
                 SvdMethod::Fsvd { k } => assert_eq!(k, 20),
                 other => panic!("sparse job routed to {other:?}"),
             }
         }
+        // `Fast` now takes the LinOp-generic randomized sketch.
+        assert_eq!(p.select(&s, AccuracyClass::Fast), SvdMethod::Rsvd { oversample: 10 });
         let r = JobSpec::SparseRankEstimate { matrix: sp, eps: 1e-8 };
         match p.select(&r, AccuracyClass::Balanced) {
             SvdMethod::Fsvd { k } => assert_eq!(k, 1500),

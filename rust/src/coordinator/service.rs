@@ -188,26 +188,42 @@ pub fn execute(request: &JobRequest, policy: &RoutePolicy, seed: u64) -> Result<
             )?;
             Ok(JobOutcome::Rank { rank: est.rank, k_iterations: est.k_iterations })
         }
-        JobSpec::SparsePartialSvd { matrix, r } => {
-            // The policy always routes sparse partial SVDs to F-SVD; the
-            // fallback recomputes the same budget from the policy knobs
-            // so the two can never diverge.
-            let (m, n) = matrix.shape();
-            let k = match method {
-                SvdMethod::Fsvd { k } => k,
-                _ => (*r + policy.fsvd_slack).min(policy.fsvd_max_k).min(m.min(n)),
-            };
-            let out = fsvd(
-                matrix.as_ref(),
-                &FsvdOptions { k, r: *r, seed, ..Default::default() },
-            )?;
-            Ok(JobOutcome::Svd(SvdResult {
-                u: out.u,
-                sigma: out.sigma,
-                v: out.v,
-                method: SvdMethod::Fsvd { k },
-            }))
-        }
+        JobSpec::SparsePartialSvd { matrix, r } => match method {
+            // `Fast` jobs take the randomized sketch, matrix-free through
+            // the CSR LinOp (the sketch only needs A·Ω / Aᵀ·Q).
+            SvdMethod::Rsvd { oversample } => {
+                let s = rsvd(
+                    matrix.as_ref(),
+                    &RsvdOptions { r: *r, oversample, seed, ..Default::default() },
+                )?
+                .truncate(*r);
+                Ok(JobOutcome::Svd(SvdResult {
+                    u: s.u,
+                    sigma: s.sigma,
+                    v: s.v,
+                    method: SvdMethod::Rsvd { oversample },
+                }))
+            }
+            // Everything else is F-SVD; the fallback recomputes the same
+            // budget from the policy knobs so the two can never diverge.
+            _ => {
+                let (m, n) = matrix.shape();
+                let k = match method {
+                    SvdMethod::Fsvd { k } => k,
+                    _ => (*r + policy.fsvd_slack).min(policy.fsvd_max_k).min(m.min(n)),
+                };
+                let out = fsvd(
+                    matrix.as_ref(),
+                    &FsvdOptions { k, r: *r, seed, ..Default::default() },
+                )?;
+                Ok(JobOutcome::Svd(SvdResult {
+                    u: out.u,
+                    sigma: out.sigma,
+                    v: out.v,
+                    method: SvdMethod::Fsvd { k },
+                }))
+            }
+        },
         JobSpec::FullSvd { matrix } => {
             let s = svd(matrix)?;
             Ok(JobOutcome::Svd(SvdResult {
@@ -241,7 +257,7 @@ pub fn execute(request: &JobRequest, policy: &RoutePolicy, seed: u64) -> Result<
             }
             SvdMethod::Rsvd { oversample } => {
                 let s = rsvd(
-                    matrix,
+                    matrix.as_ref(),
                     &RsvdOptions { r: *r, oversample, seed, ..Default::default() },
                 )?
                 .truncate(*r);
@@ -396,6 +412,35 @@ mod tests {
                 assert!(k_iterations >= 5);
             }
             other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn sparse_fast_class_routes_to_rsvd_matrix_free() {
+        let mut rng = Pcg64::seed_from_u64(216);
+        let a = Arc::new(
+            crate::data::synth::sparse_low_rank_noise(400, 300, 6, 0.05, 0.0, &mut rng)
+                .unwrap(),
+        );
+        let svc = service();
+        let res = svc
+            .run(JobRequest {
+                spec: JobSpec::SparsePartialSvd { matrix: a.clone(), r: 6 },
+                accuracy: AccuracyClass::Fast,
+            })
+            .unwrap();
+        let out = match res.outcome.unwrap() {
+            JobOutcome::Svd(s) => s,
+            other => panic!("{other:?}"),
+        };
+        assert!(matches!(out.method, SvdMethod::Rsvd { .. }));
+        assert_eq!(out.sigma.len(), 6);
+        // l = r + p = 16 covers the exact rank 6, so the sketch recovers
+        // the spectrum to near machine precision — matrix-free.
+        let full = crate::linalg::svd::svd(&a.to_dense()).unwrap();
+        for i in 0..6 {
+            let rel = (out.sigma[i] - full.sigma[i]).abs() / full.sigma[i];
+            assert!(rel < 1e-8, "sigma[{i}]: {} vs {}", out.sigma[i], full.sigma[i]);
         }
     }
 

@@ -34,6 +34,13 @@ pub enum Error {
     /// Coordinator/service level failure (queue closed, worker panic, ...).
     Service(String),
 
+    /// HTTP serving-edge failure (bind/accept/socket errors, protocol
+    /// violations, invalid API payload semantics).
+    Http(String),
+
+    /// JSON wire-codec failure (parse error, wrong value type).
+    Json(String),
+
     /// Underlying I/O error.
     Io(std::io::Error),
 
@@ -53,6 +60,8 @@ impl fmt::Display for Error {
                 write!(f, "artifact missing: {p} (run `make artifacts` first)")
             }
             Error::Service(m) => write!(f, "service: {m}"),
+            Error::Http(m) => write!(f, "http: {m}"),
+            Error::Json(m) => write!(f, "json: {m}"),
             Error::Io(e) => write!(f, "{e}"),
             Error::Xla(m) => write!(f, "xla: {m}"),
         }
@@ -112,6 +121,15 @@ mod tests {
         let e: Error = ioe.into();
         assert!(e.to_string().contains("gone"));
         assert!(std::error::Error::source(&e).is_some());
+    }
+
+    #[test]
+    fn serving_edge_variants_display_their_layer() {
+        let e = Error::Http("bind 127.0.0.1:80: permission denied".into());
+        assert!(e.to_string().starts_with("http: "));
+        let e = Error::Json("trailing bytes at offset 7".into());
+        assert!(e.to_string().starts_with("json: "));
+        assert!(e.to_string().contains("offset 7"));
     }
 
     #[test]

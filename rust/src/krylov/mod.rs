@@ -28,6 +28,30 @@ pub trait LinOp {
     fn apply(&self, x: &[f64]) -> Result<Vec<f64>>;
     /// `x = Aᵀ · y`.
     fn apply_t(&self, y: &[f64]) -> Result<Vec<f64>>;
+
+    /// Block product `A · X` (`n x l → m x l`): the sketching primitive
+    /// of R-SVD. The default loops [`LinOp::apply`] over the columns of
+    /// `X`, which is what a matrix-free operator can do; the dense
+    /// [`Matrix`] impl overrides it with a real GEMM.
+    fn apply_block(&self, x: &Matrix) -> Result<Matrix> {
+        let (m, _) = self.shape();
+        let mut out = Matrix::zeros(m, x.cols());
+        for j in 0..x.cols() {
+            out.set_col(j, &self.apply(&x.col(j))?);
+        }
+        Ok(out)
+    }
+
+    /// Block product `Aᵀ · Y` (`m x l → n x l`), column-looped by
+    /// default like [`LinOp::apply_block`].
+    fn apply_t_block(&self, y: &Matrix) -> Result<Matrix> {
+        let (_, n) = self.shape();
+        let mut out = Matrix::zeros(n, y.cols());
+        for j in 0..y.cols() {
+            out.set_col(j, &self.apply_t(&y.col(j))?);
+        }
+        Ok(out)
+    }
 }
 
 impl LinOp for Matrix {
@@ -39,6 +63,12 @@ impl LinOp for Matrix {
     }
     fn apply_t(&self, y: &[f64]) -> Result<Vec<f64>> {
         self.matvec_t(y)
+    }
+    fn apply_block(&self, x: &Matrix) -> Result<Matrix> {
+        self.matmul(x)
+    }
+    fn apply_t_block(&self, y: &Matrix) -> Result<Matrix> {
+        self.matmul_tn(y)
     }
 }
 
@@ -86,5 +116,26 @@ mod tests {
         let sy = LinOp::apply_t(&s, &y).unwrap();
         let diff_t = crate::linalg::vecops::max_abs_diff(&dy, &sy);
         assert!(diff_t < 1e-12, "apply_t diff {diff_t}");
+    }
+
+    #[test]
+    fn block_products_match_across_impls() {
+        // Dense override (GEMM) vs the column-looped default (exercised
+        // through the sparse impl) must agree on the same data.
+        let mut rng = Pcg64::seed_from_u64(82);
+        let d = Matrix::gaussian(10, 7, &mut rng);
+        let s = SparseMatrix::from_dense(&d, 0.0);
+        let x = Matrix::gaussian(7, 3, &mut rng);
+        let y = Matrix::gaussian(10, 3, &mut rng);
+        let dense_ax = LinOp::apply_block(&d, &x).unwrap();
+        let sparse_ax = LinOp::apply_block(&s, &x).unwrap();
+        assert_eq!(dense_ax.shape(), (10, 3));
+        let diff = dense_ax.sub(&sparse_ax).unwrap().max_abs();
+        assert!(diff < 1e-12, "apply_block diff {diff}");
+        let dense_aty = LinOp::apply_t_block(&d, &y).unwrap();
+        let sparse_aty = LinOp::apply_t_block(&s, &y).unwrap();
+        assert_eq!(dense_aty.shape(), (7, 3));
+        let diff_t = dense_aty.sub(&sparse_aty).unwrap().max_abs();
+        assert!(diff_t < 1e-12, "apply_t_block diff {diff_t}");
     }
 }

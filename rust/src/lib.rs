@@ -17,7 +17,10 @@
 //! * **L3 (this crate)** — the coordinator: a factorization service with a
 //!   job queue, routing policy and worker pool ([`coordinator`]), plus native
 //!   implementations of every algorithm ([`krylov`], [`rsvd`], [`linalg`],
-//!   [`manifold`], [`rsl`]).
+//!   [`manifold`], [`rsl`]). In front of it sits the **serving edge**
+//!   ([`server`]): a zero-dependency HTTP/1.1 + JSON network API with a
+//!   fingerprint-keyed result cache (`fastlr serve`) and a loopback load
+//!   generator (`fastlr loadgen`).
 //! * **L2/L1 (python, build time)** — JAX compute graphs calling Pallas
 //!   kernels, AOT-lowered to HLO text under `artifacts/`.
 //! * **runtime** — [`runtime`] loads those artifacts through the PJRT C API
@@ -69,6 +72,7 @@ pub mod rng;
 pub mod rsl;
 pub mod rsvd;
 pub mod runtime;
+pub mod server;
 pub mod testing;
 
 pub use error::{Error, Result};

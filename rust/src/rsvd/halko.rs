@@ -7,6 +7,7 @@
 //! enough to cover the numerical rank (accurate but slower). Optional
 //! power iterations implement the `(A·Aᵀ)^q·A·Ω` refinement of [4] §4.5.
 
+use crate::krylov::LinOp;
 use crate::linalg::qr::orthonormalize;
 use crate::linalg::svd::{svd, Svd};
 use crate::linalg::Matrix;
@@ -32,9 +33,16 @@ impl Default for RsvdOptions {
     }
 }
 
-/// Randomized SVD. Returns the full `l = r + p` triplets of the sketch
-/// (callers truncate to `r` — Table 2's residual convention keeps all `l`).
-pub fn rsvd(a: &Matrix, opts: &RsvdOptions) -> Result<Svd> {
+/// Randomized SVD against any linear operator. Returns the full
+/// `l = r + p` triplets of the sketch (callers truncate to `r` —
+/// Table 2's residual convention keeps all `l`).
+///
+/// The whole algorithm only touches `A` through the two block products
+/// [`LinOp::apply_block`] / [`LinOp::apply_t_block`] (`A·Ω` and `Aᵀ·Q`),
+/// so the `Fast` accuracy class works matrix-free on sparse CSR inputs
+/// exactly like F-SVD does — dense inputs keep their GEMM fast path via
+/// the `Matrix` override.
+pub fn rsvd(a: &dyn LinOp, opts: &RsvdOptions) -> Result<Svd> {
     let (m, n) = a.shape();
     if opts.r == 0 {
         return Err(Error::InvalidArg("rsvd: r must be >= 1".into()));
@@ -44,33 +52,24 @@ pub fn rsvd(a: &Matrix, opts: &RsvdOptions) -> Result<Svd> {
 
     // Stage A: find Q whose columns approximate range(A).
     let omega = Matrix::gaussian(n, l, &mut rng);
-    let y = a.matmul(&omega)?; // m x l
+    let y = a.apply_block(&omega)?; // m x l  (A Ω)
     let mut q = orthonormalize(&y)?;
     for _ in 0..opts.power_iters {
         // Subspace iteration with re-orthonormalization each half-step
         // (numerically stable variant of [4] Alg. 4.4).
-        let z = a.matmul_tn(&q)?; // n x l  (A^T Q)
+        let z = a.apply_t_block(&q)?; // n x l  (A^T Q)
         let qz = orthonormalize(&z)?;
-        let y2 = a.matmul(&qz)?; // m x l
+        let y2 = a.apply_block(&qz)?; // m x l
         q = orthonormalize(&y2)?;
     }
 
-    // Stage B: SVD of the small matrix B = Qᵀ·A (l x n).
-    let b = q.matmul_tn_right(a)?; // l x n
+    // Stage B: SVD of the small matrix B = Qᵀ·A (l x n), formed through
+    // the operator as (Aᵀ·Q)ᵀ.
+    let b = a.apply_t_block(&q)?.transpose(); // l x n
     let small = svd(&b)?;
     // U = Q · U_b.
     let u = q.matmul(&small.u)?;
     Ok(Svd { u, sigma: small.sigma, v: small.v })
-}
-
-impl Matrix {
-    /// `selfᵀ` is not what we need here: computes `selfᵀ_as_lhs · rhs`
-    /// where the receiver is the *already-thin* `Q` (m x l) and `rhs` is
-    /// `A` (m x n), producing `Qᵀ·A` (l x n). Thin wrapper so the R-SVD
-    /// stage-B reads like the paper.
-    fn matmul_tn_right(&self, rhs: &Matrix) -> Result<Matrix> {
-        crate::linalg::gemm::gemm_tn(self, rhs)
-    }
 }
 
 #[cfg(test)]
@@ -150,5 +149,22 @@ mod tests {
     fn rejects_r_zero() {
         let a = Matrix::eye(4);
         assert!(rsvd(&a, &RsvdOptions { r: 0, ..Default::default() }).is_err());
+    }
+
+    #[test]
+    fn sparse_operator_matches_dense_rsvd() {
+        // Same seed -> same sketch; the CSR operator (column-looped
+        // block products) must agree with the dense GEMM fast path.
+        let mut rng = Pcg64::seed_from_u64(125);
+        let dense = low_rank_gaussian(80, 60, 6, &mut rng);
+        let sparse = crate::linalg::SparseMatrix::from_dense(&dense, 0.0);
+        let opts = RsvdOptions { r: 6, oversample: 6, power_iters: 1, ..Default::default() };
+        let d = rsvd(&dense, &opts).unwrap();
+        let s = rsvd(&sparse, &opts).unwrap();
+        assert_eq!(d.sigma.len(), s.sigma.len());
+        for i in 0..6 {
+            let diff = (d.sigma[i] - s.sigma[i]).abs() / d.sigma[0];
+            assert!(diff < 1e-10, "sigma[{i}]: {} vs {}", d.sigma[i], s.sigma[i]);
+        }
     }
 }

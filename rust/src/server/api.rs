@@ -1,0 +1,592 @@
+//! HTTP API handlers: the JSON wire schema in front of the coordinator.
+//!
+//! Routes:
+//!
+//! * `POST /v1/svd`  — partial SVD. Body selects the operator (inline
+//!   dense `data`, sparse `triplets`, or a `synth` generator spec) plus
+//!   `r`, `accuracy` (`exact|balanced|fast`) and `return_vectors`.
+//! * `POST /v1/rank` — numerical rank (Algorithm 3); same operator
+//!   sources plus `eps`.
+//! * `GET /v1/healthz` — liveness + config echo.
+//! * `GET /v1/stats`   — service counters, latency percentiles, cache
+//!   hit/miss counts, batcher flushes.
+//!
+//! Every job is fingerprinted ([`super::cache::fingerprint_spec`]) and
+//! looked up in the result cache before touching the worker pool; small
+//! jobs are routed through the [`Batcher`], large ones submitted
+//! directly. Malformed bodies answer `400`; factorization failures
+//! (e.g. numerical breakdown on a zero matrix) answer `422`.
+
+use super::cache::{fingerprint_spec, ResultCache};
+use super::http::{Request, Response};
+use super::json::Json;
+use crate::coordinator::batcher::Batcher;
+use crate::coordinator::job::{JobOutcome, JobResult, SvdMethod};
+use crate::coordinator::{AccuracyClass, FactorizationService, JobRequest, JobSpec};
+use crate::linalg::{Matrix, SparseMatrix};
+use crate::rng::Pcg64;
+use crate::{Error, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Refuse dense payloads (inline or synthesized) above this many entries
+/// — a 128 MiB matrix; bigger operators belong on the sparse path.
+pub const MAX_DENSE_NUMEL: usize = 1 << 24;
+
+/// Refuse shapes with a dimension above this (sparse included): guards
+/// the `O(m + n)` workspace allocations against absurd requests.
+pub const MAX_DIM: usize = 10_000_000;
+
+/// Shared state behind every handler.
+pub struct ApiState {
+    /// The factorization worker pool.
+    pub service: Arc<FactorizationService>,
+    /// Micro-batcher for small jobs (mpsc `Sender` is `!Sync`, hence the
+    /// mutex; the critical section is a single channel send).
+    pub batcher: Mutex<Batcher>,
+    /// Fingerprint-keyed result cache.
+    pub cache: ResultCache,
+    /// Jobs at or below this many entries go through the batcher.
+    pub batch_threshold: usize,
+    /// Server start time (uptime in `/v1/stats`).
+    pub started: Instant,
+    /// API requests handled (any route, any status).
+    pub requests: AtomicU64,
+}
+
+impl ApiState {
+    /// Wire up handler state over an existing service.
+    pub fn new(
+        service: Arc<FactorizationService>,
+        cache_capacity: usize,
+        batch_threshold: usize,
+    ) -> Self {
+        let batcher = Batcher::new(service.clone(), Default::default());
+        ApiState {
+            service,
+            batcher: Mutex::new(batcher),
+            cache: ResultCache::new(cache_capacity),
+            batch_threshold,
+            started: Instant::now(),
+            requests: AtomicU64::new(0),
+        }
+    }
+}
+
+/// Route one request. Pure apart from the submitted job — usable from
+/// the HTTP server and directly from tests.
+pub fn handle(state: &ApiState, req: &Request) -> Response {
+    state.requests.fetch_add(1, Ordering::Relaxed);
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/v1/healthz") => healthz(state),
+        ("GET", "/v1/stats") => stats(state),
+        ("POST", "/v1/svd") => post_job(state, req, JobKind::Svd),
+        ("POST", "/v1/rank") => post_job(state, req, JobKind::Rank),
+        (_, "/v1/healthz" | "/v1/stats" | "/v1/svd" | "/v1/rank") => {
+            Response::error(405, "method not allowed")
+        }
+        _ => Response::error(404, "no such route"),
+    }
+}
+
+fn healthz(state: &ApiState) -> Response {
+    let cfg = state.service.config();
+    Response::json(
+        200,
+        &Json::obj(vec![
+            ("status", Json::Str("ok".into())),
+            ("workers", Json::Num(cfg.workers as f64)),
+            ("queue_depth", Json::Num(cfg.queue_depth as f64)),
+            ("uptime_ms", Json::Num(state.started.elapsed().as_secs_f64() * 1e3)),
+        ]),
+    )
+}
+
+fn histogram_json(h: &crate::coordinator::metrics::LatencyHistogram) -> Json {
+    Json::obj(vec![
+        ("mean", Json::Num(h.mean().as_secs_f64() * 1e3)),
+        ("p50", Json::Num(h.quantile(0.5).as_secs_f64() * 1e3)),
+        ("p99", Json::Num(h.quantile(0.99).as_secs_f64() * 1e3)),
+    ])
+}
+
+fn stats(state: &ApiState) -> Response {
+    let m = &state.service.metrics;
+    let flushes = {
+        let b = state.batcher.lock().expect("batcher lock");
+        b.flushes.load(Ordering::Relaxed)
+    };
+    Response::json(
+        200,
+        &Json::obj(vec![
+            ("uptime_ms", Json::Num(state.started.elapsed().as_secs_f64() * 1e3)),
+            ("requests", Json::Num(state.requests.load(Ordering::Relaxed) as f64)),
+            (
+                "jobs",
+                Json::obj(vec![
+                    ("submitted", Json::Num(m.submitted.load(Ordering::Relaxed) as f64)),
+                    ("completed", Json::Num(m.completed.load(Ordering::Relaxed) as f64)),
+                    ("failed", Json::Num(m.failed.load(Ordering::Relaxed) as f64)),
+                ]),
+            ),
+            ("queue_wait_ms", histogram_json(&m.queue_wait)),
+            ("exec_ms", histogram_json(&m.exec_time)),
+            (
+                "cache",
+                Json::obj(vec![
+                    ("hits", Json::Num(state.cache.hits.load(Ordering::Relaxed) as f64)),
+                    ("misses", Json::Num(state.cache.misses.load(Ordering::Relaxed) as f64)),
+                    ("entries", Json::Num(state.cache.len() as f64)),
+                    ("capacity", Json::Num(state.cache.capacity() as f64)),
+                    ("bytes", Json::Num(state.cache.bytes() as f64)),
+                ]),
+            ),
+            ("batcher_flushes", Json::Num(flushes as f64)),
+        ]),
+    )
+}
+
+enum JobKind {
+    Svd,
+    Rank,
+}
+
+fn post_job(state: &ApiState, req: &Request, kind: JobKind) -> Response {
+    let parsed = req
+        .body_str()
+        .and_then(Json::parse)
+        .and_then(|body| build_spec(&body, kind).map(|s| (body, s)));
+    let (body, spec) = match parsed {
+        Ok(p) => p,
+        Err(e) => return Response::error(400, &e.to_string()),
+    };
+    let accuracy = match parse_accuracy(&body) {
+        Ok(a) => a,
+        Err(e) => return Response::error(400, &e.to_string()),
+    };
+    let return_vectors = body.get("return_vectors").and_then(Json::as_bool).unwrap_or(false);
+    run_cached(state, spec, accuracy, return_vectors)
+}
+
+fn run_cached(
+    state: &ApiState,
+    spec: JobSpec,
+    accuracy: AccuracyClass,
+    return_vectors: bool,
+) -> Response {
+    // The response shape depends on return_vectors, so it is part of the
+    // cache identity (golden-ratio constant keeps the two keys unrelated).
+    let mut key = fingerprint_spec(&spec, accuracy);
+    if return_vectors {
+        key ^= 0x9e37_79b9_7f4a_7c15;
+    }
+    if let Some(mut hit) = state.cache.get(key) {
+        hit.set("cached", Json::Bool(true));
+        return Response::json(200, &hit);
+    }
+    let numel = spec.numel();
+    let request = JobRequest { spec, accuracy };
+    let result: Result<JobResult> = if numel <= state.batch_threshold {
+        let rx = state.batcher.lock().expect("batcher lock").submit(request);
+        match rx.recv() {
+            Ok(r) => r,
+            Err(_) => Err(Error::Service("batcher dropped the job".into())),
+        }
+    } else {
+        state.service.submit(request).and_then(|h| h.wait())
+    };
+    let res = match result {
+        Ok(r) => r,
+        Err(e) => return Response::error(500, &e.to_string()),
+    };
+    match res.outcome {
+        Ok(outcome) => {
+            let mut v = outcome_json(&outcome, &res, return_vectors);
+            state.cache.put(key, v.clone());
+            v.set("cached", Json::Bool(false));
+            Response::json(200, &v)
+        }
+        Err(msg) => Response::error(422, &msg),
+    }
+}
+
+fn outcome_json(outcome: &JobOutcome, res: &JobResult, return_vectors: bool) -> Json {
+    let mut v = Json::obj(vec![
+        ("id", Json::Num(res.id as f64)),
+        ("exec_ms", Json::Num(res.exec_time.as_secs_f64() * 1e3)),
+        ("queue_ms", Json::Num(res.queue_time.as_secs_f64() * 1e3)),
+    ]);
+    match outcome {
+        JobOutcome::Rank { rank, k_iterations } => {
+            v.set("rank", Json::Num(*rank as f64));
+            v.set("k_iterations", Json::Num(*k_iterations as f64));
+        }
+        JobOutcome::Svd(s) => {
+            let (name, param) = match s.method {
+                SvdMethod::Full => ("full", None),
+                SvdMethod::Fsvd { k } => ("fsvd", Some(("k", k))),
+                SvdMethod::Rsvd { oversample } => ("rsvd", Some(("oversample", oversample))),
+            };
+            v.set("method", Json::Str(name.into()));
+            if let Some((pname, pval)) = param {
+                v.set(pname, Json::Num(pval as f64));
+            }
+            v.set("sigma", Json::num_array(&s.sigma));
+            if return_vectors {
+                v.set("u", matrix_json(&s.u));
+                v.set("v", matrix_json(&s.v));
+            }
+        }
+    }
+    v
+}
+
+fn matrix_json(m: &Matrix) -> Json {
+    Json::Arr((0..m.rows()).map(|i| Json::num_array(m.row(i))).collect())
+}
+
+fn parse_accuracy(body: &Json) -> Result<AccuracyClass> {
+    match body.get("accuracy") {
+        None => Ok(AccuracyClass::Balanced),
+        Some(v) => match v.as_str() {
+            Some("exact") => Ok(AccuracyClass::Exact),
+            Some("balanced") => Ok(AccuracyClass::Balanced),
+            Some("fast") => Ok(AccuracyClass::Fast),
+            _ => Err(Error::Http(format!(
+                "accuracy must be \"exact\", \"balanced\" or \"fast\", got {v}"
+            ))),
+        },
+    }
+}
+
+/// The operator a request describes, before it is bound into a spec.
+enum Operator {
+    Dense(Arc<Matrix>),
+    Sparse(Arc<SparseMatrix>),
+}
+
+fn build_spec(body: &Json, kind: JobKind) -> Result<JobSpec> {
+    if !matches!(body, Json::Obj(_)) {
+        return Err(Error::Http("request body must be a JSON object".into()));
+    }
+    let op = parse_operator(body)?;
+    match kind {
+        JobKind::Svd => {
+            let r = field_usize(body, "r")?.unwrap_or(10);
+            if r == 0 {
+                return Err(Error::Http("r must be >= 1".into()));
+            }
+            Ok(match op {
+                Operator::Dense(matrix) => JobSpec::PartialSvd { matrix, r },
+                Operator::Sparse(matrix) => JobSpec::SparsePartialSvd { matrix, r },
+            })
+        }
+        JobKind::Rank => {
+            let eps = match body.get("eps") {
+                None => 1e-8,
+                Some(v) => v
+                    .as_f64()
+                    .filter(|e| *e > 0.0)
+                    .ok_or_else(|| Error::Http("eps must be a positive number".into()))?,
+            };
+            Ok(match op {
+                Operator::Dense(matrix) => JobSpec::RankEstimate { matrix, eps },
+                Operator::Sparse(matrix) => JobSpec::SparseRankEstimate { matrix, eps },
+            })
+        }
+    }
+}
+
+fn field_usize(body: &Json, name: &str) -> Result<Option<usize>> {
+    match body.get(name) {
+        None => Ok(None),
+        Some(v) => v
+            .as_usize()
+            .map(Some)
+            .ok_or_else(|| Error::Http(format!("{name} must be a non-negative integer"))),
+    }
+}
+
+fn require_shape(body: &Json) -> Result<(usize, usize)> {
+    let m = field_usize(body, "rows")?
+        .ok_or_else(|| Error::Http("missing field \"rows\"".into()))?;
+    let n = field_usize(body, "cols")?
+        .ok_or_else(|| Error::Http("missing field \"cols\"".into()))?;
+    if m == 0 || n == 0 || m > MAX_DIM || n > MAX_DIM {
+        return Err(Error::Http(format!("shape {m}x{n} outside 1..={MAX_DIM}")));
+    }
+    Ok((m, n))
+}
+
+fn parse_operator(body: &Json) -> Result<Operator> {
+    match (body.get("data"), body.get("triplets"), body.get("synth")) {
+        (Some(data), None, None) => {
+            let (m, n) = require_shape(body)?;
+            let numel = m
+                .checked_mul(n)
+                .filter(|&p| p <= MAX_DENSE_NUMEL)
+                .ok_or_else(|| {
+                    Error::Http(format!(
+                        "dense {m}x{n} exceeds {MAX_DENSE_NUMEL} entries; use triplets"
+                    ))
+                })?;
+            let xs = data
+                .as_array()
+                .ok_or_else(|| Error::Http("data must be an array of numbers".into()))?;
+            if xs.len() != numel {
+                return Err(Error::Http(format!(
+                    "data has {} entries, expected rows*cols = {numel}",
+                    xs.len()
+                )));
+            }
+            let mut flat = Vec::with_capacity(numel);
+            for x in xs {
+                flat.push(
+                    x.as_f64()
+                        .ok_or_else(|| Error::Http("data must be an array of numbers".into()))?,
+                );
+            }
+            Ok(Operator::Dense(Arc::new(Matrix::from_vec(m, n, flat)?)))
+        }
+        (None, Some(triplets), None) => {
+            let (m, n) = require_shape(body)?;
+            let ts = triplets
+                .as_array()
+                .ok_or_else(|| Error::Http("triplets must be an array of [i, j, v]".into()))?;
+            let mut parsed = Vec::with_capacity(ts.len());
+            for t in ts {
+                let e = t.as_array().filter(|e| e.len() == 3).ok_or_else(|| {
+                    Error::Http("each triplet must be a 3-element array [i, j, v]".into())
+                })?;
+                let (i, j, v) = (e[0].as_usize(), e[1].as_usize(), e[2].as_f64());
+                match (i, j, v) {
+                    (Some(i), Some(j), Some(v)) => parsed.push((i, j, v)),
+                    _ => {
+                        return Err(Error::Http(
+                            "each triplet must be [row: int, col: int, value: number]".into(),
+                        ))
+                    }
+                }
+            }
+            Ok(Operator::Sparse(Arc::new(SparseMatrix::from_triplets(m, n, &parsed)?)))
+        }
+        (None, None, Some(synth)) => parse_synth(synth),
+        _ => Err(Error::Http(
+            "body must have exactly one of \"data\", \"triplets\" or \"synth\"".into(),
+        )),
+    }
+}
+
+fn parse_synth(synth: &Json) -> Result<Operator> {
+    let kind = synth
+        .get("kind")
+        .and_then(Json::as_str)
+        .ok_or_else(|| Error::Http("synth needs a \"kind\" string".into()))?;
+    let (m, n) = require_shape(synth)?;
+    let rank = field_usize(synth, "rank")?
+        .ok_or_else(|| Error::Http("synth needs a \"rank\" field".into()))?;
+    let seed = field_usize(synth, "seed")?.unwrap_or(42) as u64;
+    let mut rng = Pcg64::seed_from_u64(seed);
+    match kind {
+        "low_rank_gaussian" | "noisy_low_rank" => {
+            if m.checked_mul(n).map_or(true, |p| p > MAX_DENSE_NUMEL) {
+                return Err(Error::Http(format!(
+                    "dense synth {m}x{n} exceeds {MAX_DENSE_NUMEL} entries"
+                )));
+            }
+            let a = if kind == "low_rank_gaussian" {
+                crate::data::synth::low_rank_gaussian(m, n, rank, &mut rng)
+            } else {
+                let noise = synth.get("noise").and_then(Json::as_f64).unwrap_or(1e-8);
+                crate::data::synth::noisy_low_rank(m, n, rank, noise, &mut rng)
+            };
+            Ok(Operator::Dense(Arc::new(a)))
+        }
+        "sparse_low_rank_noise" => {
+            let density = synth.get("density").and_then(Json::as_f64).unwrap_or(0.01);
+            let noise = synth.get("noise").and_then(Json::as_f64).unwrap_or(0.0);
+            let a =
+                crate::data::synth::sparse_low_rank_noise(m, n, rank, density, noise, &mut rng)?;
+            Ok(Operator::Sparse(Arc::new(a)))
+        }
+        other => Err(Error::Http(format!(
+            "unknown synth kind {other:?} (expected low_rank_gaussian, noisy_low_rank \
+             or sparse_low_rank_noise)"
+        ))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::ServiceConfig;
+
+    fn state() -> ApiState {
+        let svc = Arc::new(
+            FactorizationService::new(ServiceConfig {
+                workers: 2,
+                queue_depth: 16,
+                ..Default::default()
+            })
+            .unwrap(),
+        );
+        ApiState::new(svc, 8, 1 << 14)
+    }
+
+    fn request(method: &str, path: &str, body: &str) -> Request {
+        Request {
+            method: method.into(),
+            path: path.into(),
+            query: None,
+            version: "HTTP/1.1".into(),
+            headers: vec![],
+            body: body.as_bytes().to_vec(),
+        }
+    }
+
+    fn body_json(resp: &Response) -> Json {
+        Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn healthz_reports_ok() {
+        let st = state();
+        let resp = handle(&st, &request("GET", "/v1/healthz", ""));
+        assert_eq!(resp.status, 200);
+        let v = body_json(&resp);
+        assert_eq!(v.get("status").and_then(Json::as_str), Some("ok"));
+        assert_eq!(v.get("workers").and_then(Json::as_usize), Some(2));
+    }
+
+    #[test]
+    fn unknown_route_404_wrong_method_405() {
+        let st = state();
+        assert_eq!(handle(&st, &request("GET", "/nope", "")).status, 404);
+        assert_eq!(handle(&st, &request("POST", "/v1/healthz", "")).status, 405);
+        assert_eq!(handle(&st, &request("GET", "/v1/svd", "")).status, 405);
+    }
+
+    #[test]
+    fn svd_via_synth_round_trips_and_caches() {
+        let st = state();
+        let body = r#"{"synth":{"kind":"low_rank_gaussian","rows":60,"cols":50,"rank":4,
+                       "seed":7},"r":4}"#;
+        let first = handle(&st, &request("POST", "/v1/svd", body));
+        assert_eq!(first.status, 200, "{:?}", String::from_utf8_lossy(&first.body));
+        let v = body_json(&first);
+        assert_eq!(v.get("cached"), Some(&Json::Bool(false)));
+        assert_eq!(v.get("sigma").and_then(Json::as_array).unwrap().len(), 4);
+        // 60x50 Balanced routes to full SVD under the default policy.
+        assert_eq!(v.get("method").and_then(Json::as_str), Some("full"));
+        let completed_before = st.service.metrics.completed.load(Ordering::Relaxed);
+        let second = handle(&st, &request("POST", "/v1/svd", body));
+        assert_eq!(second.status, 200);
+        let v2 = body_json(&second);
+        assert_eq!(v2.get("cached"), Some(&Json::Bool(true)));
+        assert_eq!(v2.get("sigma"), v.get("sigma"));
+        // Served from cache: no new factorization executed.
+        assert_eq!(st.service.metrics.completed.load(Ordering::Relaxed), completed_before);
+        assert_eq!(st.cache.hits.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn inline_dense_payload_works() {
+        let st = state();
+        // 2x2 identity: singular values 1, 1.
+        let body = r#"{"rows":2,"cols":2,"data":[1,0,0,1],"r":2}"#;
+        let resp = handle(&st, &request("POST", "/v1/svd", body));
+        assert_eq!(resp.status, 200);
+        let v = body_json(&resp);
+        let sigma = v.get("sigma").and_then(Json::as_array).unwrap();
+        assert!((sigma[0].as_f64().unwrap() - 1.0).abs() < 1e-12);
+        assert!((sigma[1].as_f64().unwrap() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn sparse_triplets_route_matrix_free() {
+        let st = state();
+        let body = r#"{"rows":300,"cols":250,
+                       "triplets":[[0,0,2.0],[1,1,1.5],[2,2,1.0],[299,249,0.5]],"r":2}"#;
+        let resp = handle(&st, &request("POST", "/v1/svd", body));
+        assert_eq!(resp.status, 200, "{:?}", String::from_utf8_lossy(&resp.body));
+        let v = body_json(&resp);
+        assert_eq!(v.get("method").and_then(Json::as_str), Some("fsvd"));
+        let sigma = v.get("sigma").and_then(Json::as_array).unwrap();
+        assert!((sigma[0].as_f64().unwrap() - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rank_endpoint_finds_planted_rank() {
+        let st = state();
+        let body = r#"{"synth":{"kind":"low_rank_gaussian","rows":120,"cols":90,"rank":6,
+                       "seed":11}}"#;
+        let resp = handle(&st, &request("POST", "/v1/rank", body));
+        assert_eq!(resp.status, 200, "{:?}", String::from_utf8_lossy(&resp.body));
+        let v = body_json(&resp);
+        assert_eq!(v.get("rank").and_then(Json::as_usize), Some(6));
+        assert!(v.get("k_iterations").and_then(Json::as_usize).unwrap() >= 6);
+    }
+
+    #[test]
+    fn return_vectors_includes_factors() {
+        let st = state();
+        let body = r#"{"rows":2,"cols":2,"data":[3,0,0,2],"r":2,"return_vectors":true}"#;
+        let resp = handle(&st, &request("POST", "/v1/svd", body));
+        assert_eq!(resp.status, 200);
+        let v = body_json(&resp);
+        let u = v.get("u").and_then(Json::as_array).unwrap();
+        assert_eq!(u.len(), 2);
+        assert_eq!(u[0].as_array().unwrap().len(), 2);
+        assert!(v.get("v").is_some());
+    }
+
+    #[test]
+    fn malformed_bodies_are_400() {
+        let st = state();
+        for bad in [
+            "",                                        // empty
+            "{not json",                               // parse error
+            "[1,2,3]",                                 // not an object
+            r#"{"r":4}"#,                              // no operator
+            r#"{"rows":2,"cols":2,"data":[1,2,3]}"#,   // wrong data length
+            r#"{"rows":2,"cols":2,"data":[1,2,3,"x"]}"#, // non-numeric entry
+            r#"{"rows":2,"cols":2,"data":[1,2,3,4],"r":0}"#, // r = 0
+            r#"{"rows":0,"cols":2,"data":[]}"#,        // zero dimension
+            r#"{"rows":2,"cols":2,"triplets":[[0,0]]}"#, // short triplet
+            r#"{"rows":2,"cols":2,"triplets":[[5,0,1.0]]}"#, // out of range
+            r#"{"synth":{"kind":"bogus","rows":4,"cols":4,"rank":2}}"#, // bad kind
+            r#"{"rows":2,"cols":2,"data":[1,2,3,4],"accuracy":"warp"}"#, // bad accuracy
+        ] {
+            let resp = handle(&st, &request("POST", "/v1/svd", bad));
+            assert_eq!(resp.status, 400, "body {bad:?} -> {}", resp.status);
+        }
+    }
+
+    #[test]
+    fn job_failure_is_422_not_500() {
+        let st = state();
+        // A zero matrix large enough to route past full SVD breaks GK.
+        let body = r#"{"synth":{"kind":"low_rank_gaussian","rows":700,"cols":600,"rank":0},
+                       "r":3}"#;
+        let resp = handle(&st, &request("POST", "/v1/svd", body));
+        assert_eq!(resp.status, 422, "{:?}", String::from_utf8_lossy(&resp.body));
+    }
+
+    #[test]
+    fn stats_reflect_activity() {
+        let st = state();
+        let body = r#"{"rows":2,"cols":2,"data":[1,0,0,1],"r":1}"#;
+        handle(&st, &request("POST", "/v1/svd", body));
+        handle(&st, &request("POST", "/v1/svd", body));
+        let resp = handle(&st, &request("GET", "/v1/stats", ""));
+        assert_eq!(resp.status, 200);
+        let v = body_json(&resp);
+        assert_eq!(v.get("requests").and_then(Json::as_usize), Some(3));
+        let cache = v.get("cache").unwrap();
+        assert_eq!(cache.get("hits").and_then(Json::as_usize), Some(1));
+        assert_eq!(cache.get("misses").and_then(Json::as_usize), Some(1));
+        let jobs = v.get("jobs").unwrap();
+        assert_eq!(jobs.get("completed").and_then(Json::as_usize), Some(1));
+    }
+}

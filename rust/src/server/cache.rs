@@ -1,0 +1,388 @@
+//! Fingerprint-keyed result cache for the serving edge.
+//!
+//! A factorization is the textbook compute-once/serve-many workload: the
+//! same operator (a user-item matrix, a similarity shard) gets factorized
+//! by many downstream consumers. The cache keys each job by a 64-bit
+//! **FNV-1a content fingerprint** of the operator — shape + every stored
+//! value (dense row-major data, or CSR structure *and* values) + the spec
+//! parameters (`r` / `eps`) + the accuracy class — so a repeated request
+//! is answered from memory without touching the worker pool.
+//!
+//! Eviction is LRU over a bounded entry count **and** a bounded total
+//! byte estimate: values are response-body JSON, which is usually small
+//! (sigma + metadata) but can carry full `u`/`v` factors when the client
+//! asked for `return_vectors` — the byte budget keeps a burst of those
+//! from eating the heap, and entries too large for the budget are simply
+//! not cached. Hits and misses are counted for `/v1/stats`.
+//!
+//! Concurrent identical misses may both compute (no request coalescing);
+//! the second `put` wins harmlessly since both computed the same answer.
+
+use super::json::Json;
+use crate::coordinator::{AccuracyClass, JobSpec};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Incremental 64-bit FNV-1a hasher.
+#[derive(Debug, Clone)]
+pub struct Fnv1a(u64);
+
+impl Default for Fnv1a {
+    fn default() -> Self {
+        Fnv1a(0xcbf2_9ce4_8422_2325)
+    }
+}
+
+impl Fnv1a {
+    /// Fresh hasher with the FNV offset basis.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Absorb raw bytes.
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+
+    /// Absorb a `u64` (little-endian).
+    pub fn write_u64(&mut self, x: u64) {
+        self.write(&x.to_le_bytes());
+    }
+
+    /// Absorb a `usize`.
+    pub fn write_usize(&mut self, x: usize) {
+        self.write_u64(x as u64);
+    }
+
+    /// Absorb an `f64` by bit pattern (distinguishes `-0.0` from `0.0`,
+    /// which is exactly right for "same bytes in, same result out").
+    pub fn write_f64(&mut self, x: f64) {
+        self.write_u64(x.to_bits());
+    }
+
+    /// Current digest.
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+fn accuracy_tag(accuracy: AccuracyClass) -> u8 {
+    match accuracy {
+        AccuracyClass::Exact => 0,
+        AccuracyClass::Balanced => 1,
+        AccuracyClass::Fast => 2,
+    }
+}
+
+/// Content fingerprint of a job: operator bytes + spec params + accuracy.
+/// Two requests with equal fingerprints are answered identically (up to
+/// the stochastic seed, which the service derives per job — the cache is
+/// precisely the statement that recomputing is pointless).
+pub fn fingerprint_spec(spec: &JobSpec, accuracy: AccuracyClass) -> u64 {
+    let mut h = Fnv1a::new();
+    h.write(&[accuracy_tag(accuracy)]);
+    let (m, n) = spec.shape();
+    h.write_usize(m);
+    h.write_usize(n);
+    match spec {
+        JobSpec::PartialSvd { matrix, r } => {
+            h.write(b"svd-dense");
+            h.write_usize(*r);
+            for &x in matrix.as_slice() {
+                h.write_f64(x);
+            }
+        }
+        JobSpec::FullSvd { matrix } => {
+            h.write(b"svd-full");
+            for &x in matrix.as_slice() {
+                h.write_f64(x);
+            }
+        }
+        JobSpec::RankEstimate { matrix, eps } => {
+            h.write(b"rank-dense");
+            h.write_f64(*eps);
+            for &x in matrix.as_slice() {
+                h.write_f64(x);
+            }
+        }
+        JobSpec::SparsePartialSvd { matrix, r } => {
+            h.write(b"svd-csr");
+            h.write_usize(*r);
+            hash_csr(&mut h, matrix);
+        }
+        JobSpec::SparseRankEstimate { matrix, eps } => {
+            h.write(b"rank-csr");
+            h.write_f64(*eps);
+            hash_csr(&mut h, matrix);
+        }
+    }
+    h.finish()
+}
+
+fn hash_csr(h: &mut Fnv1a, a: &crate::linalg::SparseMatrix) {
+    for i in 0..a.rows() {
+        let (cols, vals) = a.row_entries(i);
+        h.write_usize(cols.len()); // row boundary: structure matters
+        for (&c, &v) in cols.iter().zip(vals) {
+            h.write_usize(c);
+            h.write_f64(v);
+        }
+    }
+}
+
+/// Default total byte budget (estimated) across all cached values.
+pub const DEFAULT_MAX_BYTES: usize = 128 << 20;
+
+struct CacheEntry {
+    value: Json,
+    weight: usize,
+    last_used: u64,
+}
+
+struct CacheInner {
+    map: HashMap<u64, CacheEntry>,
+    tick: u64,
+    bytes: usize,
+}
+
+/// Rough heap footprint of a JSON value (enum + container overheads).
+fn approx_weight(v: &Json) -> usize {
+    match v {
+        Json::Null | Json::Bool(_) | Json::Num(_) => 16,
+        Json::Str(s) => 32 + s.len(),
+        Json::Arr(xs) => 32 + xs.iter().map(approx_weight).sum::<usize>(),
+        Json::Obj(ps) => {
+            32 + ps.iter().map(|(k, v)| 48 + k.len() + approx_weight(v)).sum::<usize>()
+        }
+    }
+}
+
+/// Bounded LRU cache from job fingerprint to response JSON.
+pub struct ResultCache {
+    inner: Mutex<CacheInner>,
+    capacity: usize,
+    max_bytes: usize,
+    /// Lookups answered from the cache.
+    pub hits: AtomicU64,
+    /// Lookups that fell through to computation.
+    pub misses: AtomicU64,
+}
+
+impl ResultCache {
+    /// Cache holding at most `capacity` entries (0 disables caching:
+    /// every lookup is a miss and nothing is stored) within the default
+    /// byte budget.
+    pub fn new(capacity: usize) -> Self {
+        Self::with_max_bytes(capacity, DEFAULT_MAX_BYTES)
+    }
+
+    /// Cache with an explicit estimated-byte budget. Values heavier than
+    /// a quarter of the budget are never stored.
+    pub fn with_max_bytes(capacity: usize, max_bytes: usize) -> Self {
+        ResultCache {
+            inner: Mutex::new(CacheInner { map: HashMap::new(), tick: 0, bytes: 0 }),
+            capacity,
+            max_bytes,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Look up a fingerprint; counts the hit/miss and refreshes recency.
+    pub fn get(&self, key: u64) -> Option<Json> {
+        let mut inner = self.inner.lock().expect("cache lock");
+        inner.tick += 1;
+        let tick = inner.tick;
+        match inner.map.get_mut(&key) {
+            Some(entry) => {
+                entry.last_used = tick;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(entry.value.clone())
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Insert (or refresh) an entry, evicting least-recently-used ones
+    /// until both the entry count and the byte budget fit. Values too
+    /// heavy for the budget are skipped entirely.
+    pub fn put(&self, key: u64, value: Json) {
+        if self.capacity == 0 {
+            return;
+        }
+        let weight = approx_weight(&value);
+        if weight > self.max_bytes / 4 {
+            return; // pathological payload: recompute beats hoarding it
+        }
+        let mut inner = self.inner.lock().expect("cache lock");
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some(old) = inner.map.remove(&key) {
+            inner.bytes -= old.weight;
+        }
+        while !inner.map.is_empty()
+            && (inner.map.len() >= self.capacity || inner.bytes + weight > self.max_bytes)
+        {
+            let lru = inner.map.iter().min_by_key(|(_, e)| e.last_used).map(|(&k, _)| k);
+            if let Some(lru) = lru {
+                if let Some(evicted) = inner.map.remove(&lru) {
+                    inner.bytes -= evicted.weight;
+                }
+            }
+        }
+        inner.bytes += weight;
+        inner.map.insert(key, CacheEntry { value, weight, last_used: tick });
+    }
+
+    /// Stored entries.
+    pub fn len(&self) -> usize {
+        self.inner.lock().expect("cache lock").map.len()
+    }
+
+    /// True when nothing is cached.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Configured capacity.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Estimated bytes currently held.
+    pub fn bytes(&self) -> usize {
+        self.inner.lock().expect("cache lock").bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{Matrix, SparseMatrix};
+    use std::sync::Arc;
+
+    #[test]
+    fn fnv1a_matches_reference_vectors() {
+        // Published FNV-1a 64-bit test vectors.
+        let mut h = Fnv1a::new();
+        assert_eq!(h.finish(), 0xcbf2_9ce4_8422_2325);
+        h.write(b"a");
+        assert_eq!(h.finish(), 0xaf63_dc4c_8601_ec8c);
+        let mut h = Fnv1a::new();
+        h.write(b"foobar");
+        assert_eq!(h.finish(), 0x85944171f73967e8);
+    }
+
+    fn dense_spec(seed: f64, r: usize) -> JobSpec {
+        let mut m = Matrix::zeros(4, 3);
+        m.as_mut_slice()[0] = seed;
+        JobSpec::PartialSvd { matrix: Arc::new(m), r }
+    }
+
+    #[test]
+    fn fingerprint_separates_data_params_and_accuracy() {
+        let base = fingerprint_spec(&dense_spec(1.0, 2), AccuracyClass::Balanced);
+        assert_eq!(base, fingerprint_spec(&dense_spec(1.0, 2), AccuracyClass::Balanced));
+        assert_ne!(base, fingerprint_spec(&dense_spec(2.0, 2), AccuracyClass::Balanced));
+        assert_ne!(base, fingerprint_spec(&dense_spec(1.0, 3), AccuracyClass::Balanced));
+        assert_ne!(base, fingerprint_spec(&dense_spec(1.0, 2), AccuracyClass::Fast));
+    }
+
+    #[test]
+    fn fingerprint_separates_sparse_structure() {
+        let a = Arc::new(SparseMatrix::from_triplets(3, 3, &[(0, 1, 2.0)]).unwrap());
+        let b = Arc::new(SparseMatrix::from_triplets(3, 3, &[(1, 0, 2.0)]).unwrap());
+        let fa = fingerprint_spec(
+            &JobSpec::SparsePartialSvd { matrix: a, r: 1 },
+            AccuracyClass::Balanced,
+        );
+        let fb = fingerprint_spec(
+            &JobSpec::SparsePartialSvd { matrix: b, r: 1 },
+            AccuracyClass::Balanced,
+        );
+        assert_ne!(fa, fb);
+    }
+
+    #[test]
+    fn dense_and_sparse_views_of_same_values_differ() {
+        let d = Matrix::eye(3);
+        let s = SparseMatrix::from_dense(&d, 0.0);
+        let fd = fingerprint_spec(
+            &JobSpec::PartialSvd { matrix: Arc::new(d), r: 1 },
+            AccuracyClass::Balanced,
+        );
+        let fs = fingerprint_spec(
+            &JobSpec::SparsePartialSvd { matrix: Arc::new(s), r: 1 },
+            AccuracyClass::Balanced,
+        );
+        assert_ne!(fd, fs);
+    }
+
+    #[test]
+    fn cache_counts_hits_and_misses() {
+        let c = ResultCache::new(8);
+        assert!(c.get(7).is_none());
+        c.put(7, Json::Num(1.0));
+        assert_eq!(c.get(7), Some(Json::Num(1.0)));
+        assert_eq!(c.hits.load(Ordering::Relaxed), 1);
+        assert_eq!(c.misses.load(Ordering::Relaxed), 1);
+        assert_eq!(c.len(), 1);
+        assert!(!c.is_empty());
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_used() {
+        let c = ResultCache::new(2);
+        c.put(1, Json::Num(1.0));
+        c.put(2, Json::Num(2.0));
+        assert!(c.get(1).is_some()); // 1 is now fresher than 2
+        c.put(3, Json::Num(3.0)); // evicts 2
+        assert!(c.get(1).is_some());
+        assert!(c.get(2).is_none());
+        assert!(c.get(3).is_some());
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn reinserting_existing_key_does_not_evict() {
+        let c = ResultCache::new(2);
+        c.put(1, Json::Num(1.0));
+        c.put(2, Json::Num(2.0));
+        c.put(1, Json::Num(10.0)); // refresh, not insert
+        assert_eq!(c.get(1), Some(Json::Num(10.0)));
+        assert!(c.get(2).is_some());
+    }
+
+    #[test]
+    fn byte_budget_evicts_and_rejects_oversized() {
+        // Budget of 1000 estimated bytes; a 100-number array weighs
+        // ~32 + 100*16 = 1632 > 1000/4 -> never stored.
+        let c = ResultCache::with_max_bytes(16, 1000);
+        c.put(1, Json::num_array(&[0.5; 100]));
+        assert!(c.is_empty(), "oversized value must not be cached");
+        // Each 20-number entry weighs 32 + 20*16 = 352: two fit the
+        // budget, the third (1056 > 1000) forces byte-driven evictions.
+        for key in 2..=5 {
+            c.put(key, Json::num_array(&[0.5; 20]));
+        }
+        assert!(c.bytes() <= 1000, "bytes {}", c.bytes());
+        assert_eq!(c.len(), 2, "byte budget should cap at two entries");
+        assert!(c.get(5).is_some(), "most recent entry survives");
+    }
+
+    #[test]
+    fn zero_capacity_disables_storage() {
+        let c = ResultCache::new(0);
+        c.put(1, Json::Num(1.0));
+        assert!(c.get(1).is_none());
+        assert_eq!(c.capacity(), 0);
+        assert!(c.is_empty());
+    }
+}

@@ -1,0 +1,243 @@
+//! Loopback load generator: drive the serving edge with concurrent
+//! clients and report throughput + latency percentiles.
+//!
+//! `fastlr loadgen` (and the smoke tests) use this to answer the only
+//! question that matters for a serving system: with N concurrent clients
+//! issuing a realistic mix — unique partial-SVD jobs, rank estimates,
+//! and repeated jobs that should land in the result cache — what do the
+//! tail latencies look like, and does anything fail?
+//!
+//! The traffic mix per client cycles `shared-svd, unique-svd, rank`:
+//! every client re-issues the *same* shared payload each cycle, so each
+//! client's second shared request is a guaranteed cache hit (its first
+//! one populated the cache before the client moved on).
+
+use super::http::{client_call, client_connect};
+use super::json::Json;
+use super::{start, ServeOptions};
+use crate::bench_harness::Table;
+use crate::{Error, Result};
+use std::net::SocketAddr;
+use std::time::{Duration, Instant};
+
+/// Options for [`run`].
+#[derive(Debug, Clone)]
+pub struct LoadgenOptions {
+    /// Concurrent client threads.
+    pub clients: usize,
+    /// Requests each client issues (sequentially, on one keep-alive
+    /// connection).
+    pub requests_per_client: usize,
+    /// Target server; `None` starts an in-process server on an
+    /// ephemeral port and tears it down afterwards.
+    pub addr: Option<SocketAddr>,
+    /// Base seed for the synthetic payloads.
+    pub seed: u64,
+}
+
+impl Default for LoadgenOptions {
+    fn default() -> Self {
+        LoadgenOptions { clients: 8, requests_per_client: 12, addr: None, seed: 0x10ad }
+    }
+}
+
+/// What the run measured.
+#[derive(Debug)]
+pub struct LoadgenReport {
+    /// Requests issued.
+    pub total: usize,
+    /// Requests that failed (non-200 status or transport error).
+    pub failures: usize,
+    /// Wall-clock time for the whole run.
+    pub wall: Duration,
+    /// Per-request latencies, sorted ascending.
+    pub latencies: Vec<Duration>,
+    /// Final `/v1/stats` snapshot from the server.
+    pub stats: Json,
+}
+
+impl LoadgenReport {
+    /// Overall requests per second.
+    pub fn throughput_rps(&self) -> f64 {
+        if self.wall.is_zero() {
+            return 0.0;
+        }
+        self.total as f64 / self.wall.as_secs_f64()
+    }
+
+    /// Latency quantile (nearest-rank on the sorted samples).
+    pub fn quantile(&self, q: f64) -> Duration {
+        if self.latencies.is_empty() {
+            return Duration::ZERO;
+        }
+        let idx = (q.clamp(0.0, 1.0) * (self.latencies.len() - 1) as f64).round() as usize;
+        self.latencies[idx]
+    }
+
+    /// Render as a `bench_harness` table.
+    pub fn table(&self) -> Table {
+        let ms = |d: Duration| format!("{:.3}", d.as_secs_f64() * 1e3);
+        let cache = self.stats.get("cache");
+        let cache_num = |k: &str| {
+            cache
+                .and_then(|c| c.get(k))
+                .and_then(Json::as_f64)
+                .map(|x| format!("{x}"))
+                .unwrap_or_else(|| "NA".into())
+        };
+        let mut t = Table::new("Loadgen — mixed svd/rank/cache-hit traffic", &["metric", "value"]);
+        t.push_row(vec!["requests".into(), self.total.to_string()]);
+        t.push_row(vec!["failures".into(), self.failures.to_string()]);
+        t.push_row(vec!["wall (s)".into(), format!("{:.3}", self.wall.as_secs_f64())]);
+        t.push_row(vec!["throughput (req/s)".into(), format!("{:.1}", self.throughput_rps())]);
+        t.push_row(vec!["p50 (ms)".into(), ms(self.quantile(0.50))]);
+        t.push_row(vec!["p90 (ms)".into(), ms(self.quantile(0.90))]);
+        t.push_row(vec!["p99 (ms)".into(), ms(self.quantile(0.99))]);
+        t.push_row(vec!["max (ms)".into(), ms(self.quantile(1.0))]);
+        t.push_row(vec!["cache hits".into(), cache_num("hits")]);
+        t.push_row(vec!["cache misses".into(), cache_num("misses")]);
+        t
+    }
+}
+
+/// The request body a given `(client, i)` slot issues.
+fn request_for(client: usize, i: usize, seed: u64) -> (&'static str, String) {
+    match i % 3 {
+        0 => (
+            // Shared payload: identical across clients and cycles — the
+            // cache-hit traffic class.
+            "/v1/svd",
+            format!(
+                r#"{{"synth":{{"kind":"low_rank_gaussian","rows":96,"cols":72,"rank":4,"seed":{seed}}},"r":4}}"#
+            ),
+        ),
+        1 => (
+            // Unique payload (seed varies): always a cache miss, and big
+            // enough to take the direct (non-batched) submit path.
+            "/v1/svd",
+            format!(
+                r#"{{"synth":{{"kind":"low_rank_gaussian","rows":150,"cols":120,"rank":5,"seed":{}}},"r":5}}"#,
+                seed.wrapping_add(1 + (client * 1000 + i) as u64)
+            ),
+        ),
+        _ => (
+            "/v1/rank",
+            format!(
+                r#"{{"synth":{{"kind":"low_rank_gaussian","rows":100,"cols":80,"rank":5,"seed":{}}},"eps":1e-8}}"#,
+                seed.wrapping_add(2 + (client * 1000 + i) as u64)
+            ),
+        ),
+    }
+}
+
+/// Run the load: N clients × M requests each, then a `/v1/stats` scrape.
+pub fn run(opts: &LoadgenOptions) -> Result<LoadgenReport> {
+    if opts.clients == 0 || opts.requests_per_client == 0 {
+        return Err(Error::InvalidArg("loadgen: clients and requests must be >= 1".into()));
+    }
+    // In-process server unless pointed at an external one. Connection
+    // workers sized so every client gets a slot.
+    let local = match opts.addr {
+        Some(_) => None,
+        None => Some(start(ServeOptions {
+            port: 0,
+            conn_workers: opts.clients + 4,
+            ..Default::default()
+        })?),
+    };
+    let addr = opts.addr.unwrap_or_else(|| local.as_ref().expect("local server").local_addr());
+
+    let t0 = Instant::now();
+    let results: Vec<Vec<(bool, Duration)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..opts.clients)
+            .map(|client| {
+                scope.spawn(move || {
+                    let mut out = Vec::with_capacity(opts.requests_per_client);
+                    let Ok(mut conn) = client_connect(&addr) else {
+                        out.resize(opts.requests_per_client, (false, Duration::ZERO));
+                        return out;
+                    };
+                    for i in 0..opts.requests_per_client {
+                        let (path, body) = request_for(client, i, opts.seed);
+                        let r0 = Instant::now();
+                        let ok = matches!(
+                            client_call(&mut conn, "POST", path, Some(&body)),
+                            Ok((200, _))
+                        );
+                        out.push((ok, r0.elapsed()));
+                    }
+                    out
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("loadgen client")).collect()
+    });
+    let wall = t0.elapsed();
+
+    let mut latencies = Vec::with_capacity(opts.clients * opts.requests_per_client);
+    let mut failures = 0usize;
+    for per_client in &results {
+        for &(ok, d) in per_client {
+            if !ok {
+                failures += 1;
+            }
+            latencies.push(d);
+        }
+    }
+    latencies.sort();
+
+    let stats = {
+        let mut conn = client_connect(&addr)?;
+        let (status, body) = client_call(&mut conn, "GET", "/v1/stats", None)?;
+        if status == 200 {
+            Json::parse(&body)?
+        } else {
+            Json::Null
+        }
+    };
+    if let Some(srv) = local {
+        srv.shutdown();
+    }
+    Ok(LoadgenReport {
+        total: opts.clients * opts.requests_per_client,
+        failures,
+        wall,
+        latencies,
+        stats,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loopback_mixed_load_has_zero_failures() {
+        let report = run(&LoadgenOptions {
+            clients: 3,
+            requests_per_client: 4,
+            ..Default::default()
+        })
+        .unwrap();
+        assert_eq!(report.total, 12);
+        assert_eq!(report.failures, 0, "stats: {}", report.stats);
+        assert_eq!(report.latencies.len(), 12);
+        // Each client's second shared request (i = 3) is a guaranteed
+        // cache hit: its own i = 0 request populated the cache.
+        let hits = report
+            .stats
+            .get("cache")
+            .and_then(|c| c.get("hits"))
+            .and_then(Json::as_usize)
+            .unwrap();
+        assert!(hits >= 3, "cache hits {hits}");
+        let t = report.table().render_markdown();
+        assert!(t.contains("throughput"));
+        assert!(report.quantile(0.5) <= report.quantile(0.99));
+    }
+
+    #[test]
+    fn rejects_zero_clients() {
+        assert!(run(&LoadgenOptions { clients: 0, ..Default::default() }).is_err());
+    }
+}

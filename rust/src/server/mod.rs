@@ -1,0 +1,163 @@
+//! The network serving edge: HTTP + JSON + result cache in front of the
+//! coordinator.
+//!
+//! ```text
+//!        TCP             parse            fingerprint        route/execute
+//!  client ──► http.rs ──► api.rs ──► cache.rs ──(miss)──► coordinator
+//!                 ▲           │            │(hit)
+//!                 └── JSON ◄──┴────────────┘
+//!                   (json.rs)
+//! ```
+//!
+//! * [`http`]    — hand-rolled HTTP/1.1 over `std::net`: connection
+//!   thread pool, keep-alive, graceful shutdown. Zero dependencies.
+//! * [`json`]    — the wire codec: a small JSON value type with parser
+//!   and serializer.
+//! * [`api`]     — `POST /v1/svd`, `POST /v1/rank`, `GET /v1/healthz`,
+//!   `GET /v1/stats`; translates payloads into [`crate::coordinator`]
+//!   job specs.
+//! * [`cache`]   — LRU result cache keyed by an FNV-1a content
+//!   fingerprint of the operator, so one factorization serves many
+//!   consumers (the paper's compute profile, made a serving property).
+//! * [`loadgen`] — loopback load generator (`fastlr loadgen`) reporting
+//!   throughput and latency percentiles through
+//!   [`crate::bench_harness`].
+//!
+//! [`start`] wires the stack together; `fastlr serve` is a thin wrapper
+//! around it.
+
+pub mod api;
+pub mod cache;
+pub mod http;
+pub mod json;
+pub mod loadgen;
+
+pub use api::ApiState;
+pub use cache::{fingerprint_spec, Fnv1a, ResultCache};
+pub use http::{HttpConfig, HttpServer, Request, Response};
+pub use json::Json;
+
+use crate::coordinator::{FactorizationService, ServiceConfig};
+use crate::Result;
+use std::net::SocketAddr;
+use std::sync::Arc;
+
+/// Options for [`start`].
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Bind host.
+    pub host: String,
+    /// Bind port (0 = ephemeral, resolved via [`RunningServer::local_addr`]).
+    pub port: u16,
+    /// Factorization worker threads.
+    pub workers: usize,
+    /// Service queue depth (backpressure).
+    pub queue_depth: usize,
+    /// Seed base for stochastic algorithms.
+    pub seed: u64,
+    /// Connection-handling threads (= max concurrent connections).
+    pub conn_workers: usize,
+    /// Result-cache capacity in entries (0 disables caching).
+    pub cache_capacity: usize,
+    /// Jobs at or below this many matrix entries go through the
+    /// micro-batcher instead of straight onto the queue.
+    pub batch_threshold: usize,
+    /// Largest accepted request body in bytes.
+    pub max_body: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            host: "127.0.0.1".into(),
+            port: 7878,
+            workers: crate::linalg::num_threads().min(4),
+            queue_depth: 64,
+            seed: 0x5eed,
+            conn_workers: 32,
+            cache_capacity: 128,
+            batch_threshold: 1 << 14,
+            max_body: 256 << 20,
+        }
+    }
+}
+
+/// A bound, serving stack. Dropping it shuts everything down gracefully
+/// (HTTP first — declared first — then the worker pool drains).
+pub struct RunningServer {
+    /// The HTTP front end.
+    pub http: HttpServer,
+    /// Handler state (service, cache, counters) — exposed for tests and
+    /// the load generator.
+    pub state: Arc<ApiState>,
+}
+
+impl RunningServer {
+    /// The bound address (resolves ephemeral ports).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.http.local_addr()
+    }
+
+    /// Signal graceful shutdown (idempotent; `Drop` joins the threads).
+    pub fn shutdown(&self) {
+        self.http.shutdown()
+    }
+
+    /// Block the calling thread until an external shutdown — the
+    /// `fastlr serve` foreground mode.
+    pub fn serve_forever(self) {
+        let RunningServer { http, state } = self;
+        http.serve_forever();
+        drop(state);
+    }
+}
+
+/// Build the full stack: factorization service → batcher + cache → API
+/// handler → HTTP server.
+pub fn start(opts: ServeOptions) -> Result<RunningServer> {
+    let service = Arc::new(FactorizationService::new(ServiceConfig {
+        workers: opts.workers,
+        queue_depth: opts.queue_depth,
+        seed: opts.seed,
+        ..Default::default()
+    })?);
+    let state = Arc::new(ApiState::new(service, opts.cache_capacity, opts.batch_threshold));
+    let handler: http::Handler = {
+        let state = state.clone();
+        Arc::new(move |req: &Request| api::handle(&state, req))
+    };
+    let http = HttpServer::bind(
+        &format!("{}:{}", opts.host, opts.port),
+        HttpConfig {
+            conn_workers: opts.conn_workers,
+            max_body: opts.max_body,
+            ..Default::default()
+        },
+        handler,
+    )?;
+    Ok(RunningServer { http, state })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::http::{client_call, client_connect};
+
+    #[test]
+    fn full_stack_serves_over_loopback() {
+        let srv = start(ServeOptions {
+            port: 0,
+            workers: 2,
+            conn_workers: 4,
+            cache_capacity: 8,
+            ..Default::default()
+        })
+        .unwrap();
+        let mut c = client_connect(&srv.local_addr()).unwrap();
+        let (status, body) = client_call(&mut c, "GET", "/v1/healthz", None).unwrap();
+        assert_eq!(status, 200);
+        let v = Json::parse(&body).unwrap();
+        assert_eq!(v.get("status").and_then(Json::as_str), Some("ok"));
+        srv.shutdown();
+    }
+}

@@ -97,6 +97,63 @@ fn service_results_match_direct_calls() {
     }
 }
 
+/// Many threads hammering `submit` concurrently: every handle resolves,
+/// every id is unique, nothing is lost to the queue's backpressure (the
+/// depth here is far below the in-flight count, so submitters block and
+/// resume).
+#[test]
+fn concurrent_submitters_all_resolve_with_unique_ids() {
+    use std::collections::HashSet;
+    use std::sync::atomic::Ordering;
+
+    const THREADS: usize = 8;
+    const PER_THREAD: usize = 6;
+    let mut rng = Pcg64::seed_from_u64(504);
+    let svc = Arc::new(
+        FactorizationService::new(ServiceConfig {
+            workers: 3,
+            queue_depth: 4,
+            ..Default::default()
+        })
+        .unwrap(),
+    );
+    let mats: Vec<Arc<fastlr::linalg::Matrix>> = (0..4)
+        .map(|_| Arc::new(low_rank_gaussian(100, 80, 4, &mut rng)))
+        .collect();
+    let ids: Vec<u64> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..THREADS)
+            .map(|t| {
+                let svc = svc.clone();
+                let mats = mats.clone();
+                scope.spawn(move || {
+                    let mut ids = Vec::with_capacity(PER_THREAD);
+                    for i in 0..PER_THREAD {
+                        let m = mats[(t + i) % mats.len()].clone();
+                        let spec = if i % 3 == 2 {
+                            JobSpec::RankEstimate { matrix: m, eps: 1e-8 }
+                        } else {
+                            JobSpec::PartialSvd { matrix: m, r: 4 }
+                        };
+                        let h = svc
+                            .submit(JobRequest { spec, accuracy: AccuracyClass::Balanced })
+                            .expect("submit");
+                        let res = h.wait().expect("wait");
+                        assert!(res.outcome.is_ok(), "job {} failed", res.id);
+                        ids.push(res.id);
+                    }
+                    ids
+                })
+            })
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().expect("submitter")).collect()
+    });
+    assert_eq!(ids.len(), THREADS * PER_THREAD);
+    let unique: HashSet<u64> = ids.iter().copied().collect();
+    assert_eq!(unique.len(), THREADS * PER_THREAD, "duplicate job ids");
+    assert_eq!(svc.metrics.completed.load(Ordering::Relaxed), (THREADS * PER_THREAD) as u64);
+    assert_eq!(svc.metrics.failed.load(Ordering::Relaxed), 0);
+}
+
 /// Smoke-scale experiment pipelines run end to end and keep their
 /// paper-shape invariants (each module's own tests assert the details;
 /// this guards the composition).

@@ -1,0 +1,162 @@
+//! Loopback end-to-end tests of the serving edge: a real server bound on
+//! 127.0.0.1, real TCP clients, the full http → api → cache →
+//! coordinator path.
+
+use fastlr::server::http::{client_call, client_connect};
+use fastlr::server::json::Json;
+use fastlr::server::{start, RunningServer, ServeOptions};
+use std::sync::atomic::Ordering;
+
+fn start_server() -> RunningServer {
+    start(ServeOptions {
+        port: 0,
+        workers: 2,
+        conn_workers: 16,
+        cache_capacity: 64,
+        ..Default::default()
+    })
+    .expect("bind loopback server")
+}
+
+fn get_stats(srv: &RunningServer) -> Json {
+    let mut c = client_connect(&srv.local_addr()).unwrap();
+    let (status, body) = client_call(&mut c, "GET", "/v1/stats", None).unwrap();
+    assert_eq!(status, 200);
+    Json::parse(&body).unwrap()
+}
+
+fn stat_usize(stats: &Json, group: &str, field: &str) -> usize {
+    stats.get(group).and_then(|g| g.get(field)).and_then(Json::as_usize).unwrap()
+}
+
+/// Acceptance: >= 8 concurrent clients, mixed svd/rank workload, zero
+/// failures, keep-alive connections.
+#[test]
+fn eight_concurrent_clients_mixed_workload_zero_failures() {
+    let srv = start_server();
+    let addr = srv.local_addr();
+    const CLIENTS: usize = 8;
+    let failures: usize = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..CLIENTS)
+            .map(|client| {
+                scope.spawn(move || {
+                    let mut bad = 0usize;
+                    let mut conn = match client_connect(&addr) {
+                        Ok(c) => c,
+                        Err(_) => return 3,
+                    };
+                    // One connection, three requests: unique svd, rank,
+                    // and a payload shared by every client.
+                    let svd_body = format!(
+                        r#"{{"synth":{{"kind":"low_rank_gaussian","rows":140,"cols":100,"rank":5,"seed":{client}}},"r":5}}"#
+                    );
+                    match client_call(&mut conn, "POST", "/v1/svd", Some(&svd_body)) {
+                        Ok((200, body)) => {
+                            let v = Json::parse(&body).unwrap();
+                            let sigma = v.get("sigma").and_then(Json::as_array).unwrap();
+                            assert_eq!(sigma.len(), 5);
+                        }
+                        _ => bad += 1,
+                    }
+                    let rank_body = format!(
+                        r#"{{"synth":{{"kind":"low_rank_gaussian","rows":100,"cols":80,"rank":4,"seed":{}}}}}"#,
+                        100 + client
+                    );
+                    match client_call(&mut conn, "POST", "/v1/rank", Some(&rank_body)) {
+                        Ok((200, body)) => {
+                            let v = Json::parse(&body).unwrap();
+                            assert_eq!(v.get("rank").and_then(Json::as_usize), Some(4));
+                        }
+                        _ => bad += 1,
+                    }
+                    let shared = r#"{"synth":{"kind":"low_rank_gaussian","rows":80,"cols":60,"rank":3,"seed":999},"r":3}"#;
+                    match client_call(&mut conn, "POST", "/v1/svd", Some(shared)) {
+                        Ok((200, _)) => {}
+                        _ => bad += 1,
+                    }
+                    bad
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("client thread")).sum()
+    });
+    assert_eq!(failures, 0);
+    let stats = get_stats(&srv);
+    assert_eq!(stat_usize(&stats, "jobs", "failed"), 0);
+    // 3 requests per client + this stats scrape.
+    assert!(stats.get("requests").and_then(Json::as_usize).unwrap() >= 3 * CLIENTS + 1);
+    srv.shutdown();
+}
+
+/// Acceptance: a repeated identical request is answered from the cache —
+/// the hit counter increments and no second factorization executes.
+#[test]
+fn repeated_request_is_served_from_cache_without_recompute() {
+    let srv = start_server();
+    let mut conn = client_connect(&srv.local_addr()).unwrap();
+    let body = r#"{"synth":{"kind":"low_rank_gaussian","rows":90,"cols":70,"rank":4,"seed":5},"r":4}"#;
+
+    let (s1, b1) = client_call(&mut conn, "POST", "/v1/svd", Some(body)).unwrap();
+    assert_eq!(s1, 200);
+    let v1 = Json::parse(&b1).unwrap();
+    assert_eq!(v1.get("cached"), Some(&Json::Bool(false)));
+    let completed_before = srv.state.service.metrics.completed.load(Ordering::Relaxed);
+    let hits_before = srv.state.cache.hits.load(Ordering::Relaxed);
+
+    let (s2, b2) = client_call(&mut conn, "POST", "/v1/svd", Some(body)).unwrap();
+    assert_eq!(s2, 200);
+    let v2 = Json::parse(&b2).unwrap();
+    assert_eq!(v2.get("cached"), Some(&Json::Bool(true)));
+    assert_eq!(v2.get("sigma"), v1.get("sigma"));
+
+    // Hit counter incremented; the worker pool never saw a second job.
+    assert_eq!(srv.state.cache.hits.load(Ordering::Relaxed), hits_before + 1);
+    assert_eq!(srv.state.service.metrics.completed.load(Ordering::Relaxed), completed_before);
+    // The same numbers are visible over the wire.
+    let stats = get_stats(&srv);
+    assert!(stat_usize(&stats, "cache", "hits") >= 1);
+    assert_eq!(stat_usize(&stats, "jobs", "completed"), completed_before as usize);
+    srv.shutdown();
+}
+
+/// Acceptance: malformed bodies answer 400 — and the connection stays
+/// usable (the error is an API response, not a transport failure).
+#[test]
+fn malformed_body_gets_400_and_connection_survives() {
+    let srv = start_server();
+    let mut conn = client_connect(&srv.local_addr()).unwrap();
+    for bad in ["{not json at all", r#"{"r":4}"#, r#"{"rows":2,"cols":2,"data":[1]}"#] {
+        let (status, body) = client_call(&mut conn, "POST", "/v1/svd", Some(bad)).unwrap();
+        assert_eq!(status, 400, "body {bad:?}");
+        assert!(Json::parse(&body).unwrap().get("error").is_some());
+    }
+    // Same keep-alive connection still serves good requests.
+    let (status, _) = client_call(&mut conn, "GET", "/v1/healthz", None).unwrap();
+    assert_eq!(status, 200);
+    srv.shutdown();
+}
+
+/// Dense-inline and sparse-triplet payloads both round-trip over the
+/// wire, and the sparse one reports a matrix-free method.
+#[test]
+fn wire_payload_variants_round_trip() {
+    let srv = start_server();
+    let mut conn = client_connect(&srv.local_addr()).unwrap();
+    let dense = r#"{"rows":3,"cols":2,"data":[5,0,0,4,0,0],"r":2,"return_vectors":true}"#;
+    let (status, body) = client_call(&mut conn, "POST", "/v1/svd", Some(dense)).unwrap();
+    assert_eq!(status, 200);
+    let v = Json::parse(&body).unwrap();
+    let sigma = v.get("sigma").and_then(Json::as_array).unwrap();
+    assert!((sigma[0].as_f64().unwrap() - 5.0).abs() < 1e-10);
+    assert!((sigma[1].as_f64().unwrap() - 4.0).abs() < 1e-10);
+    assert_eq!(v.get("u").and_then(Json::as_array).unwrap().len(), 3);
+
+    let sparse = r#"{"rows":400,"cols":300,"triplets":[[0,0,3.0],[1,1,2.0],[399,299,1.0]],"r":2}"#;
+    let (status, body) = client_call(&mut conn, "POST", "/v1/svd", Some(sparse)).unwrap();
+    assert_eq!(status, 200);
+    let v = Json::parse(&body).unwrap();
+    assert_eq!(v.get("method").and_then(Json::as_str), Some("fsvd"));
+    let sigma = v.get("sigma").and_then(Json::as_array).unwrap();
+    assert!((sigma[0].as_f64().unwrap() - 3.0).abs() < 1e-9);
+    srv.shutdown();
+}
