@@ -135,6 +135,71 @@ fn main() {
     table.write_json(&json_path).expect("json");
     eprintln!("wrote {}", json_path.display());
 
+    // --- Execution engine: persistent pool vs per-call spawn fan-out. ---
+    // The pre-engine kernels paid thread::scope + per-range spawn on
+    // every call; this isolates that fixed cost against the pooled
+    // parallel_for on a memory-light row fill where scheduling overhead
+    // dominates the arithmetic.
+    let mut exec_table = Table::new(
+        "Execution engine — pooled parallel_for vs per-call scoped spawn",
+        &["rows", "pool (ms)", "spawn (ms)", "speedup"],
+    );
+    let fan_rows: &[usize] = if smoke { &[1 << 12] } else { &[1 << 12, 1 << 16, 1 << 20] };
+    for &rows in fan_rows {
+        let src: Vec<f64> = (0..rows).map(|i| (i as f64) * 0.37 + 1.0).collect();
+        let mut dst = vec![0.0; rows];
+        // Report flops above the serial cutoff so the pool always engages.
+        let flops = fastlr::exec::cost::SERIAL_CUTOFF_FLOPS.max(2 * rows);
+        let (t_pool, _) = time_reps(reps, || {
+            fastlr::exec::parallel_for(flops, &mut dst, 1, |r0, _r1, out| {
+                for (i, o) in out.iter_mut().enumerate() {
+                    *o = src[r0 + i].sqrt();
+                }
+            });
+        });
+        let nt = fastlr::exec::num_threads();
+        let (t_spawn, _) = time_reps(reps, || {
+            // The retired pattern: partition, split the output, spawn a
+            // scoped thread per range.
+            let ranges = fastlr::exec::cost::partition(rows, nt);
+            let mut chunks: Vec<&mut [f64]> = Vec::with_capacity(ranges.len());
+            let mut rest = dst.as_mut_slice();
+            for &(s, e) in &ranges {
+                let (head, tail) = rest.split_at_mut(e - s);
+                chunks.push(head);
+                rest = tail;
+            }
+            let src = &src;
+            std::thread::scope(|scope| {
+                for (&(s, _e), chunk) in ranges.iter().zip(chunks) {
+                    scope.spawn(move || {
+                        for (i, o) in chunk.iter_mut().enumerate() {
+                            *o = src[s + i].sqrt();
+                        }
+                    });
+                }
+            });
+        });
+        exec_table.push_row(vec![
+            rows.to_string(),
+            format!("{:.4}", t_pool.median_secs() * 1e3),
+            format!("{:.4}", t_spawn.median_secs() * 1e3),
+            format!("{:.1}x", t_spawn.median_secs() / t_pool.median_secs()),
+        ]);
+    }
+    println!("{}", exec_table.render_markdown());
+    let eg = fastlr::exec::stats();
+    eprintln!(
+        "engine gauges: threads={} parallel_jobs={} tasks={} steals={}",
+        eg.threads, eg.parallel_jobs, eg.tasks, eg.steals
+    );
+    let exec_json = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("workspace root")
+        .join("BENCH_exec.json");
+    exec_table.write_json(&exec_json).expect("json");
+    eprintln!("wrote {}", exec_json.display());
+
     // --- Ablation 1: B^T B eig — tridiagonal QL vs dense sym_eig. ---
     let mut ab = Table::new(
         "Ablation — eig of B^T B: tridiagonal fast path vs dense",

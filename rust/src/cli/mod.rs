@@ -205,7 +205,7 @@ fn cmd_serve(args: &Args) -> crate::Result<i32> {
     let opts = crate::server::ServeOptions {
         host: args.get_str("host", "127.0.0.1"),
         port: port as u16,
-        workers: args.get_usize("workers", crate::linalg::num_threads().min(4))?,
+        workers: args.get_usize("workers", crate::exec::default_workers())?,
         conn_workers: args.get_usize("conn-threads", 32)?,
         cache_capacity: args.get_usize("cache", 128)?,
         seed: args.get_u64("seed", 0x5eed)?,

@@ -36,7 +36,9 @@ pub struct ServiceConfig {
 impl Default for ServiceConfig {
     fn default() -> Self {
         ServiceConfig {
-            workers: crate::linalg::num_threads().min(4),
+            // Job-level concurrency only: each job fans its kernels out
+            // through the shared execution engine.
+            workers: crate::exec::default_workers(),
             queue_depth: 64,
             policy: RoutePolicy::default(),
             seed: 0x5eed,

@@ -1,0 +1,196 @@
+//! The single cost model behind every kernel's serial-vs-parallel split.
+//!
+//! Before the engine, each threaded kernel carried its own threshold
+//! (`gemm`: `1<<16` multiply-adds, `gemv`: `1<<17` elements, `spmv`:
+//! `1<<16` stored entries) and its own `partition_ranges(n,
+//! num_threads())` fan-out. The engine replaces all of that with one
+//! currency — **flops, as reported by the caller** (`2·m·n·k` for GEMM
+//! variants, `2·m·n` for GEMV variants, `2·nnz` for SPMV variants) — and
+//! two decisions made here:
+//!
+//! * **serial fallback**: below [`SERIAL_CUTOFF_FLOPS`] the call runs
+//!   inline on the caller and the pool is never touched;
+//! * **chunking**: parallel calls split so each chunk carries at least
+//!   [`MIN_CHUNK_FLOPS`]. Independent-output loops ([`plan_for`]) may
+//!   scale chunk count with the machine — their results do not depend on
+//!   chunk boundaries. Reductions ([`plan_reduce`]) use a
+//!   machine-independent plan so the partial-merge tree, and with it
+//!   every low-order floating-point bit, is a pure function of the
+//!   problem size.
+
+/// Flop count below which a call runs inline on the caller thread.
+///
+/// ~262k flops is a few microseconds of FMA work — on the order of one
+/// cross-thread handoff — so anything smaller is pure overhead to
+/// parallelize. One constant for every kernel; callers report flops, the
+/// model only compares.
+pub const SERIAL_CUTOFF_FLOPS: usize = 1 << 18;
+
+/// Minimum flops per chunk, so chunk-claiming traffic stays noise.
+pub const MIN_CHUNK_FLOPS: usize = 1 << 16;
+
+/// Fan-in cap for reductions. Deliberately a constant — never a function
+/// of the thread count — so the merge order is machine-independent; kept
+/// small because every reduction chunk owns a full-size accumulator.
+pub const MAX_REDUCE_CHUNKS: usize = 8;
+
+/// Hard cap on chunks per independent-output call (bounds claim traffic
+/// however large the flop count gets).
+pub const MAX_FOR_CHUNKS: usize = 256;
+
+/// How a call should execute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Plan {
+    /// Run inline on the caller; the pool is not touched.
+    Serial,
+    /// Split into this many contiguous chunks (`>= 2`).
+    Parallel {
+        /// Number of chunks.
+        chunks: usize,
+    },
+}
+
+/// Plan an independent-output loop over `items` rows costing `flops`.
+///
+/// Chunk count may scale with the machine: disjoint-output bodies
+/// produce identical bits regardless of where the chunk boundaries fall.
+pub fn plan_for(flops: usize, items: usize) -> Plan {
+    if items <= 1 || flops < SERIAL_CUTOFF_FLOPS {
+        return Plan::Serial;
+    }
+    let lanes = 4 * super::num_threads();
+    let chunks = (flops / MIN_CHUNK_FLOPS).min(lanes).min(MAX_FOR_CHUNKS).min(items);
+    if chunks <= 1 {
+        Plan::Serial
+    } else {
+        Plan::Parallel { chunks }
+    }
+}
+
+/// Plan a reduction over `items` rows costing `flops`.
+///
+/// Unlike [`plan_for`], the chunk count here depends only on the problem
+/// size (capped at [`MAX_REDUCE_CHUNKS`]): partials are merged in chunk
+/// order, so a size-only plan makes the reduction tree — and the result,
+/// bit for bit — independent of `FASTLR_THREADS`.
+pub fn plan_reduce(flops: usize, items: usize) -> Plan {
+    if items <= 1 || flops < SERIAL_CUTOFF_FLOPS {
+        return Plan::Serial;
+    }
+    let chunks = (flops / MIN_CHUNK_FLOPS).min(MAX_REDUCE_CHUNKS).min(items);
+    if chunks <= 1 {
+        Plan::Serial
+    } else {
+        Plan::Parallel { chunks }
+    }
+}
+
+/// The exact chunk ranges a reduction of this size uses — exposed so
+/// diagnostics and the determinism tests can replicate the merge order.
+pub fn reduce_partition(flops: usize, items: usize) -> Vec<(usize, usize)> {
+    match plan_reduce(flops, items) {
+        Plan::Serial => {
+            if items == 0 {
+                vec![]
+            } else {
+                vec![(0, items)]
+            }
+        }
+        Plan::Parallel { chunks } => partition(items, chunks),
+    }
+}
+
+/// Partition `n` items into at most `parts` contiguous ranges of nearly
+/// equal size. Returns `(start, end)` pairs; never returns empty ranges.
+pub fn partition(n: usize, parts: usize) -> Vec<(usize, usize)> {
+    if n == 0 {
+        return vec![];
+    }
+    let parts = parts.max(1).min(n);
+    let base = n / parts;
+    let rem = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for i in 0..parts {
+        let len = base + usize::from(i < rem);
+        out.push((start, start + len));
+        start += len;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_covers_everything_without_overlap() {
+        for n in [0usize, 1, 5, 16, 17, 1000] {
+            for p in [1usize, 2, 3, 8, 64] {
+                let ranges = partition(n, p);
+                let total: usize = ranges.iter().map(|(s, e)| e - s).sum();
+                assert_eq!(total, n, "n={n} p={p}");
+                for w in ranges.windows(2) {
+                    assert_eq!(w[0].1, w[1].0);
+                }
+                assert!(ranges.iter().all(|(s, e)| s < e));
+            }
+        }
+    }
+
+    #[test]
+    fn cutoff_splits_serial_from_parallel() {
+        assert_eq!(plan_for(SERIAL_CUTOFF_FLOPS - 1, 1 << 20), Plan::Serial);
+        assert!(matches!(
+            plan_for(SERIAL_CUTOFF_FLOPS, 1 << 20),
+            Plan::Parallel { chunks } if chunks >= 2
+        ));
+        assert_eq!(plan_reduce(SERIAL_CUTOFF_FLOPS - 1, 1 << 20), Plan::Serial);
+        assert!(matches!(
+            plan_reduce(SERIAL_CUTOFF_FLOPS, 1 << 20),
+            Plan::Parallel { chunks } if chunks >= 2
+        ));
+    }
+
+    #[test]
+    fn single_item_is_always_serial() {
+        assert_eq!(plan_for(usize::MAX, 1), Plan::Serial);
+        assert_eq!(plan_reduce(usize::MAX, 1), Plan::Serial);
+    }
+
+    #[test]
+    fn chunk_counts_respect_their_caps() {
+        if let Plan::Parallel { chunks } = plan_for(usize::MAX / 2, usize::MAX / 2) {
+            assert!(chunks <= MAX_FOR_CHUNKS);
+        } else {
+            panic!("huge call must parallelize");
+        }
+        if let Plan::Parallel { chunks } = plan_reduce(usize::MAX / 2, usize::MAX / 2) {
+            assert!(chunks <= MAX_REDUCE_CHUNKS);
+        } else {
+            panic!("huge reduction must parallelize");
+        }
+    }
+
+    #[test]
+    fn chunks_never_exceed_items() {
+        for items in [2usize, 3, 7, 100] {
+            if let Plan::Parallel { chunks } = plan_for(usize::MAX / 2, items) {
+                assert!(chunks <= items);
+            }
+            if let Plan::Parallel { chunks } = plan_reduce(usize::MAX / 2, items) {
+                assert!(chunks <= items);
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_partition_matches_plan() {
+        assert_eq!(reduce_partition(0, 0), vec![]);
+        assert_eq!(reduce_partition(1, 10), vec![(0, 10)]);
+        let ranges = reduce_partition(usize::MAX / 2, 100);
+        assert_eq!(ranges.len(), MAX_REDUCE_CHUNKS);
+        assert_eq!(ranges.first(), Some(&(0, 13)));
+        assert_eq!(ranges.last().map(|&(_, e)| e), Some(100));
+    }
+}

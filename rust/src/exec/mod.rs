@@ -1,0 +1,81 @@
+//! The shared execution engine: one persistent worker pool under every
+//! compute layer.
+//!
+//! The paper's Algorithms 1–3 are matvec-dominated — GK-bidiagonalization
+//! and the Ritz refinement call `gemv`/`spmv`/`gemm` hundreds of times per
+//! job. Before this module existed, each of those kernels paid
+//! `std::thread::scope` + per-range `spawn` on every call, and every
+//! concurrent serving job fanned out `num_threads()` fresh OS threads per
+//! kernel invocation: four uncoordinated threading sites (dense GEMM,
+//! dense GEMV, sparse SPMV, and the coordinator/HTTP pools around them).
+//! The engine replaces them with:
+//!
+//! * a lazily-started global pool of `num_threads() - 1` workers
+//!   ([`pool`]): each parallel call is a chunk deque the submitting
+//!   thread drains from the front while pool workers steal from the same
+//!   counter, so a fully-contended pool degrades to inline execution
+//!   instead of oversubscribing the machine;
+//! * a scoped [`parallel_for`] / [`parallel_reduce`] API whose serial
+//!   fallback and chunk plans come from one cost model ([`cost`]),
+//!   replacing the three divergent per-kernel `PAR_THRESHOLD` constants;
+//! * deterministic reductions: the merge order is a pure function of the
+//!   problem size, never of the thread count, so results are
+//!   bit-identical under any `FASTLR_THREADS` (`tests/determinism.rs`
+//!   pins this, and CI runs the suite under 1 and 8 threads);
+//! * observability gauges ([`stats`]) surfaced in `GET /v1/stats`.
+//!
+//! The coordinator's job workers and the HTTP connection workers are
+//! thin threads (queue pops and socket reads); all of their CPU-heavy
+//! work funnels through this one pool, so kernel parallelism shrinks
+//! gracefully as more requests are in flight.
+
+pub mod cost;
+pub mod pool;
+pub mod stats;
+
+pub use pool::{parallel_for, parallel_reduce, with_serial};
+pub use stats::{stats, ExecStats};
+
+/// Number of compute lanes the engine targets: pool workers plus the
+/// submitting thread. Resolved once; override with the `FASTLR_THREADS`
+/// environment variable (`FASTLR_THREADS=1` spawns no workers and runs
+/// every call inline).
+pub fn num_threads() -> usize {
+    use std::sync::OnceLock;
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
+        if let Ok(s) = std::env::var("FASTLR_THREADS") {
+            if let Ok(n) = s.parse::<usize>() {
+                if n >= 1 {
+                    return n;
+                }
+            }
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    })
+}
+
+/// Default worker count for job-level pools (the coordinator service,
+/// `fastlr serve`, the CLI). A handful of jobs in flight saturates the
+/// machine because each job fans its kernels out through the engine;
+/// more would only contend for the same lanes.
+pub fn default_workers() -> usize {
+    num_threads().min(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn num_threads_positive() {
+        assert!(num_threads() >= 1);
+    }
+
+    #[test]
+    fn default_workers_bounded() {
+        let w = default_workers();
+        assert!(w >= 1 && w <= 4);
+        assert!(w <= num_threads());
+    }
+}

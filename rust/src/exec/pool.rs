@@ -1,0 +1,462 @@
+//! The persistent worker pool: per-call chunk deques with work stealing.
+//!
+//! One global pool starts lazily on the first parallel call and owns
+//! `num_threads() - 1` workers. Each parallel call becomes a `Job`: a
+//! chunk deque (an atomic head over the fixed chunk plan) plus a
+//! completion latch. The submitting thread drains its own deque while
+//! pool workers steal chunks from the same counter, so
+//!
+//! * a single call uses the whole machine (caller + workers),
+//! * under contention (many serving jobs in flight) workers are shared
+//!   and each caller degrades toward computing its call inline — the
+//!   pool never oversubscribes the machine the way per-call
+//!   `thread::scope` fan-outs did, and
+//! * `FASTLR_THREADS=1` spawns no workers at all: every call runs
+//!   inline, with the same chunk plan and merge order, so results are
+//!   bit-identical to pooled execution.
+//!
+//! Nested parallel calls (a kernel invoked from inside a chunk body, as
+//! the Krylov block-apply loops do) execute inline on the running thread
+//! instead of re-entering the queue: one level of parallelism is spent
+//! where the caller put it, and the engine cannot deadlock on itself.
+
+use super::cost::{self, Plan};
+use super::stats;
+use std::cell::Cell;
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+
+thread_local! {
+    /// True while this thread executes engine chunks (always, for pool
+    /// workers; while draining its own call, for submitters). Nested
+    /// parallel calls then run inline instead of re-entering the queue.
+    static IN_ENGINE: Cell<bool> = const { Cell::new(false) };
+    /// Depth of [`with_serial`] scopes on this thread.
+    static FORCE_SERIAL: Cell<usize> = const { Cell::new(0) };
+}
+
+/// One parallel call: a chunk deque (`next` is the shared head) plus a
+/// completion latch. `task` is the caller's chunk runner with its
+/// lifetime erased; see `run_parallel` for the safety argument.
+struct Job {
+    task: *const (dyn Fn(usize) + Sync),
+    chunks: usize,
+    next: AtomicUsize,
+    done: Mutex<usize>,
+    finished: Condvar,
+    panicked: AtomicBool,
+}
+
+// SAFETY: `task` is only dereferenced while the submitting thread blocks
+// in `run_parallel`, which keeps the referent alive; every other field
+// is plain sync primitives.
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+impl Job {
+    /// All chunks claimed (not necessarily finished).
+    fn exhausted(&self) -> bool {
+        self.next.load(Ordering::Relaxed) >= self.chunks
+    }
+}
+
+struct Shared {
+    queue: Mutex<VecDeque<Arc<Job>>>,
+    ready: Condvar,
+}
+
+struct Engine {
+    shared: Arc<Shared>,
+    workers: usize,
+}
+
+/// The lazily-started global engine. Workers live for the process — they
+/// park on the queue condvar between calls.
+fn engine() -> &'static Engine {
+    static ENGINE: OnceLock<Engine> = OnceLock::new();
+    ENGINE.get_or_init(|| {
+        let workers = super::num_threads().saturating_sub(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            ready: Condvar::new(),
+        });
+        for wid in 0..workers {
+            let shared = shared.clone();
+            std::thread::Builder::new()
+                .name(format!("fastlr-exec-{wid}"))
+                .spawn(move || worker_loop(&shared))
+                .expect("spawn exec worker");
+        }
+        Engine { shared, workers }
+    })
+}
+
+fn worker_loop(shared: &Shared) {
+    IN_ENGINE.with(|f| f.set(true));
+    loop {
+        let job: Arc<Job> = {
+            let mut q = shared.queue.lock().expect("exec queue");
+            loop {
+                // Drop drained deques at the front, then steal from the
+                // oldest live call.
+                while q.front().is_some_and(|j| j.exhausted()) {
+                    q.pop_front();
+                }
+                if let Some(j) = q.front() {
+                    break j.clone();
+                }
+                q = shared.ready.wait(q).expect("exec queue");
+            }
+        };
+        run_chunks(&job, true);
+    }
+}
+
+/// Drain chunks from `job` until its deque is empty. `stolen` marks
+/// execution on a pool worker (for the steal gauge) as opposed to the
+/// submitting thread.
+fn run_chunks(job: &Job, stolen: bool) {
+    loop {
+        let i = job.next.fetch_add(1, Ordering::Relaxed);
+        if i >= job.chunks {
+            break;
+        }
+        // SAFETY: the reference is formed only after a successful claim
+        // (`i < chunks`). Chunk `i` cannot have completed yet, so the
+        // latch has not fired and the submitting thread is still blocked
+        // in `run_parallel`, keeping the erased closure alive for the
+        // whole iteration; `next` hands each chunk index out exactly
+        // once. (A late worker that finds the deque drained never
+        // touches `task` at all.)
+        let task = unsafe { &*job.task };
+        if catch_unwind(AssertUnwindSafe(|| task(i))).is_err() {
+            job.panicked.store(true, Ordering::Relaxed);
+        }
+        stats::TASKS.fetch_add(1, Ordering::Relaxed);
+        if stolen {
+            stats::STEALS.fetch_add(1, Ordering::Relaxed);
+        }
+        let mut done = job.done.lock().expect("exec latch");
+        *done += 1;
+        if *done == job.chunks {
+            job.finished.notify_all();
+        }
+    }
+}
+
+/// Execute `task(0..chunks)`, possibly on the pool. Returns only once
+/// every chunk has finished. Inline execution (single chunk, no workers,
+/// nested call, or [`with_serial`]) preserves chunk order, so pooled and
+/// inline runs are bit-identical.
+fn run_parallel(chunks: usize, task: &(dyn Fn(usize) + Sync)) {
+    debug_assert!(chunks >= 1);
+    let nested = IN_ENGINE.with(Cell::get);
+    let forced = FORCE_SERIAL.with(Cell::get) > 0;
+    let eng = engine();
+    if chunks == 1 || eng.workers == 0 || nested || forced {
+        stats::SERIAL_CALLS.fetch_add(1, Ordering::Relaxed);
+        for i in 0..chunks {
+            task(i);
+        }
+        return;
+    }
+    stats::PARALLEL_JOBS.fetch_add(1, Ordering::Relaxed);
+    // Erase the closure's lifetime so the job can sit in the global
+    // queue. SAFETY: this function does not return until the latch
+    // reports `done == chunks`, and no thread dereferences `task` after
+    // the deque is drained, so the referent strictly outlives every use.
+    let task_static: &'static (dyn Fn(usize) + Sync) = unsafe {
+        std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(task)
+    };
+    let job = Arc::new(Job {
+        task: task_static as *const (dyn Fn(usize) + Sync),
+        chunks,
+        next: AtomicUsize::new(0),
+        done: Mutex::new(0),
+        finished: Condvar::new(),
+        panicked: AtomicBool::new(false),
+    });
+    {
+        let mut q = eng.shared.queue.lock().expect("exec queue");
+        q.push_back(job.clone());
+    }
+    eng.shared.ready.notify_all();
+    // The submitting thread is the pool's extra lane: it drains its own
+    // deque while workers steal from the same counter.
+    IN_ENGINE.with(|f| f.set(true));
+    run_chunks(&job, false);
+    IN_ENGINE.with(|f| f.set(false));
+    let mut done = job.done.lock().expect("exec latch");
+    while *done < job.chunks {
+        done = job.finished.wait(done).expect("exec latch");
+    }
+    drop(done);
+    // Tidy the queue so drained deques don't pile up while workers idle.
+    eng.shared.queue.lock().expect("exec queue").retain(|j| !j.exhausted());
+    if job.panicked.load(Ordering::Relaxed) {
+        panic!("exec: a parallel chunk panicked");
+    }
+}
+
+/// A raw base pointer that may cross threads: chunk bodies receive
+/// disjoint sub-slices of one output buffer.
+struct SendPtr(*mut f64);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// Chunked parallel loop with disjoint output rows.
+///
+/// `out` is `items x width` row-major; `body(r0, r1, rows)` fills rows
+/// `[r0, r1)`, handed to it as the exclusive sub-slice `rows` of length
+/// `(r1 - r0) * width`. The cost model decides the split from `flops`
+/// (the caller's estimate of total work): below the cutoff the whole
+/// range runs inline as `body(0, items, out)` — the serial fallback is
+/// the same code path, not a sibling implementation.
+pub fn parallel_for<F>(flops: usize, out: &mut [f64], width: usize, body: F)
+where
+    F: Fn(usize, usize, &mut [f64]) + Sync,
+{
+    let items = if width == 0 { 0 } else { out.len() / width };
+    // Hard assert: a silent remainder would leave trailing elements of
+    // `out` unwritten in release builds.
+    assert_eq!(items * width, out.len(), "exec::parallel_for: out must be items x width");
+    if items == 0 {
+        return;
+    }
+    let chunks = match cost::plan_for(flops, items) {
+        Plan::Serial => {
+            stats::SERIAL_CALLS.fetch_add(1, Ordering::Relaxed);
+            body(0, items, out);
+            return;
+        }
+        Plan::Parallel { chunks } => chunks,
+    };
+    let bounds = cost::partition(items, chunks);
+    let base = SendPtr(out.as_mut_ptr());
+    let run = |chunk: usize| {
+        let (s, e) = bounds[chunk];
+        // SAFETY: `bounds` ranges are disjoint and within `items`, so
+        // each chunk gets an exclusive, in-bounds sub-slice of `out`.
+        let rows =
+            unsafe { std::slice::from_raw_parts_mut(base.0.add(s * width), (e - s) * width) };
+        body(s, e, rows);
+    };
+    run_parallel(bounds.len(), &run);
+}
+
+/// Chunked reduction with a machine-independent merge order.
+///
+/// `body(r0, r1, acc)` accumulates rows `[r0, r1)` into `acc` (same
+/// length as `out`, zero-initialized per chunk); partials are merged
+/// into `out` in ascending chunk order. Because the chunk plan depends
+/// only on the problem size ([`cost::plan_reduce`]), the floating-point
+/// reduction tree — and therefore the result, bit for bit — never
+/// depends on the thread count.
+///
+/// `out` is the reduction seed: serial calls accumulate into it
+/// directly, so callers pass it zero-filled (or pre-loaded with
+/// whatever they want summed in).
+pub fn parallel_reduce<F>(flops: usize, items: usize, out: &mut [f64], body: F)
+where
+    F: Fn(usize, usize, &mut [f64]) + Sync,
+{
+    if items == 0 {
+        return;
+    }
+    let chunks = match cost::plan_reduce(flops, items) {
+        Plan::Serial => {
+            stats::SERIAL_CALLS.fetch_add(1, Ordering::Relaxed);
+            body(0, items, out);
+            return;
+        }
+        Plan::Parallel { chunks } => chunks,
+    };
+    let bounds = cost::partition(items, chunks);
+    let len = out.len();
+    let mut partials: Vec<Vec<f64>> = (0..chunks).map(|_| vec![0.0; len]).collect();
+    let ptrs: Vec<SendPtr> = partials.iter_mut().map(|p| SendPtr(p.as_mut_ptr())).collect();
+    let run = |chunk: usize| {
+        let (s, e) = bounds[chunk];
+        // SAFETY: chunk `i` exclusively owns `partials[i]`.
+        let acc = unsafe { std::slice::from_raw_parts_mut(ptrs[chunk].0, len) };
+        body(s, e, acc);
+    };
+    run_parallel(bounds.len(), &run);
+    // Fixed-order merge: chunk 0, then 1, ... — the documented tree.
+    for part in &partials {
+        for (o, p) in out.iter_mut().zip(part) {
+            *o += p;
+        }
+    }
+}
+
+/// Run `f` with every engine call on this thread forced inline. The
+/// chunk plan — and with it the reduction merge order — is unchanged, so
+/// results are bit-identical to pooled execution. This is the
+/// determinism oracle used by `tests/determinism.rs` and an escape
+/// hatch for latency-critical callers.
+pub fn with_serial<R>(f: impl FnOnce() -> R) -> R {
+    struct Guard;
+    impl Drop for Guard {
+        fn drop(&mut self) {
+            FORCE_SERIAL.with(|d| d.set(d.get() - 1));
+        }
+    }
+    FORCE_SERIAL.with(|d| d.set(d.get() + 1));
+    let _guard = Guard;
+    f()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::cost::SERIAL_CUTOFF_FLOPS;
+    use super::*;
+
+    /// Big enough to force the parallel plan regardless of shape.
+    const BIG: usize = SERIAL_CUTOFF_FLOPS * 4;
+
+    #[test]
+    fn parallel_for_fills_every_row() {
+        let n = 10_000usize;
+        let mut out = vec![0.0; n];
+        parallel_for(BIG, &mut out, 1, |r0, _r1, rows| {
+            for (i, o) in rows.iter_mut().enumerate() {
+                *o = (r0 + i) as f64;
+            }
+        });
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i as f64);
+        }
+    }
+
+    #[test]
+    fn parallel_for_serial_path_sees_whole_range() {
+        let mut out = vec![0.0; 8];
+        parallel_for(1, &mut out, 2, |r0, r1, rows| {
+            assert_eq!((r0, r1), (0, 4));
+            assert_eq!(rows.len(), 8);
+            rows.fill(7.0);
+        });
+        assert!(out.iter().all(|&v| v == 7.0));
+    }
+
+    #[test]
+    fn parallel_for_empty_out_is_noop() {
+        let mut out: Vec<f64> = vec![];
+        parallel_for(BIG, &mut out, 1, |_, _, _| panic!("must not run"));
+        parallel_for(BIG, &mut out, 0, |_, _, _| panic!("must not run"));
+    }
+
+    #[test]
+    fn parallel_reduce_sums_all_chunks() {
+        // Each row i contributes i to every slot; total = sum 0..items.
+        let items = 5000usize;
+        let expect = (items * (items - 1) / 2) as f64;
+        let mut out = vec![0.0; 3];
+        parallel_reduce(BIG, items, &mut out, |r0, r1, acc| {
+            for i in r0..r1 {
+                for a in acc.iter_mut() {
+                    *a += i as f64;
+                }
+            }
+        });
+        for &v in &out {
+            assert_eq!(v, expect);
+        }
+    }
+
+    #[test]
+    fn pooled_and_inline_runs_are_bit_identical() {
+        // A reduction whose low-order bits depend on the merge order:
+        // pooled vs with_serial must agree exactly.
+        let items = 4096usize;
+        let vals: Vec<f64> = (0..items).map(|i| ((i as f64) * 0.7).sin() * 1e-3 + 1.0).collect();
+        let run = || {
+            let mut out = vec![0.0; 4];
+            parallel_reduce(BIG, items, &mut out, |r0, r1, acc| {
+                for i in r0..r1 {
+                    for a in acc.iter_mut() {
+                        *a += vals[i];
+                    }
+                }
+            });
+            out
+        };
+        let pooled = run();
+        let inline = with_serial(run);
+        assert_eq!(pooled, inline);
+    }
+
+    #[test]
+    fn nested_calls_run_inline_and_complete() {
+        let rows = 64usize;
+        let cols = 64usize;
+        let mut out = vec![0.0; rows * cols];
+        parallel_for(BIG, &mut out, cols, |r0, _r1, block| {
+            // Nested engine call from inside a chunk body: must execute
+            // inline (no re-entry) and still produce the right values.
+            let mut inner = vec![0.0; cols];
+            parallel_for(BIG, &mut inner, 1, |c0, _c1, cs| {
+                for (j, c) in cs.iter_mut().enumerate() {
+                    *c = (c0 + j) as f64;
+                }
+            });
+            for (r, row) in block.chunks_mut(cols).enumerate() {
+                for (j, o) in row.iter_mut().enumerate() {
+                    *o = (r0 + r) as f64 * 1000.0 + inner[j];
+                }
+            }
+        });
+        for i in 0..rows {
+            for j in 0..cols {
+                assert_eq!(out[i * cols + j], i as f64 * 1000.0 + j as f64);
+            }
+        }
+    }
+
+    #[test]
+    fn chunk_panic_propagates_to_caller() {
+        let caught = std::panic::catch_unwind(|| {
+            let mut out = vec![0.0; 1024];
+            parallel_for(BIG, &mut out, 1, |r0, _r1, _rows| {
+                if r0 == 0 {
+                    panic!("boom");
+                }
+            });
+        });
+        assert!(caught.is_err());
+    }
+
+    #[test]
+    fn stats_record_engine_traffic() {
+        let before = super::super::stats();
+        let mut out = vec![0.0; 2048];
+        parallel_for(BIG, &mut out, 1, |_r0, _r1, rows| rows.fill(1.0));
+        parallel_for(1, &mut out, 1, |_r0, _r1, rows| rows.fill(2.0));
+        let after = super::super::stats();
+        assert!(after.serial_calls > before.serial_calls);
+        // The big call either went to the pool or (FASTLR_THREADS=1,
+        // nested test runner) ran inline — one of the counters moved.
+        let total_after = after.parallel_jobs + after.serial_calls;
+        let total_before = before.parallel_jobs + before.serial_calls;
+        assert!(total_after >= total_before + 2);
+        assert_eq!(after.threads, super::super::num_threads() - 1);
+    }
+
+    #[test]
+    fn with_serial_nests_and_restores() {
+        let r = with_serial(|| with_serial(|| 21) * 2);
+        assert_eq!(r, 42);
+        // After the scopes, pooled execution is allowed again: just
+        // exercise a call to prove the thread-local unwound.
+        let mut out = vec![0.0; 512];
+        parallel_for(BIG, &mut out, 1, |r0, _r1, rows| {
+            for (i, o) in rows.iter_mut().enumerate() {
+                *o = (r0 + i) as f64;
+            }
+        });
+        assert_eq!(out[511], 511.0);
+    }
+}

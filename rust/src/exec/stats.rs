@@ -1,0 +1,53 @@
+//! Engine observability: cheap global gauges, surfaced by the serving
+//! edge in `GET /v1/stats` next to the cache counters.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub(super) static PARALLEL_JOBS: AtomicU64 = AtomicU64::new(0);
+pub(super) static SERIAL_CALLS: AtomicU64 = AtomicU64::new(0);
+pub(super) static TASKS: AtomicU64 = AtomicU64::new(0);
+pub(super) static STEALS: AtomicU64 = AtomicU64::new(0);
+
+/// A snapshot of the engine gauges.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExecStats {
+    /// Persistent pool workers (the submitting thread is the extra
+    /// lane, so total compute lanes = `threads + 1`).
+    pub threads: usize,
+    /// Calls dispatched to the pool.
+    pub parallel_jobs: u64,
+    /// Calls executed inline: below the cost-model cutoff, nested
+    /// inside another engine call, forced via
+    /// [`with_serial`](super::with_serial), or `FASTLR_THREADS=1`.
+    pub serial_calls: u64,
+    /// Chunks executed by pooled calls (across all threads).
+    pub tasks: u64,
+    /// Chunks executed by a pool worker rather than the submitting
+    /// thread — the work-stealing gauge.
+    pub steals: u64,
+}
+
+/// Read the current gauge values.
+pub fn stats() -> ExecStats {
+    ExecStats {
+        threads: super::num_threads().saturating_sub(1),
+        parallel_jobs: PARALLEL_JOBS.load(Ordering::Relaxed),
+        serial_calls: SERIAL_CALLS.load(Ordering::Relaxed),
+        tasks: TASKS.load(Ordering::Relaxed),
+        steals: STEALS.load(Ordering::Relaxed),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_is_consistent() {
+        // (No relation between `tasks` and `steals` is asserted here:
+        // other tests run engine calls concurrently and the gauges are
+        // relaxed atomics, so only per-field sanity is race-free.)
+        let s = stats();
+        assert_eq!(s.threads, crate::exec::num_threads() - 1);
+    }
+}

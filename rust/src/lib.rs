@@ -20,7 +20,12 @@
 //!   [`manifold`], [`rsl`]). In front of it sits the **serving edge**
 //!   ([`server`]): a zero-dependency HTTP/1.1 + JSON network API with a
 //!   fingerprint-keyed result cache (`fastlr serve`) and a loopback load
-//!   generator (`fastlr loadgen`).
+//!   generator (`fastlr loadgen`). Underneath everything sits the
+//!   **execution engine** ([`exec`]): one persistent worker pool with a
+//!   `parallel_for`/`parallel_reduce` API and a single cost model that
+//!   every kernel (dense GEMM/GEMV, sparse SPMV, Krylov block products)
+//!   fans out through, so concurrent serving jobs share compute lanes
+//!   instead of oversubscribing the machine.
 //! * **L2/L1 (python, build time)** — JAX compute graphs calling Pallas
 //!   kernels, AOT-lowered to HLO text under `artifacts/`.
 //! * **runtime** — [`runtime`] loads those artifacts through the PJRT C API
@@ -64,6 +69,7 @@ pub mod cli;
 pub mod coordinator;
 pub mod data;
 pub mod error;
+pub mod exec;
 pub mod experiments;
 pub mod krylov;
 pub mod linalg;

@@ -1,4 +1,4 @@
-//! Threaded, cache-blocked GEMM variants.
+//! Engine-parallel, cache-blocked GEMM variants.
 //!
 //! Three entry points, all row-major and allocation-minimal:
 //!
@@ -8,16 +8,16 @@
 //!
 //! The kernel is an `i-k-j` loop nest over `(MC, KC)` panels: for each `k`
 //! the scalar `A[i,k]` multiplies a contiguous row of `B`, which LLVM turns
-//! into FMA vector code. Threads split the rows of `C`; there is no
-//! inter-thread reduction except in `gemm_tn`, which gives each thread a
-//! private accumulator panel.
+//! into FMA vector code. Parallelism rides [`crate::exec`]: `gemm` and
+//! `gemm_nt` split the rows of `C` into disjoint chunks
+//! ([`crate::exec::parallel_for`]); `gemm_tn` reduces private accumulator
+//! panels over `k`-ranges ([`crate::exec::parallel_reduce`], fixed merge
+//! order). The serial-vs-parallel split comes from the engine's single
+//! cost model (flops = `2·m·n·k`), not a kernel-local threshold.
 
 use super::matrix::Matrix;
-use super::{num_threads, partition_ranges};
-use crate::{ensure_shape, Result};
+use crate::{ensure_shape, exec, Result};
 
-/// Below this many multiply-adds the threaded path is pure overhead.
-const PAR_THRESHOLD: usize = 1 << 16;
 /// K-panel height: keeps the streamed rows of `B` resident in L2.
 const KC: usize = 256;
 
@@ -35,39 +35,11 @@ pub fn gemm(a: &Matrix, b: &Matrix) -> Result<Matrix> {
     if m * n * k == 0 {
         return Ok(c);
     }
-    let work = m * n * k;
-    let nt = if work < PAR_THRESHOLD { 1 } else { num_threads() };
-    let ranges = partition_ranges(m, nt);
-    if ranges.len() <= 1 {
-        gemm_block(a.as_slice(), b.as_slice(), c.as_mut_slice(), 0, m, k, n);
-        return Ok(c);
-    }
     let (a_s, b_s) = (a.as_slice(), b.as_slice());
-    // Split C into disjoint row chunks so every thread owns its output.
-    let mut chunks: Vec<&mut [f64]> = Vec::with_capacity(ranges.len());
-    let mut rest = c.as_mut_slice();
-    let mut consumed = 0;
-    for &(s, e) in &ranges {
-        let (head, tail) = rest.split_at_mut((e - s) * n);
-        debug_assert_eq!(s, consumed);
-        consumed = e;
-        chunks.push(head);
-        rest = tail;
-    }
-    std::thread::scope(|scope| {
-        for (&(s, e), chunk) in ranges.iter().zip(chunks) {
-            scope.spawn(move || {
-                gemm_rows(a_s, b_s, chunk, s, e, k, n);
-            });
-        }
+    exec::parallel_for(2 * m * n * k, c.as_mut_slice(), n, |r0, r1, c_rows| {
+        gemm_rows(a_s, b_s, c_rows, r0, r1, k, n);
     });
     Ok(c)
-}
-
-/// Serial kernel writing rows `[r0, r1)` of `C` (full-length `c` buffer).
-fn gemm_block(a: &[f64], b: &[f64], c: &mut [f64], r0: usize, r1: usize, k: usize, n: usize) {
-    let c_rows = &mut c[r0 * n..r1 * n];
-    gemm_rows(a, b, c_rows, r0, r1, k, n);
 }
 
 /// Kernel for rows `[r0, r1)`; `c_rows` is exactly those rows of `C`.
@@ -99,7 +71,8 @@ fn gemm_rows(a: &[f64], b: &[f64], c_rows: &mut [f64], r0: usize, r1: usize, k: 
 /// `C = Aᵀ · B` where `A` is `k x m` and `B` is `k x n` → `C` is `m x n`.
 ///
 /// Iterates the shared `k` dimension in the outer loop so both inputs are
-/// read row-contiguously; each thread reduces a private panel.
+/// read row-contiguously; each chunk reduces a private panel, merged in
+/// fixed chunk order by the engine.
 pub fn gemm_tn(a: &Matrix, b: &Matrix) -> Result<Matrix> {
     ensure_shape!(
         a.rows() == b.rows(),
@@ -113,32 +86,10 @@ pub fn gemm_tn(a: &Matrix, b: &Matrix) -> Result<Matrix> {
     if m * n * k == 0 {
         return Ok(c);
     }
-    let nt = if m * n * k < PAR_THRESHOLD { 1 } else { num_threads() };
-    let ranges = partition_ranges(k, nt);
-    if ranges.len() <= 1 {
-        gemm_tn_rows(a.as_slice(), b.as_slice(), c.as_mut_slice(), 0, k, m, n);
-        return Ok(c);
-    }
     let (a_s, b_s) = (a.as_slice(), b.as_slice());
-    let partials: Vec<Vec<f64>> = std::thread::scope(|scope| {
-        let handles: Vec<_> = ranges
-            .iter()
-            .map(|&(s, e)| {
-                scope.spawn(move || {
-                    let mut part = vec![0.0; m * n];
-                    gemm_tn_rows(a_s, b_s, &mut part, s, e, m, n);
-                    part
-                })
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().expect("gemm_tn worker")).collect()
+    exec::parallel_reduce(2 * m * n * k, k, c.as_mut_slice(), |k0, k1, acc| {
+        gemm_tn_rows(a_s, b_s, acc, k0, k1, m, n);
     });
-    let cm = c.as_mut_slice();
-    for part in &partials {
-        for (ci, pi) in cm.iter_mut().zip(part) {
-            *ci += pi;
-        }
-    }
     Ok(c)
 }
 
@@ -173,32 +124,9 @@ pub fn gemm_nt(a: &Matrix, b: &Matrix) -> Result<Matrix> {
     if m * n * k == 0 {
         return Ok(c);
     }
-    let nt = if m * n * k < PAR_THRESHOLD { 1 } else { num_threads() };
-    let ranges = partition_ranges(m, nt);
     let (a_s, b_s) = (a.as_slice(), b.as_slice());
-    if ranges.len() <= 1 {
-        gemm_nt_rows(a_s, b_s, c.as_mut_slice(), 0, m, k, n);
-        return Ok(c);
-    }
-    let mut chunks: Vec<&mut [f64]> = Vec::with_capacity(ranges.len());
-    let mut rest = c.as_mut_slice();
-    for &(s, e) in &ranges {
-        let (head, tail) = rest.split_at_mut((e - s) * n);
-        chunks.push(head);
-        rest = tail;
-    }
-    std::thread::scope(|scope| {
-        for (&(s, e), chunk) in ranges.iter().zip(chunks) {
-            scope.spawn(move || {
-                for i in s..e {
-                    let a_row = &a_s[i * k..(i + 1) * k];
-                    let c_row = &mut chunk[(i - s) * n..(i - s + 1) * n];
-                    for (j, cj) in c_row.iter_mut().enumerate() {
-                        *cj = super::vecops::dot(a_row, &b_s[j * k..(j + 1) * k]);
-                    }
-                }
-            });
-        }
+    exec::parallel_for(2 * m * n * k, c.as_mut_slice(), n, |r0, r1, c_rows| {
+        gemm_nt_rows(a_s, b_s, c_rows, r0, r1, k, n);
     });
     Ok(c)
 }
@@ -216,6 +144,7 @@ fn gemm_nt_rows(a: &[f64], b: &[f64], c: &mut [f64], r0: usize, r1: usize, k: us
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::exec::cost::SERIAL_CUTOFF_FLOPS;
     use crate::rng::Pcg64;
 
     /// Naive triple loop as the oracle.
@@ -254,7 +183,7 @@ mod tests {
     #[test]
     fn gemm_threaded_path_matches() {
         let mut rng = Pcg64::seed_from_u64(3);
-        // Big enough to cross PAR_THRESHOLD.
+        // Big enough to cross the engine's serial cutoff.
         let a = Matrix::gaussian(130, 90, &mut rng);
         let b = Matrix::gaussian(90, 70, &mut rng);
         assert_close(&gemm(&a, &b).unwrap(), &gemm_naive(&a, &b), 1e-9);
@@ -323,12 +252,13 @@ mod tests {
     }
 
     #[test]
-    fn par_threshold_boundary_matches() {
-        // m*k*n straddles PAR_THRESHOLD = 1<<16: 40^3 = 64000 stays on
-        // the serial path, 41*40*40 = 65600 takes the threaded one.
+    fn cost_model_boundary_matches() {
+        // 2·m·k·n straddles the engine's serial cutoff (1<<18 flops):
+        // 50*51*51 = 130050 madds stays inline, 51^3 = 132651 goes
+        // through the pool.
         let mut rng = Pcg64::seed_from_u64(8);
-        for (m, k, n) in [(40usize, 40usize, 40usize), (41, 40, 40)] {
-            assert!((m * k * n < PAR_THRESHOLD) == (m == 40));
+        for (m, k, n) in [(50usize, 51usize, 51usize), (51, 51, 51)] {
+            assert!((2 * m * k * n < SERIAL_CUTOFF_FLOPS) == (m == 50));
             let a = Matrix::gaussian(m, k, &mut rng);
             let b = Matrix::gaussian(k, n, &mut rng);
             assert_close(&gemm(&a, &b).unwrap(), &gemm_naive(&a, &b), 1e-10);

@@ -1,22 +1,22 @@
-//! Threaded GEMV / GEMVᵀ — the Golub–Kahan hot path.
+//! Engine-parallel GEMV / GEMVᵀ — the Golub–Kahan hot path.
 //!
 //! Algorithm 1 of the paper does one `A·p` and one `Aᵀ·q` per iteration on a
 //! matrix that dwarfs every other operand, so these two kernels dominate
 //! end-to-end time (the paper's O(mnk') term). Both read `A` strictly
-//! row-contiguously:
+//! row-contiguously and fan out through [`crate::exec`] — the shared
+//! worker pool decides serial-vs-parallel from one cost model (flops =
+//! `2·m·n`) instead of a kernel-local threshold:
 //!
 //! * [`gemv`]  (`y = A·x`): each output element is a row·x dot product;
-//!   threads split rows, no reduction.
-//! * [`gemv_t`] (`y = Aᵀ·x`): row `i` contributes `x[i]·A[i,:]`; threads
-//!   accumulate private `y` buffers over row chunks, then reduce.
+//!   chunks own disjoint output rows, no reduction.
+//! * [`gemv_t`] (`y = Aᵀ·x`): row `i` contributes `x[i]·A[i,:]`; chunks
+//!   accumulate private `y` buffers over row ranges, merged in fixed
+//!   chunk order ([`crate::exec::parallel_reduce`]) so the result is
+//!   bit-identical for any thread count.
 
 use super::matrix::Matrix;
 use super::vecops::{axpy, dot};
-use super::{num_threads, partition_ranges};
-use crate::{ensure_shape, Result};
-
-/// Below this many flops the scoped-thread fan-out costs more than it saves.
-const PAR_THRESHOLD: usize = 1 << 17;
+use crate::{ensure_shape, exec, Result};
 
 /// `y = A · x`.
 pub fn gemv(a: &Matrix, x: &[f64]) -> Result<Vec<f64>> {
@@ -31,29 +31,11 @@ pub fn gemv(a: &Matrix, x: &[f64]) -> Result<Vec<f64>> {
     if m == 0 || n == 0 {
         return Ok(y);
     }
-    let nt = if m * n < PAR_THRESHOLD { 1 } else { num_threads() };
-    let ranges = partition_ranges(m, nt);
     let a_s = a.as_slice();
-    if ranges.len() <= 1 {
-        for (i, yi) in y.iter_mut().enumerate() {
-            *yi = dot(&a_s[i * n..(i + 1) * n], x);
-        }
-        return Ok(y);
-    }
-    let mut chunks: Vec<&mut [f64]> = Vec::with_capacity(ranges.len());
-    let mut rest = y.as_mut_slice();
-    for &(s, e) in &ranges {
-        let (head, tail) = rest.split_at_mut(e - s);
-        chunks.push(head);
-        rest = tail;
-    }
-    std::thread::scope(|scope| {
-        for (&(s, e), chunk) in ranges.iter().zip(chunks) {
-            scope.spawn(move || {
-                for i in s..e {
-                    chunk[i - s] = dot(&a_s[i * n..(i + 1) * n], x);
-                }
-            });
+    exec::parallel_for(2 * m * n, &mut y, 1, |r0, _r1, ys| {
+        for (i, yi) in ys.iter_mut().enumerate() {
+            let row = r0 + i;
+            *yi = dot(&a_s[row * n..(row + 1) * n], x);
         }
     });
     Ok(y)
@@ -68,50 +50,26 @@ pub fn gemv_t(a: &Matrix, x: &[f64]) -> Result<Vec<f64>> {
         x.len()
     );
     let (m, n) = a.shape();
+    let mut y = vec![0.0; n];
     if m == 0 || n == 0 {
-        return Ok(vec![0.0; n]);
-    }
-    let nt = if m * n < PAR_THRESHOLD { 1 } else { num_threads() };
-    let ranges = partition_ranges(m, nt);
-    let a_s = a.as_slice();
-    if ranges.len() <= 1 {
-        let mut y = vec![0.0; n];
-        for i in 0..m {
-            let xi = x[i];
-            if xi != 0.0 {
-                axpy(xi, &a_s[i * n..(i + 1) * n], &mut y);
-            }
-        }
         return Ok(y);
     }
-    let partials: Vec<Vec<f64>> = std::thread::scope(|scope| {
-        let handles: Vec<_> = ranges
-            .iter()
-            .map(|&(s, e)| {
-                scope.spawn(move || {
-                    let mut part = vec![0.0; n];
-                    for i in s..e {
-                        let xi = x[i];
-                        if xi != 0.0 {
-                            axpy(xi, &a_s[i * n..(i + 1) * n], &mut part);
-                        }
-                    }
-                    part
-                })
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().expect("gemv_t worker")).collect()
+    let a_s = a.as_slice();
+    exec::parallel_reduce(2 * m * n, m, &mut y, |r0, r1, acc| {
+        for i in r0..r1 {
+            let xi = x[i];
+            if xi != 0.0 {
+                axpy(xi, &a_s[i * n..(i + 1) * n], acc);
+            }
+        }
     });
-    let mut y = vec![0.0; n];
-    for part in &partials {
-        axpy(1.0, part, &mut y);
-    }
     Ok(y)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::exec::cost::SERIAL_CUTOFF_FLOPS;
     use crate::rng::Pcg64;
 
     fn gemv_naive(a: &Matrix, x: &[f64]) -> Vec<f64> {
@@ -186,12 +144,13 @@ mod tests {
     }
 
     #[test]
-    fn par_threshold_boundary_matches() {
-        // m*n straddles PAR_THRESHOLD = 1<<17: 361*363 = 131043 stays on
-        // the serial path, 362*363 = 131406 takes the threaded one.
+    fn cost_model_boundary_matches() {
+        // 2·m·n straddles the engine's serial cutoff (1<<18 flops):
+        // 361*363 = 131043 elements stays inline, 362*363 = 131406
+        // goes through the pool.
         let mut rng = Pcg64::seed_from_u64(14);
         for (m, n) in [(361usize, 363usize), (362, 363)] {
-            assert!((m * n < PAR_THRESHOLD) == (m == 361));
+            assert!((2 * m * n < SERIAL_CUTOFF_FLOPS) == (m == 361));
             let a = Matrix::gaussian(m, n, &mut rng);
             assert_both_match_naive(&a, 1e-9);
         }

@@ -1,7 +1,7 @@
 //! Dense linear-algebra substrate, written from scratch.
 //!
-//! The paper's algorithms sit on: threaded GEMM/GEMV ([`gemm`], [`gemv`]),
-//! Householder QR ([`qr`]), Householder bidiagonalization
+//! The paper's algorithms sit on: engine-parallel GEMM/GEMV ([`gemm`],
+//! [`gemv`]), Householder QR ([`qr`]), Householder bidiagonalization
 //! ([`bidiagonalize`]), a symmetric-tridiagonal implicit-QL eigensolver and
 //! a bidiagonal implicit-shift SVD ([`tridiag`]), a full dense SVD — the
 //! paper's "traditional SVD" baseline — ([`svd`]), and a dense symmetric
@@ -9,11 +9,14 @@
 //!
 //! Everything is `f64`, row-major. There is no external BLAS/LAPACK in this
 //! environment; these routines *are* the BLAS/LAPACK of the system, and the
-//! performance pass in `EXPERIMENTS.md` §Perf profiles them directly.
+//! performance pass in `EXPERIMENTS.md` §Perf profiles them directly. All
+//! kernel parallelism goes through the shared execution engine
+//! ([`crate::exec`]): one persistent worker pool, one cost model, one
+//! `FASTLR_THREADS` override.
 //!
 //! The huge-matrix counterpart lives in [`sparse`]: a CSR matrix with
-//! threaded `spmv`/`spmv_t` that plugs into the same matrix-free Krylov
-//! layer through [`crate::krylov::LinOp`].
+//! engine-parallel `spmv`/`spmv_t` that plugs into the same matrix-free
+//! Krylov layer through [`crate::krylov::LinOp`].
 
 pub mod bidiagonalize;
 pub mod eig;
@@ -28,65 +31,3 @@ pub mod vecops;
 
 pub use matrix::Matrix;
 pub use sparse::SparseMatrix;
-
-/// Number of worker threads used by the threaded kernels.
-///
-/// Resolved once; override with the `FASTLR_THREADS` environment variable.
-pub fn num_threads() -> usize {
-    use std::sync::OnceLock;
-    static N: OnceLock<usize> = OnceLock::new();
-    *N.get_or_init(|| {
-        if let Ok(s) = std::env::var("FASTLR_THREADS") {
-            if let Ok(n) = s.parse::<usize>() {
-                if n >= 1 {
-                    return n;
-                }
-            }
-        }
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
-    })
-}
-
-/// Partition `n` items into at most `parts` contiguous ranges of nearly
-/// equal size. Returns `(start, end)` pairs; never returns empty ranges.
-pub fn partition_ranges(n: usize, parts: usize) -> Vec<(usize, usize)> {
-    if n == 0 {
-        return vec![];
-    }
-    let parts = parts.max(1).min(n);
-    let base = n / parts;
-    let rem = n % parts;
-    let mut out = Vec::with_capacity(parts);
-    let mut start = 0;
-    for i in 0..parts {
-        let len = base + usize::from(i < rem);
-        out.push((start, start + len));
-        start += len;
-    }
-    out
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn partition_covers_everything_without_overlap() {
-        for n in [0usize, 1, 5, 16, 17, 1000] {
-            for p in [1usize, 2, 3, 8, 64] {
-                let ranges = partition_ranges(n, p);
-                let total: usize = ranges.iter().map(|(s, e)| e - s).sum();
-                assert_eq!(total, n, "n={n} p={p}");
-                for w in ranges.windows(2) {
-                    assert_eq!(w[0].1, w[1].0);
-                }
-                assert!(ranges.iter().all(|(s, e)| s < e));
-            }
-        }
-    }
-
-    #[test]
-    fn num_threads_positive() {
-        assert!(num_threads() >= 1);
-    }
-}

@@ -10,23 +10,18 @@
 //! Kernel shapes mirror the dense ones in [`super::gemv`]:
 //!
 //! * [`SparseMatrix::spmv`]   (`y = A·x`): each output element is a
-//!   row·x gather-dot; threads split rows, no reduction.
+//!   row·x gather-dot; chunks own disjoint output rows, no reduction.
 //! * [`SparseMatrix::spmv_t`] (`y = Aᵀ·x`): row `i` scatters
-//!   `x[i]·A[i,:]`; threads accumulate private `y` buffers over row
-//!   chunks, then reduce.
+//!   `x[i]·A[i,:]`; chunks accumulate private `y` buffers over row
+//!   ranges, merged in fixed chunk order.
 //!
-//! Both reuse [`super::partition_ranges`] / [`super::num_threads`] so the
-//! `FASTLR_THREADS` override applies uniformly across dense and sparse
+//! Both fan out through [`crate::exec`] (flops = `2·nnz` — an spmv does
+//! ~2 flops per stored entry), so the `FASTLR_THREADS` override and the
+//! engine's single cost model apply uniformly across dense and sparse
 //! paths.
 
 use super::matrix::Matrix;
-use super::{num_threads, partition_ranges};
-use crate::{ensure_shape, Result};
-
-/// Below this many stored nonzeros the scoped-thread fan-out costs more
-/// than it saves (mirrors the dense kernels' flop heuristic: an spmv does
-/// ~2 flops per stored entry).
-pub const PAR_THRESHOLD: usize = 1 << 16;
+use crate::{ensure_shape, exec, Result};
 
 /// Compressed sparse row (CSR) `f64` matrix.
 ///
@@ -181,28 +176,9 @@ impl SparseMatrix {
         if self.values.is_empty() {
             return Ok(y);
         }
-        let nt = if self.nnz() < PAR_THRESHOLD { 1 } else { num_threads() };
-        let ranges = partition_ranges(m, nt);
-        if ranges.len() <= 1 {
-            for (i, yi) in y.iter_mut().enumerate() {
-                *yi = self.row_dot(i, x);
-            }
-            return Ok(y);
-        }
-        let mut chunks: Vec<&mut [f64]> = Vec::with_capacity(ranges.len());
-        let mut rest = y.as_mut_slice();
-        for &(s, e) in &ranges {
-            let (head, tail) = rest.split_at_mut(e - s);
-            chunks.push(head);
-            rest = tail;
-        }
-        std::thread::scope(|scope| {
-            for (&(s, e), chunk) in ranges.iter().zip(chunks) {
-                scope.spawn(move || {
-                    for i in s..e {
-                        chunk[i - s] = self.row_dot(i, x);
-                    }
-                });
+        exec::parallel_for(2 * self.nnz(), &mut y, 1, |r0, _r1, ys| {
+            for (i, yi) in ys.iter_mut().enumerate() {
+                *yi = self.row_dot(r0 + i, x);
             }
         });
         Ok(y)
@@ -217,35 +193,13 @@ impl SparseMatrix {
             x.len()
         );
         let n = self.cols;
+        let mut y = vec![0.0; n];
         if self.values.is_empty() {
-            return Ok(vec![0.0; n]);
-        }
-        let nt = if self.nnz() < PAR_THRESHOLD { 1 } else { num_threads() };
-        let ranges = partition_ranges(self.rows, nt);
-        if ranges.len() <= 1 {
-            let mut y = vec![0.0; n];
-            self.scatter_rows(0, self.rows, x, &mut y);
             return Ok(y);
         }
-        let partials: Vec<Vec<f64>> = std::thread::scope(|scope| {
-            let handles: Vec<_> = ranges
-                .iter()
-                .map(|&(s, e)| {
-                    scope.spawn(move || {
-                        let mut part = vec![0.0; n];
-                        self.scatter_rows(s, e, x, &mut part);
-                        part
-                    })
-                })
-                .collect();
-            handles.into_iter().map(|h| h.join().expect("spmv_t worker")).collect()
+        exec::parallel_reduce(2 * self.nnz(), self.rows, &mut y, |r0, r1, acc| {
+            self.scatter_rows(r0, r1, x, acc);
         });
-        let mut y = vec![0.0; n];
-        for part in &partials {
-            for (yi, pi) in y.iter_mut().zip(part) {
-                *yi += pi;
-            }
-        }
         Ok(y)
     }
 
@@ -361,11 +315,14 @@ mod tests {
     }
 
     #[test]
-    fn par_threshold_boundary_matches_dense() {
-        // 255x255 dense = 65025 nnz (< 1<<16, serial path);
-        // 300x300 dense = 90000 nnz (> 1<<16, threaded path).
+    fn cost_model_boundary_matches_dense() {
+        // 2·nnz straddles the engine's serial cutoff (1<<18 flops):
+        // 300x300 dense = 90000 nnz stays inline, 400x400 = 160000 nnz
+        // goes through the pool.
         let mut rng = Pcg64::seed_from_u64(703);
-        for s in [255usize, 300] {
+        for s in [300usize, 400] {
+            let nnz = s * s;
+            assert!((2 * nnz < crate::exec::cost::SERIAL_CUTOFF_FLOPS) == (s == 300));
             let a = Matrix::gaussian(s, s, &mut rng);
             assert_matvecs_match(&a, 1e-10);
         }

@@ -9,7 +9,7 @@
 //!   sources plus `eps`.
 //! * `GET /v1/healthz` — liveness + config echo.
 //! * `GET /v1/stats`   — service counters, latency percentiles, cache
-//!   hit/miss counts, batcher flushes.
+//!   hit/miss counts, execution-engine pool gauges, batcher flushes.
 //!
 //! Every job is fingerprinted ([`super::cache::fingerprint_spec`]) and
 //! looked up in the result cache before touching the worker pool; small
@@ -117,6 +117,7 @@ fn stats(state: &ApiState) -> Response {
         let b = state.batcher.lock().expect("batcher lock");
         b.flushes.load(Ordering::Relaxed)
     };
+    let e = crate::exec::stats();
     Response::json(
         200,
         &Json::obj(vec![
@@ -140,6 +141,18 @@ fn stats(state: &ApiState) -> Response {
                     ("entries", Json::Num(state.cache.len() as f64)),
                     ("capacity", Json::Num(state.cache.capacity() as f64)),
                     ("bytes", Json::Num(state.cache.bytes() as f64)),
+                ]),
+            ),
+            (
+                // Shared execution-engine gauges: every job above fans
+                // its kernels out through one process-wide pool.
+                "exec",
+                Json::obj(vec![
+                    ("threads", Json::Num(e.threads as f64)),
+                    ("parallel_jobs", Json::Num(e.parallel_jobs as f64)),
+                    ("serial_calls", Json::Num(e.serial_calls as f64)),
+                    ("tasks", Json::Num(e.tasks as f64)),
+                    ("steals", Json::Num(e.steals as f64)),
                 ]),
             ),
             ("batcher_flushes", Json::Num(flushes as f64)),
@@ -588,5 +601,14 @@ mod tests {
         assert_eq!(cache.get("misses").and_then(Json::as_usize), Some(1));
         let jobs = v.get("jobs").unwrap();
         assert_eq!(jobs.get("completed").and_then(Json::as_usize), Some(1));
+        // Engine gauges ride along with the cache counters.
+        let exec = v.get("exec").expect("exec gauges");
+        assert_eq!(
+            exec.get("threads").and_then(Json::as_usize),
+            Some(crate::exec::num_threads() - 1)
+        );
+        for g in ["parallel_jobs", "serial_calls", "tasks", "steals"] {
+            assert!(exec.get(g).and_then(Json::as_usize).is_some(), "missing gauge {g}");
+        }
     }
 }

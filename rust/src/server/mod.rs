@@ -71,7 +71,7 @@ impl Default for ServeOptions {
         ServeOptions {
             host: "127.0.0.1".into(),
             port: 7878,
-            workers: crate::linalg::num_threads().min(4),
+            workers: crate::exec::default_workers(),
             queue_depth: 64,
             seed: 0x5eed,
             conn_workers: 32,

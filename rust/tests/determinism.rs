@@ -1,0 +1,145 @@
+//! The execution engine's determinism contract.
+//!
+//! Chunk plans come from the cost model alone and reduction partials are
+//! merged in fixed chunk order, so a kernel's result is a pure function
+//! of its inputs — never of the thread count or of which thread ran
+//! which chunk. These tests pin that down in three ways:
+//!
+//! 1. pooled vs forced-inline (`exec::with_serial`) execution is
+//!    **bit-identical**, at sizes straddling the cost-model cutoff (the
+//!    inline path is the engine's serial fallback, so this is exactly
+//!    "parallel == serial kernel");
+//! 2. the reduction merge order is the *documented* one: a hand-rolled
+//!    oracle replaying `exec::cost::reduce_partition` reproduces
+//!    `gemv_t` bit for bit;
+//! 3. a full F-SVD pipeline (GEMV + GEMM + QR + Ritz refinement) is
+//!    bitwise stable under forced-inline execution.
+//!
+//! CI runs this whole suite under `FASTLR_THREADS=1` and `=8`; together
+//! with (1) that gives cross-thread-count equivalence.
+
+use fastlr::exec::{self, cost};
+use fastlr::linalg::gemm::{gemm, gemm_tn};
+use fastlr::linalg::gemv::{gemv, gemv_t};
+use fastlr::linalg::vecops::axpy;
+use fastlr::linalg::{Matrix, SparseMatrix};
+use fastlr::rng::Pcg64;
+
+/// Shapes straddling the serial cutoff for a `2·m·n`-flop kernel:
+/// 361*363 elements stays inline, 362*363 crosses into the pool.
+const GEMV_SHAPES: [(usize, usize); 2] = [(361, 363), (362, 363)];
+
+#[test]
+fn gemv_is_bit_identical_across_the_cutoff() {
+    let mut rng = Pcg64::seed_from_u64(5150);
+    for (m, n) in GEMV_SHAPES {
+        assert!((2 * m * n < cost::SERIAL_CUTOFF_FLOPS) == (m == 361));
+        let a = Matrix::gaussian(m, n, &mut rng);
+        let x: Vec<f64> = (0..n).map(|i| ((i as f64) * 0.31).sin()).collect();
+        let pooled = gemv(&a, &x).unwrap();
+        let inline = exec::with_serial(|| gemv(&a, &x).unwrap());
+        assert_eq!(pooled, inline, "gemv bits differ at {m}x{n}");
+    }
+}
+
+#[test]
+fn gemv_t_reduction_is_bit_identical_across_the_cutoff() {
+    let mut rng = Pcg64::seed_from_u64(5151);
+    for (m, n) in GEMV_SHAPES {
+        let a = Matrix::gaussian(m, n, &mut rng);
+        let x: Vec<f64> = (0..m).map(|i| ((i as f64) * 0.17).cos()).collect();
+        let pooled = gemv_t(&a, &x).unwrap();
+        let inline = exec::with_serial(|| gemv_t(&a, &x).unwrap());
+        assert_eq!(pooled, inline, "gemv_t bits differ at {m}x{n}");
+    }
+}
+
+#[test]
+fn gemv_t_merge_order_is_the_documented_one() {
+    // Replay the engine's published reduction plan by hand: same chunk
+    // ranges, same per-chunk row loop as the kernel, partials merged in
+    // ascending chunk order. Must reproduce gemv_t bit for bit.
+    let (m, n) = (700usize, 300usize);
+    let mut rng = Pcg64::seed_from_u64(5152);
+    let a = Matrix::gaussian(m, n, &mut rng);
+    let x: Vec<f64> = (0..m).map(|i| ((i as f64) * 0.23).sin()).collect();
+    let got = gemv_t(&a, &x).unwrap();
+
+    let ranges = cost::reduce_partition(2 * m * n, m);
+    assert!(ranges.len() >= 2, "size must be big enough to chunk");
+    let a_s = a.as_slice();
+    let mut want = vec![0.0; n];
+    for &(r0, r1) in &ranges {
+        let mut part = vec![0.0; n];
+        for i in r0..r1 {
+            let xi = x[i];
+            if xi != 0.0 {
+                axpy(xi, &a_s[i * n..(i + 1) * n], &mut part);
+            }
+        }
+        for (w, p) in want.iter_mut().zip(&part) {
+            *w += p;
+        }
+    }
+    assert_eq!(got, want, "gemv_t does not follow the documented merge order");
+}
+
+#[test]
+fn gemm_is_bit_identical_across_the_cutoff() {
+    // 2·m·k·n straddles the cutoff: 50*51*51 inline, 51^3 pooled.
+    let mut rng = Pcg64::seed_from_u64(5153);
+    for (m, k, n) in [(50usize, 51usize, 51usize), (51, 51, 51)] {
+        assert!((2 * m * k * n < cost::SERIAL_CUTOFF_FLOPS) == (m == 50));
+        let a = Matrix::gaussian(m, k, &mut rng);
+        let b = Matrix::gaussian(k, n, &mut rng);
+        let pooled = gemm(&a, &b).unwrap();
+        let inline = exec::with_serial(|| gemm(&a, &b).unwrap());
+        assert_eq!(pooled, inline, "gemm bits differ at {m}x{k}x{n}");
+    }
+}
+
+#[test]
+fn gemm_tn_reduction_is_bit_identical() {
+    // k = 600 reduction rows, well past the cutoff: the private
+    // accumulator panels must merge identically pooled and inline.
+    let mut rng = Pcg64::seed_from_u64(5154);
+    let a = Matrix::gaussian(600, 40, &mut rng);
+    let b = Matrix::gaussian(600, 30, &mut rng);
+    let pooled = gemm_tn(&a, &b).unwrap();
+    let inline = exec::with_serial(|| gemm_tn(&a, &b).unwrap());
+    assert_eq!(pooled, inline);
+}
+
+#[test]
+fn spmv_and_spmv_t_are_bit_identical_across_the_cutoff() {
+    // 2·nnz straddles the cutoff: 300^2 entries inline, 400^2 pooled.
+    let mut rng = Pcg64::seed_from_u64(5155);
+    for s in [300usize, 400] {
+        assert!((2 * s * s < cost::SERIAL_CUTOFF_FLOPS) == (s == 300));
+        let d = Matrix::gaussian(s, s, &mut rng);
+        let sp = SparseMatrix::from_dense(&d, 0.0);
+        let x: Vec<f64> = (0..s).map(|i| ((i as f64) * 0.11).cos()).collect();
+        let pooled = sp.spmv(&x).unwrap();
+        let inline = exec::with_serial(|| sp.spmv(&x).unwrap());
+        assert_eq!(pooled, inline, "spmv bits differ at {s}x{s}");
+        let pooled_t = sp.spmv_t(&x).unwrap();
+        let inline_t = exec::with_serial(|| sp.spmv_t(&x).unwrap());
+        assert_eq!(pooled_t, inline_t, "spmv_t bits differ at {s}x{s}");
+    }
+}
+
+#[test]
+fn fsvd_pipeline_is_bitwise_stable_under_forced_inline() {
+    // End to end: Algorithm 2 chains every engine-parallel kernel; the
+    // whole pipeline must not see the pool at all.
+    use fastlr::data::synth::low_rank_gaussian;
+    use fastlr::krylov::fsvd::{fsvd, FsvdOptions};
+    let mut rng = Pcg64::seed_from_u64(5156);
+    let a = low_rank_gaussian(500, 400, 12, &mut rng);
+    let opts = FsvdOptions { k: 30, r: 10, seed: 9, ..Default::default() };
+    let pooled = fsvd(&a, &opts).unwrap();
+    let inline = exec::with_serial(|| fsvd(&a, &opts).unwrap());
+    assert_eq!(pooled.sigma, inline.sigma);
+    assert_eq!(pooled.u, inline.u);
+    assert_eq!(pooled.v, inline.v);
+}

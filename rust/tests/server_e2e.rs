@@ -136,6 +136,31 @@ fn malformed_body_gets_400_and_connection_survives() {
     srv.shutdown();
 }
 
+/// The shared execution engine's pool gauges are visible over the wire
+/// next to the cache counters, and the factorization traffic above went
+/// through the engine one way (pooled) or the other (inline).
+#[test]
+fn stats_expose_exec_pool_gauges() {
+    let srv = start_server();
+    let mut conn = client_connect(&srv.local_addr()).unwrap();
+    let body = r#"{"synth":{"kind":"low_rank_gaussian","rows":300,"cols":200,"rank":6,"seed":3},"r":6}"#;
+    let (status, _) = client_call(&mut conn, "POST", "/v1/svd", Some(body)).unwrap();
+    assert_eq!(status, 200);
+    let stats = get_stats(&srv);
+    let exec = stats.get("exec").expect("exec gauges in /v1/stats");
+    assert_eq!(
+        exec.get("threads").and_then(Json::as_usize),
+        Some(fastlr::exec::num_threads() - 1)
+    );
+    let calls = exec.get("serial_calls").and_then(Json::as_usize).unwrap()
+        + exec.get("parallel_jobs").and_then(Json::as_usize).unwrap();
+    assert!(calls >= 1, "the svd job's kernels never touched the engine");
+    for gauge in ["tasks", "steals"] {
+        assert!(exec.get(gauge).and_then(Json::as_usize).is_some(), "missing gauge {gauge}");
+    }
+    srv.shutdown();
+}
+
 /// Dense-inline and sparse-triplet payloads both round-trip over the
 /// wire, and the sparse one reports a matrix-free method.
 #[test]
