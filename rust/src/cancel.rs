@@ -1,0 +1,162 @@
+//! Cooperative cancellation: one token threaded from the serving edge
+//! down into the iteration loops.
+//!
+//! A [`CancelToken`] carries two stop signals — an explicit cancel flag
+//! and an optional absolute deadline — behind a single cheap
+//! [`CancelToken::check`] call. The algorithm layers (`krylov`, `rsvd`)
+//! call `check` between block steps: Golub–Kahan between Lanczos
+//! iterations, R-SVD between power iterations. Both have predictable
+//! per-step cost, so a fired token stops the job within one step instead
+//! of burning a worker to completion (the paper's iterative structure is
+//! what makes deadline propagation meaningful at all).
+//!
+//! The default token is inert — `CancelToken::default().check()` is a
+//! branch on a `None`, so call sites that never set a deadline pay
+//! nothing and the determinism contract is untouched (the token affects
+//! only *whether* an iteration runs, never its arithmetic).
+
+use crate::{Error, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+#[derive(Debug)]
+struct Inner {
+    cancelled: AtomicBool,
+    deadline: Option<Instant>,
+}
+
+/// Shared cancel/deadline signal (clone = same signal).
+#[derive(Debug, Clone, Default)]
+pub struct CancelToken {
+    inner: Option<Arc<Inner>>,
+}
+
+impl CancelToken {
+    /// The inert token: never fires, costs one `Option` branch per check.
+    pub fn none() -> Self {
+        CancelToken { inner: None }
+    }
+
+    /// A live token with no deadline — cancellable via
+    /// [`CancelToken::cancel`] only.
+    pub fn new() -> Self {
+        CancelToken {
+            inner: Some(Arc::new(Inner { cancelled: AtomicBool::new(false), deadline: None })),
+        }
+    }
+
+    /// A live token that also fires once `budget` has elapsed from now.
+    pub fn with_deadline(budget: Duration) -> Self {
+        CancelToken {
+            inner: Some(Arc::new(Inner {
+                cancelled: AtomicBool::new(false),
+                deadline: Some(Instant::now() + budget),
+            })),
+        }
+    }
+
+    /// A live token with an optional budget: `None` behaves like
+    /// [`CancelToken::new`] (still cancellable, never deadlines).
+    pub fn with_budget(budget: Option<Duration>) -> Self {
+        match budget {
+            Some(b) => CancelToken::with_deadline(b),
+            None => CancelToken::new(),
+        }
+    }
+
+    /// Fire the explicit cancel flag. No-op on an inert token; idempotent.
+    pub fn cancel(&self) {
+        if let Some(inner) = &self.inner {
+            inner.cancelled.store(true, Ordering::Relaxed);
+        }
+    }
+
+    /// Whether [`CancelToken::cancel`] has been called.
+    pub fn is_cancelled(&self) -> bool {
+        self.inner.as_ref().is_some_and(|i| i.cancelled.load(Ordering::Relaxed))
+    }
+
+    /// Whether either signal has fired (flag or deadline).
+    pub fn is_stopped(&self) -> bool {
+        self.check().is_err()
+    }
+
+    /// Time left before the deadline (`None` = no deadline; zero once
+    /// passed).
+    pub fn remaining(&self) -> Option<Duration> {
+        let deadline = self.inner.as_ref()?.deadline?;
+        Some(deadline.saturating_duration_since(Instant::now()))
+    }
+
+    /// The cooperative checkpoint: `Ok(())` to keep iterating, or the
+    /// typed error to unwind with. Explicit cancel wins over the deadline
+    /// when both have fired.
+    pub fn check(&self) -> Result<()> {
+        let Some(inner) = &self.inner else { return Ok(()) };
+        if inner.cancelled.load(Ordering::Relaxed) {
+            return Err(Error::Cancelled("job cancel token fired".into()));
+        }
+        if let Some(deadline) = inner.deadline {
+            if Instant::now() >= deadline {
+                return Err(Error::DeadlineExceeded("job deadline passed".into()));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inert_token_never_fires() {
+        let t = CancelToken::none();
+        assert!(t.check().is_ok());
+        t.cancel(); // no-op
+        assert!(t.check().is_ok());
+        assert!(!t.is_cancelled());
+        assert!(t.remaining().is_none());
+        // Default is the inert token.
+        assert!(CancelToken::default().check().is_ok());
+    }
+
+    #[test]
+    fn explicit_cancel_fires_on_every_clone() {
+        let t = CancelToken::new();
+        let c = t.clone();
+        assert!(t.check().is_ok());
+        c.cancel();
+        assert!(t.is_cancelled());
+        assert!(matches!(t.check(), Err(Error::Cancelled(_))));
+        assert!(t.is_stopped());
+    }
+
+    #[test]
+    fn deadline_fires_after_budget() {
+        let t = CancelToken::with_deadline(Duration::from_millis(20));
+        assert!(t.check().is_ok());
+        assert!(t.remaining().is_some());
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(matches!(t.check(), Err(Error::DeadlineExceeded(_))));
+        assert_eq!(t.remaining(), Some(Duration::ZERO));
+        assert!(!t.is_cancelled(), "deadline is not an explicit cancel");
+    }
+
+    #[test]
+    fn cancel_wins_over_deadline() {
+        let t = CancelToken::with_deadline(Duration::ZERO);
+        t.cancel();
+        assert!(matches!(t.check(), Err(Error::Cancelled(_))));
+    }
+
+    #[test]
+    fn with_budget_none_is_cancellable_but_never_deadlines() {
+        let t = CancelToken::with_budget(None);
+        assert!(t.check().is_ok());
+        assert!(t.remaining().is_none());
+        t.cancel();
+        assert!(t.check().is_err());
+    }
+}

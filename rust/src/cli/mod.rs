@@ -4,8 +4,9 @@
 //! fastlr svd     --rows M --cols N --rank L --r R [--method fsvd|rsvd|full]
 //! fastlr rank    --rows M --cols N --rank L [--eps E]
 //! fastlr rsl     [--iters K] [--backend full|fsvd20|fsvd35] [--pjrt]
-//! fastlr serve   [--port P] [--workers W] | --demo [--jobs N]
+//! fastlr serve   [--port P] [--workers W] [--queue Q] [--budget-ms MS] | --demo [--jobs N]
 //! fastlr loadgen [--clients N] [--requests R] [--addr HOST:PORT]
+//! fastlr loadgen --open-loop RATE [--duration-ms D] [--deadline-ms MS]
 //! fastlr exp     <table1a|table1b|table2|fig1|fig2> [--scale smoke|paper]
 //! fastlr artifacts
 //! ```
@@ -29,13 +30,20 @@ USAGE:
   fastlr rank    --rows M --cols N --rank L [--eps E] [--seed S]
   fastlr rsl     [--iters K] [--backend full|fsvd20|fsvd35] [--pjrt]
   fastlr serve   [--host H] [--port P] [--workers W] [--conn-threads C] [--cache E]
+                 [--queue Q] [--budget-ms MS]
                  binds the HTTP factorization API (POST /v1/svd, POST /v1/rank,
-                 GET /v1/healthz, GET /v1/stats) and runs until killed
+                 GET|DELETE /v1/jobs/{id}, GET /v1/healthz, GET /v1/stats) and
+                 runs until killed; --queue bounds the admission queue (full =
+                 shed with 429), --budget-ms caps per-job deadlines (0 = no cap)
   fastlr serve   --demo [--jobs N] [--workers W]
                  legacy in-process demo loop (no network)
   fastlr loadgen [--clients N] [--requests R] [--addr HOST:PORT] [--seed S]
-                 drives mixed svd/rank/cache-hit traffic against --addr, or
-                 against an in-process server when no --addr is given
+                 closed loop: drives mixed svd/rank/cache-hit traffic against
+                 --addr, or against an in-process server when no --addr is given
+  fastlr loadgen --open-loop RATE [--duration-ms D] [--deadline-ms MS]
+                 [--queue Q] [--workers W] [--addr HOST:PORT] [--seed S]
+                 open loop: RATE req/s on a fixed clock regardless of
+                 completions; reports ok/shed/deadline-exceeded counts
   fastlr exp     <table1a|table1b|table2|fig1|fig2> [--scale smoke|paper]
   fastlr artifacts
 
@@ -202,12 +210,15 @@ fn cmd_serve(args: &Args) -> crate::Result<i32> {
     if port > u16::MAX as usize {
         return Err(crate::Error::InvalidArg(format!("--port {port}: not a valid TCP port")));
     }
+    let budget_ms = args.get_u64("budget-ms", 30_000)?;
     let opts = crate::server::ServeOptions {
         host: args.get_str("host", "127.0.0.1"),
         port: port as u16,
         workers: args.get_usize("workers", crate::exec::default_workers())?,
         conn_workers: args.get_usize("conn-threads", 32)?,
         cache_capacity: args.get_usize("cache", 128)?,
+        queue_depth: args.get_usize("queue", 64)?,
+        default_deadline_ms: (budget_ms > 0).then_some(budget_ms),
         seed: args.get_u64("seed", 0x5eed)?,
         ..Default::default()
     };
@@ -263,6 +274,29 @@ fn cmd_loadgen(args: &Args) -> crate::Result<i32> {
             Some(a)
         }
     };
+    if args.options.contains_key("open-loop") {
+        let deadline_ms = if args.options.contains_key("deadline-ms") {
+            Some(args.get_u64("deadline-ms", 0)?)
+        } else {
+            None
+        };
+        let opts = crate::server::loadgen::OpenLoopOptions {
+            rate: args.get_f64("open-loop", 20.0)?,
+            duration: std::time::Duration::from_millis(args.get_u64("duration-ms", 2000)?),
+            deadline_ms,
+            addr,
+            seed: args.get_u64("seed", 0x09e4)?,
+            workers: args.get_usize("workers", 1)?,
+            queue_depth: args.get_usize("queue", 2)?,
+        };
+        eprintln!(
+            "loadgen: open loop at {} req/s for {:?} ...",
+            opts.rate, opts.duration
+        );
+        let report = crate::server::loadgen::run_open_loop(&opts)?;
+        println!("{}", report.table().render_markdown());
+        return Ok(if report.other == 0 { 0 } else { 1 });
+    }
     let opts = crate::server::loadgen::LoadgenOptions {
         clients: args.get_usize("clients", 8)?,
         requests_per_client: args.get_usize("requests", 12)?,
@@ -379,6 +413,16 @@ mod tests {
     #[test]
     fn loadgen_smoke_runs_in_process() {
         let code = dispatch(&sv(&["loadgen", "--clients", "2", "--requests", "3"])).unwrap();
+        assert_eq!(code, 0);
+    }
+
+    #[test]
+    fn loadgen_open_loop_runs_in_process() {
+        let code = dispatch(&sv(&[
+            "loadgen", "--open-loop", "10", "--duration-ms", "400", "--queue", "1", "--workers",
+            "1",
+        ]))
+        .unwrap();
         assert_eq!(code, 0);
     }
 

@@ -8,8 +8,16 @@
 //! the same batching shape a serving router uses (vLLM-style), applied to
 //! factorization jobs.
 
+//! Batched jobs ride the **interactive** lane of the admission queue and
+//! are submitted with `try_submit_with`: under overload the whole flush is
+//! shed (each reply resolves to [`crate::Error::Overloaded`]) instead of
+//! stalling the pump on a blocking push — the serving edge turns that
+//! into `429 Too Many Requests`.
+
 use super::job::{JobRequest, JobResult};
+use super::queue::Priority;
 use super::service::{FactorizationService, JobHandle};
+use crate::cancel::CancelToken;
 use crate::Result;
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::time::{Duration, Instant};
@@ -31,6 +39,7 @@ impl Default for BatcherConfig {
 
 struct Incoming {
     request: JobRequest,
+    cancel: CancelToken,
     reply: Sender<Result<JobResult>>,
 }
 
@@ -57,11 +66,21 @@ impl Batcher {
 
     /// Submit through the batcher; returns a receiver for the result.
     pub fn submit(&self, request: JobRequest) -> Receiver<Result<JobResult>> {
+        self.submit_with(request, CancelToken::none())
+    }
+
+    /// [`Batcher::submit`] with a cooperative cancel/deadline token that
+    /// rides along into the service.
+    pub fn submit_with(
+        &self,
+        request: JobRequest,
+        cancel: CancelToken,
+    ) -> Receiver<Result<JobResult>> {
         let (reply_tx, reply_rx) = channel();
         self.tx
             .as_ref()
             .expect("batcher alive")
-            .send(Incoming { request, reply: reply_tx })
+            .send(Incoming { request, cancel, reply: reply_tx })
             .expect("batcher pump alive");
         reply_rx
     }
@@ -122,13 +141,19 @@ fn flush(
     flushes: &std::sync::atomic::AtomicU64,
 ) {
     flushes.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-    // Submit the whole group, then fan results back out. Handles arrive in
-    // submit order; waiting happens per-reply so slow jobs don't block the
-    // pump beyond this flush.
+    // Submit the whole group on the interactive lane, then fan results
+    // back out. Handles arrive in submit order; waiting happens per-reply
+    // so slow jobs don't block the pump beyond this flush. `try_submit`
+    // (not the blocking push) keeps the pump live under overload: a full
+    // queue sheds the job and the reply resolves to `Overloaded`.
     let batch: Vec<Incoming> = pending.drain(..).collect();
     let mut handles: Vec<(Incoming, Result<JobHandle>)> = Vec::with_capacity(batch.len());
     for inc in batch {
-        let h = service.submit(inc.request.clone());
+        let h = service.try_submit_with(
+            inc.request.clone(),
+            Priority::Interactive,
+            inc.cancel.clone(),
+        );
         handles.push((inc, h));
     }
     for (inc, h) in handles {
@@ -196,6 +221,48 @@ mod tests {
         // One lone job must still complete (deadline flush).
         let res = rx.recv_timeout(Duration::from_secs(30)).unwrap().unwrap();
         assert!(res.outcome.is_ok());
+    }
+
+    #[test]
+    fn overload_sheds_batched_jobs_with_typed_error() {
+        // One worker pinned on a big bulk job + a full one-slot queue:
+        // the deadline flush must shed, not stall the pump.
+        let svc = Arc::new(
+            FactorizationService::new(ServiceConfig {
+                workers: 1,
+                queue_depth: 1,
+                ..Default::default()
+            })
+            .unwrap(),
+        );
+        let mut rng = Pcg64::seed_from_u64(223);
+        let big = Arc::new(low_rank_gaussian(1000, 800, 40, &mut rng));
+        let occupy = svc
+            .submit(JobRequest {
+                spec: JobSpec::PartialSvd { matrix: big.clone(), r: 40 },
+                accuracy: AccuracyClass::Balanced,
+            })
+            .unwrap();
+        let filler = svc
+            .submit(JobRequest {
+                spec: JobSpec::PartialSvd { matrix: big, r: 40 },
+                accuracy: AccuracyClass::Balanced,
+            })
+            .unwrap();
+        let batcher = Batcher::new(
+            svc.clone(),
+            BatcherConfig { max_batch: 4, max_delay: Duration::from_millis(1) },
+        );
+        let a = Arc::new(low_rank_gaussian(40, 30, 2, &mut rng));
+        let rx = batcher.submit(JobRequest {
+            spec: JobSpec::PartialSvd { matrix: a, r: 2 },
+            accuracy: AccuracyClass::Balanced,
+        });
+        let err = rx.recv_timeout(Duration::from_secs(30)).unwrap().unwrap_err();
+        assert!(matches!(err, crate::Error::Overloaded(_)), "{err}");
+        assert!(svc.metrics.shed.load(std::sync::atomic::Ordering::Relaxed) >= 1);
+        assert!(occupy.wait().unwrap().outcome.is_ok());
+        assert!(filler.wait().unwrap().outcome.is_ok());
     }
 
     #[test]

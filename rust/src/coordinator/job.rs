@@ -129,13 +129,72 @@ pub enum JobOutcome {
     },
 }
 
+/// Why a job failed — typed so the serving edge can map each class to
+/// the right HTTP status (422 vs 429 vs 499 vs 504) without string
+/// matching.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobErrorKind {
+    /// The request itself was invalid (bad r, bad shape, ...).
+    InvalidArgument,
+    /// Numerical breakdown (e.g. GK on a zero matrix).
+    Breakdown,
+    /// The iteration budget ran out before convergence.
+    NoConvergence,
+    /// Admission control shed the job (queue full).
+    Overloaded,
+    /// The deadline passed — cooperatively observed between block steps.
+    DeadlineExceeded,
+    /// The cancel token fired (client cancel or shutdown).
+    Cancelled,
+    /// Anything else (worker/runtime failure).
+    Internal,
+}
+
+/// A failed job: kind + the human-readable message (kept `Clone` for
+/// fan-out, like the success payload).
+#[derive(Debug, Clone)]
+pub struct JobError {
+    /// Failure class, for status mapping and retry decisions.
+    pub kind: JobErrorKind,
+    /// The underlying error's display text.
+    pub message: String,
+}
+
+impl JobError {
+    /// Whether a client retry (after backoff) can plausibly succeed.
+    pub fn retryable(&self) -> bool {
+        matches!(self.kind, JobErrorKind::Overloaded | JobErrorKind::DeadlineExceeded)
+    }
+}
+
+impl From<crate::Error> for JobError {
+    fn from(e: crate::Error) -> Self {
+        let kind = match &e {
+            crate::Error::InvalidArg(_) | crate::Error::Shape(_) => JobErrorKind::InvalidArgument,
+            crate::Error::Breakdown(_) => JobErrorKind::Breakdown,
+            crate::Error::NoConvergence(_) => JobErrorKind::NoConvergence,
+            crate::Error::Overloaded(_) => JobErrorKind::Overloaded,
+            crate::Error::DeadlineExceeded(_) => JobErrorKind::DeadlineExceeded,
+            crate::Error::Cancelled(_) => JobErrorKind::Cancelled,
+            _ => JobErrorKind::Internal,
+        };
+        JobError { kind, message: e.to_string() }
+    }
+}
+
+impl std::fmt::Display for JobError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.message)
+    }
+}
+
 /// Completed job envelope.
 #[derive(Debug, Clone)]
 pub struct JobResult {
     /// Which job this answers.
     pub id: JobId,
-    /// Payload or the error string (kept `Clone` for fan-out).
-    pub outcome: Result<JobOutcome, String>,
+    /// Payload or the typed error (kept `Clone` for fan-out).
+    pub outcome: Result<JobOutcome, JobError>,
     /// Time spent executing (excludes queueing).
     pub exec_time: Duration,
     /// Time spent in the queue before a worker picked it up.

@@ -69,6 +69,12 @@ pub struct Metrics {
     pub completed: AtomicU64,
     /// Jobs that returned an error.
     pub failed: AtomicU64,
+    /// Jobs refused at admission (bounded queue full).
+    pub shed: AtomicU64,
+    /// Jobs stopped by an explicit cancel (client request / shutdown).
+    pub cancelled: AtomicU64,
+    /// Jobs stopped because their deadline passed.
+    pub deadline_exceeded: AtomicU64,
     /// Queue-wait distribution.
     pub queue_wait: LatencyHistogram,
     /// Execution-time distribution.
@@ -80,11 +86,15 @@ impl Metrics {
     pub fn render(&self) -> String {
         format!(
             "jobs: submitted={} completed={} failed={}\n\
+             admission: shed={} cancelled={} deadline_exceeded={}\n\
              queue_wait: mean={:?} p50={:?} p99={:?}\n\
              exec_time:  mean={:?} p50={:?} p99={:?}",
             self.submitted.load(Ordering::Relaxed),
             self.completed.load(Ordering::Relaxed),
             self.failed.load(Ordering::Relaxed),
+            self.shed.load(Ordering::Relaxed),
+            self.cancelled.load(Ordering::Relaxed),
+            self.deadline_exceeded.load(Ordering::Relaxed),
             self.queue_wait.mean(),
             self.queue_wait.quantile(0.5),
             self.queue_wait.quantile(0.99),
@@ -134,9 +144,11 @@ mod tests {
         m.submitted.store(7, Ordering::Relaxed);
         m.completed.store(6, Ordering::Relaxed);
         m.failed.store(1, Ordering::Relaxed);
+        m.shed.store(3, Ordering::Relaxed);
         let s = m.render();
         assert!(s.contains("submitted=7"));
         assert!(s.contains("failed=1"));
+        assert!(s.contains("shed=3"));
     }
 
     #[test]

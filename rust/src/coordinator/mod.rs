@@ -9,8 +9,10 @@
 //! * [`policy`]  — routing: picks traditional SVD, F-SVD or R-SVD per job
 //!   from its size, requested triplets and accuracy class (the decision
 //!   procedure the paper's §6 tables imply).
-//! * [`service`] — worker pool + queue; submit returns a handle that
-//!   resolves to the result.
+//! * [`service`] — worker pool + admission queue; submit returns a handle
+//!   that resolves to the result.
+//! * [`queue`]   — the bounded two-lane admission queue itself: shared
+//!   capacity, `try_push` shedding, interactive-over-bulk draining.
 //! * [`batcher`] — size/deadline micro-batching for swarms of small jobs.
 //! * [`metrics`] — counters and latency histograms.
 
@@ -18,8 +20,12 @@ pub mod batcher;
 pub mod job;
 pub mod metrics;
 pub mod policy;
+pub mod queue;
 pub mod service;
 
-pub use job::{JobId, JobRequest, JobResult, JobSpec, SvdMethod, SvdResult};
+pub use job::{
+    JobError, JobErrorKind, JobId, JobRequest, JobResult, JobSpec, SvdMethod, SvdResult,
+};
 pub use policy::{AccuracyClass, RoutePolicy};
+pub use queue::{AdmissionQueue, Priority, PushError};
 pub use service::{FactorizationService, ServiceConfig};

@@ -1,0 +1,312 @@
+//! Condvar-bounded two-lane admission queue.
+//!
+//! The service's single `sync_channel` gave backpressure but nothing
+//! else: no way to *refuse* work when full (shedding), no way to let a
+//! small interactive job overtake a queued bulk factorization. This
+//! queue keeps the blocking-`push` backpressure contract and adds both:
+//!
+//! * **Bound + shed** — one shared capacity across both lanes.
+//!   [`AdmissionQueue::try_push`] fails fast with [`PushError::Full`]
+//!   when the bound is hit (the serving edge turns that into
+//!   `429 Too Many Requests` + `Retry-After`), while
+//!   [`AdmissionQueue::push`] waits on a condvar for a slot (in-process
+//!   callers that want backpressure, e.g. `FactorizationService::submit`).
+//! * **Two priority lanes** — consumers drain the interactive lane
+//!   before the bulk lane, so a swarm of small jobs is never stuck
+//!   behind a half-hour factorization that is already queued. Within a
+//!   lane, FIFO order is preserved.
+//!
+//! Close semantics mirror a channel: after [`AdmissionQueue::close`],
+//! producers fail, consumers drain what is left and then see `None`.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+/// Which lane a job is admitted into.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Priority {
+    /// Small/latency-sensitive jobs: drained first.
+    Interactive,
+    /// Large factorizations: drained when the interactive lane is empty.
+    Bulk,
+}
+
+/// Why a push was refused.
+#[derive(Debug)]
+pub enum PushError<T> {
+    /// The queue was at capacity; the item is handed back for shedding.
+    Full(T),
+    /// The queue was closed; the item is handed back.
+    Closed(T),
+}
+
+#[derive(Debug)]
+struct Lanes<T> {
+    interactive: VecDeque<T>,
+    bulk: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> Lanes<T> {
+    fn len(&self) -> usize {
+        self.interactive.len() + self.bulk.len()
+    }
+}
+
+/// The bounded two-lane queue. All methods are `&self`; share it behind
+/// an `Arc`.
+#[derive(Debug)]
+pub struct AdmissionQueue<T> {
+    lanes: Mutex<Lanes<T>>,
+    /// Signalled when an item arrives or the queue closes (consumers).
+    ready: Condvar,
+    /// Signalled when a slot frees or the queue closes (blocked producers).
+    space: Condvar,
+    limit: usize,
+}
+
+impl<T> AdmissionQueue<T> {
+    /// A queue admitting at most `limit` items across both lanes
+    /// (clamped to >= 1).
+    pub fn new(limit: usize) -> Self {
+        AdmissionQueue {
+            lanes: Mutex::new(Lanes {
+                interactive: VecDeque::new(),
+                bulk: VecDeque::new(),
+                closed: false,
+            }),
+            ready: Condvar::new(),
+            space: Condvar::new(),
+            limit: limit.max(1),
+        }
+    }
+
+    /// The capacity shared by both lanes.
+    pub fn limit(&self) -> usize {
+        self.limit
+    }
+
+    /// `(interactive, bulk)` depths right now (racy by nature; gauges).
+    pub fn depths(&self) -> (usize, usize) {
+        let g = self.lanes.lock().expect("admission lock");
+        (g.interactive.len(), g.bulk.len())
+    }
+
+    /// Total queued items right now.
+    pub fn len(&self) -> usize {
+        self.lanes.lock().expect("admission lock").len()
+    }
+
+    /// Whether both lanes are empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Admit without waiting: `Err(Full)` when at capacity — the caller
+    /// sheds the job instead of queueing unbounded work.
+    pub fn try_push(&self, item: T, priority: Priority) -> Result<(), PushError<T>> {
+        let mut g = self.lanes.lock().expect("admission lock");
+        if g.closed {
+            return Err(PushError::Closed(item));
+        }
+        if g.len() >= self.limit {
+            return Err(PushError::Full(item));
+        }
+        match priority {
+            Priority::Interactive => g.interactive.push_back(item),
+            Priority::Bulk => g.bulk.push_back(item),
+        }
+        drop(g);
+        self.ready.notify_one();
+        Ok(())
+    }
+
+    /// Admit, waiting for a slot when full (backpressure). Fails only
+    /// when the queue closes while waiting.
+    pub fn push(&self, item: T, priority: Priority) -> Result<(), PushError<T>> {
+        let mut g = self.lanes.lock().expect("admission lock");
+        while !g.closed && g.len() >= self.limit {
+            g = self.space.wait(g).expect("admission lock");
+        }
+        if g.closed {
+            return Err(PushError::Closed(item));
+        }
+        match priority {
+            Priority::Interactive => g.interactive.push_back(item),
+            Priority::Bulk => g.bulk.push_back(item),
+        }
+        drop(g);
+        self.ready.notify_one();
+        Ok(())
+    }
+
+    /// Take the next job: interactive lane first, then bulk. Blocks
+    /// while both lanes are empty; `None` once closed *and* drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut g = self.lanes.lock().expect("admission lock");
+        loop {
+            if let Some(item) = g.interactive.pop_front().or_else(|| g.bulk.pop_front()) {
+                drop(g);
+                self.space.notify_one();
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.ready.wait(g).expect("admission lock");
+        }
+    }
+
+    /// Close the queue: producers fail from here on, consumers drain the
+    /// remainder. Idempotent.
+    pub fn close(&self) {
+        let mut g = self.lanes.lock().expect("admission lock");
+        g.closed = true;
+        drop(g);
+        self.ready.notify_all();
+        self.space.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_within_a_lane() {
+        let q = AdmissionQueue::new(8);
+        for i in 0..4 {
+            q.try_push(i, Priority::Bulk).unwrap();
+        }
+        assert_eq!(q.len(), 4);
+        for i in 0..4 {
+            assert_eq!(q.pop(), Some(i));
+        }
+    }
+
+    #[test]
+    fn interactive_lane_preempts_queued_bulk() {
+        let q = AdmissionQueue::new(8);
+        q.try_push("bulk-1", Priority::Bulk).unwrap();
+        q.try_push("bulk-2", Priority::Bulk).unwrap();
+        q.try_push("inter-1", Priority::Interactive).unwrap();
+        assert_eq!(q.depths(), (1, 2));
+        // The interactive job overtakes both queued bulk jobs.
+        assert_eq!(q.pop(), Some("inter-1"));
+        assert_eq!(q.pop(), Some("bulk-1"));
+        assert_eq!(q.pop(), Some("bulk-2"));
+    }
+
+    #[test]
+    fn try_push_sheds_at_the_bound_across_lanes() {
+        let q = AdmissionQueue::new(2);
+        q.try_push(1, Priority::Interactive).unwrap();
+        q.try_push(2, Priority::Bulk).unwrap();
+        // The bound is shared: a third push sheds whichever lane.
+        assert!(matches!(q.try_push(3, Priority::Interactive), Err(PushError::Full(3))));
+        assert!(matches!(q.try_push(3, Priority::Bulk), Err(PushError::Full(3))));
+        // Draining one slot re-admits.
+        assert_eq!(q.pop(), Some(1));
+        q.try_push(3, Priority::Bulk).unwrap();
+    }
+
+    #[test]
+    fn blocking_push_waits_for_a_slot() {
+        let q = Arc::new(AdmissionQueue::new(1));
+        q.try_push(0u32, Priority::Bulk).unwrap();
+        let q2 = q.clone();
+        let producer = std::thread::spawn(move || q2.push(1u32, Priority::Bulk).is_ok());
+        // Give the producer time to block, then free the slot.
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(q.pop(), Some(0));
+        assert!(producer.join().unwrap());
+        assert_eq!(q.pop(), Some(1));
+    }
+
+    #[test]
+    fn close_fails_producers_and_drains_consumers() {
+        let q = AdmissionQueue::new(4);
+        q.try_push(7, Priority::Bulk).unwrap();
+        q.close();
+        assert!(matches!(q.try_push(8, Priority::Bulk), Err(PushError::Closed(8))));
+        assert!(matches!(q.push(9, Priority::Bulk), Err(PushError::Closed(9))));
+        // Already-admitted work still drains; then None, repeatedly.
+        assert_eq!(q.pop(), Some(7));
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn close_unblocks_a_waiting_producer() {
+        let q = Arc::new(AdmissionQueue::new(1));
+        q.try_push(0u32, Priority::Bulk).unwrap();
+        let q2 = q.clone();
+        let producer = std::thread::spawn(move || {
+            matches!(q2.push(1, Priority::Bulk), Err(PushError::Closed(1)))
+        });
+        std::thread::sleep(Duration::from_millis(30));
+        q.close();
+        assert!(producer.join().unwrap());
+    }
+
+    #[test]
+    fn close_unblocks_a_waiting_consumer() {
+        let q: Arc<AdmissionQueue<u32>> = Arc::new(AdmissionQueue::new(1));
+        let q2 = q.clone();
+        let consumer = std::thread::spawn(move || q2.pop());
+        std::thread::sleep(Duration::from_millis(30));
+        q.close();
+        assert_eq!(consumer.join().unwrap(), None);
+    }
+
+    #[test]
+    fn zero_limit_clamps_to_one() {
+        let q = AdmissionQueue::new(0);
+        assert_eq!(q.limit(), 1);
+        q.try_push(1, Priority::Bulk).unwrap();
+        assert!(matches!(q.try_push(2, Priority::Bulk), Err(PushError::Full(2))));
+    }
+
+    #[test]
+    fn many_producers_many_consumers_lose_nothing() {
+        const PRODUCERS: usize = 4;
+        const PER: usize = 50;
+        let q = Arc::new(AdmissionQueue::new(3));
+        let total: usize = std::thread::scope(|scope| {
+            let producers: Vec<_> = (0..PRODUCERS)
+                .map(|p| {
+                    let q = q.clone();
+                    scope.spawn(move || {
+                        for i in 0..PER {
+                            let prio =
+                                if i % 3 == 0 { Priority::Interactive } else { Priority::Bulk };
+                            q.push(p * PER + i, prio).unwrap();
+                        }
+                    })
+                })
+                .collect();
+            let consumers: Vec<_> = (0..3)
+                .map(|_| {
+                    let q = q.clone();
+                    scope.spawn(move || {
+                        let mut n = 0usize;
+                        while q.pop().is_some() {
+                            n += 1;
+                        }
+                        n
+                    })
+                })
+                .collect();
+            // Close only after every producer has pushed everything, so
+            // nothing is refused; consumers then drain to None.
+            for p in producers {
+                p.join().unwrap();
+            }
+            q.close();
+            consumers.into_iter().map(|c| c.join().unwrap()).sum()
+        });
+        assert_eq!(total, PRODUCERS * PER);
+    }
+}

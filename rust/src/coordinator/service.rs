@@ -1,23 +1,37 @@
-//! The factorization service: bounded queue + worker pool.
+//! The factorization service: bounded two-lane admission queue + worker
+//! pool.
 //!
 //! `submit` enqueues a [`JobRequest`] and returns a [`JobHandle`] that
 //! resolves to the [`JobResult`]. Workers route each job through
 //! [`RoutePolicy`] and execute the chosen algorithm. Everything is std
-//! threads + mpsc (no async runtime exists in the vendored crate set, and
-//! the jobs are CPU-bound minutes-to-microseconds tasks — a thread pool is
-//! the right shape anyway).
+//! threads + condvars (no async runtime exists in the vendored crate set,
+//! and the jobs are CPU-bound minutes-to-microseconds tasks — a thread
+//! pool is the right shape anyway).
+//!
+//! Admission control (see [`super::queue`]):
+//!
+//! * [`FactorizationService::submit`] keeps the historical backpressure
+//!   contract — it *blocks* when the queue is full.
+//! * [`FactorizationService::try_submit_with`] *sheds* instead, failing
+//!   fast with [`Error::Overloaded`] so a serving edge can answer
+//!   `429 Too Many Requests` without tying up a connection thread.
+//! * Every job carries a [`CancelToken`]; workers check it once before
+//!   executing (a job cancelled while queued never burns the pool) and
+//!   the iteration kernels check it between block steps.
 
-use super::job::{JobId, JobOutcome, JobRequest, JobResult, JobSpec, SvdMethod, SvdResult};
+use super::job::{JobError, JobId, JobOutcome, JobRequest, JobResult, JobSpec, SvdMethod, SvdResult};
 use super::metrics::Metrics;
 use super::policy::RoutePolicy;
+use super::queue::{AdmissionQueue, Priority, PushError};
+use crate::cancel::CancelToken;
 use crate::krylov::fsvd::{fsvd, FsvdOptions};
 use crate::krylov::rank::{estimate_rank, RankOptions};
 use crate::linalg::svd::svd;
 use crate::rsvd::{rsvd, RsvdOptions};
 use crate::{Error, Result};
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Service configuration.
@@ -25,7 +39,8 @@ use std::time::Instant;
 pub struct ServiceConfig {
     /// Worker threads.
     pub workers: usize,
-    /// Bounded queue depth (backpressure: submit blocks when full).
+    /// Bounded queue depth, shared across both priority lanes
+    /// (backpressure: `submit` blocks when full; `try_submit_with` sheds).
     pub queue_depth: usize,
     /// Routing policy.
     pub policy: RoutePolicy,
@@ -50,6 +65,8 @@ struct QueuedJob {
     id: JobId,
     request: JobRequest,
     enqueued: Instant,
+    cancel: CancelToken,
+    started: Arc<AtomicBool>,
     reply: SyncSender<JobResult>,
 }
 
@@ -58,6 +75,7 @@ pub struct JobHandle {
     /// The job's id (for log correlation).
     pub id: JobId,
     rx: Receiver<JobResult>,
+    started: Arc<AtomicBool>,
 }
 
 impl JobHandle {
@@ -72,12 +90,18 @@ impl JobHandle {
     pub fn try_wait(&self) -> Option<JobResult> {
         self.rx.try_recv().ok()
     }
+
+    /// Whether a worker has picked the job up (false ⇒ still queued).
+    /// Drives the async jobs API's `queued`/`running` distinction.
+    pub fn started(&self) -> bool {
+        self.started.load(Ordering::Relaxed)
+    }
 }
 
 /// The service itself. Dropping it shuts the pool down (workers drain the
 /// queue first).
 pub struct FactorizationService {
-    tx: Option<SyncSender<QueuedJob>>,
+    queue: Arc<AdmissionQueue<QueuedJob>>,
     workers: Vec<std::thread::JoinHandle<()>>,
     next_id: AtomicU64,
     /// Shared metrics (exposed for dashboards/tests).
@@ -91,46 +115,27 @@ impl FactorizationService {
         if config.workers == 0 {
             return Err(Error::InvalidArg("service: workers must be >= 1".into()));
         }
-        let (tx, rx) = sync_channel::<QueuedJob>(config.queue_depth.max(1));
-        let rx = Arc::new(Mutex::new(rx));
+        let queue = Arc::new(AdmissionQueue::new(config.queue_depth));
         let metrics = Arc::new(Metrics::default());
         let mut workers = Vec::with_capacity(config.workers);
         for wid in 0..config.workers {
-            let rx = rx.clone();
+            let queue = queue.clone();
             let metrics = metrics.clone();
             let policy = config.policy.clone();
             let seed = config.seed;
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("fastlr-worker-{wid}"))
-                    .spawn(move || loop {
-                        // Hold the lock only to receive.
-                        let job = match rx.lock().expect("queue lock").recv() {
-                            Ok(j) => j,
-                            Err(_) => break, // channel closed: shutdown
-                        };
-                        let queue_time = job.enqueued.elapsed();
-                        metrics.queue_wait.observe(queue_time);
-                        let started = Instant::now();
-                        let outcome = execute(&job.request, &policy, seed ^ job.id);
-                        let exec_time = started.elapsed();
-                        metrics.exec_time.observe(exec_time);
-                        match &outcome {
-                            Ok(_) => metrics.completed.fetch_add(1, Ordering::Relaxed),
-                            Err(_) => metrics.failed.fetch_add(1, Ordering::Relaxed),
-                        };
-                        let _ = job.reply.send(JobResult {
-                            id: job.id,
-                            outcome: outcome.map_err(|e| e.to_string()),
-                            exec_time,
-                            queue_time,
-                        });
+                    .spawn(move || {
+                        while let Some(job) = queue.pop() {
+                            run_one(job, &policy, seed, &metrics);
+                        }
                     })
                     .map_err(|e| Error::Service(format!("spawn: {e}")))?,
             );
         }
         Ok(FactorizationService {
-            tx: Some(tx),
+            queue,
             workers,
             next_id: AtomicU64::new(1),
             metrics,
@@ -138,22 +143,81 @@ impl FactorizationService {
         })
     }
 
-    /// Enqueue a job; blocks when the queue is full (backpressure).
+    /// Enqueue a job; blocks when the queue is full (backpressure). Bulk
+    /// lane, no deadline — the historical contract, unchanged.
     pub fn submit(&self, request: JobRequest) -> Result<JobHandle> {
+        self.submit_with(request, Priority::Bulk, CancelToken::none())
+    }
+
+    /// Enqueue with an explicit lane and cancel token; blocks when full.
+    pub fn submit_with(
+        &self,
+        request: JobRequest,
+        priority: Priority,
+        cancel: CancelToken,
+    ) -> Result<JobHandle> {
+        let (job, handle) = self.make_job(request, cancel);
+        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        self.queue
+            .push(job, priority)
+            .map_err(|_| Error::Service("queue closed".into()))?;
+        Ok(handle)
+    }
+
+    /// Enqueue without waiting: when the bounded queue is full the job is
+    /// *shed* — [`Error::Overloaded`] comes back immediately and the
+    /// `shed` gauge ticks. The serving edge maps this to `429`.
+    pub fn try_submit_with(
+        &self,
+        request: JobRequest,
+        priority: Priority,
+        cancel: CancelToken,
+    ) -> Result<JobHandle> {
+        let (job, handle) = self.make_job(request, cancel);
+        match self.queue.try_push(job, priority) {
+            Ok(()) => {
+                self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+                Ok(handle)
+            }
+            Err(PushError::Full(_)) => {
+                self.metrics.shed.fetch_add(1, Ordering::Relaxed);
+                Err(Error::Overloaded(format!(
+                    "admission queue full ({} jobs queued)",
+                    self.queue.limit()
+                )))
+            }
+            Err(PushError::Closed(_)) => Err(Error::Service("queue closed".into())),
+        }
+    }
+
+    fn make_job(&self, request: JobRequest, cancel: CancelToken) -> (QueuedJob, JobHandle) {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (reply_tx, reply_rx) = sync_channel(1);
-        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
-        self.tx
-            .as_ref()
-            .expect("service alive")
-            .send(QueuedJob { id, request, enqueued: Instant::now(), reply: reply_tx })
-            .map_err(|_| Error::Service("queue closed".into()))?;
-        Ok(JobHandle { id, rx: reply_rx })
+        let started = Arc::new(AtomicBool::new(false));
+        let job = QueuedJob {
+            id,
+            request,
+            enqueued: Instant::now(),
+            cancel,
+            started: started.clone(),
+            reply: reply_tx,
+        };
+        (job, JobHandle { id, rx: reply_rx, started })
     }
 
     /// Convenience: submit and wait.
     pub fn run(&self, request: JobRequest) -> Result<JobResult> {
         self.submit(request)?.wait()
+    }
+
+    /// `(interactive, bulk)` queue depths right now (gauges).
+    pub fn queue_depths(&self) -> (usize, usize) {
+        self.queue.depths()
+    }
+
+    /// The admission bound shared by both lanes.
+    pub fn queue_limit(&self) -> usize {
+        self.queue.limit()
     }
 
     /// Current configuration.
@@ -164,29 +228,75 @@ impl FactorizationService {
 
 impl Drop for FactorizationService {
     fn drop(&mut self) {
-        self.tx.take(); // close the queue
+        self.queue.close();
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
     }
 }
 
+/// One worker turn: pre-exec cancel check, execute, account, reply.
+fn run_one(job: QueuedJob, policy: &RoutePolicy, seed: u64, metrics: &Metrics) {
+    let queue_time = job.enqueued.elapsed();
+    metrics.queue_wait.observe(queue_time);
+    job.started.store(true, Ordering::Relaxed);
+    // A job cancelled (or deadlined) while queued never reaches the
+    // kernels: reply with the typed error at zero exec cost.
+    let (outcome, exec_time) = match job.cancel.check() {
+        Err(e) => (Err(e), std::time::Duration::ZERO),
+        Ok(()) => {
+            let started = Instant::now();
+            let outcome =
+                execute_with_cancel(&job.request, policy, seed ^ job.id, &job.cancel);
+            let exec_time = started.elapsed();
+            metrics.exec_time.observe(exec_time);
+            (outcome, exec_time)
+        }
+    };
+    match &outcome {
+        Ok(_) => metrics.completed.fetch_add(1, Ordering::Relaxed),
+        Err(Error::Cancelled(_)) => metrics.cancelled.fetch_add(1, Ordering::Relaxed),
+        Err(Error::DeadlineExceeded(_)) => {
+            metrics.deadline_exceeded.fetch_add(1, Ordering::Relaxed)
+        }
+        Err(_) => metrics.failed.fetch_add(1, Ordering::Relaxed),
+    };
+    let _ = job.reply.send(JobResult {
+        id: job.id,
+        outcome: outcome.map_err(JobError::from),
+        exec_time,
+        queue_time,
+    });
+}
+
 /// Execute one routed job (also used directly by the benches so the
 /// algorithm dispatch is identical in and out of the pool).
 pub fn execute(request: &JobRequest, policy: &RoutePolicy, seed: u64) -> Result<JobOutcome> {
+    execute_with_cancel(request, policy, seed, &CancelToken::none())
+}
+
+/// [`execute`] with a cooperative stop token threaded into the iteration
+/// kernels. The inert token compiles down to a no-op check, so the bench
+/// path through [`execute`] is unchanged.
+pub fn execute_with_cancel(
+    request: &JobRequest,
+    policy: &RoutePolicy,
+    seed: u64,
+    cancel: &CancelToken,
+) -> Result<JobOutcome> {
     let method = policy.select(&request.spec, request.accuracy);
     match &request.spec {
         JobSpec::RankEstimate { matrix, eps } => {
             let est = estimate_rank(
                 matrix.as_ref(),
-                &RankOptions { eps: *eps, seed, ..Default::default() },
+                &RankOptions { eps: *eps, seed, cancel: cancel.clone(), ..Default::default() },
             )?;
             Ok(JobOutcome::Rank { rank: est.rank, k_iterations: est.k_iterations })
         }
         JobSpec::SparseRankEstimate { matrix, eps } => {
             let est = estimate_rank(
                 matrix.as_ref(),
-                &RankOptions { eps: *eps, seed, ..Default::default() },
+                &RankOptions { eps: *eps, seed, cancel: cancel.clone(), ..Default::default() },
             )?;
             Ok(JobOutcome::Rank { rank: est.rank, k_iterations: est.k_iterations })
         }
@@ -196,7 +306,13 @@ pub fn execute(request: &JobRequest, policy: &RoutePolicy, seed: u64) -> Result<
             SvdMethod::Rsvd { oversample } => {
                 let s = rsvd(
                     matrix.as_ref(),
-                    &RsvdOptions { r: *r, oversample, seed, ..Default::default() },
+                    &RsvdOptions {
+                        r: *r,
+                        oversample,
+                        seed,
+                        cancel: cancel.clone(),
+                        ..Default::default()
+                    },
                 )?
                 .truncate(*r);
                 Ok(JobOutcome::Svd(SvdResult {
@@ -216,7 +332,7 @@ pub fn execute(request: &JobRequest, policy: &RoutePolicy, seed: u64) -> Result<
                 };
                 let out = fsvd(
                     matrix.as_ref(),
-                    &FsvdOptions { k, r: *r, seed, ..Default::default() },
+                    &FsvdOptions { k, r: *r, seed, cancel: cancel.clone(), ..Default::default() },
                 )?;
                 Ok(JobOutcome::Svd(SvdResult {
                     u: out.u,
@@ -227,6 +343,9 @@ pub fn execute(request: &JobRequest, policy: &RoutePolicy, seed: u64) -> Result<
             }
         },
         JobSpec::FullSvd { matrix } => {
+            // Golub–Reinsch has no iteration hook; honor the token at the
+            // boundary so a cancelled-while-queued full SVD still stops.
+            cancel.check()?;
             let s = svd(matrix)?;
             Ok(JobOutcome::Svd(SvdResult {
                 u: s.u,
@@ -237,6 +356,7 @@ pub fn execute(request: &JobRequest, policy: &RoutePolicy, seed: u64) -> Result<
         }
         JobSpec::PartialSvd { matrix, r } => match method {
             SvdMethod::Full => {
+                cancel.check()?;
                 let s = svd(matrix)?.truncate(*r);
                 Ok(JobOutcome::Svd(SvdResult {
                     u: s.u,
@@ -248,7 +368,7 @@ pub fn execute(request: &JobRequest, policy: &RoutePolicy, seed: u64) -> Result<
             SvdMethod::Fsvd { k } => {
                 let out = fsvd(
                     matrix.as_ref(),
-                    &FsvdOptions { k, r: *r, seed, ..Default::default() },
+                    &FsvdOptions { k, r: *r, seed, cancel: cancel.clone(), ..Default::default() },
                 )?;
                 Ok(JobOutcome::Svd(SvdResult {
                     u: out.u,
@@ -260,7 +380,13 @@ pub fn execute(request: &JobRequest, policy: &RoutePolicy, seed: u64) -> Result<
             SvdMethod::Rsvd { oversample } => {
                 let s = rsvd(
                     matrix.as_ref(),
-                    &RsvdOptions { r: *r, oversample, seed, ..Default::default() },
+                    &RsvdOptions {
+                        r: *r,
+                        oversample,
+                        seed,
+                        cancel: cancel.clone(),
+                        ..Default::default()
+                    },
                 )?
                 .truncate(*r);
                 Ok(JobOutcome::Svd(SvdResult {
@@ -277,6 +403,7 @@ pub fn execute(request: &JobRequest, policy: &RoutePolicy, seed: u64) -> Result<
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::job::JobErrorKind;
     use crate::coordinator::policy::AccuracyClass;
     use crate::data::synth::low_rank_gaussian;
     use crate::linalg::Matrix;
@@ -290,6 +417,17 @@ mod tests {
             ..Default::default()
         })
         .unwrap()
+    }
+
+    fn svd_request(m: usize, n: usize, rank: usize, r: usize, seed: u64) -> JobRequest {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        JobRequest {
+            spec: JobSpec::PartialSvd {
+                matrix: Arc::new(low_rank_gaussian(m, n, rank, &mut rng)),
+                r,
+            },
+            accuracy: AccuracyClass::Balanced,
+        }
     }
 
     #[test]
@@ -457,7 +595,8 @@ mod tests {
                 accuracy: AccuracyClass::Balanced,
             })
             .unwrap();
-        assert!(res.outcome.is_err());
+        let err = res.outcome.unwrap_err();
+        assert_eq!(err.kind, JobErrorKind::Breakdown);
         assert_eq!(svc.metrics.failed.load(Ordering::Relaxed), 1);
     }
 
@@ -485,5 +624,119 @@ mod tests {
             JobOutcome::Svd(s) => assert!(matches!(s.method, SvdMethod::Rsvd { .. })),
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn try_submit_sheds_when_the_queue_is_full() {
+        // One worker, tiny bound. The first (large) job occupies the
+        // worker; the small ones then fill the queue until admission
+        // control refuses one with Overloaded.
+        let svc = FactorizationService::new(ServiceConfig {
+            workers: 1,
+            queue_depth: 2,
+            ..Default::default()
+        })
+        .unwrap();
+        let big = svc.submit(svd_request(900, 700, 30, 30, 220)).unwrap();
+        let mut kept = Vec::new();
+        let mut shed = None;
+        for i in 0..8 {
+            match svc.try_submit_with(
+                svd_request(60, 40, 3, 3, 221 + i),
+                Priority::Interactive,
+                CancelToken::none(),
+            ) {
+                Ok(h) => kept.push(h),
+                Err(e) => {
+                    assert!(matches!(e, Error::Overloaded(_)), "{e}");
+                    shed = Some(e);
+                    break;
+                }
+            }
+        }
+        let shed = shed.expect("the bounded queue never shed");
+        assert!(shed.to_string().contains("overloaded"));
+        assert!(svc.metrics.shed.load(Ordering::Relaxed) >= 1);
+        // Everything admitted still completes.
+        assert!(big.wait().unwrap().outcome.is_ok());
+        for h in kept {
+            assert!(h.wait().unwrap().outcome.is_ok());
+        }
+    }
+
+    #[test]
+    fn cancelled_while_queued_never_burns_the_pool() {
+        // One worker busy on a big job; the queued job's token fires
+        // before a worker reaches it, so it replies Cancelled with zero
+        // exec time.
+        let svc = FactorizationService::new(ServiceConfig {
+            workers: 1,
+            queue_depth: 4,
+            ..Default::default()
+        })
+        .unwrap();
+        let big = svc.submit(svd_request(900, 700, 30, 30, 230)).unwrap();
+        let cancel = CancelToken::new();
+        let h = svc
+            .submit_with(svd_request(400, 300, 5, 5, 231), Priority::Bulk, cancel.clone())
+            .unwrap();
+        cancel.cancel();
+        let res = h.wait().unwrap();
+        let err = res.outcome.unwrap_err();
+        assert_eq!(err.kind, JobErrorKind::Cancelled);
+        assert!(!err.retryable());
+        assert_eq!(res.exec_time, std::time::Duration::ZERO);
+        assert_eq!(svc.metrics.cancelled.load(Ordering::Relaxed), 1);
+        assert!(big.wait().unwrap().outcome.is_ok());
+    }
+
+    #[test]
+    fn deadline_bounded_job_stops_with_typed_error() {
+        // A 1ms budget cannot cover a 900x700 factorization: the token
+        // fires either while queued or between GK block steps — both
+        // surface as DeadlineExceeded (retryable).
+        let svc = FactorizationService::new(ServiceConfig {
+            workers: 1,
+            queue_depth: 4,
+            ..Default::default()
+        })
+        .unwrap();
+        let cancel = CancelToken::with_deadline(std::time::Duration::from_millis(1));
+        let h = svc
+            .submit_with(svd_request(900, 700, 40, 40, 232), Priority::Bulk, cancel)
+            .unwrap();
+        let res = h.wait().unwrap();
+        let err = res.outcome.unwrap_err();
+        assert_eq!(err.kind, JobErrorKind::DeadlineExceeded);
+        assert!(err.retryable());
+        assert_eq!(svc.metrics.deadline_exceeded.load(Ordering::Relaxed), 1);
+        assert_eq!(svc.metrics.failed.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn handle_reports_started_transition() {
+        let svc = service();
+        let h = svc.submit(svd_request(200, 150, 4, 4, 233)).unwrap();
+        let res = loop {
+            if let Some(r) = h.try_wait() {
+                break r;
+            }
+            std::thread::yield_now();
+        };
+        assert!(h.started());
+        assert!(res.outcome.is_ok());
+    }
+
+    #[test]
+    fn queue_gauges_report_limit() {
+        let svc = FactorizationService::new(ServiceConfig {
+            workers: 1,
+            queue_depth: 3,
+            ..Default::default()
+        })
+        .unwrap();
+        assert_eq!(svc.queue_limit(), 3);
+        let (i, b) = svc.queue_depths();
+        assert_eq!((i, b), (0, 0));
     }
 }

@@ -34,6 +34,21 @@ pub enum Error {
     /// Coordinator/service level failure (queue closed, worker panic, ...).
     Service(String),
 
+    /// Admission control shed the job: the bounded queue was full.
+    /// Retryable by construction — the serving edge maps it to
+    /// `429 Too Many Requests` with a `Retry-After` hint.
+    Overloaded(String),
+
+    /// The job's deadline passed before it finished. Raised cooperatively
+    /// between iteration block steps (see `cancel::CancelToken::check`),
+    /// so a deadlined job stops within one step instead of burning the
+    /// pool.
+    DeadlineExceeded(String),
+
+    /// The job was cancelled explicitly (client request / shutdown), via
+    /// the same cooperative token as [`Error::DeadlineExceeded`].
+    Cancelled(String),
+
     /// HTTP serving-edge failure (bind/accept/socket errors, protocol
     /// violations, invalid API payload semantics).
     Http(String),
@@ -60,6 +75,9 @@ impl fmt::Display for Error {
                 write!(f, "artifact missing: {p} (run `make artifacts` first)")
             }
             Error::Service(m) => write!(f, "service: {m}"),
+            Error::Overloaded(m) => write!(f, "overloaded: {m}"),
+            Error::DeadlineExceeded(m) => write!(f, "deadline exceeded: {m}"),
+            Error::Cancelled(m) => write!(f, "cancelled: {m}"),
             Error::Http(m) => write!(f, "http: {m}"),
             Error::Json(m) => write!(f, "json: {m}"),
             Error::Io(e) => write!(f, "{e}"),
@@ -130,6 +148,17 @@ mod tests {
         let e = Error::Json("trailing bytes at offset 7".into());
         assert!(e.to_string().starts_with("json: "));
         assert!(e.to_string().contains("offset 7"));
+    }
+
+    #[test]
+    fn admission_variants_display_their_cause() {
+        let e = Error::Overloaded("queue full (depth 64)".into());
+        assert!(e.to_string().starts_with("overloaded: "));
+        assert!(e.to_string().contains("depth 64"));
+        let e = Error::DeadlineExceeded("250ms budget spent after GK step 12".into());
+        assert!(e.to_string().starts_with("deadline exceeded: "));
+        let e = Error::Cancelled("client sent DELETE /v1/jobs/7".into());
+        assert!(e.to_string().starts_with("cancelled: "));
     }
 
     #[test]

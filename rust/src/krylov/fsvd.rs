@@ -8,6 +8,7 @@
 
 use super::gk::{gk_bidiagonalize, GkOptions, GkResult};
 use super::LinOp;
+use crate::cancel::CancelToken;
 use crate::linalg::tridiag::btb_eig;
 use crate::linalg::Matrix;
 use crate::{Error, Result};
@@ -26,11 +27,21 @@ pub struct FsvdOptions {
     pub reorth_passes: usize,
     /// Start-vector seed.
     pub seed: u64,
+    /// Cooperative stop signal, forwarded to the inner Algorithm 1 loop
+    /// (see [`GkOptions::cancel`]). The default token is inert.
+    pub cancel: CancelToken,
 }
 
 impl Default for FsvdOptions {
     fn default() -> Self {
-        FsvdOptions { k: 100, r: 20, eps: 1e-8, reorth_passes: 1, seed: 0x5eed }
+        FsvdOptions {
+            k: 100,
+            r: 20,
+            eps: 1e-8,
+            reorth_passes: 1,
+            seed: 0x5eed,
+            cancel: CancelToken::none(),
+        }
     }
 }
 
@@ -63,6 +74,7 @@ pub fn fsvd(a: &dyn LinOp, opts: &FsvdOptions) -> Result<FsvdOutput> {
             eps: opts.eps,
             reorth_passes: opts.reorth_passes,
             seed: opts.seed,
+            cancel: opts.cancel.clone(),
         },
     )?;
     fsvd_from_gk(a, &gk, opts.r)

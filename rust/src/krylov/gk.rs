@@ -16,6 +16,7 @@
 //! estimate of the numerical rank (refined by Algorithm 3).
 
 use super::LinOp;
+use crate::cancel::CancelToken;
 use crate::linalg::vecops::{axpy, dot, norm2, scal};
 use crate::linalg::Matrix;
 use crate::rng::{Pcg64, Rng};
@@ -35,11 +36,14 @@ pub struct GkOptions {
     pub reorth_passes: usize,
     /// Seed for the `q₁ ~ N(2, 1)` start vector (paper line 1).
     pub seed: u64,
+    /// Cooperative stop signal, checked once per iteration (between block
+    /// steps, never inside one). The default token is inert.
+    pub cancel: CancelToken,
 }
 
 impl Default for GkOptions {
     fn default() -> Self {
-        GkOptions { k: 100, eps: 1e-8, reorth_passes: 1, seed: 0x5eed }
+        GkOptions { k: 100, eps: 1e-8, reorth_passes: 1, seed: 0x5eed, cancel: CancelToken::none() }
     }
 }
 
@@ -119,6 +123,10 @@ pub fn gk_bidiagonalize(a: &dyn LinOp, opts: &GkOptions) -> Result<GkResult> {
     // Main loop (paper lines 4–17). Iteration j (0-based) extends the
     // bases by (q_{j+2}, p_{j+2}) from (p_{j+1}, q_{j+1}).
     for j in 0..kmax {
+        // Cooperative checkpoint: a deadlined/cancelled job stops here,
+        // between block steps, with the typed error — never mid-step, so
+        // cancel-to-idle latency is bounded by one iteration.
+        opts.cancel.check()?;
         // Line 5: q_new = A·p_j − α_j·q_j.
         let mut q_new = a.apply(&p_cols[j])?;
         axpy(-alpha[j], &q_cols[j], &mut q_new);
@@ -287,6 +295,22 @@ mod tests {
         let mut rng = Pcg64::seed_from_u64(95);
         let b = Matrix::gaussian(4, 4, &mut rng);
         assert!(gk_bidiagonalize(&b, &GkOptions { eps: f64::NAN, ..Default::default() }).is_err());
+    }
+
+    #[test]
+    fn cancelled_token_stops_the_loop_with_typed_error() {
+        let mut rng = Pcg64::seed_from_u64(97);
+        let a = Matrix::gaussian(40, 30, &mut rng);
+        let cancel = crate::cancel::CancelToken::new();
+        cancel.cancel();
+        let err = gk_bidiagonalize(&a, &GkOptions { k: 20, cancel, ..Default::default() })
+            .unwrap_err();
+        assert!(matches!(err, crate::Error::Cancelled(_)), "{err}");
+        // An already-expired deadline fires the other variant.
+        let cancel = crate::cancel::CancelToken::with_deadline(std::time::Duration::ZERO);
+        let err = gk_bidiagonalize(&a, &GkOptions { k: 20, cancel, ..Default::default() })
+            .unwrap_err();
+        assert!(matches!(err, crate::Error::DeadlineExceeded(_)), "{err}");
     }
 
     #[test]

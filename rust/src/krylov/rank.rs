@@ -7,6 +7,7 @@
 
 use super::gk::{gk_bidiagonalize, GkOptions, GkResult};
 use super::LinOp;
+use crate::cancel::CancelToken;
 use crate::linalg::tridiag::btb_eig;
 use crate::Result;
 
@@ -22,11 +23,20 @@ pub struct RankOptions {
     pub seed: u64,
     /// Optional hard cap on iterations (None → `min(m, n)` per the paper).
     pub max_iters: Option<usize>,
+    /// Cooperative stop signal, forwarded to the inner Algorithm 1 loop
+    /// (see [`GkOptions::cancel`]). The default token is inert.
+    pub cancel: CancelToken,
 }
 
 impl Default for RankOptions {
     fn default() -> Self {
-        RankOptions { eps: 1e-8, reorth_passes: 1, seed: 0x5eed, max_iters: None }
+        RankOptions {
+            eps: 1e-8,
+            reorth_passes: 1,
+            seed: 0x5eed,
+            max_iters: None,
+            cancel: CancelToken::none(),
+        }
     }
 }
 
@@ -56,6 +66,7 @@ pub fn estimate_rank(a: &dyn LinOp, opts: &RankOptions) -> Result<RankEstimate> 
             eps: opts.eps,
             reorth_passes: opts.reorth_passes,
             seed: opts.seed,
+            cancel: opts.cancel.clone(),
         },
     )?;
     rank_from_gk(&gk, opts.eps)

@@ -65,6 +65,7 @@
 //! ```
 
 pub mod bench_harness;
+pub mod cancel;
 pub mod cli;
 pub mod coordinator;
 pub mod data;
@@ -81,4 +82,5 @@ pub mod runtime;
 pub mod server;
 pub mod testing;
 
+pub use cancel::CancelToken;
 pub use error::{Error, Result};

@@ -7,6 +7,7 @@
 //! enough to cover the numerical rank (accurate but slower). Optional
 //! power iterations implement the `(A·Aᵀ)^q·A·Ω` refinement of [4] §4.5.
 
+use crate::cancel::CancelToken;
 use crate::krylov::LinOp;
 use crate::linalg::qr::orthonormalize;
 use crate::linalg::svd::{svd, Svd};
@@ -25,11 +26,21 @@ pub struct RsvdOptions {
     pub power_iters: usize,
     /// Gaussian test-matrix seed.
     pub seed: u64,
+    /// Cooperative stop signal, checked between the block steps (before
+    /// the sketch, between power iterations, before stage B). The default
+    /// token is inert.
+    pub cancel: CancelToken,
 }
 
 impl Default for RsvdOptions {
     fn default() -> Self {
-        RsvdOptions { r: 20, oversample: 10, power_iters: 0, seed: 0x5eed }
+        RsvdOptions {
+            r: 20,
+            oversample: 10,
+            power_iters: 0,
+            seed: 0x5eed,
+            cancel: CancelToken::none(),
+        }
     }
 }
 
@@ -50,11 +61,14 @@ pub fn rsvd(a: &dyn LinOp, opts: &RsvdOptions) -> Result<Svd> {
     let l = (opts.r + opts.oversample).min(n).min(m);
     let mut rng = Pcg64::seed_from_u64(opts.seed);
 
-    // Stage A: find Q whose columns approximate range(A).
+    // Stage A: find Q whose columns approximate range(A). Each block
+    // step is preceded by a cooperative cancel checkpoint.
+    opts.cancel.check()?;
     let omega = Matrix::gaussian(n, l, &mut rng);
     let y = a.apply_block(&omega)?; // m x l  (A Ω)
     let mut q = orthonormalize(&y)?;
     for _ in 0..opts.power_iters {
+        opts.cancel.check()?;
         // Subspace iteration with re-orthonormalization each half-step
         // (numerically stable variant of [4] Alg. 4.4).
         let z = a.apply_t_block(&q)?; // n x l  (A^T Q)
@@ -65,6 +79,7 @@ pub fn rsvd(a: &dyn LinOp, opts: &RsvdOptions) -> Result<Svd> {
 
     // Stage B: SVD of the small matrix B = Qᵀ·A (l x n), formed through
     // the operator as (Aᵀ·Q)ᵀ.
+    opts.cancel.check()?;
     let b = a.apply_t_block(&q)?.transpose(); // l x n
     let small = svd(&b)?;
     // U = Q · U_b.
@@ -149,6 +164,16 @@ mod tests {
     fn rejects_r_zero() {
         let a = Matrix::eye(4);
         assert!(rsvd(&a, &RsvdOptions { r: 0, ..Default::default() }).is_err());
+    }
+
+    #[test]
+    fn cancelled_token_stops_before_the_sketch() {
+        let mut rng = Pcg64::seed_from_u64(126);
+        let a = low_rank_gaussian(40, 30, 5, &mut rng);
+        let cancel = crate::cancel::CancelToken::new();
+        cancel.cancel();
+        let err = rsvd(&a, &RsvdOptions { r: 5, cancel, ..Default::default() }).unwrap_err();
+        assert!(matches!(err, crate::Error::Cancelled(_)), "{err}");
     }
 
     #[test]

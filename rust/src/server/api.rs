@@ -4,31 +4,52 @@
 //!
 //! * `POST /v1/svd`  — partial SVD. Body selects the operator (inline
 //!   dense `data`, sparse `triplets`, or a `synth` generator spec) plus
-//!   `r`, `accuracy` (`exact|balanced|fast`) and `return_vectors`.
+//!   `r`, `accuracy` (`exact|balanced|fast`), `return_vectors`, and the
+//!   admission fields: `deadline_ms`, `priority`
+//!   (`interactive|bulk`) and `mode` (`sync|async`).
 //! * `POST /v1/rank` — numerical rank (Algorithm 3); same operator
-//!   sources plus `eps`.
+//!   sources plus `eps`, same admission fields.
+//! * `GET /v1/jobs/{id}`    — poll an async job
+//!   (`queued|running|done|failed|cancelled|deadline_exceeded`).
+//! * `DELETE /v1/jobs/{id}` — fire the job's cancel token; the job
+//!   unwinds between iteration block steps and the next poll reports
+//!   `cancelled`.
 //! * `GET /v1/healthz` — liveness + config echo.
 //! * `GET /v1/stats`   — service counters, latency percentiles, cache
-//!   hit/miss counts, execution-engine pool gauges, batcher flushes.
+//!   hit/miss counts, execution-engine pool gauges, batcher flushes,
+//!   admission gauges (queue depth/shed/cancelled/deadline counters)
+//!   and the last-errors ring.
+//!
+//! Every non-2xx response carries the uniform error envelope
+//! `{"error":{"code","message","retryable","request_id"}}` (see
+//! [`Response::envelope`]); `429` responses additionally carry a
+//! `Retry-After` hint derived from the observed execution latency and
+//! the current backlog. `X-Request-Id` is accepted (or generated) and
+//! echoed on every response.
 //!
 //! Every job is fingerprinted ([`super::cache::fingerprint_spec`]) and
 //! looked up in the result cache before touching the worker pool; small
-//! jobs are routed through the [`Batcher`], large ones submitted
-//! directly. Malformed bodies answer `400`; factorization failures
-//! (e.g. numerical breakdown on a zero matrix) answer `422`.
+//! interactive jobs are routed through the [`Batcher`], everything else
+//! is offered to the admission queue with `try_submit` — when the
+//! bounded queue is full the job is *shed* with `429`, never queued
+//! unboundedly.
 
 use super::cache::{fingerprint_spec, ResultCache};
-use super::http::{Request, Response};
+use super::http::{generate_request_id, Request, Response};
+use super::jobs::{JobsRegistry, PollOutcome};
 use super::json::Json;
+use crate::cancel::CancelToken;
 use crate::coordinator::batcher::Batcher;
-use crate::coordinator::job::{JobOutcome, JobResult, SvdMethod};
+use crate::coordinator::job::{JobError, JobErrorKind, JobOutcome, JobResult, SvdMethod};
+use crate::coordinator::queue::Priority;
 use crate::coordinator::{AccuracyClass, FactorizationService, JobRequest, JobSpec};
 use crate::linalg::{Matrix, SparseMatrix};
 use crate::rng::Pcg64;
 use crate::{Error, Result};
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Refuse dense payloads (inline or synthesized) above this many entries
 /// — a 128 MiB matrix; bigger operators belong on the sparse path.
@@ -37,6 +58,9 @@ pub const MAX_DENSE_NUMEL: usize = 1 << 24;
 /// Refuse shapes with a dimension above this (sparse included): guards
 /// the `O(m + n)` workspace allocations against absurd requests.
 pub const MAX_DIM: usize = 10_000_000;
+
+/// Entries kept in the `/v1/stats` last-errors ring.
+const LAST_ERRORS_CAP: usize = 16;
 
 /// Shared state behind every handler.
 pub struct ApiState {
@@ -47,12 +71,19 @@ pub struct ApiState {
     pub batcher: Mutex<Batcher>,
     /// Fingerprint-keyed result cache.
     pub cache: ResultCache,
+    /// Async jobs registry (`mode: "async"` submissions).
+    pub jobs: JobsRegistry,
     /// Jobs at or below this many entries go through the batcher.
     pub batch_threshold: usize,
+    /// Server-side cap on per-job budgets: the effective deadline is
+    /// `min(client deadline_ms, this)`. `None` = no server cap.
+    pub default_deadline: Option<Duration>,
     /// Server start time (uptime in `/v1/stats`).
     pub started: Instant,
     /// API requests handled (any route, any status).
     pub requests: AtomicU64,
+    /// Ring of recent error envelopes (request id, status, code).
+    last_errors: Mutex<VecDeque<Json>>,
 }
 
 impl ApiState {
@@ -67,26 +98,173 @@ impl ApiState {
             service,
             batcher: Mutex::new(batcher),
             cache: ResultCache::new(cache_capacity),
+            jobs: JobsRegistry::new(256),
             batch_threshold,
+            default_deadline: None,
             started: Instant::now(),
             requests: AtomicU64::new(0),
+            last_errors: Mutex::new(VecDeque::new()),
+        }
+    }
+
+    /// Set the server-side deadline cap (builder style).
+    pub fn with_default_deadline(mut self, budget: Option<Duration>) -> Self {
+        self.default_deadline = budget;
+        self
+    }
+}
+
+// ---------------------------------------------------------------------
+// Error envelope plumbing
+// ---------------------------------------------------------------------
+
+/// A typed API error, ready to render as the uniform envelope.
+struct ApiError {
+    status: u16,
+    code: &'static str,
+    message: String,
+    retryable: bool,
+    /// `Retry-After` seconds, for 429s.
+    retry_after: Option<u64>,
+}
+
+impl ApiError {
+    fn new(status: u16, code: &'static str, message: impl Into<String>) -> ApiError {
+        ApiError {
+            status,
+            code,
+            message: message.into(),
+            retryable: matches!(status, 429 | 503 | 504),
+            retry_after: None,
+        }
+    }
+
+    /// Map a submission/transport error.
+    fn from_error(e: &Error, state: &ApiState) -> ApiError {
+        match e {
+            Error::Overloaded(_) => ApiError {
+                status: 429,
+                code: "overloaded",
+                message: e.to_string(),
+                retryable: true,
+                retry_after: Some(retry_after_hint(state)),
+            },
+            Error::DeadlineExceeded(_) => ApiError::new(504, "deadline_exceeded", e.to_string()),
+            Error::Cancelled(_) => ApiError::new(499, "cancelled", e.to_string()),
+            Error::InvalidArg(_) | Error::Http(_) | Error::Json(_) | Error::Shape(_) => {
+                ApiError::new(400, "invalid_argument", e.to_string())
+            }
+            _ => ApiError::new(500, "internal", e.to_string()),
+        }
+    }
+
+    /// Map a typed job failure (the worker's outcome).
+    fn from_job_error(e: &JobError, state: &ApiState) -> ApiError {
+        match e.kind {
+            JobErrorKind::Overloaded => ApiError {
+                status: 429,
+                code: "overloaded",
+                message: e.message.clone(),
+                retryable: true,
+                retry_after: Some(retry_after_hint(state)),
+            },
+            JobErrorKind::DeadlineExceeded => {
+                ApiError::new(504, "deadline_exceeded", e.message.clone())
+            }
+            JobErrorKind::Cancelled => ApiError::new(499, "cancelled", e.message.clone()),
+            JobErrorKind::InvalidArgument => {
+                ApiError::new(422, "invalid_argument", e.message.clone())
+            }
+            JobErrorKind::Breakdown => ApiError::new(422, "breakdown", e.message.clone()),
+            JobErrorKind::NoConvergence => {
+                ApiError::new(422, "no_convergence", e.message.clone())
+            }
+            JobErrorKind::Internal => ApiError::new(500, "internal", e.message.clone()),
         }
     }
 }
+
+/// `Retry-After` estimate: p50 execution time × (backlog + 1) / workers,
+/// clamped to 1..=60 seconds. Deliberately coarse — a hint, not a promise.
+fn retry_after_hint(state: &ApiState) -> u64 {
+    let (interactive, bulk) = state.service.queue_depths();
+    let backlog = (interactive + bulk) as f64;
+    let p50 = state.service.metrics.exec_time.quantile(0.5).as_secs_f64();
+    let workers = state.service.config().workers.max(1) as f64;
+    ((p50 * (backlog + 1.0) / workers).ceil() as u64).clamp(1, 60)
+}
+
+/// Record the error in the stats ring and render the envelope (plus
+/// `Retry-After` when present).
+fn error_response(state: &ApiState, request_id: &str, err: ApiError) -> Response {
+    {
+        let mut ring = state.last_errors.lock().expect("last-errors lock");
+        if ring.len() >= LAST_ERRORS_CAP {
+            ring.pop_front();
+        }
+        ring.push_back(Json::obj(vec![
+            ("request_id", Json::Str(request_id.to_string())),
+            ("status", Json::Num(err.status as f64)),
+            ("code", Json::Str(err.code.to_string())),
+        ]));
+    }
+    let mut resp =
+        Response::envelope(err.status, err.code, &err.message, err.retryable, request_id);
+    if let Some(secs) = err.retry_after {
+        resp = resp.with_header("retry-after", secs.to_string());
+    }
+    resp
+}
+
+// ---------------------------------------------------------------------
+// Routing
+// ---------------------------------------------------------------------
 
 /// Route one request. Pure apart from the submitted job — usable from
 /// the HTTP server and directly from tests.
 pub fn handle(state: &ApiState, req: &Request) -> Response {
     state.requests.fetch_add(1, Ordering::Relaxed);
+    let request_id = req
+        .header("x-request-id")
+        .map(str::to_string)
+        .unwrap_or_else(generate_request_id);
+    let resp = route(state, req, &request_id);
+    // Echo the correlation id on every response; envelopes already carry
+    // it, so only add when absent.
+    if resp.headers.iter().any(|(k, _)| *k == "x-request-id") {
+        resp
+    } else {
+        resp.with_header("x-request-id", request_id)
+    }
+}
+
+fn route(state: &ApiState, req: &Request, request_id: &str) -> Response {
+    if let Some(job_id) = req.path.strip_prefix("/v1/jobs/") {
+        return match req.method.as_str() {
+            "GET" => poll_job(state, job_id, request_id),
+            "DELETE" => cancel_job(state, job_id, request_id),
+            _ => error_response(
+                state,
+                request_id,
+                ApiError::new(405, "method_not_allowed", "method not allowed"),
+            ),
+        };
+    }
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/v1/healthz") => healthz(state),
         ("GET", "/v1/stats") => stats(state),
-        ("POST", "/v1/svd") => post_job(state, req, JobKind::Svd),
-        ("POST", "/v1/rank") => post_job(state, req, JobKind::Rank),
-        (_, "/v1/healthz" | "/v1/stats" | "/v1/svd" | "/v1/rank") => {
-            Response::error(405, "method not allowed")
-        }
-        _ => Response::error(404, "no such route"),
+        ("POST", "/v1/svd") => post_job(state, req, JobKind::Svd, request_id),
+        ("POST", "/v1/rank") => post_job(state, req, JobKind::Rank, request_id),
+        (_, "/v1/healthz" | "/v1/stats" | "/v1/svd" | "/v1/rank") => error_response(
+            state,
+            request_id,
+            ApiError::new(405, "method_not_allowed", "method not allowed"),
+        ),
+        _ => error_response(
+            state,
+            request_id,
+            ApiError::new(404, "not_found", "no such route"),
+        ),
     }
 }
 
@@ -118,6 +296,11 @@ fn stats(state: &ApiState) -> Response {
         b.flushes.load(Ordering::Relaxed)
     };
     let e = crate::exec::stats();
+    let (interactive_depth, bulk_depth) = state.service.queue_depths();
+    let last_errors: Vec<Json> = {
+        let ring = state.last_errors.lock().expect("last-errors lock");
+        ring.iter().cloned().collect()
+    };
     Response::json(
         200,
         &Json::obj(vec![
@@ -129,6 +312,30 @@ fn stats(state: &ApiState) -> Response {
                     ("submitted", Json::Num(m.submitted.load(Ordering::Relaxed) as f64)),
                     ("completed", Json::Num(m.completed.load(Ordering::Relaxed) as f64)),
                     ("failed", Json::Num(m.failed.load(Ordering::Relaxed) as f64)),
+                ]),
+            ),
+            (
+                // Admission-control gauges: the bounded queue + the three
+                // ways a job can stop before completing.
+                "admission",
+                Json::obj(vec![
+                    ("queue_limit", Json::Num(state.service.queue_limit() as f64)),
+                    ("queue_depth", Json::Num((interactive_depth + bulk_depth) as f64)),
+                    ("interactive_depth", Json::Num(interactive_depth as f64)),
+                    ("bulk_depth", Json::Num(bulk_depth as f64)),
+                    ("shed", Json::Num(m.shed.load(Ordering::Relaxed) as f64)),
+                    ("cancelled", Json::Num(m.cancelled.load(Ordering::Relaxed) as f64)),
+                    (
+                        "deadline_exceeded",
+                        Json::Num(m.deadline_exceeded.load(Ordering::Relaxed) as f64),
+                    ),
+                ]),
+            ),
+            (
+                "jobs_api",
+                Json::obj(vec![
+                    ("tracked", Json::Num(state.jobs.len() as f64)),
+                    ("capacity", Json::Num(state.jobs.capacity() as f64)),
                 ]),
             ),
             ("queue_wait_ms", histogram_json(&m.queue_wait)),
@@ -156,73 +363,244 @@ fn stats(state: &ApiState) -> Response {
                 ]),
             ),
             ("batcher_flushes", Json::Num(flushes as f64)),
+            ("last_errors", Json::Arr(last_errors)),
         ]),
     )
 }
+
+// ---------------------------------------------------------------------
+// Job submission
+// ---------------------------------------------------------------------
 
 enum JobKind {
     Svd,
     Rank,
 }
 
-fn post_job(state: &ApiState, req: &Request, kind: JobKind) -> Response {
+/// Submission mode.
+#[derive(PartialEq, Eq)]
+enum Mode {
+    Sync,
+    Async,
+}
+
+/// Parsed admission fields, shared by both POST endpoints.
+struct JobParams {
+    accuracy: AccuracyClass,
+    return_vectors: bool,
+    /// Effective budget: `min(client deadline_ms, server cap)`.
+    deadline: Option<Duration>,
+    /// Explicit lane; `None` = size-based default.
+    priority: Option<Priority>,
+    mode: Mode,
+}
+
+fn parse_params(state: &ApiState, body: &Json) -> Result<JobParams> {
+    let accuracy = parse_accuracy(body)?;
+    let return_vectors = body.get("return_vectors").and_then(Json::as_bool).unwrap_or(false);
+    let client_deadline =
+        field_usize(body, "deadline_ms")?.map(|ms| Duration::from_millis(ms as u64));
+    let deadline = match (client_deadline, state.default_deadline) {
+        (Some(c), Some(s)) => Some(c.min(s)),
+        (c, s) => c.or(s),
+    };
+    let priority = match body.get("priority") {
+        None => None,
+        Some(v) => match v.as_str() {
+            Some("interactive") => Some(Priority::Interactive),
+            Some("bulk") => Some(Priority::Bulk),
+            _ => {
+                return Err(Error::Http(format!(
+                    "priority must be \"interactive\" or \"bulk\", got {v}"
+                )))
+            }
+        },
+    };
+    let mode = match body.get("mode") {
+        None => Mode::Sync,
+        Some(v) => match v.as_str() {
+            Some("sync") => Mode::Sync,
+            Some("async") => Mode::Async,
+            _ => {
+                return Err(Error::Http(format!(
+                    "mode must be \"sync\" or \"async\", got {v}"
+                )))
+            }
+        },
+    };
+    Ok(JobParams { accuracy, return_vectors, deadline, priority, mode })
+}
+
+fn post_job(state: &ApiState, req: &Request, kind: JobKind, request_id: &str) -> Response {
     let parsed = req
         .body_str()
         .and_then(Json::parse)
         .and_then(|body| build_spec(&body, kind).map(|s| (body, s)));
     let (body, spec) = match parsed {
         Ok(p) => p,
-        Err(e) => return Response::error(400, &e.to_string()),
+        Err(e) => return error_response(state, request_id, ApiError::from_error(&e, state)),
     };
-    let accuracy = match parse_accuracy(&body) {
-        Ok(a) => a,
-        Err(e) => return Response::error(400, &e.to_string()),
+    let params = match parse_params(state, &body) {
+        Ok(p) => p,
+        Err(e) => return error_response(state, request_id, ApiError::from_error(&e, state)),
     };
-    let return_vectors = body.get("return_vectors").and_then(Json::as_bool).unwrap_or(false);
-    run_cached(state, spec, accuracy, return_vectors)
+    run_cached(state, spec, params, request_id)
 }
 
-fn run_cached(
-    state: &ApiState,
-    spec: JobSpec,
-    accuracy: AccuracyClass,
-    return_vectors: bool,
-) -> Response {
+fn run_cached(state: &ApiState, spec: JobSpec, params: JobParams, request_id: &str) -> Response {
     // The response shape depends on return_vectors, so it is part of the
     // cache identity (golden-ratio constant keeps the two keys unrelated).
-    let mut key = fingerprint_spec(&spec, accuracy);
-    if return_vectors {
+    // Deadline/priority/mode are *not* part of the key: they change how a
+    // result is produced, never what it is.
+    let mut key = fingerprint_spec(&spec, params.accuracy);
+    if params.return_vectors {
         key ^= 0x9e37_79b9_7f4a_7c15;
     }
+    // Cache hits bypass admission entirely — even async submissions
+    // answer 200 immediately when the result is already known.
     if let Some(mut hit) = state.cache.get(key) {
         hit.set("cached", Json::Bool(true));
         return Response::json(200, &hit);
     }
     let numel = spec.numel();
-    let request = JobRequest { spec, accuracy };
-    let result: Result<JobResult> = if numel <= state.batch_threshold {
-        let rx = state.batcher.lock().expect("batcher lock").submit(request);
+    let priority = params.priority.unwrap_or(if numel <= state.batch_threshold {
+        Priority::Interactive
+    } else {
+        Priority::Bulk
+    });
+    // Live token even without a deadline: async jobs stay cancellable.
+    let cancel = CancelToken::with_budget(params.deadline);
+    let request = JobRequest { spec, accuracy: params.accuracy };
+
+    if params.mode == Mode::Async {
+        let handle = match state.service.try_submit_with(request, priority, cancel.clone()) {
+            Ok(h) => h,
+            Err(e) => return error_response(state, request_id, ApiError::from_error(&e, state)),
+        };
+        let id = state.jobs.insert(cancel, handle, params.return_vectors, key);
+        return Response::json(
+            202,
+            &Json::obj(vec![
+                ("job_id", Json::Str(id.clone())),
+                ("status", Json::Str("queued".into())),
+                ("poll", Json::Str(format!("/v1/jobs/{id}"))),
+            ]),
+        );
+    }
+
+    let result: Result<JobResult> = if numel <= state.batch_threshold
+        && priority == Priority::Interactive
+    {
+        let rx = state.batcher.lock().expect("batcher lock").submit_with(request, cancel);
         match rx.recv() {
             Ok(r) => r,
             Err(_) => Err(Error::Service("batcher dropped the job".into())),
         }
     } else {
-        state.service.submit(request).and_then(|h| h.wait())
+        // `try_submit`, not the blocking push: a saturated queue sheds
+        // (429 + Retry-After) instead of tying up the connection worker.
+        state
+            .service
+            .try_submit_with(request, priority, cancel)
+            .and_then(|h| h.wait())
     };
     let res = match result {
         Ok(r) => r,
-        Err(e) => return Response::error(500, &e.to_string()),
+        Err(e) => return error_response(state, request_id, ApiError::from_error(&e, state)),
     };
-    match res.outcome {
+    match &res.outcome {
         Ok(outcome) => {
-            let mut v = outcome_json(&outcome, &res, return_vectors);
+            let mut v = outcome_json(outcome, &res, params.return_vectors);
             state.cache.put(key, v.clone());
             v.set("cached", Json::Bool(false));
             Response::json(200, &v)
         }
-        Err(msg) => Response::error(422, &msg),
+        Err(e) => error_response(state, request_id, ApiError::from_job_error(e, state)),
     }
 }
+
+// ---------------------------------------------------------------------
+// Async jobs endpoints
+// ---------------------------------------------------------------------
+
+fn terminal_status(kind: JobErrorKind) -> &'static str {
+    match kind {
+        JobErrorKind::Cancelled => "cancelled",
+        JobErrorKind::DeadlineExceeded => "deadline_exceeded",
+        _ => "failed",
+    }
+}
+
+fn poll_job(state: &ApiState, job_id: &str, request_id: &str) -> Response {
+    match state.jobs.poll(job_id) {
+        PollOutcome::Unknown => error_response(
+            state,
+            request_id,
+            ApiError::new(404, "not_found", format!("no such job {job_id:?}")),
+        ),
+        PollOutcome::Pending { running } => Response::json(
+            200,
+            &Json::obj(vec![
+                ("job_id", Json::Str(job_id.to_string())),
+                ("status", Json::Str(if running { "running" } else { "queued" }.into())),
+            ]),
+        ),
+        PollOutcome::Ready { result, return_vectors, cache_key } => {
+            // First observation: render once, cache successes, store the
+            // terminal body for every later poll.
+            let body = match &result.outcome {
+                Ok(outcome) => {
+                    let mut v = outcome_json(outcome, &result, return_vectors);
+                    state.cache.put(cache_key, v.clone());
+                    v.set("cached", Json::Bool(false));
+                    v.set("job_id", Json::Str(job_id.to_string()));
+                    v.set("status", Json::Str("done".into()));
+                    v
+                }
+                Err(e) => {
+                    let api_err = ApiError::from_job_error(e, state);
+                    Json::obj(vec![
+                        ("job_id", Json::Str(job_id.to_string())),
+                        ("status", Json::Str(terminal_status(e.kind).into())),
+                        (
+                            "error",
+                            Json::obj(vec![
+                                ("code", Json::Str(api_err.code.to_string())),
+                                ("message", Json::Str(api_err.message.clone())),
+                                ("retryable", Json::Bool(api_err.retryable)),
+                            ]),
+                        ),
+                    ])
+                }
+            };
+            state.jobs.store_terminal(job_id, body.clone());
+            Response::json(200, &body)
+        }
+        PollOutcome::Terminal(body) => Response::json(200, &body),
+    }
+}
+
+fn cancel_job(state: &ApiState, job_id: &str, request_id: &str) -> Response {
+    if state.jobs.request_cancel(job_id) {
+        Response::json(
+            200,
+            &Json::obj(vec![
+                ("job_id", Json::Str(job_id.to_string())),
+                ("status", Json::Str("cancelling".into())),
+            ]),
+        )
+    } else {
+        error_response(
+            state,
+            request_id,
+            ApiError::new(404, "not_found", format!("no such job {job_id:?}")),
+        )
+    }
+}
+
+// ---------------------------------------------------------------------
+// Payload parsing (unchanged wire schema for operators)
+// ---------------------------------------------------------------------
 
 fn outcome_json(outcome: &JobOutcome, res: &JobResult, return_vectors: bool) -> Json {
     let mut v = Json::obj(vec![
@@ -570,10 +948,50 @@ mod tests {
             r#"{"rows":2,"cols":2,"triplets":[[5,0,1.0]]}"#, // out of range
             r#"{"synth":{"kind":"bogus","rows":4,"cols":4,"rank":2}}"#, // bad kind
             r#"{"rows":2,"cols":2,"data":[1,2,3,4],"accuracy":"warp"}"#, // bad accuracy
+            r#"{"rows":2,"cols":2,"data":[1,2,3,4],"priority":"urgent"}"#, // bad priority
+            r#"{"rows":2,"cols":2,"data":[1,2,3,4],"mode":"defer"}"#, // bad mode
+            r#"{"rows":2,"cols":2,"data":[1,2,3,4],"deadline_ms":"soon"}"#, // bad deadline
         ] {
             let resp = handle(&st, &request("POST", "/v1/svd", bad));
             assert_eq!(resp.status, 400, "body {bad:?} -> {}", resp.status);
         }
+    }
+
+    #[test]
+    fn error_envelope_is_uniform() {
+        let st = state();
+        let resp = handle(&st, &request("POST", "/v1/svd", "{not json"));
+        assert_eq!(resp.status, 400);
+        let v = body_json(&resp);
+        let e = v.get("error").expect("envelope");
+        assert_eq!(e.get("code").and_then(Json::as_str), Some("invalid_argument"));
+        assert_eq!(e.get("retryable"), Some(&Json::Bool(false)));
+        assert!(e.get("message").and_then(Json::as_str).is_some());
+        assert!(e.get("request_id").and_then(Json::as_str).is_some());
+        assert!(resp.headers.iter().any(|(k, _)| *k == "x-request-id"));
+    }
+
+    #[test]
+    fn client_request_id_is_echoed() {
+        let st = state();
+        let mut req = request("POST", "/v1/svd", "{not json");
+        req.headers.push(("x-request-id".into(), "req-42".into()));
+        let resp = handle(&st, &req);
+        let v = body_json(&resp);
+        let e = v.get("error").unwrap();
+        assert_eq!(e.get("request_id").and_then(Json::as_str), Some("req-42"));
+        assert!(resp
+            .headers
+            .iter()
+            .any(|(k, v)| *k == "x-request-id" && v == "req-42"));
+        // Success responses echo too.
+        let mut ok = request("GET", "/v1/healthz", "");
+        ok.headers.push(("x-request-id".into(), "req-43".into()));
+        let resp = handle(&st, &ok);
+        assert!(resp
+            .headers
+            .iter()
+            .any(|(k, v)| *k == "x-request-id" && v == "req-43"));
     }
 
     #[test]
@@ -584,6 +1002,66 @@ mod tests {
                        "r":3}"#;
         let resp = handle(&st, &request("POST", "/v1/svd", body));
         assert_eq!(resp.status, 422, "{:?}", String::from_utf8_lossy(&resp.body));
+        let v = body_json(&resp);
+        assert_eq!(
+            v.get("error").and_then(|e| e.get("code")).and_then(Json::as_str),
+            Some("breakdown")
+        );
+    }
+
+    #[test]
+    fn zero_deadline_is_504_with_envelope() {
+        let st = state();
+        // Bulk-sized job (skips the batcher) with an already-expired
+        // budget: the pre-exec check fires and the edge answers 504.
+        let body = r#"{"synth":{"kind":"low_rank_gaussian","rows":200,"cols":150,"rank":5,
+                       "seed":3},"r":5,"deadline_ms":0,"priority":"bulk"}"#;
+        let resp = handle(&st, &request("POST", "/v1/svd", body));
+        assert_eq!(resp.status, 504, "{:?}", String::from_utf8_lossy(&resp.body));
+        let v = body_json(&resp);
+        let e = v.get("error").unwrap();
+        assert_eq!(e.get("code").and_then(Json::as_str), Some("deadline_exceeded"));
+        assert_eq!(e.get("retryable"), Some(&Json::Bool(true)));
+        assert_eq!(st.service.metrics.deadline_exceeded.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn async_mode_lifecycle_completes() {
+        let st = state();
+        let body = r#"{"synth":{"kind":"low_rank_gaussian","rows":60,"cols":50,"rank":4,
+                       "seed":9},"r":4,"mode":"async"}"#;
+        let resp = handle(&st, &request("POST", "/v1/svd", body));
+        assert_eq!(resp.status, 202, "{:?}", String::from_utf8_lossy(&resp.body));
+        let v = body_json(&resp);
+        let id = v.get("job_id").and_then(Json::as_str).unwrap().to_string();
+        assert_eq!(v.get("status").and_then(Json::as_str), Some("queued"));
+        let path = format!("/v1/jobs/{id}");
+        let done = loop {
+            let poll = handle(&st, &request("GET", &path, ""));
+            assert_eq!(poll.status, 200);
+            let pv = body_json(&poll);
+            match pv.get("status").and_then(Json::as_str) {
+                Some("queued") | Some("running") => std::thread::yield_now(),
+                Some("done") => break pv,
+                other => panic!("unexpected status {other:?}"),
+            }
+        };
+        assert_eq!(done.get("sigma").and_then(Json::as_array).unwrap().len(), 4);
+        // The terminal body is sticky, and the result fed the cache.
+        let again = body_json(&handle(&st, &request("GET", &path, "")));
+        assert_eq!(again.get("status").and_then(Json::as_str), Some("done"));
+        let sync_body = r#"{"synth":{"kind":"low_rank_gaussian","rows":60,"cols":50,"rank":4,
+                       "seed":9},"r":4}"#;
+        let cached = body_json(&handle(&st, &request("POST", "/v1/svd", sync_body)));
+        assert_eq!(cached.get("cached"), Some(&Json::Bool(true)));
+    }
+
+    #[test]
+    fn unknown_job_id_is_404() {
+        let st = state();
+        assert_eq!(handle(&st, &request("GET", "/v1/jobs/j-999", "")).status, 404);
+        assert_eq!(handle(&st, &request("DELETE", "/v1/jobs/j-999", "")).status, 404);
+        assert_eq!(handle(&st, &request("POST", "/v1/jobs/j-999", "")).status, 405);
     }
 
     #[test]
@@ -601,6 +1079,14 @@ mod tests {
         assert_eq!(cache.get("misses").and_then(Json::as_usize), Some(1));
         let jobs = v.get("jobs").unwrap();
         assert_eq!(jobs.get("completed").and_then(Json::as_usize), Some(1));
+        // Admission gauges ride along.
+        let adm = v.get("admission").expect("admission gauges");
+        assert_eq!(adm.get("queue_limit").and_then(Json::as_usize), Some(16));
+        for g in ["queue_depth", "interactive_depth", "bulk_depth", "shed", "cancelled"] {
+            assert!(adm.get(g).and_then(Json::as_usize).is_some(), "missing gauge {g}");
+        }
+        assert!(v.get("jobs_api").is_some());
+        assert!(matches!(v.get("last_errors"), Some(Json::Arr(_))));
         // Engine gauges ride along with the cache counters.
         let exec = v.get("exec").expect("exec gauges");
         assert_eq!(
@@ -610,5 +1096,22 @@ mod tests {
         for g in ["parallel_jobs", "serial_calls", "tasks", "steals"] {
             assert!(exec.get(g).and_then(Json::as_usize).is_some(), "missing gauge {g}");
         }
+    }
+
+    #[test]
+    fn last_errors_ring_records_request_ids() {
+        let st = state();
+        let mut req = request("POST", "/v1/svd", "{not json");
+        req.headers.push(("x-request-id".into(), "ring-1".into()));
+        handle(&st, &req);
+        let v = body_json(&handle(&st, &request("GET", "/v1/stats", "")));
+        let ring = match v.get("last_errors") {
+            Some(Json::Arr(a)) => a,
+            other => panic!("{other:?}"),
+        };
+        assert!(ring.iter().any(|e| {
+            e.get("request_id").and_then(Json::as_str) == Some("ring-1")
+                && e.get("code").and_then(Json::as_str) == Some("invalid_argument")
+        }));
     }
 }

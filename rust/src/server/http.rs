@@ -98,6 +98,9 @@ pub struct Response {
     pub status: u16,
     /// `Content-Type` value.
     pub content_type: &'static str,
+    /// Extra response headers (e.g. `x-request-id`, `retry-after`),
+    /// written verbatim after the standard ones.
+    pub headers: Vec<(&'static str, String)>,
     /// Response body.
     pub body: Vec<u8>,
 }
@@ -108,34 +111,115 @@ impl Response {
         Response {
             status,
             content_type: "application/json",
+            headers: Vec::new(),
             body: value.to_string().into_bytes(),
         }
     }
 
-    /// JSON error envelope `{"error": msg}`.
+    /// Uniform JSON error envelope — the one shape every non-2xx response
+    /// carries:
+    ///
+    /// ```text
+    /// {"error":{"code":"...","message":"...","retryable":bool,
+    ///           "request_id":"..."}}
+    /// ```
+    pub fn envelope(
+        status: u16,
+        code: &str,
+        message: &str,
+        retryable: bool,
+        request_id: &str,
+    ) -> Response {
+        let mut resp = Response::json(
+            status,
+            &Json::obj(vec![(
+                "error",
+                Json::obj(vec![
+                    ("code", Json::Str(code.to_string())),
+                    ("message", Json::Str(message.to_string())),
+                    ("retryable", Json::Bool(retryable)),
+                    ("request_id", Json::Str(request_id.to_string())),
+                ]),
+            )]),
+        );
+        resp.headers.push(("x-request-id", request_id.to_string()));
+        resp
+    }
+
+    /// Error response with the code/retryable flag derived from the
+    /// status alone (transport-level errors where no richer context
+    /// exists; the API layer builds envelopes with precise codes).
     pub fn error(status: u16, msg: &str) -> Response {
-        Response::json(status, &Json::obj(vec![("error", Json::Str(msg.to_string()))]))
+        let (code, retryable) = match status {
+            400 => ("invalid_argument", false),
+            404 => ("not_found", false),
+            405 => ("method_not_allowed", false),
+            408 => ("request_timeout", true),
+            413 => ("payload_too_large", false),
+            422 => ("unprocessable", false),
+            429 => ("overloaded", true),
+            499 => ("cancelled", false),
+            503 => ("unavailable", true),
+            504 => ("deadline_exceeded", true),
+            _ => ("internal", false),
+        };
+        Response::envelope(status, code, msg, retryable, &generate_request_id())
     }
 
     /// Plain-text response.
     pub fn text(status: u16, body: &str) -> Response {
-        Response { status, content_type: "text/plain", body: body.as_bytes().to_vec() }
+        Response {
+            status,
+            content_type: "text/plain",
+            headers: Vec::new(),
+            body: body.as_bytes().to_vec(),
+        }
+    }
+
+    /// Attach (or append) an extra response header.
+    pub fn with_header(mut self, name: &'static str, value: String) -> Response {
+        self.headers.push((name, value));
+        self
     }
 
     /// Canonical reason phrase for the codes the API uses.
     pub fn reason(status: u16) -> &'static str {
         match status {
             200 => "OK",
+            202 => "Accepted",
             400 => "Bad Request",
             404 => "Not Found",
             405 => "Method Not Allowed",
             408 => "Request Timeout",
             413 => "Payload Too Large",
             422 => "Unprocessable Entity",
+            429 => "Too Many Requests",
+            499 => "Client Closed Request",
             500 => "Internal Server Error",
+            503 => "Service Unavailable",
+            504 => "Gateway Timeout",
             _ => "Unknown",
         }
     }
+}
+
+/// Process-unique request id: FNV-1a over the pid and a monotonic
+/// counter, rendered as 16 hex chars. Generated when the client did not
+/// send `X-Request-Id`; echoed back either way so every error can be
+/// correlated across client and server logs.
+pub fn generate_request_id() -> String {
+    static COUNTER: AtomicU64 = AtomicU64::new(1);
+    let n = COUNTER.fetch_add(1, Ordering::Relaxed);
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in std::process::id()
+        .to_le_bytes()
+        .into_iter()
+        .chain(n.to_le_bytes())
+    {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    format!("{h:016x}")
 }
 
 /// Request handler: pure function from request to response. Routing and
@@ -443,14 +527,21 @@ fn write_response(
     resp: &Response,
     keep_alive: bool,
 ) -> std::io::Result<()> {
-    let head = format!(
-        "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: {}\r\n\r\n",
+    let mut head = format!(
+        "HTTP/1.1 {} {}\r\ncontent-type: {}\r\ncontent-length: {}\r\nconnection: {}\r\n",
         resp.status,
         Response::reason(resp.status),
         resp.content_type,
         resp.body.len(),
         if keep_alive { "keep-alive" } else { "close" },
     );
+    for (name, value) in &resp.headers {
+        head.push_str(name);
+        head.push_str(": ");
+        head.push_str(value);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
     stream.write_all(head.as_bytes())?;
     stream.write_all(&resp.body)?;
     stream.flush()
@@ -477,12 +568,33 @@ pub fn client_call(
     path: &str,
     body: Option<&str>,
 ) -> Result<(u16, String)> {
+    let (status, _headers, body) = client_call_headers(stream, method, path, body, &[])?;
+    Ok((status, body))
+}
+
+/// [`client_call`] with extra request headers, returning the response
+/// headers too (lower-cased names) — the load generator and the e2e
+/// tests use this to send `X-Request-Id` and read `Retry-After`.
+pub fn client_call_headers(
+    stream: &mut TcpStream,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+    extra_headers: &[(&str, &str)],
+) -> Result<(u16, Vec<(String, String)>, String)> {
     let body = body.unwrap_or("");
-    let head = format!(
+    let mut head = format!(
         "{method} {path} HTTP/1.1\r\nhost: fastlr\r\ncontent-type: application/json\r\n\
-         content-length: {}\r\nconnection: keep-alive\r\n\r\n",
+         content-length: {}\r\nconnection: keep-alive\r\n",
         body.len(),
     );
+    for (name, value) in extra_headers {
+        head.push_str(name);
+        head.push_str(": ");
+        head.push_str(value);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
     stream
         .write_all(head.as_bytes())
         .and_then(|_| stream.write_all(body.as_bytes()))
@@ -490,7 +602,7 @@ pub fn client_call(
     read_client_response(stream)
 }
 
-fn read_client_response(stream: &mut TcpStream) -> Result<(u16, String)> {
+fn read_client_response(stream: &mut TcpStream) -> Result<(u16, Vec<(String, String)>, String)> {
     let mut buf: Vec<u8> = Vec::new();
     let mut chunk = [0u8; 8192];
     loop {
@@ -510,14 +622,17 @@ fn read_client_response(stream: &mut TcpStream) -> Result<(u16, String)> {
                 continue;
             }
             let mut content_len = 0usize;
+            let mut headers = Vec::new();
             for line in lines {
                 if let Some((name, value)) = line.split_once(':') {
-                    if name.trim().eq_ignore_ascii_case("content-length") {
+                    let name = name.trim().to_ascii_lowercase();
+                    let value = value.trim().to_string();
+                    if name == "content-length" {
                         content_len = value
-                            .trim()
                             .parse()
                             .map_err(|_| Error::Http("bad content-length".into()))?;
                     }
+                    headers.push((name, value));
                 }
             }
             while buf.len() < head_len + content_len {
@@ -531,7 +646,7 @@ fn read_client_response(stream: &mut TcpStream) -> Result<(u16, String)> {
             }
             let body = String::from_utf8(buf[head_len..head_len + content_len].to_vec())
                 .map_err(|_| Error::Http("response body is not utf-8".into()))?;
-            return Ok((status, body));
+            return Ok((status, headers, body));
         }
         let n = stream.read(&mut chunk).map_err(|e| Error::Http(format!("recv: {e}")))?;
         if n == 0 {
@@ -574,6 +689,61 @@ mod tests {
         assert!(req10k.keep_alive());
         let (req11c, _) = parse_head(b"GET / HTTP/1.1\r\nConnection: close\r\n\r\n").unwrap();
         assert!(!req11c.keep_alive());
+    }
+
+    #[test]
+    fn envelope_shape_and_status_derived_codes() {
+        let resp = Response::envelope(429, "overloaded", "queue full", true, "abc123");
+        let v = Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap();
+        let e = v.get("error").expect("error object");
+        assert_eq!(e.get("code").and_then(Json::as_str), Some("overloaded"));
+        assert_eq!(e.get("message").and_then(Json::as_str), Some("queue full"));
+        assert_eq!(e.get("retryable"), Some(&Json::Bool(true)));
+        assert_eq!(e.get("request_id").and_then(Json::as_str), Some("abc123"));
+        assert!(resp.headers.iter().any(|(k, v)| *k == "x-request-id" && v == "abc123"));
+        // The status-derived fallback picks sensible codes.
+        for (status, code, retryable) in [
+            (400, "invalid_argument", false),
+            (429, "overloaded", true),
+            (504, "deadline_exceeded", true),
+            (500, "internal", false),
+        ] {
+            let r = Response::error(status, "m");
+            let v = Json::parse(std::str::from_utf8(&r.body).unwrap()).unwrap();
+            let e = v.get("error").unwrap();
+            assert_eq!(e.get("code").and_then(Json::as_str), Some(code), "{status}");
+            assert_eq!(e.get("retryable"), Some(&Json::Bool(retryable)), "{status}");
+        }
+    }
+
+    #[test]
+    fn request_ids_are_unique_hex() {
+        let a = generate_request_id();
+        let b = generate_request_id();
+        assert_ne!(a, b);
+        assert_eq!(a.len(), 16);
+        assert!(a.chars().all(|c| c.is_ascii_hexdigit()));
+    }
+
+    #[test]
+    fn extra_headers_round_trip_over_loopback() {
+        let handler: Handler = Arc::new(|req: &Request| {
+            let echo = req.header("x-request-id").unwrap_or("none").to_string();
+            Response::text(200, "ok").with_header("x-request-id", echo)
+        });
+        let server = HttpServer::bind(
+            "127.0.0.1:0",
+            HttpConfig { conn_workers: 1, ..Default::default() },
+            handler,
+        )
+        .unwrap();
+        let mut c = client_connect(&server.local_addr()).unwrap();
+        let (status, headers, _) =
+            client_call_headers(&mut c, "GET", "/", None, &[("x-request-id", "req-77")]).unwrap();
+        assert_eq!(status, 200);
+        let got = headers.iter().find(|(k, _)| k == "x-request-id").map(|(_, v)| v.as_str());
+        assert_eq!(got, Some("req-77"));
+        server.shutdown();
     }
 
     #[test]
@@ -634,9 +804,12 @@ mod tests {
         let server = echo_server();
         let mut c = client_connect(&server.local_addr()).unwrap();
         c.write_all(b"BOGUS\r\n\r\n").unwrap();
-        let (status, body) = read_client_response(&mut c).unwrap();
+        let (status, headers, body) = read_client_response(&mut c).unwrap();
         assert_eq!(status, 400);
         assert!(body.contains("error"));
+        // Transport-level errors carry the envelope + correlation header.
+        assert!(body.contains("\"code\""));
+        assert!(headers.iter().any(|(k, _)| k == "x-request-id"));
         server.shutdown();
     }
 
@@ -672,7 +845,7 @@ mod tests {
         // Head promises 10 body bytes; only 3 ever arrive. The deadline
         // check must answer 400 even though reads keep the worker busy.
         c.write_all(b"POST / HTTP/1.1\r\ncontent-length: 10\r\n\r\nabc").unwrap();
-        let (status, _) = read_client_response(&mut c).unwrap();
+        let (status, _, _) = read_client_response(&mut c).unwrap();
         assert_eq!(status, 400);
         server.shutdown();
     }

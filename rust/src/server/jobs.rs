@@ -1,0 +1,286 @@
+//! Async jobs registry: the state behind `POST /v1/svd {"mode":"async"}`,
+//! `GET /v1/jobs/{id}` and `DELETE /v1/jobs/{id}`.
+//!
+//! An async submission parks its [`JobHandle`] and [`CancelToken`] here
+//! under a short opaque id (`j-N`). Polling drives the state machine —
+//! `queued` → `running` → terminal — without any extra threads: the
+//! registry checks the handle non-blockingly on each `GET`, and the API
+//! layer renders + stores the terminal body on first observation.
+//! `DELETE` fires the token; the job unwinds cooperatively between
+//! iteration block steps and the *next* poll reports `cancelled`.
+//!
+//! Terminal entries are kept (bounded) so late polls still resolve;
+//! eviction removes the oldest terminal entries first. Live entries are
+//! intrinsically bounded by the admission queue + worker count, so a
+//! capacity above that bound never evicts a job that is still running.
+
+use super::json::Json;
+use crate::cancel::CancelToken;
+use crate::coordinator::job::JobResult;
+use crate::coordinator::service::JobHandle;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// One tracked async job.
+struct JobEntry {
+    id: String,
+    cancel: CancelToken,
+    /// Present until the result is first observed; taken exactly once so
+    /// the terminal body is rendered exactly once.
+    handle: Option<JobHandle>,
+    /// Rendered terminal response body, once known.
+    terminal: Option<Json>,
+    /// Echo of the request's `return_vectors` flag (needed at render time).
+    return_vectors: bool,
+    /// Result-cache key so a finished async job also feeds the cache.
+    cache_key: u64,
+}
+
+/// What a poll observed (the API layer turns this into HTTP).
+pub enum PollOutcome {
+    /// No such job id.
+    Unknown,
+    /// Still waiting: `running` distinguishes picked-up from queued.
+    Pending {
+        /// Whether a worker has started the job.
+        running: bool,
+    },
+    /// The result just arrived — render it, then [`JobsRegistry::store_terminal`].
+    Ready {
+        /// The job's result envelope (success or typed error inside).
+        result: Box<JobResult>,
+        /// Whether the client asked for U/V in the response.
+        return_vectors: bool,
+        /// Cache key for storing a successful render.
+        cache_key: u64,
+    },
+    /// Already terminal: the stored body, verbatim.
+    Terminal(Json),
+}
+
+/// Registry of async jobs, shared behind the API state.
+pub struct JobsRegistry {
+    entries: Mutex<VecDeque<JobEntry>>,
+    next: AtomicU64,
+    capacity: usize,
+}
+
+impl JobsRegistry {
+    /// A registry keeping at most `capacity` entries (clamped to >= 8;
+    /// terminal entries are evicted first).
+    pub fn new(capacity: usize) -> Self {
+        JobsRegistry {
+            entries: Mutex::new(VecDeque::new()),
+            next: AtomicU64::new(1),
+            capacity: capacity.max(8),
+        }
+    }
+
+    /// Track a submitted job; returns its public id.
+    pub fn insert(
+        &self,
+        cancel: CancelToken,
+        handle: JobHandle,
+        return_vectors: bool,
+        cache_key: u64,
+    ) -> String {
+        let id = format!("j-{}", self.next.fetch_add(1, Ordering::Relaxed));
+        let mut g = self.entries.lock().expect("jobs lock");
+        if g.len() >= self.capacity {
+            // Oldest-terminal-first; live jobs are never dropped.
+            if let Some(pos) = g.iter().position(|e| e.terminal.is_some()) {
+                g.remove(pos);
+            }
+        }
+        g.push_back(JobEntry {
+            id: id.clone(),
+            cancel,
+            handle: Some(handle),
+            terminal: None,
+            return_vectors,
+            cache_key,
+        });
+        id
+    }
+
+    /// Non-blocking poll. A `Ready` return transfers the result to the
+    /// caller, who must render it and call [`JobsRegistry::store_terminal`].
+    pub fn poll(&self, id: &str) -> PollOutcome {
+        let mut g = self.entries.lock().expect("jobs lock");
+        let Some(entry) = g.iter_mut().find(|e| e.id == id) else {
+            return PollOutcome::Unknown;
+        };
+        if let Some(body) = &entry.terminal {
+            return PollOutcome::Terminal(body.clone());
+        }
+        let Some(handle) = entry.handle.as_ref() else {
+            // A concurrent poll already took the handle and is rendering
+            // the terminal body; report in-flight until it lands.
+            return PollOutcome::Pending { running: true };
+        };
+        match handle.try_wait() {
+            Some(result) => {
+                entry.handle = None;
+                PollOutcome::Ready {
+                    result: Box::new(result),
+                    return_vectors: entry.return_vectors,
+                    cache_key: entry.cache_key,
+                }
+            }
+            None => PollOutcome::Pending { running: handle.started() },
+        }
+    }
+
+    /// Record the rendered terminal body for later polls.
+    pub fn store_terminal(&self, id: &str, body: Json) {
+        let mut g = self.entries.lock().expect("jobs lock");
+        if let Some(entry) = g.iter_mut().find(|e| e.id == id) {
+            entry.terminal = Some(body);
+        }
+    }
+
+    /// Fire the job's cancel token. Returns false for unknown ids; true
+    /// otherwise (including already-terminal jobs, where it is a no-op).
+    pub fn request_cancel(&self, id: &str) -> bool {
+        let g = self.entries.lock().expect("jobs lock");
+        match g.iter().find(|e| e.id == id) {
+            Some(entry) => {
+                entry.cancel.cancel();
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Number of tracked entries (live + terminal).
+    pub fn len(&self) -> usize {
+        self.entries.lock().expect("jobs lock").len()
+    }
+
+    /// Whether nothing is tracked.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The eviction bound.
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::queue::Priority;
+    use crate::coordinator::{
+        AccuracyClass, FactorizationService, JobRequest, JobSpec, ServiceConfig,
+    };
+    use crate::data::synth::low_rank_gaussian;
+    use crate::rng::Pcg64;
+    use std::sync::Arc;
+
+    fn submit_one(svc: &FactorizationService, seed: u64) -> (CancelToken, JobHandle) {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let cancel = CancelToken::new();
+        let h = svc
+            .submit_with(
+                JobRequest {
+                    spec: JobSpec::PartialSvd {
+                        matrix: Arc::new(low_rank_gaussian(120, 90, 4, &mut rng)),
+                        r: 4,
+                    },
+                    accuracy: AccuracyClass::Balanced,
+                },
+                Priority::Bulk,
+                cancel.clone(),
+            )
+            .unwrap();
+        (cancel, h)
+    }
+
+    #[test]
+    fn lifecycle_pending_ready_terminal() {
+        let svc = FactorizationService::new(ServiceConfig {
+            workers: 1,
+            queue_depth: 4,
+            ..Default::default()
+        })
+        .unwrap();
+        let reg = JobsRegistry::new(16);
+        let (cancel, h) = submit_one(&svc, 300);
+        let id = reg.insert(cancel, h, false, 1);
+        // Poll until the result surfaces, then confirm Ready fires once.
+        let (result, key) = loop {
+            match reg.poll(&id) {
+                PollOutcome::Pending { .. } => std::thread::yield_now(),
+                PollOutcome::Ready { result, cache_key, .. } => break (result, cache_key),
+                other => panic!(
+                    "unexpected state {}",
+                    match other {
+                        PollOutcome::Unknown => "unknown",
+                        PollOutcome::Terminal(_) => "terminal before store",
+                        _ => unreachable!(),
+                    }
+                ),
+            }
+        };
+        assert!(result.outcome.is_ok());
+        assert_eq!(key, 1);
+        reg.store_terminal(&id, Json::Str("done".into()));
+        assert!(matches!(reg.poll(&id), PollOutcome::Terminal(Json::Str(s)) if s == "done"));
+        assert!(matches!(reg.poll(&id), PollOutcome::Terminal(_)), "terminal is sticky");
+    }
+
+    #[test]
+    fn unknown_ids_are_reported() {
+        let reg = JobsRegistry::new(16);
+        assert!(matches!(reg.poll("j-404"), PollOutcome::Unknown));
+        assert!(!reg.request_cancel("j-404"));
+    }
+
+    #[test]
+    fn cancel_fires_the_token() {
+        let svc = FactorizationService::new(ServiceConfig {
+            workers: 1,
+            queue_depth: 4,
+            ..Default::default()
+        })
+        .unwrap();
+        let reg = JobsRegistry::new(16);
+        let (cancel, h) = submit_one(&svc, 301);
+        let id = reg.insert(cancel.clone(), h, false, 2);
+        assert!(reg.request_cancel(&id));
+        assert!(cancel.is_cancelled());
+    }
+
+    #[test]
+    fn eviction_prefers_terminal_entries() {
+        let svc = FactorizationService::new(ServiceConfig {
+            workers: 2,
+            queue_depth: 16,
+            ..Default::default()
+        })
+        .unwrap();
+        let reg = JobsRegistry::new(8); // the clamp floor
+        let mut ids = Vec::new();
+        for i in 0..8 {
+            let (c, h) = submit_one(&svc, 310 + i);
+            ids.push(reg.insert(c, h, false, i));
+        }
+        // Make the first entry terminal, then overflow the capacity.
+        loop {
+            match reg.poll(&ids[0]) {
+                PollOutcome::Pending { .. } => std::thread::yield_now(),
+                PollOutcome::Ready { .. } => break,
+                _ => panic!("unexpected"),
+            }
+        }
+        reg.store_terminal(&ids[0], Json::Str("done".into()));
+        let (c, h) = submit_one(&svc, 320);
+        let new_id = reg.insert(c, h, false, 99);
+        assert_eq!(reg.len(), 8);
+        assert!(matches!(reg.poll(&ids[0]), PollOutcome::Unknown), "terminal entry evicted");
+        assert!(!matches!(reg.poll(&new_id), PollOutcome::Unknown));
+    }
+}

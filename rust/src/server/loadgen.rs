@@ -11,6 +11,17 @@
 //! every client re-issues the *same* shared payload each cycle, so each
 //! client's second shared request is a guaranteed cache hit (its first
 //! one populated the cache before the client moved on).
+//!
+//! Two driving disciplines:
+//!
+//! * [`run`] — **closed-loop**: N clients, each waiting for its response
+//!   before issuing the next request. Measures latency under bounded
+//!   concurrency; can never overload the server.
+//! * [`run_open_loop`] — **open-loop**: requests fire on a fixed clock
+//!   regardless of completions (`fastlr loadgen --open-loop RATE`), the
+//!   discipline that actually exercises admission control. The report
+//!   classifies every response: `ok` (200), `shed` (429),
+//!   `deadline_exceeded` (504), other.
 
 use super::http::{client_call, client_connect};
 use super::json::Json;
@@ -98,6 +109,174 @@ impl LoadgenReport {
         t.push_row(vec!["cache misses".into(), cache_num("misses")]);
         t
     }
+}
+
+/// Options for [`run_open_loop`].
+#[derive(Debug, Clone)]
+pub struct OpenLoopOptions {
+    /// Arrival rate in requests per second (fixed intervals, not Poisson
+    /// — deterministic schedules make CI assertions reproducible).
+    pub rate: f64,
+    /// How long to keep issuing requests.
+    pub duration: Duration,
+    /// `deadline_ms` attached to every request (`None` = omit).
+    pub deadline_ms: Option<u64>,
+    /// Target server; `None` starts an in-process server sized by
+    /// `workers`/`queue_depth` below.
+    pub addr: Option<SocketAddr>,
+    /// Base seed for the synthetic payloads (every request is unique —
+    /// open-loop traffic must never be served from the cache).
+    pub seed: u64,
+    /// Worker threads for the in-process server.
+    pub workers: usize,
+    /// Admission-queue depth for the in-process server. Keep it small to
+    /// see shedding at modest rates.
+    pub queue_depth: usize,
+}
+
+impl Default for OpenLoopOptions {
+    fn default() -> Self {
+        OpenLoopOptions {
+            rate: 20.0,
+            duration: Duration::from_secs(2),
+            deadline_ms: None,
+            addr: None,
+            seed: 0x09e4,
+            workers: 1,
+            queue_depth: 2,
+        }
+    }
+}
+
+/// Outcome counts of an open-loop run.
+#[derive(Debug)]
+pub struct OpenLoopReport {
+    /// Requests issued.
+    pub issued: usize,
+    /// `200 OK` responses.
+    pub ok: usize,
+    /// `429` responses — shed by admission control.
+    pub shed: usize,
+    /// `504` responses — deadline expired while queued or mid-iteration.
+    pub deadline_exceeded: usize,
+    /// Anything else (other statuses, transport errors).
+    pub other: usize,
+    /// Wall-clock time for the whole run (includes in-flight drain).
+    pub wall: Duration,
+    /// Final `/v1/stats` snapshot from the server.
+    pub stats: Json,
+}
+
+impl OpenLoopReport {
+    /// Render as a `bench_harness` table.
+    pub fn table(&self) -> Table {
+        let adm = self.stats.get("admission");
+        let adm_num = |k: &str| {
+            adm.and_then(|a| a.get(k))
+                .and_then(Json::as_f64)
+                .map(|x| format!("{x}"))
+                .unwrap_or_else(|| "NA".into())
+        };
+        let mut t = Table::new("Loadgen — open-loop admission control", &["metric", "value"]);
+        t.push_row(vec!["issued".into(), self.issued.to_string()]);
+        t.push_row(vec!["ok (200)".into(), self.ok.to_string()]);
+        t.push_row(vec!["shed (429)".into(), self.shed.to_string()]);
+        t.push_row(vec!["deadline exceeded (504)".into(), self.deadline_exceeded.to_string()]);
+        t.push_row(vec!["other".into(), self.other.to_string()]);
+        t.push_row(vec!["wall (s)".into(), format!("{:.3}", self.wall.as_secs_f64())]);
+        t.push_row(vec!["server shed counter".into(), adm_num("shed")]);
+        t.push_row(vec!["server deadline counter".into(), adm_num("deadline_exceeded")]);
+        t.push_row(vec!["server cancel counter".into(), adm_num("cancelled")]);
+        t
+    }
+}
+
+/// A unique bulk-sized payload for open-loop tick `i`: big enough to skip
+/// the micro-batcher and occupy a worker for a visible slice of time,
+/// uniquely seeded so the cache never absorbs the load.
+fn open_loop_body(i: usize, seed: u64, deadline_ms: Option<u64>) -> String {
+    let seed = seed.wrapping_add(i as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    let deadline = deadline_ms.map(|ms| format!(r#","deadline_ms":{ms}"#)).unwrap_or_default();
+    format!(
+        r#"{{"synth":{{"kind":"low_rank_gaussian","rows":300,"cols":240,"rank":6,"seed":{seed}}},"r":6,"priority":"bulk"{deadline}}}"#
+    )
+}
+
+/// Fire requests on a fixed clock and classify every response.
+pub fn run_open_loop(opts: &OpenLoopOptions) -> Result<OpenLoopReport> {
+    if !opts.rate.is_finite() || opts.rate <= 0.0 || opts.duration.is_zero() {
+        return Err(Error::InvalidArg("loadgen: open-loop rate and duration must be > 0".into()));
+    }
+    let local = match opts.addr {
+        Some(_) => None,
+        None => Some(start(ServeOptions {
+            port: 0,
+            workers: opts.workers.max(1),
+            queue_depth: opts.queue_depth,
+            conn_workers: 64,
+            ..Default::default()
+        })?),
+    };
+    let addr = opts.addr.unwrap_or_else(|| local.as_ref().expect("local server").local_addr());
+
+    let interval = Duration::from_secs_f64(1.0 / opts.rate);
+    let n = (opts.duration.as_secs_f64() * opts.rate).ceil() as usize;
+    let t0 = Instant::now();
+    let (tx, rx) = std::sync::mpsc::channel::<u16>();
+    std::thread::scope(|scope| {
+        for i in 0..n {
+            // Fixed-interval schedule: ticks do not wait for responses.
+            let target = t0 + interval.mul_f64(i as f64);
+            if let Some(gap) = target.checked_duration_since(Instant::now()) {
+                std::thread::sleep(gap);
+            }
+            let tx = tx.clone();
+            let body = open_loop_body(i, opts.seed, opts.deadline_ms);
+            scope.spawn(move || {
+                // Fresh connection per request: an open-loop client must
+                // not serialize behind its own earlier requests.
+                let status = client_connect(&addr)
+                    .and_then(|mut c| client_call(&mut c, "POST", "/v1/svd", Some(&body)))
+                    .map(|(status, _)| status)
+                    .unwrap_or(0);
+                let _ = tx.send(status);
+            });
+        }
+        // The scope joins all in-flight requests before returning.
+    });
+    drop(tx);
+    let wall = t0.elapsed();
+
+    let mut report = OpenLoopReport {
+        issued: n,
+        ok: 0,
+        shed: 0,
+        deadline_exceeded: 0,
+        other: 0,
+        wall,
+        stats: Json::Null,
+    };
+    for status in rx {
+        match status {
+            200 => report.ok += 1,
+            429 => report.shed += 1,
+            504 => report.deadline_exceeded += 1,
+            _ => report.other += 1,
+        }
+    }
+    report.stats = {
+        let mut conn = client_connect(&addr)?;
+        let (status, body) = client_call(&mut conn, "GET", "/v1/stats", None)?;
+        if status == 200 {
+            Json::parse(&body)?
+        } else {
+            Json::Null
+        }
+    };
+    if let Some(srv) = local {
+        srv.shutdown();
+    }
+    Ok(report)
 }
 
 /// The request body a given `(client, i)` slot issues.
@@ -239,5 +418,42 @@ mod tests {
     #[test]
     fn rejects_zero_clients() {
         assert!(run(&LoadgenOptions { clients: 0, ..Default::default() }).is_err());
+    }
+
+    #[test]
+    fn open_loop_overload_sheds_and_still_serves() {
+        // One worker, one queue slot, 40 req/s of unique bulk jobs: the
+        // fixed clock outruns the worker, so admission control must shed
+        // — while the jobs that were admitted still succeed.
+        let report = run_open_loop(&OpenLoopOptions {
+            rate: 40.0,
+            duration: Duration::from_millis(1200),
+            workers: 1,
+            queue_depth: 1,
+            ..Default::default()
+        })
+        .unwrap();
+        assert_eq!(
+            report.ok + report.shed + report.deadline_exceeded + report.other,
+            report.issued
+        );
+        assert!(report.ok >= 1, "no request ever completed: {report:?}");
+        assert!(report.shed >= 1, "queue never shed: {report:?}");
+        assert_eq!(report.other, 0, "unexpected failures: {report:?}");
+        // The server-side counter agrees with the client-observed 429s.
+        let shed_counter = report
+            .stats
+            .get("admission")
+            .and_then(|a| a.get("shed"))
+            .and_then(Json::as_usize)
+            .unwrap();
+        assert!(shed_counter >= report.shed, "server shed {shed_counter} < client {}", report.shed);
+        let t = report.table().render_markdown();
+        assert!(t.contains("shed"));
+    }
+
+    #[test]
+    fn open_loop_rejects_zero_rate() {
+        assert!(run_open_loop(&OpenLoopOptions { rate: 0.0, ..Default::default() }).is_err());
     }
 }

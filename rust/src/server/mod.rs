@@ -13,9 +13,13 @@
 //!   thread pool, keep-alive, graceful shutdown. Zero dependencies.
 //! * [`json`]    — the wire codec: a small JSON value type with parser
 //!   and serializer.
-//! * [`api`]     — `POST /v1/svd`, `POST /v1/rank`, `GET /v1/healthz`,
+//! * [`api`]     — `POST /v1/svd`, `POST /v1/rank`, the async
+//!   `GET|DELETE /v1/jobs/{id}` pair, `GET /v1/healthz`,
 //!   `GET /v1/stats`; translates payloads into [`crate::coordinator`]
-//!   job specs.
+//!   job specs and enforces admission control (bounded queue with 429
+//!   shedding, per-request deadlines, cooperative cancellation).
+//! * [`jobs`]    — registry of async (`"mode":"async"`) jobs: id →
+//!   handle + cancel token + terminal body.
 //! * [`cache`]   — LRU result cache keyed by an FNV-1a content
 //!   fingerprint of the operator, so one factorization serves many
 //!   consumers (the paper's compute profile, made a serving property).
@@ -29,6 +33,7 @@
 pub mod api;
 pub mod cache;
 pub mod http;
+pub mod jobs;
 pub mod json;
 pub mod loadgen;
 
@@ -64,6 +69,10 @@ pub struct ServeOptions {
     pub batch_threshold: usize,
     /// Largest accepted request body in bytes.
     pub max_body: usize,
+    /// Server-side cap on per-job execution budgets, in milliseconds.
+    /// A request's effective deadline is `min(deadline_ms, this)`;
+    /// `None` disables the cap.
+    pub default_deadline_ms: Option<u64>,
 }
 
 impl Default for ServeOptions {
@@ -78,6 +87,7 @@ impl Default for ServeOptions {
             cache_capacity: 128,
             batch_threshold: 1 << 14,
             max_body: 256 << 20,
+            default_deadline_ms: Some(30_000),
         }
     }
 }
@@ -121,7 +131,11 @@ pub fn start(opts: ServeOptions) -> Result<RunningServer> {
         seed: opts.seed,
         ..Default::default()
     })?);
-    let state = Arc::new(ApiState::new(service, opts.cache_capacity, opts.batch_threshold));
+    let state = Arc::new(
+        ApiState::new(service, opts.cache_capacity, opts.batch_threshold).with_default_deadline(
+            opts.default_deadline_ms.map(std::time::Duration::from_millis),
+        ),
+    );
     let handler: http::Handler = {
         let state = state.clone();
         Arc::new(move |req: &Request| api::handle(&state, req))

@@ -2,7 +2,7 @@
 //! 127.0.0.1, real TCP clients, the full http → api → cache →
 //! coordinator path.
 
-use fastlr::server::http::{client_call, client_connect};
+use fastlr::server::http::{client_call, client_call_headers, client_connect};
 use fastlr::server::json::Json;
 use fastlr::server::{start, RunningServer, ServeOptions};
 use std::sync::atomic::Ordering;
@@ -183,5 +183,202 @@ fn wire_payload_variants_round_trip() {
     assert_eq!(v.get("method").and_then(Json::as_str), Some("fsvd"));
     let sigma = v.get("sigma").and_then(Json::as_array).unwrap();
     assert!((sigma[0].as_f64().unwrap() - 3.0).abs() < 1e-9);
+    srv.shutdown();
+}
+
+/// A unique bulk-sized payload (always a cache miss, skips the batcher).
+fn bulk_body(seed: u64) -> String {
+    format!(
+        r#"{{"synth":{{"kind":"low_rank_gaussian","rows":300,"cols":240,"rank":6,"seed":{seed}}},"r":6,"priority":"bulk"}}"#
+    )
+}
+
+/// Acceptance: under saturation the bounded queue sheds with `429 Too
+/// Many Requests` + a `Retry-After` hint, while admitted jobs still
+/// complete — queue depth stays bounded instead of growing without limit.
+#[test]
+fn saturated_queue_sheds_with_429_and_retry_after() {
+    let srv = start(ServeOptions {
+        port: 0,
+        workers: 1,
+        queue_depth: 1,
+        conn_workers: 16,
+        ..Default::default()
+    })
+    .unwrap();
+    let addr = srv.local_addr();
+    // 8 concurrent bulk jobs against 1 worker + 1 queue slot: at most a
+    // couple can be admitted, the rest must shed immediately.
+    let outcomes: Vec<(u16, Vec<(String, String)>, String)> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..8)
+            .map(|i| {
+                scope.spawn(move || {
+                    let mut conn = client_connect(&addr).unwrap();
+                    let body = bulk_body(7000 + i);
+                    client_call_headers(&mut conn, "POST", "/v1/svd", Some(&body), &[]).unwrap()
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let statuses: Vec<u16> = outcomes.iter().map(|(s, _, _)| *s).collect();
+    let ok = outcomes.iter().filter(|(s, _, _)| *s == 200).count();
+    let shed: Vec<_> = outcomes.iter().filter(|(s, _, _)| *s == 429).collect();
+    assert_eq!(ok + shed.len(), 8, "unexpected statuses: {statuses:?}");
+    assert!(ok >= 1, "nothing was admitted");
+    assert!(shed.len() >= 4, "only {} of 8 shed", shed.len());
+    for (_, headers, body) in &shed {
+        let retry: u64 = headers
+            .iter()
+            .find(|(k, _)| k == "retry-after")
+            .map(|(_, v)| v.parse().unwrap())
+            .expect("429 carries retry-after");
+        assert!((1..=60).contains(&retry));
+        let e = Json::parse(body).unwrap();
+        let e = e.get("error").expect("envelope");
+        assert_eq!(e.get("code").and_then(Json::as_str), Some("overloaded"));
+        assert_eq!(e.get("retryable"), Some(&Json::Bool(true)));
+    }
+    let stats = get_stats(&srv);
+    assert!(stat_usize(&stats, "admission", "shed") >= shed.len());
+    assert_eq!(stat_usize(&stats, "admission", "queue_limit"), 1);
+    assert!(stat_usize(&stats, "admission", "queue_depth") <= 1);
+    srv.shutdown();
+}
+
+/// Acceptance: a deadline-bounded job stops with `504` once its budget
+/// expires mid-iteration — the worker gives the slot back instead of
+/// finishing doomed work, and the deadline gauge increments.
+#[test]
+fn deadline_expires_mid_job_with_504() {
+    let srv = start_server();
+    let mut conn = client_connect(&srv.local_addr()).unwrap();
+    // A job that takes far longer than 30 ms: the GK loop's cooperative
+    // check fires between block steps (or pre-exec if it queued too long).
+    let body = r#"{"synth":{"kind":"low_rank_gaussian","rows":1200,"cols":1000,"rank":30,
+                   "seed":17},"r":80,"deadline_ms":30,"priority":"bulk"}"#;
+    let (status, body) = client_call(&mut conn, "POST", "/v1/svd", Some(body)).unwrap();
+    assert_eq!(status, 504, "{body}");
+    let v = Json::parse(&body).unwrap();
+    let e = v.get("error").expect("envelope");
+    assert_eq!(e.get("code").and_then(Json::as_str), Some("deadline_exceeded"));
+    assert_eq!(e.get("retryable"), Some(&Json::Bool(true)));
+    let stats = get_stats(&srv);
+    assert!(stat_usize(&stats, "admission", "deadline_exceeded") >= 1);
+    assert_eq!(stat_usize(&stats, "jobs", "failed"), 0, "deadline must not count as failure");
+    srv.shutdown();
+}
+
+/// Acceptance: the async lifecycle — submit with `"mode":"async"` (202 +
+/// job id), poll, DELETE to cancel, poll again to observe `cancelled` —
+/// and the cancel gauge increments without burning a worker.
+#[test]
+fn async_submit_poll_cancel_lifecycle() {
+    let srv = start(ServeOptions {
+        port: 0,
+        workers: 1,
+        queue_depth: 4,
+        conn_workers: 16,
+        ..Default::default()
+    })
+    .unwrap();
+    let mut conn = client_connect(&srv.local_addr()).unwrap();
+    let submit = |conn: &mut std::net::TcpStream, seed: u64| {
+        let body = format!(
+            r#"{{"synth":{{"kind":"low_rank_gaussian","rows":600,"cols":500,"rank":10,"seed":{seed}}},"r":10,"mode":"async"}}"#
+        );
+        let (status, body) = client_call(conn, "POST", "/v1/svd", Some(&body)).unwrap();
+        assert_eq!(status, 202, "{body}");
+        let v = Json::parse(&body).unwrap();
+        assert_eq!(v.get("status").and_then(Json::as_str), Some("queued"));
+        v.get("job_id").and_then(Json::as_str).unwrap().to_string()
+    };
+    // Job A occupies the single worker; job B sits in the queue, so the
+    // DELETE below cancels it before any work starts.
+    let job_a = submit(&mut conn, 31);
+    let job_b = submit(&mut conn, 32);
+    let (status, body) =
+        client_call(&mut conn, "DELETE", &format!("/v1/jobs/{job_b}"), None).unwrap();
+    assert_eq!(status, 200, "{body}");
+    let v = Json::parse(&body).unwrap();
+    assert_eq!(v.get("status").and_then(Json::as_str), Some("cancelling"));
+    // Poll B to a terminal state: it must come back cancelled, with the
+    // worker never having executed it.
+    let terminal = |conn: &mut std::net::TcpStream, id: &str| loop {
+        let (status, body) = client_call(conn, "GET", &format!("/v1/jobs/{id}"), None).unwrap();
+        assert_eq!(status, 200, "{body}");
+        let v = Json::parse(&body).unwrap();
+        match v.get("status").and_then(Json::as_str) {
+            Some("queued") | Some("running") => std::thread::yield_now(),
+            Some(s) => break (s.to_string(), v),
+        }
+    };
+    let (status_b, v) = terminal(&mut conn, &job_b);
+    assert_eq!(status_b, "cancelled", "{v}");
+    assert_eq!(
+        v.get("error").and_then(|e| e.get("code")).and_then(Json::as_str),
+        Some("cancelled")
+    );
+    // Job A is unaffected and completes normally.
+    let (status_a, v) = terminal(&mut conn, &job_a);
+    assert_eq!(status_a, "done", "{v}");
+    assert_eq!(v.get("sigma").and_then(Json::as_array).unwrap().len(), 10);
+    let stats = get_stats(&srv);
+    assert!(stat_usize(&stats, "admission", "cancelled") >= 1);
+    // Unknown ids are 404s on both verbs.
+    assert_eq!(client_call(&mut conn, "GET", "/v1/jobs/j-9999", None).unwrap().0, 404);
+    assert_eq!(client_call(&mut conn, "DELETE", "/v1/jobs/j-9999", None).unwrap().0, 404);
+    srv.shutdown();
+}
+
+/// Acceptance: every error status wears the same envelope —
+/// `{"error":{"code","message","retryable","request_id"}}` — and a
+/// client-supplied `X-Request-Id` is echoed in both header and body.
+#[test]
+fn error_envelope_on_every_error_status() {
+    let srv = start_server();
+    let mut conn = client_connect(&srv.local_addr()).unwrap();
+    let cases: Vec<(&str, &str, Option<String>, u16, &str)> = vec![
+        ("POST", "/v1/svd", Some("{not json".into()), 400, "invalid_argument"),
+        ("GET", "/nope", None, 404, "not_found"),
+        ("POST", "/v1/healthz", None, 405, "method_not_allowed"),
+        (
+            "POST",
+            "/v1/svd",
+            Some(
+                r#"{"synth":{"kind":"low_rank_gaussian","rows":700,"cols":600,"rank":0},"r":3}"#
+                    .into(),
+            ),
+            422,
+            "breakdown",
+        ),
+        ("GET", "/v1/jobs/j-404", None, 404, "not_found"),
+    ];
+    for (i, (method, path, body, want_status, want_code)) in cases.iter().enumerate() {
+        let rid = format!("e2e-req-{i}");
+        let (status, headers, body) = client_call_headers(
+            &mut conn,
+            method,
+            path,
+            body.as_deref(),
+            &[("x-request-id", &rid)],
+        )
+        .unwrap();
+        assert_eq!(status, *want_status, "{method} {path}: {body}");
+        let v = Json::parse(&body).unwrap();
+        let e = v.get("error").unwrap_or_else(|| panic!("no envelope on {status}: {body}"));
+        assert_eq!(e.get("code").and_then(Json::as_str), Some(*want_code));
+        assert!(e.get("message").and_then(Json::as_str).is_some_and(|m| !m.is_empty()));
+        assert!(matches!(e.get("retryable"), Some(Json::Bool(_))));
+        assert_eq!(e.get("request_id").and_then(Json::as_str), Some(rid.as_str()));
+        assert!(
+            headers.iter().any(|(k, v)| k == "x-request-id" && *v == rid),
+            "x-request-id not echoed on {status}"
+        );
+    }
+    // The envelopes are observable after the fact in the stats ring.
+    let stats = get_stats(&srv);
+    let ring = stats.get("last_errors").and_then(Json::as_array).unwrap();
+    assert!(ring.len() >= cases.len(), "ring too short: {}", ring.len());
     srv.shutdown();
 }
