@@ -1,0 +1,187 @@
+#!/usr/bin/env python3
+"""Executable specification of the observability histogram.
+
+Mirrors ``rust/src/obs/metrics.rs`` 1:1 — same bucket ladder, same
+``bucket_index`` rule, same ``ceil(q*n)``-th-observation quantile, same
+fixed-ascending-order ``merge_from`` — and validates the two properties
+the Rust code promises but a unit test can only spot-check:
+
+  1. bucket boundaries: an observation equal to a bucket's upper bound
+     lands *in* that bucket, one microsecond more lands in the next, and
+     anything past 60 s lands in the overflow slot; the reported
+     quantile is always the upper bound of the bucket holding the
+     ``ceil(q*n)``-th smallest sample (checked against a sorted oracle
+     across thousands of random histograms);
+  2. fixed-order merge: integer bucket counts merged in ascending index
+     order make the aggregate *exact* — bit-identical to observing the
+     same samples serially, for every random sharding and every shard
+     merge order (the same fixed-merge-order contract the exec engine's
+     PR 3 reductions keep).
+
+Run:  python3 python/sims/obs_sim.py
+Exit: 0 on success, 1 with a diagnostic on any violation. Stdlib only.
+"""
+
+from __future__ import annotations
+
+import math
+import random
+import sys
+
+# ----------------------------------------------------------------------
+# 1:1 port of rust/src/obs/metrics.rs (Histogram core)
+# ----------------------------------------------------------------------
+
+BUCKETS_US = [
+    50, 100, 250, 500, 1_000, 2_500, 5_000, 10_000, 25_000, 50_000, 100_000,
+    250_000, 500_000, 1_000_000, 2_500_000, 5_000_000, 10_000_000, 30_000_000,
+    60_000_000,
+]
+NUM_BUCKETS = len(BUCKETS_US) + 1
+OVERFLOW_US = (2**64 - 1) // 2  # u64::MAX / 2
+
+
+def bucket_index(us: int) -> int:
+    """First bucket whose upper bound is >= us, else the overflow slot."""
+    for i, b in enumerate(BUCKETS_US):
+        if us <= b:
+            return i
+    return len(BUCKETS_US)
+
+
+class Histogram:
+    """Fixed-bucket log-scale histogram (integer counts and sum)."""
+
+    def __init__(self) -> None:
+        self.counts = [0] * NUM_BUCKETS
+        self.sum_us = 0
+        self.n = 0
+
+    def observe_us(self, us: int) -> None:
+        self.counts[bucket_index(us)] += 1
+        self.sum_us += us
+        self.n += 1
+
+    def quantile(self, q: float) -> int:
+        """Upper bound (µs) of the bucket holding the ceil(q*n)-th sample."""
+        if self.n == 0:
+            return 0
+        target = math.ceil(max(0.0, min(1.0, q)) * self.n)
+        acc = 0
+        for i, c in enumerate(self.counts):
+            acc += c
+            if acc >= target:
+                return BUCKETS_US[i] if i < len(BUCKETS_US) else OVERFLOW_US
+        return BUCKETS_US[-1]
+
+    def merge_from(self, src: "Histogram") -> None:
+        """Add src's buckets in fixed ascending index order."""
+        for i in range(NUM_BUCKETS):
+            if src.counts[i] > 0:
+                self.counts[i] += src.counts[i]
+        self.sum_us += src.sum_us
+        self.n += src.n
+
+
+# ----------------------------------------------------------------------
+# Property 1: bucket boundaries and quantile semantics
+# ----------------------------------------------------------------------
+
+
+def check_bucket_boundaries() -> None:
+    assert BUCKETS_US == sorted(set(BUCKETS_US)), "ladder must strictly increase"
+    # Exact boundary values stay in their bucket; +1 µs crosses over.
+    for i, bound in enumerate(BUCKETS_US):
+        assert bucket_index(bound) == i, f"{bound} µs should land in bucket {i}"
+        expect = i + 1 if i + 1 < NUM_BUCKETS else len(BUCKETS_US)
+        assert bucket_index(bound + 1) == expect, f"{bound}+1 µs crossover"
+    assert bucket_index(0) == 0
+    assert bucket_index(60_000_000 + 1) == len(BUCKETS_US), "past 60 s -> overflow"
+    assert bucket_index(2**63) == len(BUCKETS_US)
+
+    # Degenerate histograms (the 429 Retry-After regression class).
+    h = Histogram()
+    assert h.quantile(0.5) == 0, "empty histogram must report 0, not a bucket bound"
+    h.observe_us(1)
+    assert h.quantile(0.5) == 50, "single sample reports its bucket's upper bound"
+    assert h.quantile(1.0) == 50
+
+
+def check_quantiles_against_oracle(rng: random.Random, trials: int) -> None:
+    """quantile(q) == upper bound of the bucket of the ceil(q*n)-th sample."""
+    for trial in range(trials):
+        n = rng.randint(1, 400)
+        # Log-uniform samples spanning sub-bucket to overflow territory.
+        samples = [int(10 ** rng.uniform(0, 8.5)) for _ in range(n)]
+        h = Histogram()
+        for s in samples:
+            h.observe_us(s)
+        assert h.n == n and h.sum_us == sum(samples)
+        ordered = sorted(samples)
+        # q=0 is degenerate by construction: target 0 is satisfied by the
+        # very first bucket, so it always reports BUCKETS_US[0].
+        assert h.quantile(0.0) == BUCKETS_US[0]
+        for q in (0.25, 0.5, 0.9, 0.99, 1.0):
+            target = math.ceil(q * n)
+            kth = ordered[target - 1]
+            i = bucket_index(kth)
+            want = BUCKETS_US[i] if i < len(BUCKETS_US) else OVERFLOW_US
+            got = h.quantile(q)
+            assert got == want, (
+                f"trial {trial}: q={q} n={n} kth={kth} want {want} got {got}"
+            )
+            # The reported bound never understates the true sample.
+            assert got >= min(kth, OVERFLOW_US)
+
+
+# ----------------------------------------------------------------------
+# Property 2: sharded merge is exact, independent of split and order
+# ----------------------------------------------------------------------
+
+
+def check_fixed_order_merge(rng: random.Random, trials: int) -> None:
+    for trial in range(trials):
+        n = rng.randint(1, 600)
+        samples = [int(10 ** rng.uniform(0, 8.5)) for _ in range(n)]
+        serial = Histogram()
+        for s in samples:
+            serial.observe_us(s)
+
+        # Random sharding: each observation lands on a random shard, like
+        # requests landing on connection-worker threads.
+        k = rng.randint(1, 8)
+        shards = [Histogram() for _ in range(k)]
+        for s in samples:
+            shards[rng.randrange(k)].observe_us(s)
+
+        # Merge the shards in a random order: the fixed *bucket* walk
+        # inside merge_from is what makes the result exact; shard order
+        # must not matter for integer counts.
+        merged = Histogram()
+        for shard in rng.sample(shards, k):
+            merged.merge_from(shard)
+
+        assert merged.counts == serial.counts, (
+            f"trial {trial}: bucket counts diverge\n"
+            f"  merged {merged.counts}\n  serial {serial.counts}"
+        )
+        assert merged.sum_us == serial.sum_us, f"trial {trial}: sums diverge"
+        assert merged.n == serial.n
+        for q in (0.5, 0.9, 0.99):
+            assert merged.quantile(q) == serial.quantile(q), (
+                f"trial {trial}: q={q} diverges after merge"
+            )
+
+
+def main() -> int:
+    rng = random.Random(0x0B5)
+    check_bucket_boundaries()
+    check_quantiles_against_oracle(rng, trials=2000)
+    check_fixed_order_merge(rng, trials=1000)
+    print("obs_sim: bucket boundaries, quantile oracle (2000 trials), "
+          "fixed-order merge (1000 trials) all OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -5,8 +5,9 @@
 //! fastlr rank    --rows M --cols N --rank L [--eps E]
 //! fastlr rsl     [--iters K] [--backend full|fsvd20|fsvd35] [--pjrt]
 //! fastlr serve   [--port P] [--workers W] [--queue Q] [--budget-ms MS] | --demo [--jobs N]
-//! fastlr loadgen [--clients N] [--requests R] [--addr HOST:PORT]
-//! fastlr loadgen --open-loop RATE [--duration-ms D] [--deadline-ms MS]
+//! fastlr loadgen [--clients N] [--requests R] [--addr HOST:PORT] [--out PATH]
+//! fastlr loadgen --open-loop RATE [--duration-ms D] [--deadline-ms MS] [--out PATH]
+//! fastlr top     [--addr HOST:PORT] [--raw]
 //! fastlr exp     <table1a|table1b|table2|fig1|fig2> [--scale smoke|paper]
 //! fastlr artifacts
 //! ```
@@ -37,13 +38,19 @@ USAGE:
                  shed with 429), --budget-ms caps per-job deadlines (0 = no cap)
   fastlr serve   --demo [--jobs N] [--workers W]
                  legacy in-process demo loop (no network)
-  fastlr loadgen [--clients N] [--requests R] [--addr HOST:PORT] [--seed S]
+  fastlr loadgen [--clients N] [--requests R] [--addr HOST:PORT] [--seed S] [--out PATH]
                  closed loop: drives mixed svd/rank/cache-hit traffic against
                  --addr, or against an in-process server when no --addr is given
   fastlr loadgen --open-loop RATE [--duration-ms D] [--deadline-ms MS]
-                 [--queue Q] [--workers W] [--addr HOST:PORT] [--seed S]
+                 [--queue Q] [--workers W] [--addr HOST:PORT] [--seed S] [--out PATH]
                  open loop: RATE req/s on a fixed clock regardless of
-                 completions; reports ok/shed/deadline-exceeded counts
+                 completions; reports ok/shed/deadline-exceeded counts;
+                 --out writes the report table (with its latency histogram)
+                 as a bench-harness JSON artifact, e.g. BENCH_serve.json
+  fastlr top     [--addr HOST:PORT] [--raw]
+                 one-shot observability view of a running server: scrapes
+                 GET /v1/stats and renders a compact table; --raw dumps the
+                 GET /v1/metrics Prometheus-style text instead
   fastlr exp     <table1a|table1b|table2|fig1|fig2> [--scale smoke|paper]
   fastlr artifacts
 
@@ -74,6 +81,7 @@ pub fn dispatch(argv: &[String]) -> crate::Result<i32> {
         "rsl" => cmd_rsl(&args),
         "serve" => cmd_serve(&args),
         "loadgen" => cmd_loadgen(&args),
+        "top" => cmd_top(&args),
         "exp" => cmd_exp(&args),
         "artifacts" => cmd_artifacts(),
         "help" | "--help" | "-h" => {
@@ -294,7 +302,9 @@ fn cmd_loadgen(args: &Args) -> crate::Result<i32> {
             opts.rate, opts.duration
         );
         let report = crate::server::loadgen::run_open_loop(&opts)?;
-        println!("{}", report.table().render_markdown());
+        let table = report.table();
+        println!("{}", table.render_markdown());
+        write_report(args, &table)?;
         return Ok(if report.other == 0 { 0 } else { 1 });
     }
     let opts = crate::server::loadgen::LoadgenOptions {
@@ -308,8 +318,84 @@ fn cmd_loadgen(args: &Args) -> crate::Result<i32> {
         None => eprintln!("loadgen: {} clients against an in-process server ...", opts.clients),
     }
     let report = crate::server::loadgen::run(&opts)?;
-    println!("{}", report.table().render_markdown());
+    let table = report.table();
+    println!("{}", table.render_markdown());
+    write_report(args, &table)?;
     Ok(if report.failures == 0 { 0 } else { 1 })
+}
+
+/// `--out PATH`: persist a loadgen report table as a bench-harness JSON
+/// artifact (the CI smoke job uploads `BENCH_serve.json` this way).
+fn write_report(args: &Args, table: &crate::bench_harness::Table) -> crate::Result<()> {
+    if let Some(path) = args.options.get("out") {
+        table.write_json(std::path::Path::new(path))?;
+        eprintln!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_top(args: &Args) -> crate::Result<i32> {
+    use crate::server::http::{client_call, client_connect};
+    let addr_s = args.get_str("addr", "127.0.0.1:7878");
+    let addr: std::net::SocketAddr = addr_s
+        .parse()
+        .map_err(|e| crate::Error::InvalidArg(format!("--addr {addr_s:?}: {e}")))?;
+    let mut conn = client_connect(&addr)?;
+    if args.has_flag("raw") {
+        // Raw Prometheus-style exposition, verbatim.
+        let (status, body) = client_call(&mut conn, "GET", "/v1/metrics", None)?;
+        if status != 200 {
+            return Err(crate::Error::Http(format!("GET /v1/metrics -> {status}")));
+        }
+        print!("{body}");
+        return Ok(0);
+    }
+    let (status, body) = client_call(&mut conn, "GET", "/v1/stats", None)?;
+    if status != 200 {
+        return Err(crate::Error::Http(format!("GET /v1/stats -> {status}")));
+    }
+    let v = crate::server::Json::parse(&body)?;
+    println!("{}", top_table(&addr_s, &v).render_markdown());
+    Ok(0)
+}
+
+/// The `fastlr top` view: one row per headline gauge/counter from the
+/// `/v1/stats` document (missing fields render as `NA` so `top` keeps
+/// working against older servers).
+fn top_table(addr: &str, v: &crate::server::Json) -> crate::bench_harness::Table {
+    use crate::server::Json;
+    let num = |path: &[&str]| {
+        let mut cur = Some(v);
+        for k in path {
+            cur = cur.and_then(|j| j.get(k));
+        }
+        cur.and_then(Json::as_f64).map(|x| format!("{x}")).unwrap_or_else(|| "NA".into())
+    };
+    let mut t = crate::bench_harness::Table::new(
+        &format!("fastlr top — {addr}"),
+        &["metric", "value"],
+    );
+    let uptime = v.get("uptime_ms").and_then(Json::as_f64).unwrap_or(0.0);
+    t.push_row(vec!["uptime (s)".into(), format!("{:.1}", uptime / 1e3)]);
+    t.push_row(vec!["requests".into(), num(&["requests"])]);
+    t.push_row(vec!["jobs submitted".into(), num(&["jobs", "submitted"])]);
+    t.push_row(vec!["jobs completed".into(), num(&["jobs", "completed"])]);
+    t.push_row(vec!["jobs failed".into(), num(&["jobs", "failed"])]);
+    t.push_row(vec!["queue depth".into(), num(&["admission", "queue_depth"])]);
+    t.push_row(vec!["shed (429)".into(), num(&["admission", "shed"])]);
+    t.push_row(vec!["deadline exceeded".into(), num(&["admission", "deadline_exceeded"])]);
+    t.push_row(vec!["cancelled".into(), num(&["admission", "cancelled"])]);
+    t.push_row(vec!["queue wait p50 (ms)".into(), num(&["queue_wait_ms", "p50"])]);
+    t.push_row(vec!["queue wait p99 (ms)".into(), num(&["queue_wait_ms", "p99"])]);
+    t.push_row(vec!["exec p50 (ms)".into(), num(&["exec_ms", "p50"])]);
+    t.push_row(vec!["exec p99 (ms)".into(), num(&["exec_ms", "p99"])]);
+    t.push_row(vec!["cache hits".into(), num(&["cache", "hits"])]);
+    t.push_row(vec!["cache misses".into(), num(&["cache", "misses"])]);
+    t.push_row(vec!["cache bytes".into(), num(&["cache", "bytes"])]);
+    t.push_row(vec!["exec threads".into(), num(&["exec", "threads"])]);
+    t.push_row(vec!["exec tasks".into(), num(&["exec", "tasks"])]);
+    t.push_row(vec!["async jobs tracked".into(), num(&["jobs_api", "tracked"])]);
+    t
 }
 
 fn cmd_exp(args: &Args) -> crate::Result<i32> {
@@ -429,6 +515,40 @@ mod tests {
     #[test]
     fn loadgen_rejects_bad_addr() {
         assert!(dispatch(&sv(&["loadgen", "--addr", "not-an-addr"])).is_err());
+    }
+
+    #[test]
+    fn loadgen_out_writes_bench_json() {
+        let path = std::env::temp_dir().join(format!("fastlr-bench-{}.json", std::process::id()));
+        let p = path.to_str().unwrap().to_string();
+        let code = dispatch(&sv(&[
+            "loadgen", "--clients", "2", "--requests", "3", "--out", &p,
+        ]))
+        .unwrap();
+        assert_eq!(code, 0);
+        let written = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let v = crate::server::Json::parse(&written).unwrap();
+        assert!(v.get("title").is_some() && v.get("rows").is_some(), "{written}");
+        assert!(written.contains("latency le"), "histogram rows missing from artifact");
+    }
+
+    #[test]
+    fn top_renders_stats_and_raw_metrics() {
+        let srv = crate::server::start(crate::server::ServeOptions {
+            port: 0,
+            ..Default::default()
+        })
+        .unwrap();
+        let addr = srv.local_addr().to_string();
+        assert_eq!(dispatch(&sv(&["top", "--addr", &addr])).unwrap(), 0);
+        assert_eq!(dispatch(&sv(&["top", "--addr", &addr, "--raw"])).unwrap(), 0);
+        srv.shutdown();
+    }
+
+    #[test]
+    fn top_rejects_bad_addr() {
+        assert!(dispatch(&sv(&["top", "--addr", "nope"])).is_err());
     }
 
     #[test]

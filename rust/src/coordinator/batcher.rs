@@ -260,7 +260,7 @@ mod tests {
         });
         let err = rx.recv_timeout(Duration::from_secs(30)).unwrap().unwrap_err();
         assert!(matches!(err, crate::Error::Overloaded(_)), "{err}");
-        assert!(svc.metrics.shed.load(std::sync::atomic::Ordering::Relaxed) >= 1);
+        assert!(svc.metrics.shed.get() >= 1);
         assert!(occupy.wait().unwrap().outcome.is_ok());
         assert!(filler.wait().unwrap().outcome.is_ok());
     }

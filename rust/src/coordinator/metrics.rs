@@ -1,80 +1,33 @@
-//! Lock-free service metrics: counters + fixed-bucket latency histograms.
+//! Service metrics, built on the [`crate::obs`] primitives.
+//!
+//! This module used to carry its own atomic counters and a private
+//! `LatencyHistogram`; both now come from [`crate::obs::metrics`], so the
+//! serving edge can register every series here into its one
+//! [`crate::obs::Registry`] and `/v1/metrics` / `/v1/stats` read the same
+//! numbers the workers write. `LatencyHistogram` remains as an alias for
+//! source compatibility.
 
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::time::Duration;
+use crate::obs::metrics::{Counter, Histogram};
 
-/// Histogram bucket upper bounds in microseconds (last bucket = +inf).
-const BUCKETS_US: [u64; 12] = [
-    50, 100, 250, 500, 1_000, 5_000, 10_000, 50_000, 100_000, 500_000, 1_000_000, 10_000_000,
-];
+/// Fixed-bucket latency histogram (alias of the obs primitive; kept so
+/// pre-obs call sites and signatures read unchanged).
+pub type LatencyHistogram = Histogram;
 
-/// Latency histogram with fixed buckets (no allocation on the hot path).
-#[derive(Debug, Default)]
-pub struct LatencyHistogram {
-    counts: [AtomicU64; 13],
-    sum_us: AtomicU64,
-    n: AtomicU64,
-}
-
-impl LatencyHistogram {
-    /// Record one observation.
-    pub fn observe(&self, d: Duration) {
-        let us = d.as_micros().min(u64::MAX as u128) as u64;
-        let idx = BUCKETS_US.iter().position(|&b| us <= b).unwrap_or(BUCKETS_US.len());
-        self.counts[idx].fetch_add(1, Ordering::Relaxed);
-        self.sum_us.fetch_add(us, Ordering::Relaxed);
-        self.n.fetch_add(1, Ordering::Relaxed);
-    }
-
-    /// Number of observations.
-    pub fn count(&self) -> u64 {
-        self.n.load(Ordering::Relaxed)
-    }
-
-    /// Mean latency.
-    pub fn mean(&self) -> Duration {
-        let n = self.count();
-        if n == 0 {
-            return Duration::ZERO;
-        }
-        Duration::from_micros(self.sum_us.load(Ordering::Relaxed) / n)
-    }
-
-    /// Approximate quantile from the bucket CDF (upper bound of the bucket
-    /// containing the quantile).
-    pub fn quantile(&self, q: f64) -> Duration {
-        let n = self.count();
-        if n == 0 {
-            return Duration::ZERO;
-        }
-        let target = (q.clamp(0.0, 1.0) * n as f64).ceil() as u64;
-        let mut acc = 0u64;
-        for (i, c) in self.counts.iter().enumerate() {
-            acc += c.load(Ordering::Relaxed);
-            if acc >= target {
-                let us = if i < BUCKETS_US.len() { BUCKETS_US[i] } else { u64::MAX / 2 };
-                return Duration::from_micros(us);
-            }
-        }
-        Duration::from_micros(*BUCKETS_US.last().expect("buckets"))
-    }
-}
-
-/// Service-wide metrics registry.
+/// Service-wide metrics bundle.
 #[derive(Debug, Default)]
 pub struct Metrics {
     /// Jobs accepted.
-    pub submitted: AtomicU64,
+    pub submitted: Counter,
     /// Jobs finished successfully.
-    pub completed: AtomicU64,
+    pub completed: Counter,
     /// Jobs that returned an error.
-    pub failed: AtomicU64,
+    pub failed: Counter,
     /// Jobs refused at admission (bounded queue full).
-    pub shed: AtomicU64,
+    pub shed: Counter,
     /// Jobs stopped by an explicit cancel (client request / shutdown).
-    pub cancelled: AtomicU64,
+    pub cancelled: Counter,
     /// Jobs stopped because their deadline passed.
-    pub deadline_exceeded: AtomicU64,
+    pub deadline_exceeded: Counter,
     /// Queue-wait distribution.
     pub queue_wait: LatencyHistogram,
     /// Execution-time distribution.
@@ -89,12 +42,12 @@ impl Metrics {
              admission: shed={} cancelled={} deadline_exceeded={}\n\
              queue_wait: mean={:?} p50={:?} p99={:?}\n\
              exec_time:  mean={:?} p50={:?} p99={:?}",
-            self.submitted.load(Ordering::Relaxed),
-            self.completed.load(Ordering::Relaxed),
-            self.failed.load(Ordering::Relaxed),
-            self.shed.load(Ordering::Relaxed),
-            self.cancelled.load(Ordering::Relaxed),
-            self.deadline_exceeded.load(Ordering::Relaxed),
+            self.submitted.get(),
+            self.completed.get(),
+            self.failed.get(),
+            self.shed.get(),
+            self.cancelled.get(),
+            self.deadline_exceeded.get(),
             self.queue_wait.mean(),
             self.queue_wait.quantile(0.5),
             self.queue_wait.quantile(0.99),
@@ -108,54 +61,30 @@ impl Metrics {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::time::Duration;
 
-    #[test]
-    fn histogram_counts_and_mean() {
-        let h = LatencyHistogram::default();
-        h.observe(Duration::from_micros(40));
-        h.observe(Duration::from_micros(60));
-        h.observe(Duration::from_micros(200));
-        assert_eq!(h.count(), 3);
-        assert_eq!(h.mean(), Duration::from_micros(100));
-    }
-
-    #[test]
-    fn quantiles_are_monotone() {
-        let h = LatencyHistogram::default();
-        for us in [10u64, 80, 300, 600, 2_000, 80_000, 2_000_000] {
-            h.observe(Duration::from_micros(us));
-        }
-        let p50 = h.quantile(0.5);
-        let p90 = h.quantile(0.9);
-        let p99 = h.quantile(0.99);
-        assert!(p50 <= p90 && p90 <= p99, "{p50:?} {p90:?} {p99:?}");
-    }
-
-    #[test]
-    fn empty_histogram_is_zero() {
-        let h = LatencyHistogram::default();
-        assert_eq!(h.mean(), Duration::ZERO);
-        assert_eq!(h.quantile(0.99), Duration::ZERO);
-    }
+    // Histogram/Counter behavior is pinned in `obs::metrics`; here we only
+    // keep the bundle-level contract.
 
     #[test]
     fn metrics_render_contains_counts() {
         let m = Metrics::default();
-        m.submitted.store(7, Ordering::Relaxed);
-        m.completed.store(6, Ordering::Relaxed);
-        m.failed.store(1, Ordering::Relaxed);
-        m.shed.store(3, Ordering::Relaxed);
+        m.submitted.add(7);
+        m.completed.add(6);
+        m.failed.inc();
+        m.shed.add(3);
+        m.exec_time.observe(Duration::from_micros(900));
         let s = m.render();
         assert!(s.contains("submitted=7"));
         assert!(s.contains("failed=1"));
         assert!(s.contains("shed=3"));
+        assert!(s.contains("exec_time"));
     }
 
     #[test]
-    fn observe_beyond_last_bucket() {
+    fn latency_histogram_alias_still_works() {
         let h = LatencyHistogram::default();
-        h.observe(Duration::from_secs(100));
+        h.observe(Duration::from_micros(40));
         assert_eq!(h.count(), 1);
-        assert!(h.quantile(0.5) > Duration::from_secs(1));
     }
 }

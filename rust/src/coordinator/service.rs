@@ -27,6 +27,8 @@ use crate::cancel::CancelToken;
 use crate::krylov::fsvd::{fsvd, FsvdOptions};
 use crate::krylov::rank::{estimate_rank, RankOptions};
 use crate::linalg::svd::svd;
+use crate::obs::metrics::{record_stage, KernelStage};
+use crate::obs::trace::{SpanKind, Trace};
 use crate::rsvd::{rsvd, RsvdOptions};
 use crate::{Error, Result};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -66,6 +68,7 @@ struct QueuedJob {
     request: JobRequest,
     enqueued: Instant,
     cancel: CancelToken,
+    trace: Trace,
     started: Arc<AtomicBool>,
     reply: SyncSender<JobResult>,
 }
@@ -156,8 +159,8 @@ impl FactorizationService {
         priority: Priority,
         cancel: CancelToken,
     ) -> Result<JobHandle> {
-        let (job, handle) = self.make_job(request, cancel);
-        self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+        let (job, handle) = self.make_job(request, cancel, Trace::none());
+        self.metrics.submitted.inc();
         self.queue
             .push(job, priority)
             .map_err(|_| Error::Service("queue closed".into()))?;
@@ -173,14 +176,27 @@ impl FactorizationService {
         priority: Priority,
         cancel: CancelToken,
     ) -> Result<JobHandle> {
-        let (job, handle) = self.make_job(request, cancel);
+        self.try_submit_traced(request, priority, cancel, Trace::none())
+    }
+
+    /// [`FactorizationService::try_submit_with`] plus a [`Trace`] the
+    /// worker threads job/stage/iteration spans into. The inert trace
+    /// makes this identical to the untraced path.
+    pub fn try_submit_traced(
+        &self,
+        request: JobRequest,
+        priority: Priority,
+        cancel: CancelToken,
+        trace: Trace,
+    ) -> Result<JobHandle> {
+        let (job, handle) = self.make_job(request, cancel, trace);
         match self.queue.try_push(job, priority) {
             Ok(()) => {
-                self.metrics.submitted.fetch_add(1, Ordering::Relaxed);
+                self.metrics.submitted.inc();
                 Ok(handle)
             }
             Err(PushError::Full(_)) => {
-                self.metrics.shed.fetch_add(1, Ordering::Relaxed);
+                self.metrics.shed.inc();
                 Err(Error::Overloaded(format!(
                     "admission queue full ({} jobs queued)",
                     self.queue.limit()
@@ -190,7 +206,12 @@ impl FactorizationService {
         }
     }
 
-    fn make_job(&self, request: JobRequest, cancel: CancelToken) -> (QueuedJob, JobHandle) {
+    fn make_job(
+        &self,
+        request: JobRequest,
+        cancel: CancelToken,
+        trace: Trace,
+    ) -> (QueuedJob, JobHandle) {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (reply_tx, reply_rx) = sync_channel(1);
         let started = Arc::new(AtomicBool::new(false));
@@ -199,6 +220,7 @@ impl FactorizationService {
             request,
             enqueued: Instant::now(),
             cancel,
+            trace,
             started: started.clone(),
             reply: reply_tx,
         };
@@ -239,6 +261,7 @@ impl Drop for FactorizationService {
 fn run_one(job: QueuedJob, policy: &RoutePolicy, seed: u64, metrics: &Metrics) {
     let queue_time = job.enqueued.elapsed();
     metrics.queue_wait.observe(queue_time);
+    job.trace.record_at(SpanKind::Job, "queue_wait", job.enqueued, queue_time, Vec::new());
     job.started.store(true, Ordering::Relaxed);
     // A job cancelled (or deadlined) while queued never reaches the
     // kernels: reply with the typed error at zero exec cost.
@@ -246,20 +269,20 @@ fn run_one(job: QueuedJob, policy: &RoutePolicy, seed: u64, metrics: &Metrics) {
         Err(e) => (Err(e), std::time::Duration::ZERO),
         Ok(()) => {
             let started = Instant::now();
-            let outcome =
-                execute_with_cancel(&job.request, policy, seed ^ job.id, &job.cancel);
+            let outcome = {
+                let _exec_span = job.trace.span(SpanKind::Job, "exec");
+                execute_traced(&job.request, policy, seed ^ job.id, &job.cancel, &job.trace)
+            };
             let exec_time = started.elapsed();
             metrics.exec_time.observe(exec_time);
             (outcome, exec_time)
         }
     };
     match &outcome {
-        Ok(_) => metrics.completed.fetch_add(1, Ordering::Relaxed),
-        Err(Error::Cancelled(_)) => metrics.cancelled.fetch_add(1, Ordering::Relaxed),
-        Err(Error::DeadlineExceeded(_)) => {
-            metrics.deadline_exceeded.fetch_add(1, Ordering::Relaxed)
-        }
-        Err(_) => metrics.failed.fetch_add(1, Ordering::Relaxed),
+        Ok(_) => metrics.completed.inc(),
+        Err(Error::Cancelled(_)) => metrics.cancelled.inc(),
+        Err(Error::DeadlineExceeded(_)) => metrics.deadline_exceeded.inc(),
+        Err(_) => metrics.failed.inc(),
     };
     let _ = job.reply.send(JobResult {
         id: job.id,
@@ -284,19 +307,45 @@ pub fn execute_with_cancel(
     seed: u64,
     cancel: &CancelToken,
 ) -> Result<JobOutcome> {
+    execute_traced(request, policy, seed, cancel, &Trace::none())
+}
+
+/// [`execute_with_cancel`] plus a [`Trace`] threaded into the iteration
+/// loops for per-stage spans and convergence telemetry. Tracing never
+/// perturbs the arithmetic: a live trace only *observes* intermediate
+/// values between block steps (the determinism suite pins this).
+pub fn execute_traced(
+    request: &JobRequest,
+    policy: &RoutePolicy,
+    seed: u64,
+    cancel: &CancelToken,
+    trace: &Trace,
+) -> Result<JobOutcome> {
     let method = policy.select(&request.spec, request.accuracy);
     match &request.spec {
         JobSpec::RankEstimate { matrix, eps } => {
             let est = estimate_rank(
                 matrix.as_ref(),
-                &RankOptions { eps: *eps, seed, cancel: cancel.clone(), ..Default::default() },
+                &RankOptions {
+                    eps: *eps,
+                    seed,
+                    cancel: cancel.clone(),
+                    trace: trace.clone(),
+                    ..Default::default()
+                },
             )?;
             Ok(JobOutcome::Rank { rank: est.rank, k_iterations: est.k_iterations })
         }
         JobSpec::SparseRankEstimate { matrix, eps } => {
             let est = estimate_rank(
                 matrix.as_ref(),
-                &RankOptions { eps: *eps, seed, cancel: cancel.clone(), ..Default::default() },
+                &RankOptions {
+                    eps: *eps,
+                    seed,
+                    cancel: cancel.clone(),
+                    trace: trace.clone(),
+                    ..Default::default()
+                },
             )?;
             Ok(JobOutcome::Rank { rank: est.rank, k_iterations: est.k_iterations })
         }
@@ -311,6 +360,7 @@ pub fn execute_with_cancel(
                         oversample,
                         seed,
                         cancel: cancel.clone(),
+                        trace: trace.clone(),
                         ..Default::default()
                     },
                 )?
@@ -332,7 +382,14 @@ pub fn execute_with_cancel(
                 };
                 let out = fsvd(
                     matrix.as_ref(),
-                    &FsvdOptions { k, r: *r, seed, cancel: cancel.clone(), ..Default::default() },
+                    &FsvdOptions {
+                        k,
+                        r: *r,
+                        seed,
+                        cancel: cancel.clone(),
+                        trace: trace.clone(),
+                        ..Default::default()
+                    },
                 )?;
                 Ok(JobOutcome::Svd(SvdResult {
                     u: out.u,
@@ -346,7 +403,12 @@ pub fn execute_with_cancel(
             // Golub–Reinsch has no iteration hook; honor the token at the
             // boundary so a cancelled-while-queued full SVD still stops.
             cancel.check()?;
-            let s = svd(matrix)?;
+            let t0 = Instant::now();
+            let s = {
+                let _sp = trace.span(SpanKind::Stage, "full_svd");
+                svd(matrix)?
+            };
+            record_stage(KernelStage::FullSvd, t0.elapsed());
             Ok(JobOutcome::Svd(SvdResult {
                 u: s.u,
                 sigma: s.sigma,
@@ -357,7 +419,13 @@ pub fn execute_with_cancel(
         JobSpec::PartialSvd { matrix, r } => match method {
             SvdMethod::Full => {
                 cancel.check()?;
-                let s = svd(matrix)?.truncate(*r);
+                let t0 = Instant::now();
+                let s = {
+                    let _sp = trace.span(SpanKind::Stage, "full_svd");
+                    svd(matrix)?
+                };
+                record_stage(KernelStage::FullSvd, t0.elapsed());
+                let s = s.truncate(*r);
                 Ok(JobOutcome::Svd(SvdResult {
                     u: s.u,
                     sigma: s.sigma,
@@ -368,7 +436,14 @@ pub fn execute_with_cancel(
             SvdMethod::Fsvd { k } => {
                 let out = fsvd(
                     matrix.as_ref(),
-                    &FsvdOptions { k, r: *r, seed, cancel: cancel.clone(), ..Default::default() },
+                    &FsvdOptions {
+                        k,
+                        r: *r,
+                        seed,
+                        cancel: cancel.clone(),
+                        trace: trace.clone(),
+                        ..Default::default()
+                    },
                 )?;
                 Ok(JobOutcome::Svd(SvdResult {
                     u: out.u,
@@ -385,6 +460,7 @@ pub fn execute_with_cancel(
                         oversample,
                         seed,
                         cancel: cancel.clone(),
+                        trace: trace.clone(),
                         ..Default::default()
                     },
                 )?
@@ -495,8 +571,8 @@ mod tests {
             let r = h.wait().unwrap();
             assert!(r.outcome.is_ok());
         }
-        assert_eq!(svc.metrics.completed.load(Ordering::Relaxed), 6);
-        assert_eq!(svc.metrics.failed.load(Ordering::Relaxed), 0);
+        assert_eq!(svc.metrics.completed.get(), 6);
+        assert_eq!(svc.metrics.failed.get(), 0);
         assert_eq!(svc.metrics.exec_time.count(), 6);
     }
 
@@ -597,7 +673,7 @@ mod tests {
             .unwrap();
         let err = res.outcome.unwrap_err();
         assert_eq!(err.kind, JobErrorKind::Breakdown);
-        assert_eq!(svc.metrics.failed.load(Ordering::Relaxed), 1);
+        assert_eq!(svc.metrics.failed.get(), 1);
     }
 
     #[test]
@@ -656,7 +732,7 @@ mod tests {
         }
         let shed = shed.expect("the bounded queue never shed");
         assert!(shed.to_string().contains("overloaded"));
-        assert!(svc.metrics.shed.load(Ordering::Relaxed) >= 1);
+        assert!(svc.metrics.shed.get() >= 1);
         // Everything admitted still completes.
         assert!(big.wait().unwrap().outcome.is_ok());
         for h in kept {
@@ -686,7 +762,7 @@ mod tests {
         assert_eq!(err.kind, JobErrorKind::Cancelled);
         assert!(!err.retryable());
         assert_eq!(res.exec_time, std::time::Duration::ZERO);
-        assert_eq!(svc.metrics.cancelled.load(Ordering::Relaxed), 1);
+        assert_eq!(svc.metrics.cancelled.get(), 1);
         assert!(big.wait().unwrap().outcome.is_ok());
     }
 
@@ -709,8 +785,8 @@ mod tests {
         let err = res.outcome.unwrap_err();
         assert_eq!(err.kind, JobErrorKind::DeadlineExceeded);
         assert!(err.retryable());
-        assert_eq!(svc.metrics.deadline_exceeded.load(Ordering::Relaxed), 1);
-        assert_eq!(svc.metrics.failed.load(Ordering::Relaxed), 0);
+        assert_eq!(svc.metrics.deadline_exceeded.get(), 1);
+        assert_eq!(svc.metrics.failed.get(), 0);
     }
 
     #[test]

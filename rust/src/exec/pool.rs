@@ -134,9 +134,9 @@ fn run_chunks(job: &Job, stolen: bool) {
         if catch_unwind(AssertUnwindSafe(|| task(i))).is_err() {
             job.panicked.store(true, Ordering::Relaxed);
         }
-        stats::TASKS.fetch_add(1, Ordering::Relaxed);
+        stats::TASKS.inc();
         if stolen {
-            stats::STEALS.fetch_add(1, Ordering::Relaxed);
+            stats::STEALS.inc();
         }
         let mut done = job.done.lock().expect("exec latch");
         *done += 1;
@@ -156,13 +156,13 @@ fn run_parallel(chunks: usize, task: &(dyn Fn(usize) + Sync)) {
     let forced = FORCE_SERIAL.with(Cell::get) > 0;
     let eng = engine();
     if chunks == 1 || eng.workers == 0 || nested || forced {
-        stats::SERIAL_CALLS.fetch_add(1, Ordering::Relaxed);
+        stats::SERIAL_CALLS.inc();
         for i in 0..chunks {
             task(i);
         }
         return;
     }
-    stats::PARALLEL_JOBS.fetch_add(1, Ordering::Relaxed);
+    stats::PARALLEL_JOBS.inc();
     // Erase the closure's lifetime so the job can sit in the global
     // queue. SAFETY: this function does not return until the latch
     // reports `done == chunks`, and no thread dereferences `task` after
@@ -227,7 +227,7 @@ where
     }
     let chunks = match cost::plan_for(flops, items) {
         Plan::Serial => {
-            stats::SERIAL_CALLS.fetch_add(1, Ordering::Relaxed);
+            stats::SERIAL_CALLS.inc();
             body(0, items, out);
             return;
         }
@@ -267,7 +267,7 @@ where
     }
     let chunks = match cost::plan_reduce(flops, items) {
         Plan::Serial => {
-            stats::SERIAL_CALLS.fetch_add(1, Ordering::Relaxed);
+            stats::SERIAL_CALLS.inc();
             body(0, items, out);
             return;
         }

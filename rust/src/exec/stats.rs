@@ -1,12 +1,13 @@
-//! Engine observability: cheap global gauges, surfaced by the serving
-//! edge in `GET /v1/stats` next to the cache counters.
+//! Engine observability: cheap global counters on the [`crate::obs`]
+//! primitives, surfaced by the serving edge in `GET /v1/stats` and
+//! `GET /v1/metrics` next to the cache counters.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use crate::obs::metrics::Counter;
 
-pub(super) static PARALLEL_JOBS: AtomicU64 = AtomicU64::new(0);
-pub(super) static SERIAL_CALLS: AtomicU64 = AtomicU64::new(0);
-pub(super) static TASKS: AtomicU64 = AtomicU64::new(0);
-pub(super) static STEALS: AtomicU64 = AtomicU64::new(0);
+pub(super) static PARALLEL_JOBS: Counter = Counter::new();
+pub(super) static SERIAL_CALLS: Counter = Counter::new();
+pub(super) static TASKS: Counter = Counter::new();
+pub(super) static STEALS: Counter = Counter::new();
 
 /// A snapshot of the engine gauges.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -31,10 +32,10 @@ pub struct ExecStats {
 pub fn stats() -> ExecStats {
     ExecStats {
         threads: super::num_threads().saturating_sub(1),
-        parallel_jobs: PARALLEL_JOBS.load(Ordering::Relaxed),
-        serial_calls: SERIAL_CALLS.load(Ordering::Relaxed),
-        tasks: TASKS.load(Ordering::Relaxed),
-        steals: STEALS.load(Ordering::Relaxed),
+        parallel_jobs: PARALLEL_JOBS.get(),
+        serial_calls: SERIAL_CALLS.get(),
+        tasks: TASKS.get(),
+        steals: STEALS.get(),
     }
 }
 

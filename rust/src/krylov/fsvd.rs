@@ -11,7 +11,10 @@ use super::LinOp;
 use crate::cancel::CancelToken;
 use crate::linalg::tridiag::btb_eig;
 use crate::linalg::Matrix;
+use crate::obs::metrics::{record_stage, KernelStage};
+use crate::obs::trace::{SpanKind, Trace};
 use crate::{Error, Result};
+use std::time::Instant;
 
 /// Options for [`fsvd`].
 #[derive(Debug, Clone)]
@@ -30,6 +33,9 @@ pub struct FsvdOptions {
     /// Cooperative stop signal, forwarded to the inner Algorithm 1 loop
     /// (see [`GkOptions::cancel`]). The default token is inert.
     pub cancel: CancelToken,
+    /// Convergence-telemetry sink, forwarded to the inner Algorithm 1
+    /// loop (see [`GkOptions::trace`]). The default trace is inert.
+    pub trace: Trace,
 }
 
 impl Default for FsvdOptions {
@@ -41,6 +47,7 @@ impl Default for FsvdOptions {
             reorth_passes: 1,
             seed: 0x5eed,
             cancel: CancelToken::none(),
+            trace: Trace::none(),
         }
     }
 }
@@ -75,8 +82,10 @@ pub fn fsvd(a: &dyn LinOp, opts: &FsvdOptions) -> Result<FsvdOutput> {
             reorth_passes: opts.reorth_passes,
             seed: opts.seed,
             cancel: opts.cancel.clone(),
+            trace: opts.trace.clone(),
         },
     )?;
+    let _sp = opts.trace.span(SpanKind::Stage, "ritz_recover");
     fsvd_from_gk(a, &gk, opts.r)
 }
 
@@ -86,8 +95,11 @@ pub fn fsvd_from_gk(a: &dyn LinOp, gk: &GkResult, r: usize) -> Result<FsvdOutput
     let kp = gk.alpha.len();
     let r = r.min(kp);
     // Line 2: eigendecomposition of B^T B (tridiagonal, O(k'^2)).
+    let t_ritz = Instant::now();
     let (theta, g) = btb_eig(&gk.alpha, &gk.beta)?;
+    record_stage(KernelStage::Ritz, t_ritz.elapsed());
     // Lines 3–4: V_2 = P·V_1, keep top r columns.
+    let t_recover = Instant::now();
     let g_r = g.submatrix(0..kp, 0..r);
     let v_r = gk.p.matmul(&g_r)?; // n x r
     // Line 5: Σ_r = sqrt of Ritz values (clamp tiny negatives from
@@ -106,6 +118,7 @@ pub fn fsvd_from_gk(a: &dyn LinOp, gk: &GkResult, r: usize) -> Result<FsvdOutput
             }
         }
     }
+    record_stage(KernelStage::RecoverUv, t_recover.elapsed());
     Ok(FsvdOutput {
         u,
         sigma,

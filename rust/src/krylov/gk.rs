@@ -19,8 +19,11 @@ use super::LinOp;
 use crate::cancel::CancelToken;
 use crate::linalg::vecops::{axpy, dot, norm2, scal};
 use crate::linalg::Matrix;
+use crate::obs::metrics::{record_stage, KernelStage};
+use crate::obs::trace::{SpanKind, Trace};
 use crate::rng::{Pcg64, Rng};
 use crate::{Error, Result};
+use std::time::Instant;
 
 /// Options for [`gk_bidiagonalize`].
 #[derive(Debug, Clone)]
@@ -39,11 +42,23 @@ pub struct GkOptions {
     /// Cooperative stop signal, checked once per iteration (between block
     /// steps, never inside one). The default token is inert.
     pub cancel: CancelToken,
+    /// Convergence-telemetry sink, sampled once per iteration next to the
+    /// cancel check. The default trace is inert; a live one records
+    /// per-iteration `beta` residual norms and Ritz-value deltas without
+    /// touching the iteration arithmetic.
+    pub trace: Trace,
 }
 
 impl Default for GkOptions {
     fn default() -> Self {
-        GkOptions { k: 100, eps: 1e-8, reorth_passes: 1, seed: 0x5eed, cancel: CancelToken::none() }
+        GkOptions {
+            k: 100,
+            eps: 1e-8,
+            reorth_passes: 1,
+            seed: 0x5eed,
+            cancel: CancelToken::none(),
+            trace: Trace::none(),
+        }
     }
 }
 
@@ -90,6 +105,8 @@ pub fn gk_bidiagonalize(a: &dyn LinOp, opts: &GkOptions) -> Result<GkResult> {
     if kmax == 0 {
         return Err(Error::InvalidArg("gk: k must be >= 1".into()));
     }
+    let t_stage = Instant::now();
+    let mut stage_span = opts.trace.span(SpanKind::Stage, "gk");
     let mut rng = Pcg64::seed_from_u64(opts.seed);
 
     // Column-major bases: q_cols[j] has length m, p_cols[j] length n.
@@ -119,6 +136,7 @@ pub fn gk_bidiagonalize(a: &dyn LinOp, opts: &GkOptions) -> Result<GkResult> {
 
     let mut terminated_early = false;
     let mut k_used = 0;
+    let mut prev_sigma = 0.0f64;
 
     // Main loop (paper lines 4–17). Iteration j (0-based) extends the
     // bases by (q_{j+2}, p_{j+2}) from (p_{j+1}, q_{j+1}).
@@ -127,15 +145,36 @@ pub fn gk_bidiagonalize(a: &dyn LinOp, opts: &GkOptions) -> Result<GkResult> {
         // between block steps, with the typed error — never mid-step, so
         // cancel-to-idle latency is bounded by one iteration.
         opts.cancel.check()?;
+        let mut iter_span = opts.trace.span(SpanKind::Iter, "gk_iter");
         // Line 5: q_new = A·p_j − α_j·q_j.
-        let mut q_new = a.apply(&p_cols[j])?;
+        let mut q_new = {
+            let _k = opts.trace.span(SpanKind::Kernel, "apply");
+            a.apply(&p_cols[j])?
+        };
         axpy(-alpha[j], &q_cols[j], &mut q_new);
         // Line 6: full reorthogonalization against Q.
-        reorthogonalize(&q_cols, &mut q_new, opts.reorth_passes);
+        {
+            let _k = opts.trace.span(SpanKind::Kernel, "reorth_q");
+            reorthogonalize(&q_cols, &mut q_new, opts.reorth_passes);
+        }
         // Lines 7–8.
         let b_new = norm2(&q_new);
         beta.push(b_new);
         k_used = j + 1;
+        // Convergence telemetry, live traces only: β_{j+2} is the residual
+        // norm driving termination, and the top Ritz value of BᵀB so far
+        // tracks σ₁. Pure observation between block steps — the extra
+        // eigensolve reads `alpha`/`beta` but feeds nothing back, so a
+        // traced run is bit-identical to an untraced one.
+        iter_span.field("beta", b_new);
+        if iter_span.is_live() {
+            if let Ok((theta, _)) = crate::linalg::tridiag::btb_eig(&alpha, &beta) {
+                let sigma = theta.first().copied().unwrap_or(0.0).max(0.0).sqrt();
+                iter_span.field("sigma_est", sigma);
+                iter_span.field("ritz_delta", (sigma - prev_sigma).abs());
+                prev_sigma = sigma;
+            }
+        }
         // Line 9: termination — the Krylov space is exhausted.
         if b_new < opts.eps {
             terminated_early = true;
@@ -153,10 +192,16 @@ pub fn gk_bidiagonalize(a: &dyn LinOp, opts: &GkOptions) -> Result<GkResult> {
         }
 
         // Line 12: p_new = Aᵀ·q_{j+1} − β·p_j.
-        let mut p_new = a.apply_t(&q_cols[j + 1])?;
+        let mut p_new = {
+            let _k = opts.trace.span(SpanKind::Kernel, "apply_t");
+            a.apply_t(&q_cols[j + 1])?
+        };
         axpy(-beta[j], &p_cols[j], &mut p_new);
         // Line 13: full reorthogonalization against P.
-        reorthogonalize(&p_cols, &mut p_new, opts.reorth_passes);
+        {
+            let _k = opts.trace.span(SpanKind::Kernel, "reorth_p");
+            reorthogonalize(&p_cols, &mut p_new, opts.reorth_passes);
+        }
         // Line 14.
         let a_new = norm2(&p_new);
         if a_new < opts.eps {
@@ -171,6 +216,10 @@ pub fn gk_bidiagonalize(a: &dyn LinOp, opts: &GkOptions) -> Result<GkResult> {
 
     debug_assert_eq!(alpha.len(), p_cols.len());
     debug_assert_eq!(beta.len(), alpha.len());
+
+    stage_span.field("k_used", k_used as f64);
+    drop(stage_span);
+    record_stage(KernelStage::Gk, t_stage.elapsed());
 
     let p = Matrix::from_columns(n, &p_cols)?;
     let q = Matrix::from_columns(m, &q_cols)?;
@@ -311,6 +360,37 @@ mod tests {
         let err = gk_bidiagonalize(&a, &GkOptions { k: 20, cancel, ..Default::default() })
             .unwrap_err();
         assert!(matches!(err, crate::Error::DeadlineExceeded(_)), "{err}");
+    }
+
+    #[test]
+    fn traced_run_records_convergence_and_matches_untraced() {
+        let mut rng = Pcg64::seed_from_u64(98);
+        let a = low_rank_gaussian(80, 60, 6, &mut rng);
+        let base = GkOptions { k: 30, eps: 1e-8, seed: 777, ..Default::default() };
+        let plain = gk_bidiagonalize(&a, &base).unwrap();
+        let trace = Trace::new(256);
+        let traced =
+            gk_bidiagonalize(&a, &GkOptions { trace: trace.clone(), ..base }).unwrap();
+        // Observation must not perturb the arithmetic.
+        assert_eq!(plain.alpha, traced.alpha);
+        assert_eq!(plain.beta, traced.beta);
+        assert_eq!(plain.p.as_slice(), traced.p.as_slice());
+        // One iter span per iteration, carrying β and the Ritz telemetry.
+        let spans = trace.snapshot();
+        let iters: Vec<_> = spans.iter().filter(|s| s.name == "gk_iter").collect();
+        assert_eq!(iters.len(), traced.k_used);
+        for (i, s) in iters.iter().enumerate() {
+            let beta = s.fields.iter().find(|(k, _)| *k == "beta").expect("beta field").1;
+            assert_eq!(beta, traced.beta[i], "iter {i}");
+            assert!(s.fields.iter().any(|(k, _)| *k == "sigma_est"));
+            assert!(s.fields.iter().any(|(k, _)| *k == "ritz_delta"));
+        }
+        // The stage span wraps every iteration span.
+        let stage = spans.iter().find(|s| s.name == "gk").expect("stage span");
+        for s in &iters {
+            assert!(s.start_us >= stage.start_us);
+            assert!(s.start_us + s.dur_us <= stage.start_us + stage.dur_us);
+        }
     }
 
     #[test]

@@ -9,7 +9,10 @@ use super::gk::{gk_bidiagonalize, GkOptions, GkResult};
 use super::LinOp;
 use crate::cancel::CancelToken;
 use crate::linalg::tridiag::btb_eig;
+use crate::obs::metrics::{record_stage, KernelStage};
+use crate::obs::trace::Trace;
 use crate::Result;
+use std::time::Instant;
 
 /// Options for [`estimate_rank`].
 #[derive(Debug, Clone)]
@@ -26,6 +29,9 @@ pub struct RankOptions {
     /// Cooperative stop signal, forwarded to the inner Algorithm 1 loop
     /// (see [`GkOptions::cancel`]). The default token is inert.
     pub cancel: CancelToken,
+    /// Convergence-telemetry sink, forwarded to the inner Algorithm 1
+    /// loop (see [`GkOptions::trace`]). The default trace is inert.
+    pub trace: Trace,
 }
 
 impl Default for RankOptions {
@@ -36,6 +42,7 @@ impl Default for RankOptions {
             seed: 0x5eed,
             max_iters: None,
             cancel: CancelToken::none(),
+            trace: Trace::none(),
         }
     }
 }
@@ -67,6 +74,7 @@ pub fn estimate_rank(a: &dyn LinOp, opts: &RankOptions) -> Result<RankEstimate> 
             reorth_passes: opts.reorth_passes,
             seed: opts.seed,
             cancel: opts.cancel.clone(),
+            trace: opts.trace.clone(),
         },
     )?;
     rank_from_gk(&gk, opts.eps)
@@ -74,7 +82,9 @@ pub fn estimate_rank(a: &dyn LinOp, opts: &RankOptions) -> Result<RankEstimate> 
 
 /// Algorithm 3 lines 3–4 given an existing Algorithm 1 run.
 pub fn rank_from_gk(gk: &GkResult, eps: f64) -> Result<RankEstimate> {
+    let t_ritz = Instant::now();
     let (theta, _g) = btb_eig(&gk.alpha, &gk.beta)?;
+    record_stage(KernelStage::Ritz, t_ritz.elapsed());
     // Count eigenvalues of B^T B exceeding ε (paper line 4). The
     // eigenvalues are σ² estimates; the paper's ε applies directly to them.
     let rank = theta.iter().filter(|&&t| t > eps).count();

@@ -75,6 +75,7 @@ pub mod experiments;
 pub mod krylov;
 pub mod linalg;
 pub mod manifold;
+pub mod obs;
 pub mod rng;
 pub mod rsl;
 pub mod rsvd;

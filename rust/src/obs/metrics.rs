@@ -1,0 +1,565 @@
+//! Metrics primitives and the process registry.
+//!
+//! [`Counter`] and [`Histogram`] are const-constructible so they can back
+//! `static`s (the exec-pool gauges and the per-stage kernel timers live in
+//! statics; everything request-scoped hangs off the server's `ApiState`).
+//! The [`Registry`] holds *read callbacks*, not the metrics themselves, so
+//! any layer can expose its counters without restructuring ownership —
+//! and without reference cycles through the state that owns the registry.
+//!
+//! Histograms use one fixed log-scale bucket ladder ([`BUCKETS_US`],
+//! roughly 1–2.5–5 per decade from 50 µs to 60 s plus an overflow bucket).
+//! Quantiles come from the bucket CDF: `quantile(q)` returns the upper
+//! bound of the bucket containing the `ceil(q·n)`-th observation, so p50,
+//! p90 and p99 are derivable from any scrape. [`Histogram::merge_from`]
+//! adds integer bucket counts in fixed ascending index order — the same
+//! fixed-merge-order rule the PR 3 exec reductions follow — so merging
+//! shard histograms is exact and independent of shard split
+//! (`python/sims/obs_sim.py` is the executable spec for both properties).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Histogram bucket upper bounds in microseconds; observations above the
+/// last bound land in an implicit +Inf overflow bucket.
+pub const BUCKETS_US: [u64; 19] = [
+    50, 100, 250, 500, 1_000, 2_500, 5_000, 10_000, 25_000, 50_000, 100_000, 250_000, 500_000,
+    1_000_000, 2_500_000, 5_000_000, 10_000_000, 30_000_000, 60_000_000,
+];
+
+/// Bucket count including the +Inf overflow bucket.
+pub const NUM_BUCKETS: usize = BUCKETS_US.len() + 1;
+
+/// Sentinel (µs) returned by [`Histogram::quantile`] when the quantile
+/// falls in the overflow bucket, whose upper bound is unbounded.
+pub const OVERFLOW_US: u64 = u64::MAX / 2;
+
+/// Index of the bucket an observation of `us` microseconds falls into:
+/// the first bucket whose upper bound is `>= us`, else the overflow slot.
+pub fn bucket_index(us: u64) -> usize {
+    BUCKETS_US.iter().position(|&b| us <= b).unwrap_or(BUCKETS_US.len())
+}
+
+/// Monotonically increasing atomic counter. `const`-constructible so it
+/// can live in a `static`.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    /// A counter at zero.
+    pub const fn new() -> Self {
+        Counter(AtomicU64::new(0))
+    }
+
+    /// Add one.
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Add `n`.
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Fixed-bucket log-scale latency histogram: no allocation on the hot
+/// path, `const`-constructible, mergeable in fixed bucket order.
+#[derive(Debug)]
+pub struct Histogram {
+    counts: [AtomicU64; NUM_BUCKETS],
+    sum_us: AtomicU64,
+    n: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    /// An empty histogram.
+    pub const fn new() -> Self {
+        Histogram {
+            counts: [const { AtomicU64::new(0) }; NUM_BUCKETS],
+            sum_us: AtomicU64::new(0),
+            n: AtomicU64::new(0),
+        }
+    }
+
+    /// Record one observation.
+    pub fn observe(&self, d: Duration) {
+        self.observe_us(d.as_micros().min(u64::MAX as u128) as u64);
+    }
+
+    /// Record one observation given directly in microseconds.
+    pub fn observe_us(&self, us: u64) {
+        self.counts[bucket_index(us)].fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add(us, Ordering::Relaxed);
+        self.n.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Number of observations.
+    pub fn count(&self) -> u64 {
+        self.n.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all observations, in microseconds.
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us.load(Ordering::Relaxed)
+    }
+
+    /// Mean latency (zero when empty).
+    pub fn mean(&self) -> Duration {
+        let n = self.count();
+        if n == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_micros(self.sum_us() / n)
+    }
+
+    /// Approximate quantile from the bucket CDF: the upper bound of the
+    /// bucket containing the `ceil(q·n)`-th observation. Zero when empty;
+    /// [`OVERFLOW_US`] µs when the quantile lands in the overflow bucket.
+    pub fn quantile(&self, q: f64) -> Duration {
+        let n = self.count();
+        if n == 0 {
+            return Duration::ZERO;
+        }
+        let target = (q.clamp(0.0, 1.0) * n as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            acc += c.load(Ordering::Relaxed);
+            if acc >= target {
+                let us = if i < BUCKETS_US.len() { BUCKETS_US[i] } else { OVERFLOW_US };
+                return Duration::from_micros(us);
+            }
+        }
+        Duration::from_micros(*BUCKETS_US.last().expect("buckets"))
+    }
+
+    /// Add `src` into `self`, walking buckets in fixed ascending index
+    /// order. Counts and sums are integers, so the merged histogram is
+    /// bit-identical however the observations were sharded — the same
+    /// contract the PR 3 exec reductions keep.
+    pub fn merge_from(&self, src: &Histogram) {
+        for i in 0..NUM_BUCKETS {
+            let c = src.counts[i].load(Ordering::Relaxed);
+            if c > 0 {
+                self.counts[i].fetch_add(c, Ordering::Relaxed);
+            }
+        }
+        self.sum_us.fetch_add(src.sum_us.load(Ordering::Relaxed), Ordering::Relaxed);
+        self.n.fetch_add(src.n.load(Ordering::Relaxed), Ordering::Relaxed);
+    }
+
+    /// Point-in-time copy of the bucket counts (for rendering).
+    pub fn snapshot(&self) -> HistogramSnapshot {
+        let mut counts = [0u64; NUM_BUCKETS];
+        for (dst, src) in counts.iter_mut().zip(&self.counts) {
+            *dst = src.load(Ordering::Relaxed);
+        }
+        HistogramSnapshot { counts, sum_us: self.sum_us(), n: self.count() }
+    }
+}
+
+/// One consistent-enough read of a [`Histogram`] (fields are loaded
+/// individually from relaxed atomics; exactness is not promised under
+/// concurrent writes, monotonicity across scrapes is).
+#[derive(Debug, Clone)]
+pub struct HistogramSnapshot {
+    /// Per-bucket observation counts (not cumulative), overflow last.
+    pub counts: [u64; NUM_BUCKETS],
+    /// Sum of all observations in microseconds.
+    pub sum_us: u64,
+    /// Total observation count.
+    pub n: u64,
+}
+
+/// Algorithm stages timed into always-on static histograms, labelled
+/// `stage="..."` under one `fastlr_kernel_stage_seconds` family.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelStage {
+    /// Golub–Kahan bidiagonalization (whole loop).
+    Gk,
+    /// Ritz extraction: `BᵀB` tridiagonal eigensolve.
+    Ritz,
+    /// Singular-vector recovery `V = P·G`, `uᵢ = A·vᵢ/σᵢ`.
+    RecoverUv,
+    /// R-SVD range sketch `Y = A·Ω` + orthonormalization.
+    Sketch,
+    /// One R-SVD power iteration (subspace refinement).
+    PowerIter,
+    /// R-SVD stage B: `B = QᵀA`, small dense SVD, `U = Q·Ũ`.
+    StageB,
+    /// Traditional dense SVD (the non-Krylov route).
+    FullSvd,
+}
+
+/// All stages, in [`KernelStage`] discriminant order.
+pub const KERNEL_STAGES: [KernelStage; 7] = [
+    KernelStage::Gk,
+    KernelStage::Ritz,
+    KernelStage::RecoverUv,
+    KernelStage::Sketch,
+    KernelStage::PowerIter,
+    KernelStage::StageB,
+    KernelStage::FullSvd,
+];
+
+impl KernelStage {
+    /// The `stage` label value.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            KernelStage::Gk => "gk",
+            KernelStage::Ritz => "ritz",
+            KernelStage::RecoverUv => "recover_uv",
+            KernelStage::Sketch => "sketch",
+            KernelStage::PowerIter => "power_iter",
+            KernelStage::StageB => "stage_b",
+            KernelStage::FullSvd => "full_svd",
+        }
+    }
+}
+
+static STAGE_TIME: [Histogram; KERNEL_STAGES.len()] =
+    [const { Histogram::new() }; KERNEL_STAGES.len()];
+
+/// The process-wide timing histogram for one algorithm stage.
+pub fn stage_histogram(stage: KernelStage) -> &'static Histogram {
+    &STAGE_TIME[stage as usize]
+}
+
+/// Record one stage execution. Always on: the cost is two clock reads per
+/// stage per job, never anything inside iteration arithmetic.
+pub fn record_stage(stage: KernelStage, d: Duration) {
+    stage_histogram(stage).observe(d);
+}
+
+enum Source {
+    Counter(Box<dyn Fn() -> u64 + Send + Sync>),
+    Gauge(Box<dyn Fn() -> f64 + Send + Sync>),
+    Histogram(Box<dyn Fn() -> HistogramSnapshot + Send + Sync>),
+}
+
+struct Entry {
+    name: String,
+    help: String,
+    labels: Vec<(String, String)>,
+    source: Source,
+}
+
+/// A set of named metrics rendered as Prometheus-style text exposition.
+///
+/// Registration stores a read *callback* per series, so the registry
+/// never owns the hot-path atomics. Families (same name, different
+/// labels) are grouped in first-registration order; `# HELP`/`# TYPE`
+/// come from the first series of each family.
+#[derive(Default)]
+pub struct Registry {
+    entries: Mutex<Vec<Entry>>,
+}
+
+impl Registry {
+    /// An empty registry.
+    pub fn new() -> Self {
+        Registry::default()
+    }
+
+    /// Register a counter series.
+    pub fn counter(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        read: impl Fn() -> u64 + Send + Sync + 'static,
+    ) {
+        self.push(name, help, labels, Source::Counter(Box::new(read)));
+    }
+
+    /// Register a gauge series.
+    pub fn gauge(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        read: impl Fn() -> f64 + Send + Sync + 'static,
+    ) {
+        self.push(name, help, labels, Source::Gauge(Box::new(read)));
+    }
+
+    /// Register a histogram series (rendered in seconds).
+    pub fn histogram(
+        &self,
+        name: &str,
+        help: &str,
+        labels: &[(&str, &str)],
+        read: impl Fn() -> HistogramSnapshot + Send + Sync + 'static,
+    ) {
+        self.push(name, help, labels, Source::Histogram(Box::new(read)));
+    }
+
+    fn push(&self, name: &str, help: &str, labels: &[(&str, &str)], source: Source) {
+        let entry = Entry {
+            name: name.to_string(),
+            help: help.to_string(),
+            labels: labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect(),
+            source,
+        };
+        self.entries.lock().expect("registry lock").push(entry);
+    }
+
+    /// Render every series as Prometheus text exposition.
+    pub fn render(&self) -> String {
+        let entries = self.entries.lock().expect("registry lock");
+        // Group series into families preserving first-seen name order.
+        let mut families: Vec<(&str, Vec<&Entry>)> = Vec::new();
+        for e in entries.iter() {
+            match families.iter_mut().find(|(n, _)| *n == e.name) {
+                Some((_, v)) => v.push(e),
+                None => families.push((&e.name, vec![e])),
+            }
+        }
+        let mut out = String::new();
+        for (name, series) in &families {
+            let first = series[0];
+            let kind = match first.source {
+                Source::Counter(_) => "counter",
+                Source::Gauge(_) => "gauge",
+                Source::Histogram(_) => "histogram",
+            };
+            out.push_str(&format!("# HELP {} {}\n", name, escape_help(&first.help)));
+            out.push_str(&format!("# TYPE {} {}\n", name, kind));
+            for e in series {
+                render_series(&mut out, e);
+            }
+        }
+        out
+    }
+}
+
+fn render_series(out: &mut String, e: &Entry) {
+    match &e.source {
+        Source::Counter(read) => {
+            out.push_str(&format!("{}{} {}\n", e.name, label_block(&e.labels, None), read()));
+        }
+        Source::Gauge(read) => {
+            out.push_str(&format!(
+                "{}{} {}\n",
+                e.name,
+                label_block(&e.labels, None),
+                fmt_f64(read())
+            ));
+        }
+        Source::Histogram(read) => {
+            let snap = read();
+            let mut acc = 0u64;
+            for (i, c) in snap.counts.iter().enumerate() {
+                acc += c;
+                let le = if i < BUCKETS_US.len() {
+                    fmt_f64(BUCKETS_US[i] as f64 / 1e6)
+                } else {
+                    "+Inf".to_string()
+                };
+                out.push_str(&format!(
+                    "{}_bucket{} {}\n",
+                    e.name,
+                    label_block(&e.labels, Some(("le", &le))),
+                    acc
+                ));
+            }
+            out.push_str(&format!(
+                "{}_sum{} {}\n",
+                e.name,
+                label_block(&e.labels, None),
+                fmt_f64(snap.sum_us as f64 / 1e6)
+            ));
+            out.push_str(&format!("{}_count{} {}\n", e.name, label_block(&e.labels, None), snap.n));
+        }
+    }
+}
+
+/// Render a `{k="v",...}` block (empty string when there are no labels).
+fn label_block(labels: &[(String, String)], extra: Option<(&str, &str)>) -> String {
+    let mut pairs: Vec<String> =
+        labels.iter().map(|(k, v)| format!("{}=\"{}\"", k, escape_label_value(v))).collect();
+    if let Some((k, v)) = extra {
+        pairs.push(format!("{}=\"{}\"", k, escape_label_value(v)));
+    }
+    if pairs.is_empty() {
+        String::new()
+    } else {
+        format!("{{{}}}", pairs.join(","))
+    }
+}
+
+/// Escape a HELP line: backslash and newline.
+pub fn escape_help(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('\n', "\\n")
+}
+
+/// Escape a label value: backslash, double quote, newline.
+pub fn escape_label_value(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// Shortest-round-trip decimal for a sample value (Rust's `Display`).
+fn fmt_f64(x: f64) -> String {
+    format!("{x}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn bucket_index_edges() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(50), 0);
+        assert_eq!(bucket_index(51), 1);
+        for (i, &b) in BUCKETS_US.iter().enumerate() {
+            assert_eq!(bucket_index(b), i, "bound {b} lands in its own bucket");
+        }
+        assert_eq!(bucket_index(u64::MAX), BUCKETS_US.len(), "overflow bucket");
+    }
+
+    #[test]
+    fn bucket_bounds_are_strictly_increasing() {
+        assert!(BUCKETS_US.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn histogram_counts_and_mean() {
+        let h = Histogram::new();
+        h.observe(Duration::from_micros(40));
+        h.observe(Duration::from_micros(60));
+        h.observe(Duration::from_micros(200));
+        assert_eq!(h.count(), 3);
+        assert_eq!(h.mean(), Duration::from_micros(100));
+    }
+
+    #[test]
+    fn quantiles_are_monotone() {
+        let h = Histogram::new();
+        for us in [10u64, 80, 300, 600, 2_000, 80_000, 2_000_000] {
+            h.observe(Duration::from_micros(us));
+        }
+        let p50 = h.quantile(0.5);
+        let p90 = h.quantile(0.9);
+        let p99 = h.quantile(0.99);
+        assert!(p50 <= p90 && p90 <= p99, "{p50:?} {p90:?} {p99:?}");
+    }
+
+    #[test]
+    fn empty_histogram_is_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.mean(), Duration::ZERO);
+        assert_eq!(h.quantile(0.99), Duration::ZERO);
+    }
+
+    #[test]
+    fn observe_beyond_last_bucket() {
+        let h = Histogram::new();
+        h.observe(Duration::from_secs(100));
+        assert_eq!(h.count(), 1);
+        assert_eq!(h.quantile(0.5), Duration::from_micros(OVERFLOW_US));
+    }
+
+    #[test]
+    fn merge_equals_serial_aggregate() {
+        let obs: Vec<u64> = (0..200u64).map(|i| (i * 7919) % 3_000_000).collect();
+        let serial = Histogram::new();
+        for &us in &obs {
+            serial.observe_us(us);
+        }
+        let shards: Vec<Histogram> = (0..4).map(|_| Histogram::new()).collect();
+        for (i, &us) in obs.iter().enumerate() {
+            shards[i % 4].observe_us(us);
+        }
+        let merged = Histogram::new();
+        for s in &shards {
+            merged.merge_from(s);
+        }
+        assert_eq!(merged.snapshot().counts, serial.snapshot().counts);
+        assert_eq!(merged.sum_us(), serial.sum_us());
+        assert_eq!(merged.count(), serial.count());
+    }
+
+    #[test]
+    fn counter_inc_and_add() {
+        let c = Counter::new();
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+    }
+
+    #[test]
+    fn stage_histograms_accumulate() {
+        let before = stage_histogram(KernelStage::Ritz).count();
+        record_stage(KernelStage::Ritz, Duration::from_micros(120));
+        assert_eq!(stage_histogram(KernelStage::Ritz).count(), before + 1);
+        assert_eq!(KERNEL_STAGES[KernelStage::Ritz as usize], KernelStage::Ritz);
+    }
+
+    #[test]
+    fn registry_renders_counters_and_gauges() {
+        let r = Registry::new();
+        let c = Arc::new(Counter::new());
+        c.add(3);
+        let cc = Arc::clone(&c);
+        r.counter("fastlr_test_total", "a counter", &[("kind", "x")], move || cc.get());
+        r.gauge("fastlr_test_depth", "a gauge", &[], || 2.5);
+        let text = r.render();
+        assert!(text.contains("# HELP fastlr_test_total a counter\n"));
+        assert!(text.contains("# TYPE fastlr_test_total counter\n"));
+        assert!(text.contains("fastlr_test_total{kind=\"x\"} 3\n"));
+        assert!(text.contains("# TYPE fastlr_test_depth gauge\n"));
+        assert!(text.contains("fastlr_test_depth 2.5\n"));
+    }
+
+    #[test]
+    fn registry_groups_families_and_escapes_labels() {
+        let r = Registry::new();
+        r.counter("fastlr_family_total", "multi-series", &[("state", "ok")], || 1);
+        let odd = [("state", "a\"b\\c\nd")];
+        r.counter("fastlr_family_total", "ignored (family help comes first)", &odd, || 2);
+        let text = r.render();
+        // One HELP/TYPE header for the family, both series under it.
+        assert_eq!(text.matches("# TYPE fastlr_family_total counter").count(), 1);
+        assert!(text.contains("fastlr_family_total{state=\"ok\"} 1\n"));
+        assert!(text.contains("fastlr_family_total{state=\"a\\\"b\\\\c\\nd\"} 2\n"));
+    }
+
+    #[test]
+    fn registry_renders_histograms_cumulatively() {
+        let r = Registry::new();
+        let h = Arc::new(Histogram::new());
+        h.observe_us(40); // bucket 0 (le 50µs)
+        h.observe_us(70); // bucket 1 (le 100µs)
+        h.observe_us(100_000_000); // overflow
+        let hh = Arc::clone(&h);
+        r.histogram("fastlr_test_seconds", "a histogram", &[], move || hh.snapshot());
+        let text = r.render();
+        assert!(text.contains("# TYPE fastlr_test_seconds histogram\n"));
+        assert!(text.contains("fastlr_test_seconds_bucket{le=\"0.00005\"} 1\n"));
+        assert!(text.contains("fastlr_test_seconds_bucket{le=\"0.0001\"} 2\n"));
+        assert!(text.contains("fastlr_test_seconds_bucket{le=\"60\"} 2\n"));
+        assert!(text.contains("fastlr_test_seconds_bucket{le=\"+Inf\"} 3\n"));
+        assert!(text.contains("fastlr_test_seconds_count 3\n"));
+        // sum = 40µs + 70µs + 100s.
+        assert!(text.contains("fastlr_test_seconds_sum 100.00011\n"));
+    }
+
+    #[test]
+    fn help_escaping() {
+        assert_eq!(escape_help("a\\b\nc"), "a\\\\b\\nc");
+        assert_eq!(escape_label_value("a\"b"), "a\\\"b");
+    }
+}

@@ -1,0 +1,30 @@
+//! Unified observability: one metrics registry and one tracing primitive
+//! for the whole stack, from the exec pool up to the HTTP edge.
+//!
+//! Before this module existed, telemetry lived in three disconnected
+//! fragments: `exec::stats` gauges, `coordinator::metrics` counters, and
+//! ad-hoc JSON in `/v1/stats`. Everything now builds on two primitives:
+//!
+//! * [`metrics`] — atomic [`Counter`]s, callback gauges, and fixed-bucket
+//!   log-scale [`Histogram`]s (p50/p90/p99 derivable from the bucket CDF),
+//!   collected into a [`Registry`] that renders Prometheus-style text
+//!   exposition for `GET /v1/metrics`. Histogram merge walks buckets in a
+//!   fixed ascending order — integer counts, so shard merges are exact and
+//!   deterministic, matching the PR 3 reduction contract.
+//! * [`trace`] — request → job → algorithm-stage → kernel spans on
+//!   monotonic clocks with a bounded per-job buffer. A [`Trace`] handle
+//!   follows the [`crate::cancel::CancelToken`] design: the default handle
+//!   is inert and costs one `Option` branch per span, so the iteration
+//!   loops can be instrumented unconditionally. Convergence telemetry
+//!   (per-iteration GK residual norms, Ritz-value deltas, block timings)
+//!   rides in span fields and is surfaced by `GET /v1/jobs/{id}/trace`.
+//!
+//! Observation never perturbs results: counters and stage timers only read
+//! the clock, and a live trace adds work *between* iteration arithmetic,
+//! never inside it — the determinism suite pins this.
+
+pub mod metrics;
+pub mod trace;
+
+pub use metrics::{record_stage, Counter, Histogram, HistogramSnapshot, KernelStage, Registry};
+pub use trace::{Span, SpanKind, SpanRecord, Trace};

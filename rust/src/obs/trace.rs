@@ -1,0 +1,295 @@
+//! Structured tracing: request → job → stage → iteration/kernel spans.
+//!
+//! A [`Trace`] follows the [`crate::cancel::CancelToken`] design exactly:
+//! the handle is an `Option<Arc<_>>`, the default is inert, and every
+//! instrumentation point first branches on that `Option`. An inert trace
+//! never reads the clock and never allocates, so the iteration loops are
+//! instrumented unconditionally and jobs that did not ask for a trace pay
+//! one predictable branch per span site — the same bargain the cancel
+//! checks already made.
+//!
+//! A live trace records [`SpanRecord`]s into a bounded buffer (records
+//! past the cap are counted in `dropped`, never silently lost). Span
+//! times are offsets from the trace's creation instant on the monotonic
+//! clock, so spans recorded on different threads (edge, queue, worker)
+//! share one timeline. Hierarchy is by [`SpanKind`] + interval nesting —
+//! a stage span's `[start, start+dur]` lies inside its job span — which
+//! keeps records flat, cheap, and trivially serializable.
+//!
+//! Convergence telemetry is just span fields: GK iteration spans carry
+//! `beta` (the residual norm that drives termination), `sigma_est` and
+//! `ritz_delta`; Halko power-iteration spans carry block norms and
+//! timings. Numeric observation happens *between* iteration arithmetic
+//! and never feeds back into it, so tracing cannot perturb results.
+
+use crate::obs::metrics::Counter;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Traces started process-wide (live handles only).
+pub static TRACES_STARTED: Counter = Counter::new();
+/// Span records discarded because a per-trace buffer was full.
+pub static SPANS_DROPPED: Counter = Counter::new();
+
+/// Default bound on records per trace: deep enough for a few hundred GK
+/// iterations with kernel sub-spans, small enough to cap memory per job.
+pub const DEFAULT_SPAN_CAP: usize = 2048;
+
+/// Where in the stack a span was recorded.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// The HTTP request, edge to edge.
+    Request,
+    /// Coordinator-level phases: queue wait, execution.
+    Job,
+    /// An algorithm stage (gk, ritz_recover, sketch, stage_b, ...).
+    Stage,
+    /// One loop iteration (GK Lanczos step, R-SVD power iteration).
+    Iter,
+    /// A kernel call inside an iteration (apply, apply_t, reorth).
+    Kernel,
+}
+
+impl SpanKind {
+    /// Wire name for the `kind` field.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            SpanKind::Request => "request",
+            SpanKind::Job => "job",
+            SpanKind::Stage => "stage",
+            SpanKind::Iter => "iter",
+            SpanKind::Kernel => "kernel",
+        }
+    }
+}
+
+/// One finished span on the trace's shared timeline.
+#[derive(Debug, Clone)]
+pub struct SpanRecord {
+    /// Stack level.
+    pub kind: SpanKind,
+    /// Static span name (e.g. `"gk_iter"`).
+    pub name: &'static str,
+    /// Start offset from trace creation, microseconds.
+    pub start_us: u64,
+    /// Span duration, microseconds.
+    pub dur_us: u64,
+    /// Numeric telemetry attached to the span (e.g. `("beta", 1e-9)`).
+    pub fields: Vec<(&'static str, f64)>,
+}
+
+#[derive(Debug)]
+struct Inner {
+    t0: Instant,
+    cap: usize,
+    spans: Mutex<Vec<SpanRecord>>,
+    dropped: AtomicU64,
+}
+
+/// Shared trace handle (clone = same buffer). Default/`none` is inert.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    inner: Option<Arc<Inner>>,
+}
+
+impl Trace {
+    /// The inert trace: records nothing, costs one `Option` branch.
+    pub fn none() -> Self {
+        Trace { inner: None }
+    }
+
+    /// A live trace holding at most `cap` span records.
+    pub fn new(cap: usize) -> Self {
+        TRACES_STARTED.inc();
+        Trace {
+            inner: Some(Arc::new(Inner {
+                t0: Instant::now(),
+                cap: cap.max(1),
+                spans: Mutex::new(Vec::new()),
+                dropped: AtomicU64::new(0),
+            })),
+        }
+    }
+
+    /// Whether spans are being recorded.
+    pub fn is_live(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Open a span that records itself on drop. No-op (and no clock read)
+    /// on an inert trace.
+    pub fn span(&self, kind: SpanKind, name: &'static str) -> Span<'_> {
+        let live = self
+            .inner
+            .is_some()
+            .then(|| LiveSpan { kind, name, start: Instant::now(), fields: Vec::new() });
+        Span { trace: self, live }
+    }
+
+    /// Record a span with an explicit start instant — for phases whose
+    /// start predates the thread holding the trace (e.g. queue wait,
+    /// timed from enqueue by the worker that dequeues).
+    pub fn record_at(
+        &self,
+        kind: SpanKind,
+        name: &'static str,
+        start: Instant,
+        dur: Duration,
+        fields: Vec<(&'static str, f64)>,
+    ) {
+        let Some(inner) = &self.inner else { return };
+        let rec = SpanRecord {
+            kind,
+            name,
+            start_us: micros(start.saturating_duration_since(inner.t0)),
+            dur_us: micros(dur),
+            fields,
+        };
+        let mut g = inner.spans.lock().expect("trace lock");
+        if g.len() < inner.cap {
+            g.push(rec);
+        } else {
+            inner.dropped.fetch_add(1, Ordering::Relaxed);
+            SPANS_DROPPED.inc();
+        }
+    }
+
+    /// Records dropped at the buffer cap.
+    pub fn dropped(&self) -> u64 {
+        self.inner.as_ref().map_or(0, |i| i.dropped.load(Ordering::Relaxed))
+    }
+
+    /// Copy of the records so far, sorted by start offset (ties: longer
+    /// span first, so parents precede the children they contain).
+    pub fn snapshot(&self) -> Vec<SpanRecord> {
+        let Some(inner) = &self.inner else { return Vec::new() };
+        let mut spans = inner.spans.lock().expect("trace lock").clone();
+        spans.sort_by(|a, b| a.start_us.cmp(&b.start_us).then(b.dur_us.cmp(&a.dur_us)));
+        spans
+    }
+}
+
+fn micros(d: Duration) -> u64 {
+    d.as_micros().min(u64::MAX as u128) as u64
+}
+
+struct LiveSpan {
+    kind: SpanKind,
+    name: &'static str,
+    start: Instant,
+    fields: Vec<(&'static str, f64)>,
+}
+
+/// An open span; records itself into the trace when dropped.
+pub struct Span<'a> {
+    trace: &'a Trace,
+    live: Option<LiveSpan>,
+}
+
+impl Span<'_> {
+    /// Attach a numeric field. No-op on an inert trace, so callers can
+    /// compute the value lazily behind [`Span::is_live`].
+    pub fn field(&mut self, key: &'static str, value: f64) {
+        if let Some(l) = &mut self.live {
+            l.fields.push((key, value));
+        }
+    }
+
+    /// Whether this span will actually be recorded.
+    pub fn is_live(&self) -> bool {
+        self.live.is_some()
+    }
+}
+
+impl Drop for Span<'_> {
+    fn drop(&mut self) {
+        if let Some(l) = self.live.take() {
+            self.trace.record_at(l.kind, l.name, l.start, l.start.elapsed(), l.fields);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inert_trace_records_nothing() {
+        let t = Trace::none();
+        assert!(!t.is_live());
+        {
+            let mut s = t.span(SpanKind::Stage, "gk");
+            assert!(!s.is_live());
+            s.field("beta", 1.0);
+        }
+        t.record_at(SpanKind::Job, "exec", Instant::now(), Duration::from_millis(1), Vec::new());
+        assert!(t.snapshot().is_empty());
+        assert_eq!(t.dropped(), 0);
+        assert!(!Trace::default().is_live());
+    }
+
+    #[test]
+    fn spans_nest_on_one_timeline() {
+        let t = Trace::new(64);
+        assert!(t.is_live());
+        {
+            let mut outer = t.span(SpanKind::Job, "exec");
+            outer.field("k", 4.0);
+            std::thread::sleep(Duration::from_millis(2));
+            {
+                let _inner = t.span(SpanKind::Stage, "gk");
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        }
+        let spans = t.snapshot();
+        assert_eq!(spans.len(), 2);
+        // Sorted parent-first: outer starts earlier.
+        assert_eq!(spans[0].name, "exec");
+        assert_eq!(spans[1].name, "gk");
+        let (outer, inner) = (&spans[0], &spans[1]);
+        assert!(outer.start_us <= inner.start_us);
+        assert!(inner.start_us + inner.dur_us <= outer.start_us + outer.dur_us);
+        assert_eq!(outer.fields, vec![("k", 4.0)]);
+        assert_eq!(outer.kind, SpanKind::Job);
+    }
+
+    #[test]
+    fn clones_share_the_buffer_across_threads() {
+        let t = Trace::new(64);
+        let t2 = t.clone();
+        std::thread::spawn(move || {
+            let _s = t2.span(SpanKind::Kernel, "apply");
+        })
+        .join()
+        .unwrap();
+        assert_eq!(t.snapshot().len(), 1);
+    }
+
+    #[test]
+    fn buffer_cap_counts_drops() {
+        let t = Trace::new(2);
+        for _ in 0..5 {
+            let _s = t.span(SpanKind::Iter, "gk_iter");
+        }
+        assert_eq!(t.snapshot().len(), 2);
+        assert_eq!(t.dropped(), 3);
+    }
+
+    #[test]
+    fn record_at_uses_explicit_start() {
+        let t = Trace::new(8);
+        let start = Instant::now();
+        std::thread::sleep(Duration::from_millis(3));
+        t.record_at(SpanKind::Job, "queue_wait", start, Duration::from_millis(3), Vec::new());
+        let spans = t.snapshot();
+        assert_eq!(spans[0].name, "queue_wait");
+        assert!(spans[0].dur_us >= 2_000);
+    }
+
+    #[test]
+    fn kind_names_are_stable() {
+        assert_eq!(SpanKind::Request.as_str(), "request");
+        assert_eq!(SpanKind::Kernel.as_str(), "kernel");
+    }
+}

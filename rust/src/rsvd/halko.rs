@@ -12,8 +12,11 @@ use crate::krylov::LinOp;
 use crate::linalg::qr::orthonormalize;
 use crate::linalg::svd::{svd, Svd};
 use crate::linalg::Matrix;
+use crate::obs::metrics::{record_stage, KernelStage};
+use crate::obs::trace::{SpanKind, Trace};
 use crate::rng::Pcg64;
 use crate::{Error, Result};
+use std::time::Instant;
 
 /// Options for [`rsvd`].
 #[derive(Debug, Clone)]
@@ -30,6 +33,10 @@ pub struct RsvdOptions {
     /// the sketch, between power iterations, before stage B). The default
     /// token is inert.
     pub cancel: CancelToken,
+    /// Convergence-telemetry sink: stage spans for the sketch, each
+    /// power iteration, and stage B land here. The default trace is
+    /// inert (no clock reads, no allocation).
+    pub trace: Trace,
 }
 
 impl Default for RsvdOptions {
@@ -40,6 +47,7 @@ impl Default for RsvdOptions {
             power_iters: 0,
             seed: 0x5eed,
             cancel: CancelToken::none(),
+            trace: Trace::none(),
         }
     }
 }
@@ -64,26 +72,43 @@ pub fn rsvd(a: &dyn LinOp, opts: &RsvdOptions) -> Result<Svd> {
     // Stage A: find Q whose columns approximate range(A). Each block
     // step is preceded by a cooperative cancel checkpoint.
     opts.cancel.check()?;
-    let omega = Matrix::gaussian(n, l, &mut rng);
-    let y = a.apply_block(&omega)?; // m x l  (A Ω)
-    let mut q = orthonormalize(&y)?;
+    let t_sketch = Instant::now();
+    let mut q = {
+        let mut sp = opts.trace.span(SpanKind::Stage, "sketch");
+        sp.field("l", l as f64);
+        let omega = Matrix::gaussian(n, l, &mut rng);
+        let y = a.apply_block(&omega)?; // m x l  (A Ω)
+        orthonormalize(&y)?
+    };
+    record_stage(KernelStage::Sketch, t_sketch.elapsed());
     for _ in 0..opts.power_iters {
         opts.cancel.check()?;
+        let t_power = Instant::now();
+        let mut sp = opts.trace.span(SpanKind::Iter, "power_iter");
         // Subspace iteration with re-orthonormalization each half-step
         // (numerically stable variant of [4] Alg. 4.4).
         let z = a.apply_t_block(&q)?; // n x l  (A^T Q)
         let qz = orthonormalize(&z)?;
         let y2 = a.apply_block(&qz)?; // m x l
+        if sp.is_live() {
+            sp.field("block_fro", y2.fro_norm());
+        }
         q = orthonormalize(&y2)?;
+        drop(sp);
+        record_stage(KernelStage::PowerIter, t_power.elapsed());
     }
 
     // Stage B: SVD of the small matrix B = Qᵀ·A (l x n), formed through
     // the operator as (Aᵀ·Q)ᵀ.
     opts.cancel.check()?;
+    let t_b = Instant::now();
+    let _sp = opts.trace.span(SpanKind::Stage, "stage_b");
     let b = a.apply_t_block(&q)?.transpose(); // l x n
     let small = svd(&b)?;
     // U = Q · U_b.
     let u = q.matmul(&small.u)?;
+    drop(_sp);
+    record_stage(KernelStage::StageB, t_b.elapsed());
     Ok(Svd { u, sigma: small.sigma, v: small.v })
 }
 
@@ -174,6 +199,29 @@ mod tests {
         cancel.cancel();
         let err = rsvd(&a, &RsvdOptions { r: 5, cancel, ..Default::default() }).unwrap_err();
         assert!(matches!(err, crate::Error::Cancelled(_)), "{err}");
+    }
+
+    #[test]
+    fn traced_run_records_stages_and_matches_untraced() {
+        let mut rng = Pcg64::seed_from_u64(127);
+        let a = low_rank_gaussian(60, 50, 6, &mut rng);
+        let base = RsvdOptions { r: 6, oversample: 6, power_iters: 2, ..Default::default() };
+        let plain = rsvd(&a, &base).unwrap();
+        let trace = Trace::new(64);
+        let traced =
+            rsvd(&a, &RsvdOptions { trace: trace.clone(), ..base.clone() }).unwrap();
+        // Observation must not perturb the arithmetic.
+        assert_eq!(plain.sigma, traced.sigma);
+        assert_eq!(plain.u.as_slice(), traced.u.as_slice());
+        assert_eq!(plain.v.as_slice(), traced.v.as_slice());
+        let spans = trace.snapshot();
+        let names: Vec<&str> = spans.iter().map(|s| s.name).collect();
+        assert!(names.contains(&"sketch"), "{names:?}");
+        assert!(names.contains(&"stage_b"), "{names:?}");
+        let iters = spans.iter().filter(|s| s.name == "power_iter").count();
+        assert_eq!(iters, 2);
+        let sketch = spans.iter().find(|s| s.name == "sketch").unwrap();
+        assert!(sketch.fields.iter().any(|(k, _)| *k == "l"));
     }
 
     #[test]

@@ -14,11 +14,26 @@
 //! * `DELETE /v1/jobs/{id}` — fire the job's cancel token; the job
 //!   unwinds between iteration block steps and the next poll reports
 //!   `cancelled`.
+//! * `GET /v1/jobs/{id}/trace` — the job's span buffer (requires the
+//!   submission to have set `"trace": true`; per-iteration GK residuals
+//!   and Ritz-value deltas ride on the `gk_iter` spans).
 //! * `GET /v1/healthz` — liveness + config echo.
 //! * `GET /v1/stats`   — service counters, latency percentiles, cache
 //!   hit/miss counts, execution-engine pool gauges, batcher flushes,
 //!   admission gauges (queue depth/shed/cancelled/deadline counters)
 //!   and the last-errors ring.
+//! * `GET /v1/metrics` — the same telemetry as Prometheus-style text
+//!   exposition: counters, gauges and cumulative histograms from the
+//!   [`crate::obs`] registry (request latency, queue wait, exec time,
+//!   per-stage kernel time, cache and admission counters).
+//!
+//! Any `POST /v1/svd` or `POST /v1/rank` body may add `"trace": true`:
+//! the job then records structured spans (request → job → stage →
+//! iteration → kernel) into a bounded buffer. Sync responses embed the
+//! trace under `"trace"`; async jobs serve it at
+//! `GET /v1/jobs/{id}/trace`. Traced requests always execute (the cache
+//! is bypassed on read, still fed on write) because the point is to
+//! observe *this* run.
 //!
 //! Every non-2xx response carries the uniform error envelope
 //! `{"error":{"code","message","retryable","request_id"}}` (see
@@ -44,10 +59,14 @@ use crate::coordinator::job::{JobError, JobErrorKind, JobOutcome, JobResult, Svd
 use crate::coordinator::queue::Priority;
 use crate::coordinator::{AccuracyClass, FactorizationService, JobRequest, JobSpec};
 use crate::linalg::{Matrix, SparseMatrix};
+use crate::obs::metrics::{stage_histogram, Counter, Histogram, Registry, KERNEL_STAGES};
+use crate::obs::trace::{
+    SpanKind, SpanRecord, Trace, DEFAULT_SPAN_CAP, SPANS_DROPPED, TRACES_STARTED,
+};
 use crate::rng::Pcg64;
 use crate::{Error, Result};
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::Ordering;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -69,10 +88,11 @@ pub struct ApiState {
     /// Micro-batcher for small jobs (mpsc `Sender` is `!Sync`, hence the
     /// mutex; the critical section is a single channel send).
     pub batcher: Mutex<Batcher>,
-    /// Fingerprint-keyed result cache.
-    pub cache: ResultCache,
+    /// Fingerprint-keyed result cache (`Arc` so registry closures can
+    /// read its counters without borrowing the state that owns them).
+    pub cache: Arc<ResultCache>,
     /// Async jobs registry (`mode: "async"` submissions).
-    pub jobs: JobsRegistry,
+    pub jobs: Arc<JobsRegistry>,
     /// Jobs at or below this many entries go through the batcher.
     pub batch_threshold: usize,
     /// Server-side cap on per-job budgets: the effective deadline is
@@ -81,7 +101,11 @@ pub struct ApiState {
     /// Server start time (uptime in `/v1/stats`).
     pub started: Instant,
     /// API requests handled (any route, any status).
-    pub requests: AtomicU64,
+    pub requests: Arc<Counter>,
+    /// Edge-to-edge request latency (route + handler + render).
+    pub request_latency: Arc<Histogram>,
+    /// Every exported series, rendered by `GET /v1/metrics`.
+    pub registry: Registry,
     /// Ring of recent error envelopes (request id, status, code).
     last_errors: Mutex<VecDeque<Json>>,
 }
@@ -94,15 +118,24 @@ impl ApiState {
         batch_threshold: usize,
     ) -> Self {
         let batcher = Batcher::new(service.clone(), Default::default());
+        let cache = Arc::new(ResultCache::new(cache_capacity));
+        let jobs = Arc::new(JobsRegistry::new(256));
+        let requests = Arc::new(Counter::new());
+        let request_latency = Arc::new(Histogram::new());
+        let started = Instant::now();
+        let registry =
+            build_registry(&service, &cache, &jobs, &requests, &request_latency, started);
         ApiState {
             service,
             batcher: Mutex::new(batcher),
-            cache: ResultCache::new(cache_capacity),
-            jobs: JobsRegistry::new(256),
+            cache,
+            jobs,
             batch_threshold,
             default_deadline: None,
-            started: Instant::now(),
-            requests: AtomicU64::new(0),
+            started,
+            requests,
+            request_latency,
+            registry,
             last_errors: Mutex::new(VecDeque::new()),
         }
     }
@@ -112,6 +145,110 @@ impl ApiState {
         self.default_deadline = budget;
         self
     }
+}
+
+/// Register every exported series. The registry stores read callbacks;
+/// each closure clones exactly the `Arc` it reads — never the `ApiState`
+/// that owns the registry, so there are no reference cycles.
+fn build_registry(
+    service: &Arc<FactorizationService>,
+    cache: &Arc<ResultCache>,
+    jobs: &Arc<JobsRegistry>,
+    requests: &Arc<Counter>,
+    request_latency: &Arc<Histogram>,
+    started: Instant,
+) -> Registry {
+    let r = Registry::new();
+    let c = Arc::clone(requests);
+    r.counter("fastlr_requests_total", "API requests handled (any route, any status)", &[], {
+        move || c.get()
+    });
+    let h = Arc::clone(request_latency);
+    r.histogram("fastlr_request_latency_seconds", "Edge-to-edge HTTP request latency", &[], {
+        move || h.snapshot()
+    });
+    // One family, six series: every way a job leaves the coordinator.
+    type Pick = fn(&crate::coordinator::metrics::Metrics) -> u64;
+    const JOB_STATES: [(&str, Pick); 6] = [
+        ("submitted", |m| m.submitted.get()),
+        ("completed", |m| m.completed.get()),
+        ("failed", |m| m.failed.get()),
+        ("shed", |m| m.shed.get()),
+        ("cancelled", |m| m.cancelled.get()),
+        ("deadline_exceeded", |m| m.deadline_exceeded.get()),
+    ];
+    for (label, pick) in JOB_STATES {
+        let svc = Arc::clone(service);
+        r.counter("fastlr_jobs_total", "Coordinator jobs by state", &[("state", label)], {
+            move || pick(&svc.metrics)
+        });
+    }
+    let svc = Arc::clone(service);
+    r.histogram("fastlr_queue_wait_seconds", "Time from enqueue to worker pickup", &[], {
+        move || svc.metrics.queue_wait.snapshot()
+    });
+    let svc = Arc::clone(service);
+    r.histogram("fastlr_exec_seconds", "Job execution time on a worker", &[], {
+        move || svc.metrics.exec_time.snapshot()
+    });
+    for (lane, interactive) in [("interactive", true), ("bulk", false)] {
+        let svc = Arc::clone(service);
+        r.gauge("fastlr_queue_depth", "Admission queue depth by lane", &[("lane", lane)], {
+            move || {
+                let (i, b) = svc.queue_depths();
+                (if interactive { i } else { b }) as f64
+            }
+        });
+    }
+    let c = Arc::clone(cache);
+    r.counter("fastlr_cache_hits_total", "Result-cache hits", &[], move || {
+        c.hits.load(Ordering::Relaxed)
+    });
+    let c = Arc::clone(cache);
+    r.counter("fastlr_cache_misses_total", "Result-cache misses", &[], move || {
+        c.misses.load(Ordering::Relaxed)
+    });
+    let c = Arc::clone(cache);
+    r.gauge("fastlr_cache_entries", "Result-cache resident entries", &[], move || {
+        c.len() as f64
+    });
+    let c = Arc::clone(cache);
+    r.gauge("fastlr_cache_bytes", "Result-cache resident bytes", &[], move || c.bytes() as f64);
+    let j = Arc::clone(jobs);
+    r.gauge("fastlr_jobs_tracked", "Async jobs registry entries (live + terminal)", &[], {
+        move || j.len() as f64
+    });
+    r.gauge("fastlr_exec_threads", "Execution-engine pool workers", &[], || {
+        crate::exec::stats().threads as f64
+    });
+    r.counter("fastlr_exec_parallel_jobs_total", "Engine calls dispatched to the pool", &[], || {
+        crate::exec::stats().parallel_jobs
+    });
+    r.counter("fastlr_exec_serial_calls_total", "Engine calls executed inline", &[], || {
+        crate::exec::stats().serial_calls
+    });
+    r.counter("fastlr_exec_tasks_total", "Chunks executed by pooled calls", &[], || {
+        crate::exec::stats().tasks
+    });
+    r.counter("fastlr_exec_steals_total", "Chunks stolen by pool workers", &[], || {
+        crate::exec::stats().steals
+    });
+    for stage in KERNEL_STAGES {
+        r.histogram(
+            "fastlr_kernel_stage_seconds",
+            "Per-stage kernel time across all jobs",
+            &[("stage", stage.as_str())],
+            move || stage_histogram(stage).snapshot(),
+        );
+    }
+    r.counter("fastlr_traces_started_total", "Live traces created", &[], || TRACES_STARTED.get());
+    r.counter("fastlr_trace_spans_dropped_total", "Spans dropped at per-trace caps", &[], || {
+        SPANS_DROPPED.get()
+    });
+    r.gauge("fastlr_uptime_seconds", "Process uptime", &[], move || {
+        started.elapsed().as_secs_f64()
+    });
+    r
 }
 
 // ---------------------------------------------------------------------
@@ -184,14 +321,30 @@ impl ApiError {
     }
 }
 
+/// Assumed p50 when no job has completed yet: an empty histogram reports
+/// a zero quantile, which used to collapse the hint to the 1-second clamp
+/// floor regardless of backlog — exactly when a cold, saturated server
+/// most needs clients to back off. A moderate-job guess scales with the
+/// backlog until real observations take over.
+const RETRY_AFTER_FALLBACK_EXEC: Duration = Duration::from_millis(250);
+
 /// `Retry-After` estimate: p50 execution time × (backlog + 1) / workers,
 /// clamped to 1..=60 seconds. Deliberately coarse — a hint, not a promise.
 fn retry_after_hint(state: &ApiState) -> u64 {
     let (interactive, bulk) = state.service.queue_depths();
-    let backlog = (interactive + bulk) as f64;
-    let p50 = state.service.metrics.exec_time.quantile(0.5).as_secs_f64();
-    let workers = state.service.config().workers.max(1) as f64;
-    ((p50 * (backlog + 1.0) / workers).ceil() as u64).clamp(1, 60)
+    let m = &state.service.metrics;
+    let p50 = if m.exec_time.count() == 0 {
+        RETRY_AFTER_FALLBACK_EXEC
+    } else {
+        m.exec_time.quantile(0.5)
+    };
+    retry_after_secs(p50, interactive + bulk, state.service.config().workers)
+}
+
+/// The pure arithmetic behind [`retry_after_hint`], split out for tests.
+fn retry_after_secs(p50: Duration, backlog: usize, workers: usize) -> u64 {
+    let per_worker = p50.as_secs_f64() * (backlog as f64 + 1.0) / workers.max(1) as f64;
+    (per_worker.ceil() as u64).clamp(1, 60)
 }
 
 /// Record the error in the stats ring and render the envelope (plus
@@ -223,12 +376,14 @@ fn error_response(state: &ApiState, request_id: &str, err: ApiError) -> Response
 /// Route one request. Pure apart from the submitted job — usable from
 /// the HTTP server and directly from tests.
 pub fn handle(state: &ApiState, req: &Request) -> Response {
-    state.requests.fetch_add(1, Ordering::Relaxed);
+    let t0 = Instant::now();
+    state.requests.inc();
     let request_id = req
         .header("x-request-id")
         .map(str::to_string)
         .unwrap_or_else(generate_request_id);
     let resp = route(state, req, &request_id);
+    state.request_latency.observe(t0.elapsed());
     // Echo the correlation id on every response; envelopes already carry
     // it, so only add when absent.
     if resp.headers.iter().any(|(k, _)| *k == "x-request-id") {
@@ -239,10 +394,20 @@ pub fn handle(state: &ApiState, req: &Request) -> Response {
 }
 
 fn route(state: &ApiState, req: &Request, request_id: &str) -> Response {
-    if let Some(job_id) = req.path.strip_prefix("/v1/jobs/") {
+    if let Some(rest) = req.path.strip_prefix("/v1/jobs/") {
+        if let Some(job_id) = rest.strip_suffix("/trace") {
+            return match req.method.as_str() {
+                "GET" => trace_job(state, job_id, request_id),
+                _ => error_response(
+                    state,
+                    request_id,
+                    ApiError::new(405, "method_not_allowed", "method not allowed"),
+                ),
+            };
+        }
         return match req.method.as_str() {
-            "GET" => poll_job(state, job_id, request_id),
-            "DELETE" => cancel_job(state, job_id, request_id),
+            "GET" => poll_job(state, rest, request_id),
+            "DELETE" => cancel_job(state, rest, request_id),
             _ => error_response(
                 state,
                 request_id,
@@ -253,13 +418,16 @@ fn route(state: &ApiState, req: &Request, request_id: &str) -> Response {
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/v1/healthz") => healthz(state),
         ("GET", "/v1/stats") => stats(state),
+        ("GET", "/v1/metrics") => metrics(state),
         ("POST", "/v1/svd") => post_job(state, req, JobKind::Svd, request_id),
         ("POST", "/v1/rank") => post_job(state, req, JobKind::Rank, request_id),
-        (_, "/v1/healthz" | "/v1/stats" | "/v1/svd" | "/v1/rank") => error_response(
-            state,
-            request_id,
-            ApiError::new(405, "method_not_allowed", "method not allowed"),
-        ),
+        (_, "/v1/healthz" | "/v1/stats" | "/v1/metrics" | "/v1/svd" | "/v1/rank") => {
+            error_response(
+                state,
+                request_id,
+                ApiError::new(405, "method_not_allowed", "method not allowed"),
+            )
+        }
         _ => error_response(
             state,
             request_id,
@@ -281,7 +449,12 @@ fn healthz(state: &ApiState) -> Response {
     )
 }
 
-fn histogram_json(h: &crate::coordinator::metrics::LatencyHistogram) -> Json {
+/// Prometheus-style text exposition of every registered series.
+fn metrics(state: &ApiState) -> Response {
+    Response::text(200, &state.registry.render())
+}
+
+fn histogram_json(h: &Histogram) -> Json {
     Json::obj(vec![
         ("mean", Json::Num(h.mean().as_secs_f64() * 1e3)),
         ("p50", Json::Num(h.quantile(0.5).as_secs_f64() * 1e3)),
@@ -305,13 +478,13 @@ fn stats(state: &ApiState) -> Response {
         200,
         &Json::obj(vec![
             ("uptime_ms", Json::Num(state.started.elapsed().as_secs_f64() * 1e3)),
-            ("requests", Json::Num(state.requests.load(Ordering::Relaxed) as f64)),
+            ("requests", Json::Num(state.requests.get() as f64)),
             (
                 "jobs",
                 Json::obj(vec![
-                    ("submitted", Json::Num(m.submitted.load(Ordering::Relaxed) as f64)),
-                    ("completed", Json::Num(m.completed.load(Ordering::Relaxed) as f64)),
-                    ("failed", Json::Num(m.failed.load(Ordering::Relaxed) as f64)),
+                    ("submitted", Json::Num(m.submitted.get() as f64)),
+                    ("completed", Json::Num(m.completed.get() as f64)),
+                    ("failed", Json::Num(m.failed.get() as f64)),
                 ]),
             ),
             (
@@ -323,11 +496,11 @@ fn stats(state: &ApiState) -> Response {
                     ("queue_depth", Json::Num((interactive_depth + bulk_depth) as f64)),
                     ("interactive_depth", Json::Num(interactive_depth as f64)),
                     ("bulk_depth", Json::Num(bulk_depth as f64)),
-                    ("shed", Json::Num(m.shed.load(Ordering::Relaxed) as f64)),
-                    ("cancelled", Json::Num(m.cancelled.load(Ordering::Relaxed) as f64)),
+                    ("shed", Json::Num(m.shed.get() as f64)),
+                    ("cancelled", Json::Num(m.cancelled.get() as f64)),
                     (
                         "deadline_exceeded",
-                        Json::Num(m.deadline_exceeded.load(Ordering::Relaxed) as f64),
+                        Json::Num(m.deadline_exceeded.get() as f64),
                     ),
                 ]),
             ),
@@ -393,6 +566,8 @@ struct JobParams {
     /// Explicit lane; `None` = size-based default.
     priority: Option<Priority>,
     mode: Mode,
+    /// Whether the job records structured spans (`"trace": true`).
+    trace: bool,
 }
 
 fn parse_params(state: &ApiState, body: &Json) -> Result<JobParams> {
@@ -428,7 +603,13 @@ fn parse_params(state: &ApiState, body: &Json) -> Result<JobParams> {
             }
         },
     };
-    Ok(JobParams { accuracy, return_vectors, deadline, priority, mode })
+    let trace = match body.get("trace") {
+        None => false,
+        Some(v) => v
+            .as_bool()
+            .ok_or_else(|| Error::Http(format!("trace must be a boolean, got {v}")))?,
+    };
+    Ok(JobParams { accuracy, return_vectors, deadline, priority, mode, trace })
 }
 
 fn post_job(state: &ApiState, req: &Request, kind: JobKind, request_id: &str) -> Response {
@@ -456,11 +637,18 @@ fn run_cached(state: &ApiState, spec: JobSpec, params: JobParams, request_id: &s
     if params.return_vectors {
         key ^= 0x9e37_79b9_7f4a_7c15;
     }
-    // Cache hits bypass admission entirely — even async submissions
-    // answer 200 immediately when the result is already known.
-    if let Some(mut hit) = state.cache.get(key) {
-        hit.set("cached", Json::Bool(true));
-        return Response::json(200, &hit);
+    // Traced requests always execute — the point is to observe *this*
+    // run — so they skip the cache read. They still feed the cache with
+    // the untraced body below.
+    let t_req = Instant::now();
+    let trace = if params.trace { Trace::new(DEFAULT_SPAN_CAP) } else { Trace::none() };
+    if !trace.is_live() {
+        // Cache hits bypass admission entirely — even async submissions
+        // answer 200 immediately when the result is already known.
+        if let Some(mut hit) = state.cache.get(key) {
+            hit.set("cached", Json::Bool(true));
+            return Response::json(200, &hit);
+        }
     }
     let numel = spec.numel();
     let priority = params.priority.unwrap_or(if numel <= state.batch_threshold {
@@ -473,23 +661,31 @@ fn run_cached(state: &ApiState, spec: JobSpec, params: JobParams, request_id: &s
     let request = JobRequest { spec, accuracy: params.accuracy };
 
     if params.mode == Mode::Async {
-        let handle = match state.service.try_submit_with(request, priority, cancel.clone()) {
+        let submitted =
+            state.service.try_submit_traced(request, priority, cancel.clone(), trace.clone());
+        let handle = match submitted {
             Ok(h) => h,
             Err(e) => return error_response(state, request_id, ApiError::from_error(&e, state)),
         };
-        let id = state.jobs.insert(cancel, handle, params.return_vectors, key);
-        return Response::json(
-            202,
-            &Json::obj(vec![
-                ("job_id", Json::Str(id.clone())),
-                ("status", Json::Str("queued".into())),
-                ("poll", Json::Str(format!("/v1/jobs/{id}"))),
-            ]),
-        );
+        let traced = trace.is_live();
+        let id = state.jobs.insert(cancel, handle, params.return_vectors, key, trace);
+        let mut body = Json::obj(vec![
+            ("job_id", Json::Str(id.clone())),
+            ("status", Json::Str("queued".into())),
+            ("poll", Json::Str(format!("/v1/jobs/{id}"))),
+        ]);
+        if traced {
+            body.set("trace", Json::Str(format!("/v1/jobs/{id}/trace")));
+        }
+        return Response::json(202, &body);
     }
 
+    // Traced jobs skip the batcher: batched execution has no per-job
+    // trace plumbing, and a telemetry request is the wrong place to
+    // amortize anyway.
     let result: Result<JobResult> = if numel <= state.batch_threshold
         && priority == Priority::Interactive
+        && !trace.is_live()
     {
         let rx = state.batcher.lock().expect("batcher lock").submit_with(request, cancel);
         match rx.recv() {
@@ -501,7 +697,7 @@ fn run_cached(state: &ApiState, spec: JobSpec, params: JobParams, request_id: &s
         // (429 + Retry-After) instead of tying up the connection worker.
         state
             .service
-            .try_submit_with(request, priority, cancel)
+            .try_submit_traced(request, priority, cancel, trace.clone())
             .and_then(|h| h.wait())
     };
     let res = match result {
@@ -513,6 +709,10 @@ fn run_cached(state: &ApiState, spec: JobSpec, params: JobParams, request_id: &s
             let mut v = outcome_json(outcome, &res, params.return_vectors);
             state.cache.put(key, v.clone());
             v.set("cached", Json::Bool(false));
+            if trace.is_live() {
+                trace.record_at(SpanKind::Request, "request", t_req, t_req.elapsed(), Vec::new());
+                v.set("trace", trace_json(&trace));
+            }
             Response::json(200, &v)
         }
         Err(e) => error_response(state, request_id, ApiError::from_job_error(e, state)),
@@ -596,6 +796,51 @@ fn cancel_job(state: &ApiState, job_id: &str, request_id: &str) -> Response {
             ApiError::new(404, "not_found", format!("no such job {job_id:?}")),
         )
     }
+}
+
+/// `GET /v1/jobs/{id}/trace`: the job's span buffer so far. Works on
+/// live jobs (partial trace) and terminal ones; an untraced job answers
+/// `"enabled": false` rather than 404, so clients can tell "no such job"
+/// from "job exists but did not opt in".
+fn trace_job(state: &ApiState, job_id: &str, request_id: &str) -> Response {
+    match state.jobs.trace(job_id) {
+        None => error_response(
+            state,
+            request_id,
+            ApiError::new(404, "not_found", format!("no such job {job_id:?}")),
+        ),
+        Some(trace) => {
+            let mut v = trace_json(&trace);
+            v.set("job_id", Json::Str(job_id.to_string()));
+            Response::json(200, &v)
+        }
+    }
+}
+
+/// Render a trace: flat span records on one microsecond timeline,
+/// parents-before-children (see [`Trace::snapshot`]).
+fn trace_json(trace: &Trace) -> Json {
+    let spans: Vec<Json> = trace.snapshot().iter().map(span_json).collect();
+    Json::obj(vec![
+        ("enabled", Json::Bool(trace.is_live())),
+        ("dropped", Json::Num(trace.dropped() as f64)),
+        ("spans", Json::Arr(spans)),
+    ])
+}
+
+fn span_json(s: &SpanRecord) -> Json {
+    let mut v = Json::obj(vec![
+        ("kind", Json::Str(s.kind.as_str().into())),
+        ("name", Json::Str(s.name.into())),
+        ("start_us", Json::Num(s.start_us as f64)),
+        ("dur_us", Json::Num(s.dur_us as f64)),
+    ]);
+    if !s.fields.is_empty() {
+        let fields: Vec<(&str, Json)> =
+            s.fields.iter().map(|&(k, x)| (k, Json::Num(x))).collect();
+        v.set("fields", Json::obj(fields));
+    }
+    v
 }
 
 // ---------------------------------------------------------------------
@@ -870,14 +1115,14 @@ mod tests {
         assert_eq!(v.get("sigma").and_then(Json::as_array).unwrap().len(), 4);
         // 60x50 Balanced routes to full SVD under the default policy.
         assert_eq!(v.get("method").and_then(Json::as_str), Some("full"));
-        let completed_before = st.service.metrics.completed.load(Ordering::Relaxed);
+        let completed_before = st.service.metrics.completed.get();
         let second = handle(&st, &request("POST", "/v1/svd", body));
         assert_eq!(second.status, 200);
         let v2 = body_json(&second);
         assert_eq!(v2.get("cached"), Some(&Json::Bool(true)));
         assert_eq!(v2.get("sigma"), v.get("sigma"));
         // Served from cache: no new factorization executed.
-        assert_eq!(st.service.metrics.completed.load(Ordering::Relaxed), completed_before);
+        assert_eq!(st.service.metrics.completed.get(), completed_before);
         assert_eq!(st.cache.hits.load(Ordering::Relaxed), 1);
     }
 
@@ -951,6 +1196,7 @@ mod tests {
             r#"{"rows":2,"cols":2,"data":[1,2,3,4],"priority":"urgent"}"#, // bad priority
             r#"{"rows":2,"cols":2,"data":[1,2,3,4],"mode":"defer"}"#, // bad mode
             r#"{"rows":2,"cols":2,"data":[1,2,3,4],"deadline_ms":"soon"}"#, // bad deadline
+            r#"{"rows":2,"cols":2,"data":[1,2,3,4],"trace":"yes"}"#, // non-boolean trace
         ] {
             let resp = handle(&st, &request("POST", "/v1/svd", bad));
             assert_eq!(resp.status, 400, "body {bad:?} -> {}", resp.status);
@@ -1022,7 +1268,7 @@ mod tests {
         let e = v.get("error").unwrap();
         assert_eq!(e.get("code").and_then(Json::as_str), Some("deadline_exceeded"));
         assert_eq!(e.get("retryable"), Some(&Json::Bool(true)));
-        assert_eq!(st.service.metrics.deadline_exceeded.load(Ordering::Relaxed), 1);
+        assert_eq!(st.service.metrics.deadline_exceeded.get(), 1);
     }
 
     #[test]
@@ -1096,6 +1342,129 @@ mod tests {
         for g in ["parallel_jobs", "serial_calls", "tasks", "steals"] {
             assert!(exec.get(g).and_then(Json::as_usize).is_some(), "missing gauge {g}");
         }
+    }
+
+    #[test]
+    fn retry_after_fallback_when_no_exec_history() {
+        // An empty histogram reports p50 = 0; the old hint collapsed to
+        // the 1s clamp floor no matter how deep the backlog was.
+        assert_eq!(retry_after_secs(Duration::ZERO, 8, 1), 1, "degenerate pre-fix value");
+        assert_eq!(retry_after_secs(RETRY_AFTER_FALLBACK_EXEC, 8, 1), 3, "0.25s * 9 jobs");
+        assert_eq!(retry_after_secs(Duration::from_secs(30), 10, 2), 60, "clamped to 60");
+        assert_eq!(retry_after_secs(Duration::from_millis(1), 0, 4), 1, "clamped to 1");
+        // A cold state really does take the fallback path.
+        let st = state();
+        assert_eq!(st.service.metrics.exec_time.count(), 0);
+        assert_eq!(retry_after_hint(&st), retry_after_secs(RETRY_AFTER_FALLBACK_EXEC, 0, 2));
+    }
+
+    /// Value of the first sample line whose name+labels match `series`
+    /// exactly (exposition format: `name{labels} value`).
+    fn scrape_value(text: &str, series: &str) -> Option<f64> {
+        text.lines()
+            .find(|l| l.strip_prefix(series).is_some_and(|rest| rest.starts_with(' ')))
+            .and_then(|l| l.rsplit(' ').next())
+            .and_then(|v| v.parse().ok())
+    }
+
+    #[test]
+    fn metrics_exposition_counts_monotonically() {
+        let st = state();
+        let body = r#"{"rows":2,"cols":2,"data":[1,0,0,1],"r":1}"#;
+        handle(&st, &request("POST", "/v1/svd", body));
+        let first = handle(&st, &request("GET", "/v1/metrics", ""));
+        assert_eq!(first.status, 200);
+        let text1 = String::from_utf8(first.body).unwrap();
+        assert!(text1.contains("# TYPE fastlr_requests_total counter"), "{text1}");
+        assert!(text1.contains("# TYPE fastlr_request_latency_seconds histogram"));
+        assert!(text1.contains("# TYPE fastlr_kernel_stage_seconds histogram"));
+        assert_eq!(scrape_value(&text1, "fastlr_jobs_total{state=\"completed\"}"), Some(1.0));
+        assert_eq!(scrape_value(&text1, "fastlr_cache_misses_total"), Some(1.0));
+        let requests1 = scrape_value(&text1, "fastlr_requests_total").unwrap();
+        // Another job + the scrape itself: counters only move up.
+        handle(&st, &request("POST", "/v1/svd", body));
+        let text2 =
+            String::from_utf8(handle(&st, &request("GET", "/v1/metrics", "")).body).unwrap();
+        let requests2 = scrape_value(&text2, "fastlr_requests_total").unwrap();
+        assert!(requests2 >= requests1 + 2.0, "{requests1} -> {requests2}");
+        assert_eq!(scrape_value(&text2, "fastlr_cache_hits_total"), Some(1.0));
+        let lat = scrape_value(&text2, "fastlr_request_latency_seconds_count").unwrap();
+        assert!(lat >= 3.0, "latency histogram observed every request, got {lat}");
+    }
+
+    #[test]
+    fn traced_sync_svd_returns_convergence_spans() {
+        let st = state();
+        // 600x500 > the 250k-numel cutoff, so Balanced routes to F-SVD
+        // and the trace carries real GK iteration telemetry.
+        let body = r#"{"synth":{"kind":"low_rank_gaussian","rows":600,"cols":500,"rank":5,
+                       "seed":21},"r":5,"trace":true}"#;
+        let resp = handle(&st, &request("POST", "/v1/svd", body));
+        assert_eq!(resp.status, 200, "{:?}", String::from_utf8_lossy(&resp.body));
+        let v = body_json(&resp);
+        assert_eq!(v.get("method").and_then(Json::as_str), Some("fsvd"));
+        let trace = v.get("trace").expect("trace attached to sync response");
+        assert_eq!(trace.get("enabled"), Some(&Json::Bool(true)));
+        let spans = trace.get("spans").and_then(Json::as_array).unwrap();
+        let name_of = |s: &Json| s.get("name").and_then(Json::as_str).map(str::to_string);
+        let names: Vec<String> = spans.iter().filter_map(|s| name_of(s)).collect();
+        for expected in ["request", "exec", "gk", "gk_iter", "ritz_recover"] {
+            assert!(names.iter().any(|n| n == expected), "missing {expected} in {names:?}");
+        }
+        let iters: Vec<&Json> =
+            spans.iter().filter(|s| name_of(s).as_deref() == Some("gk_iter")).collect();
+        for it in &iters {
+            let fields = it.get("fields").expect("gk_iter fields");
+            assert!(fields.get("beta").and_then(Json::as_f64).is_some(), "beta per iteration");
+            assert!(fields.get("sigma_est").and_then(Json::as_f64).is_some());
+        }
+        // The traced run still fed the cache — with an untraced body.
+        let untraced = r#"{"synth":{"kind":"low_rank_gaussian","rows":600,"cols":500,"rank":5,
+                       "seed":21},"r":5}"#;
+        let second = body_json(&handle(&st, &request("POST", "/v1/svd", untraced)));
+        assert_eq!(second.get("cached"), Some(&Json::Bool(true)));
+        assert!(second.get("trace").is_none(), "cached body never carries a trace");
+    }
+
+    #[test]
+    fn async_traced_job_serves_trace_endpoint() {
+        let st = state();
+        let body = r#"{"synth":{"kind":"low_rank_gaussian","rows":60,"cols":50,"rank":4,
+                       "seed":31},"r":4,"mode":"async","trace":true}"#;
+        let resp = handle(&st, &request("POST", "/v1/svd", body));
+        assert_eq!(resp.status, 202, "{:?}", String::from_utf8_lossy(&resp.body));
+        let v = body_json(&resp);
+        let id = v.get("job_id").and_then(Json::as_str).unwrap().to_string();
+        let trace_path = format!("/v1/jobs/{id}/trace");
+        assert_eq!(v.get("trace").and_then(Json::as_str), Some(trace_path.as_str()));
+        // Wait for the job, then read the trace.
+        let poll_path = format!("/v1/jobs/{id}");
+        loop {
+            let pv = body_json(&handle(&st, &request("GET", &poll_path, "")));
+            match pv.get("status").and_then(Json::as_str) {
+                Some("queued") | Some("running") => std::thread::yield_now(),
+                Some("done") => break,
+                other => panic!("unexpected status {other:?}"),
+            }
+        }
+        let tr = handle(&st, &request("GET", &trace_path, ""));
+        assert_eq!(tr.status, 200);
+        let tv = body_json(&tr);
+        assert_eq!(tv.get("enabled"), Some(&Json::Bool(true)));
+        let spans = tv.get("spans").and_then(Json::as_array).unwrap();
+        assert!(!spans.is_empty());
+        let names: Vec<&str> =
+            spans.iter().filter_map(|s| s.get("name").and_then(Json::as_str)).collect();
+        assert!(names.contains(&"queue_wait"), "{names:?}");
+        assert!(names.contains(&"exec"), "{names:?}");
+        // Unknown job → 404; known-but-untraced job → enabled: false.
+        assert_eq!(handle(&st, &request("GET", "/v1/jobs/j-999/trace", "")).status, 404);
+        let plain = r#"{"synth":{"kind":"low_rank_gaussian","rows":60,"cols":50,"rank":4,
+                       "seed":32},"r":4,"mode":"async"}"#;
+        let pv = body_json(&handle(&st, &request("POST", "/v1/svd", plain)));
+        let pid = pv.get("job_id").and_then(Json::as_str).unwrap();
+        let ptr = body_json(&handle(&st, &request("GET", &format!("/v1/jobs/{pid}/trace"), "")));
+        assert_eq!(ptr.get("enabled"), Some(&Json::Bool(false)));
     }
 
     #[test]

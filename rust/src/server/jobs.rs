@@ -18,6 +18,7 @@ use super::json::Json;
 use crate::cancel::CancelToken;
 use crate::coordinator::job::JobResult;
 use crate::coordinator::service::JobHandle;
+use crate::obs::trace::Trace;
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -35,6 +36,9 @@ struct JobEntry {
     return_vectors: bool,
     /// Result-cache key so a finished async job also feeds the cache.
     cache_key: u64,
+    /// The job's telemetry buffer (inert unless the request opted in);
+    /// served by `GET /v1/jobs/{id}/trace`.
+    trace: Trace,
 }
 
 /// What a poll observed (the API layer turns this into HTTP).
@@ -84,6 +88,7 @@ impl JobsRegistry {
         handle: JobHandle,
         return_vectors: bool,
         cache_key: u64,
+        trace: Trace,
     ) -> String {
         let id = format!("j-{}", self.next.fetch_add(1, Ordering::Relaxed));
         let mut g = self.entries.lock().expect("jobs lock");
@@ -100,8 +105,16 @@ impl JobsRegistry {
             terminal: None,
             return_vectors,
             cache_key,
+            trace,
         });
         id
+    }
+
+    /// The job's trace handle, if the id is known. An inert handle means
+    /// the request did not opt into tracing.
+    pub fn trace(&self, id: &str) -> Option<Trace> {
+        let g = self.entries.lock().expect("jobs lock");
+        g.iter().find(|e| e.id == id).map(|e| e.trace.clone())
     }
 
     /// Non-blocking poll. A `Ready` return transfers the result to the
@@ -209,7 +222,7 @@ mod tests {
         .unwrap();
         let reg = JobsRegistry::new(16);
         let (cancel, h) = submit_one(&svc, 300);
-        let id = reg.insert(cancel, h, false, 1);
+        let id = reg.insert(cancel, h, false, 1, Trace::none());
         // Poll until the result surfaces, then confirm Ready fires once.
         let (result, key) = loop {
             match reg.poll(&id) {
@@ -249,7 +262,7 @@ mod tests {
         .unwrap();
         let reg = JobsRegistry::new(16);
         let (cancel, h) = submit_one(&svc, 301);
-        let id = reg.insert(cancel.clone(), h, false, 2);
+        let id = reg.insert(cancel.clone(), h, false, 2, Trace::none());
         assert!(reg.request_cancel(&id));
         assert!(cancel.is_cancelled());
     }
@@ -266,7 +279,7 @@ mod tests {
         let mut ids = Vec::new();
         for i in 0..8 {
             let (c, h) = submit_one(&svc, 310 + i);
-            ids.push(reg.insert(c, h, false, i));
+            ids.push(reg.insert(c, h, false, i, Trace::none()));
         }
         // Make the first entry terminal, then overflow the capacity.
         loop {
@@ -278,7 +291,7 @@ mod tests {
         }
         reg.store_terminal(&ids[0], Json::Str("done".into()));
         let (c, h) = submit_one(&svc, 320);
-        let new_id = reg.insert(c, h, false, 99);
+        let new_id = reg.insert(c, h, false, 99, Trace::none());
         assert_eq!(reg.len(), 8);
         assert!(matches!(reg.poll(&ids[0]), PollOutcome::Unknown), "terminal entry evicted");
         assert!(!matches!(reg.poll(&new_id), PollOutcome::Unknown));

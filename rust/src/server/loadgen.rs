@@ -27,6 +27,7 @@ use super::http::{client_call, client_connect};
 use super::json::Json;
 use super::{start, ServeOptions};
 use crate::bench_harness::Table;
+use crate::obs::metrics::{Histogram, BUCKETS_US};
 use crate::{Error, Result};
 use std::net::SocketAddr;
 use std::time::{Duration, Instant};
@@ -59,10 +60,19 @@ pub struct LoadgenReport {
     pub total: usize,
     /// Requests that failed (non-200 status or transport error).
     pub failures: usize,
+    /// `200 OK` responses.
+    pub ok: usize,
+    /// `429` responses — shed by admission control.
+    pub shed: usize,
+    /// `504` responses — deadline expired.
+    pub deadline_exceeded: usize,
     /// Wall-clock time for the whole run.
     pub wall: Duration,
     /// Per-request latencies, sorted ascending.
     pub latencies: Vec<Duration>,
+    /// The same latencies on the [`crate::obs`] bucket ladder (rendered
+    /// into the table so `--out` artifacts carry the distribution).
+    pub histogram: Histogram,
     /// Final `/v1/stats` snapshot from the server.
     pub stats: Json,
 }
@@ -99,6 +109,9 @@ impl LoadgenReport {
         let mut t = Table::new("Loadgen — mixed svd/rank/cache-hit traffic", &["metric", "value"]);
         t.push_row(vec!["requests".into(), self.total.to_string()]);
         t.push_row(vec!["failures".into(), self.failures.to_string()]);
+        t.push_row(vec!["ok (200)".into(), self.ok.to_string()]);
+        t.push_row(vec!["shed (429)".into(), self.shed.to_string()]);
+        t.push_row(vec!["deadline exceeded (504)".into(), self.deadline_exceeded.to_string()]);
         t.push_row(vec!["wall (s)".into(), format!("{:.3}", self.wall.as_secs_f64())]);
         t.push_row(vec!["throughput (req/s)".into(), format!("{:.1}", self.throughput_rps())]);
         t.push_row(vec!["p50 (ms)".into(), ms(self.quantile(0.50))]);
@@ -107,7 +120,28 @@ impl LoadgenReport {
         t.push_row(vec!["max (ms)".into(), ms(self.quantile(1.0))]);
         t.push_row(vec!["cache hits".into(), cache_num("hits")]);
         t.push_row(vec!["cache misses".into(), cache_num("misses")]);
+        push_histogram_rows(&mut t, &self.histogram);
         t
+    }
+}
+
+/// Append one `latency le <bound>` row per occupied histogram bucket
+/// (cumulative counts, Prometheus-style), so JSON/CSV artifacts carry
+/// the whole latency distribution, not just three quantiles.
+fn push_histogram_rows(t: &mut Table, h: &Histogram) {
+    let snap = h.snapshot();
+    let mut acc = 0u64;
+    for (i, c) in snap.counts.iter().enumerate() {
+        acc += c;
+        if *c == 0 {
+            continue;
+        }
+        let label = if i < BUCKETS_US.len() {
+            format!("latency le {} ms", BUCKETS_US[i] as f64 / 1e3)
+        } else {
+            "latency le +Inf".into()
+        };
+        t.push_row(vec![label, acc.to_string()]);
     }
 }
 
@@ -163,6 +197,8 @@ pub struct OpenLoopReport {
     pub other: usize,
     /// Wall-clock time for the whole run (includes in-flight drain).
     pub wall: Duration,
+    /// Per-request latency histogram (all statuses).
+    pub histogram: Histogram,
     /// Final `/v1/stats` snapshot from the server.
     pub stats: Json,
 }
@@ -187,6 +223,7 @@ impl OpenLoopReport {
         t.push_row(vec!["server shed counter".into(), adm_num("shed")]);
         t.push_row(vec!["server deadline counter".into(), adm_num("deadline_exceeded")]);
         t.push_row(vec!["server cancel counter".into(), adm_num("cancelled")]);
+        push_histogram_rows(&mut t, &self.histogram);
         t
     }
 }
@@ -222,7 +259,7 @@ pub fn run_open_loop(opts: &OpenLoopOptions) -> Result<OpenLoopReport> {
     let interval = Duration::from_secs_f64(1.0 / opts.rate);
     let n = (opts.duration.as_secs_f64() * opts.rate).ceil() as usize;
     let t0 = Instant::now();
-    let (tx, rx) = std::sync::mpsc::channel::<u16>();
+    let (tx, rx) = std::sync::mpsc::channel::<(u16, Duration)>();
     std::thread::scope(|scope| {
         for i in 0..n {
             // Fixed-interval schedule: ticks do not wait for responses.
@@ -235,11 +272,12 @@ pub fn run_open_loop(opts: &OpenLoopOptions) -> Result<OpenLoopReport> {
             scope.spawn(move || {
                 // Fresh connection per request: an open-loop client must
                 // not serialize behind its own earlier requests.
+                let r0 = Instant::now();
                 let status = client_connect(&addr)
                     .and_then(|mut c| client_call(&mut c, "POST", "/v1/svd", Some(&body)))
                     .map(|(status, _)| status)
                     .unwrap_or(0);
-                let _ = tx.send(status);
+                let _ = tx.send((status, r0.elapsed()));
             });
         }
         // The scope joins all in-flight requests before returning.
@@ -254,9 +292,11 @@ pub fn run_open_loop(opts: &OpenLoopOptions) -> Result<OpenLoopReport> {
         deadline_exceeded: 0,
         other: 0,
         wall,
+        histogram: Histogram::new(),
         stats: Json::Null,
     };
-    for status in rx {
+    for (status, latency) in rx {
+        report.histogram.observe(latency);
         match status {
             200 => report.ok += 1,
             429 => report.shed += 1,
@@ -327,23 +367,22 @@ pub fn run(opts: &LoadgenOptions) -> Result<LoadgenReport> {
     let addr = opts.addr.unwrap_or_else(|| local.as_ref().expect("local server").local_addr());
 
     let t0 = Instant::now();
-    let results: Vec<Vec<(bool, Duration)>> = std::thread::scope(|scope| {
+    let results: Vec<Vec<(u16, Duration)>> = std::thread::scope(|scope| {
         let handles: Vec<_> = (0..opts.clients)
             .map(|client| {
                 scope.spawn(move || {
                     let mut out = Vec::with_capacity(opts.requests_per_client);
                     let Ok(mut conn) = client_connect(&addr) else {
-                        out.resize(opts.requests_per_client, (false, Duration::ZERO));
+                        out.resize(opts.requests_per_client, (0u16, Duration::ZERO));
                         return out;
                     };
                     for i in 0..opts.requests_per_client {
                         let (path, body) = request_for(client, i, opts.seed);
                         let r0 = Instant::now();
-                        let ok = matches!(
-                            client_call(&mut conn, "POST", path, Some(&body)),
-                            Ok((200, _))
-                        );
-                        out.push((ok, r0.elapsed()));
+                        let status = client_call(&mut conn, "POST", path, Some(&body))
+                            .map(|(status, _)| status)
+                            .unwrap_or(0);
+                        out.push((status, r0.elapsed()));
                     }
                     out
                 })
@@ -354,15 +393,21 @@ pub fn run(opts: &LoadgenOptions) -> Result<LoadgenReport> {
     let wall = t0.elapsed();
 
     let mut latencies = Vec::with_capacity(opts.clients * opts.requests_per_client);
-    let mut failures = 0usize;
+    let histogram = Histogram::new();
+    let (mut ok, mut shed, mut deadline_exceeded) = (0usize, 0usize, 0usize);
     for per_client in &results {
-        for &(ok, d) in per_client {
-            if !ok {
-                failures += 1;
+        for &(status, d) in per_client {
+            match status {
+                200 => ok += 1,
+                429 => shed += 1,
+                504 => deadline_exceeded += 1,
+                _ => {}
             }
+            histogram.observe(d);
             latencies.push(d);
         }
     }
+    let failures = latencies.len() - ok;
     latencies.sort();
 
     let stats = {
@@ -380,8 +425,12 @@ pub fn run(opts: &LoadgenOptions) -> Result<LoadgenReport> {
     Ok(LoadgenReport {
         total: opts.clients * opts.requests_per_client,
         failures,
+        ok,
+        shed,
+        deadline_exceeded,
         wall,
         latencies,
+        histogram,
         stats,
     })
 }
@@ -400,7 +449,10 @@ mod tests {
         .unwrap();
         assert_eq!(report.total, 12);
         assert_eq!(report.failures, 0, "stats: {}", report.stats);
+        assert_eq!(report.ok, 12);
+        assert_eq!(report.shed + report.deadline_exceeded, 0);
         assert_eq!(report.latencies.len(), 12);
+        assert_eq!(report.histogram.count(), 12, "every latency lands in the histogram");
         // Each client's second shared request (i = 3) is a guaranteed
         // cache hit: its own i = 0 request populated the cache.
         let hits = report
@@ -448,8 +500,10 @@ mod tests {
             .and_then(Json::as_usize)
             .unwrap();
         assert!(shed_counter >= report.shed, "server shed {shed_counter} < client {}", report.shed);
+        assert_eq!(report.histogram.count() as usize, report.issued);
         let t = report.table().render_markdown();
         assert!(t.contains("shed"));
+        assert!(t.contains("latency le"), "histogram rows missing:\n{t}");
     }
 
     #[test]

@@ -14,12 +14,15 @@
 //! * [`json`]    — the wire codec: a small JSON value type with parser
 //!   and serializer.
 //! * [`api`]     — `POST /v1/svd`, `POST /v1/rank`, the async
-//!   `GET|DELETE /v1/jobs/{id}` pair, `GET /v1/healthz`,
-//!   `GET /v1/stats`; translates payloads into [`crate::coordinator`]
-//!   job specs and enforces admission control (bounded queue with 429
-//!   shedding, per-request deadlines, cooperative cancellation).
+//!   `GET|DELETE /v1/jobs/{id}` pair plus `GET /v1/jobs/{id}/trace`,
+//!   `GET /v1/healthz`, `GET /v1/stats`, and the Prometheus-style
+//!   `GET /v1/metrics` exposition; translates payloads into
+//!   [`crate::coordinator`] job specs and enforces admission control
+//!   (bounded queue with 429 shedding, per-request deadlines,
+//!   cooperative cancellation). A `"trace": true` request field turns
+//!   on per-iteration convergence telemetry (see [`crate::obs`]).
 //! * [`jobs`]    — registry of async (`"mode":"async"`) jobs: id →
-//!   handle + cancel token + terminal body.
+//!   handle + cancel token + trace buffer + terminal body.
 //! * [`cache`]   — LRU result cache keyed by an FNV-1a content
 //!   fingerprint of the operator, so one factorization serves many
 //!   consumers (the paper's compute profile, made a serving property).

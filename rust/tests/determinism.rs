@@ -143,3 +143,33 @@ fn fsvd_pipeline_is_bitwise_stable_under_forced_inline() {
     assert_eq!(pooled.u, inline.u);
     assert_eq!(pooled.v, inline.v);
 }
+
+#[test]
+fn fsvd_pipeline_is_bitwise_stable_under_live_tracing() {
+    // The observability contract: a live trace only *observes* values
+    // between block steps. Running the full F-SVD pipeline with
+    // per-iteration telemetry enabled must produce the same bits as the
+    // inert-trace default — pooled and forced-inline alike.
+    use fastlr::data::synth::low_rank_gaussian;
+    use fastlr::krylov::fsvd::{fsvd, FsvdOptions};
+    use fastlr::obs::trace::Trace;
+    let mut rng = Pcg64::seed_from_u64(5157);
+    let a = low_rank_gaussian(500, 400, 12, &mut rng);
+    let base = FsvdOptions { k: 30, r: 10, seed: 9, ..Default::default() };
+    let plain = fsvd(&a, &base).unwrap();
+    let trace = Trace::new(4096);
+    let opts = FsvdOptions { trace: trace.clone(), ..base.clone() };
+    let traced = fsvd(&a, &opts).unwrap();
+    assert_eq!(plain.sigma, traced.sigma);
+    assert_eq!(plain.u, traced.u);
+    assert_eq!(plain.v, traced.v);
+    // The telemetry really was captured, and the inline path agrees too.
+    let spans = trace.snapshot();
+    assert!(spans.iter().any(|s| s.name == "gk_iter"), "no iteration spans recorded");
+    let inline_trace = Trace::new(4096);
+    let inline_opts = FsvdOptions { trace: inline_trace.clone(), ..base };
+    let inline = exec::with_serial(|| fsvd(&a, &inline_opts).unwrap());
+    assert_eq!(plain.sigma, inline.sigma);
+    assert_eq!(plain.u, inline.u);
+    assert_eq!(plain.v, inline.v);
+}

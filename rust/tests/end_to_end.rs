@@ -104,7 +104,6 @@ fn service_results_match_direct_calls() {
 #[test]
 fn concurrent_submitters_all_resolve_with_unique_ids() {
     use std::collections::HashSet;
-    use std::sync::atomic::Ordering;
 
     const THREADS: usize = 8;
     const PER_THREAD: usize = 6;
@@ -150,8 +149,8 @@ fn concurrent_submitters_all_resolve_with_unique_ids() {
     assert_eq!(ids.len(), THREADS * PER_THREAD);
     let unique: HashSet<u64> = ids.iter().copied().collect();
     assert_eq!(unique.len(), THREADS * PER_THREAD, "duplicate job ids");
-    assert_eq!(svc.metrics.completed.load(Ordering::Relaxed), (THREADS * PER_THREAD) as u64);
-    assert_eq!(svc.metrics.failed.load(Ordering::Relaxed), 0);
+    assert_eq!(svc.metrics.completed.get(), (THREADS * PER_THREAD) as u64);
+    assert_eq!(svc.metrics.failed.get(), 0);
 }
 
 /// Smoke-scale experiment pipelines run end to end and keep their

@@ -100,7 +100,7 @@ fn repeated_request_is_served_from_cache_without_recompute() {
     assert_eq!(s1, 200);
     let v1 = Json::parse(&b1).unwrap();
     assert_eq!(v1.get("cached"), Some(&Json::Bool(false)));
-    let completed_before = srv.state.service.metrics.completed.load(Ordering::Relaxed);
+    let completed_before = srv.state.service.metrics.completed.get();
     let hits_before = srv.state.cache.hits.load(Ordering::Relaxed);
 
     let (s2, b2) = client_call(&mut conn, "POST", "/v1/svd", Some(body)).unwrap();
@@ -111,7 +111,7 @@ fn repeated_request_is_served_from_cache_without_recompute() {
 
     // Hit counter incremented; the worker pool never saw a second job.
     assert_eq!(srv.state.cache.hits.load(Ordering::Relaxed), hits_before + 1);
-    assert_eq!(srv.state.service.metrics.completed.load(Ordering::Relaxed), completed_before);
+    assert_eq!(srv.state.service.metrics.completed.get(), completed_before);
     // The same numbers are visible over the wire.
     let stats = get_stats(&srv);
     assert!(stat_usize(&stats, "cache", "hits") >= 1);
@@ -380,5 +380,193 @@ fn error_envelope_on_every_error_status() {
     let stats = get_stats(&srv);
     let ring = stats.get("last_errors").and_then(Json::as_array).unwrap();
     assert!(ring.len() >= cases.len(), "ring too short: {}", ring.len());
+    srv.shutdown();
+}
+
+/// Value of the first exposition line whose `name{labels}` prefix matches
+/// `series` exactly (format: `name{labels} value`).
+fn scrape(text: &str, series: &str) -> Option<f64> {
+    text.lines()
+        .find(|l| l.strip_prefix(series).is_some_and(|rest| rest.starts_with(' ')))
+        .and_then(|l| l.rsplit(' ').next())
+        .and_then(|v| v.parse().ok())
+}
+
+/// Acceptance: `GET /v1/metrics` serves well-formed Prometheus-style text
+/// over the wire — HELP/TYPE headers, cumulative `le` buckets ending at
+/// `+Inf`, `_sum`/`_count` pairs — and counters only move up between
+/// scrapes while real traffic flows.
+#[test]
+fn metrics_exposition_over_the_wire() {
+    let srv = start_server();
+    let mut conn = client_connect(&srv.local_addr()).unwrap();
+    let body = r#"{"synth":{"kind":"low_rank_gaussian","rows":90,"cols":70,"rank":4,"seed":8},"r":4}"#;
+    assert_eq!(client_call(&mut conn, "POST", "/v1/svd", Some(body)).unwrap().0, 200);
+
+    let (status, text1) = client_call(&mut conn, "GET", "/v1/metrics", None).unwrap();
+    assert_eq!(status, 200);
+    // Every family announces itself exactly once, before its samples.
+    for family in [
+        "fastlr_requests_total",
+        "fastlr_request_latency_seconds",
+        "fastlr_jobs_total",
+        "fastlr_queue_wait_seconds",
+        "fastlr_exec_seconds",
+        "fastlr_kernel_stage_seconds",
+        "fastlr_cache_hits_total",
+    ] {
+        assert_eq!(
+            text1.matches(&format!("# TYPE {family} ")).count(),
+            1,
+            "TYPE line for {family}"
+        );
+        assert_eq!(
+            text1.matches(&format!("# HELP {family} ")).count(),
+            1,
+            "HELP line for {family}"
+        );
+    }
+    // Histogram grammar: buckets are cumulative, end at +Inf, and agree
+    // with _count.
+    let inf = scrape(&text1, "fastlr_request_latency_seconds_bucket{le=\"+Inf\"}").unwrap();
+    let count = scrape(&text1, "fastlr_request_latency_seconds_count").unwrap();
+    assert_eq!(inf, count, "+Inf bucket must equal _count");
+    assert!(scrape(&text1, "fastlr_request_latency_seconds_sum").is_some());
+    assert_eq!(scrape(&text1, "fastlr_jobs_total{state=\"completed\"}"), Some(1.0));
+    assert_eq!(scrape(&text1, "fastlr_cache_misses_total"), Some(1.0));
+
+    // A cache hit + the scrape itself: counters are monotone.
+    let r1 = scrape(&text1, "fastlr_requests_total").unwrap();
+    assert_eq!(client_call(&mut conn, "POST", "/v1/svd", Some(body)).unwrap().0, 200);
+    let (_, text2) = client_call(&mut conn, "GET", "/v1/metrics", None).unwrap();
+    assert!(scrape(&text2, "fastlr_requests_total").unwrap() >= r1 + 2.0);
+    assert_eq!(scrape(&text2, "fastlr_cache_hits_total"), Some(1.0));
+    assert_eq!(scrape(&text2, "fastlr_jobs_total{state=\"completed\"}"), Some(1.0));
+    srv.shutdown();
+}
+
+/// Spans from a trace JSON document, as (name, start_us, dur_us).
+fn span_list(trace: &Json) -> Vec<(String, f64, f64)> {
+    trace
+        .get("spans")
+        .and_then(Json::as_array)
+        .unwrap()
+        .iter()
+        .map(|s| {
+            (
+                s.get("name").and_then(Json::as_str).unwrap().to_string(),
+                s.get("start_us").and_then(Json::as_f64).unwrap(),
+                s.get("dur_us").and_then(Json::as_f64).unwrap(),
+            )
+        })
+        .collect()
+}
+
+/// Whether span `outer` covers span `inner` in time (1 µs slack for
+/// clock-rounding at the boundaries).
+fn covers(outer: &(String, f64, f64), inner: &(String, f64, f64)) -> bool {
+    outer.1 <= inner.1 + 1.0 && outer.1 + outer.2 + 1.0 >= inner.1 + inner.2
+}
+
+/// Acceptance: a `"trace": true` SVD job returns per-iteration GK
+/// telemetry — spans arrive start-ordered, parents enclose children, and
+/// each `gk_iter` carries the residual/Ritz convergence fields.
+#[test]
+fn traced_job_spans_nest_and_arrive_in_order() {
+    let srv = start_server();
+    let mut conn = client_connect(&srv.local_addr()).unwrap();
+    // 600x500 = 300k numel: above the balanced-policy cutoff, so this
+    // routes to F-SVD and exercises the GK iteration loop.
+    let body = r#"{"synth":{"kind":"low_rank_gaussian","rows":600,"cols":500,"rank":5,"seed":21},"r":5,"trace":true}"#;
+    let (status, resp) = client_call(&mut conn, "POST", "/v1/svd", Some(body)).unwrap();
+    assert_eq!(status, 200, "{resp}");
+    let v = Json::parse(&resp).unwrap();
+    let trace = v.get("trace").expect("trace document in response");
+    assert_eq!(trace.get("enabled"), Some(&Json::Bool(true)));
+
+    let spans = span_list(trace);
+    // Start-ordered, request first.
+    for w in spans.windows(2) {
+        assert!(w[0].1 <= w[1].1, "spans out of order: {spans:?}");
+    }
+    assert_eq!(spans[0].0, "request");
+    let find = |name: &str| spans.iter().find(|s| s.0 == name).unwrap_or_else(|| {
+        panic!("missing span {name:?} in {spans:?}")
+    });
+    let (request, exec, gk) = (find("request"), find("exec"), find("gk"));
+    assert!(covers(request, exec), "request {request:?} must cover exec {exec:?}");
+    assert!(covers(exec, gk), "exec {exec:?} must cover gk {gk:?}");
+    let iters: Vec<_> = spans.iter().filter(|s| s.0 == "gk_iter").collect();
+    assert!(iters.len() >= 5, "expected >= r gk iterations, got {}", iters.len());
+    for it in &iters {
+        assert!(covers(gk, it), "gk {gk:?} must cover {it:?}");
+    }
+    // Convergence fields ride on every iteration span.
+    let raw_iters: Vec<&Json> = trace
+        .get("spans")
+        .and_then(Json::as_array)
+        .unwrap()
+        .iter()
+        .filter(|s| s.get("name").and_then(Json::as_str) == Some("gk_iter"))
+        .collect();
+    for s in raw_iters {
+        let fields = s.get("fields").expect("gk_iter fields");
+        assert!(fields.get("beta").and_then(Json::as_f64).is_some(), "{s}");
+        assert!(fields.get("sigma_est").and_then(Json::as_f64).is_some(), "{s}");
+    }
+    // The traced body is excluded from the cache read path but the same
+    // untraced request is still served from cache.
+    let untraced = body.replace(r#","trace":true"#, "");
+    let (status, resp) = client_call(&mut conn, "POST", "/v1/svd", Some(&untraced)).unwrap();
+    assert_eq!(status, 200);
+    let v2 = Json::parse(&resp).unwrap();
+    assert_eq!(v2.get("cached"), Some(&Json::Bool(true)));
+    assert!(v2.get("trace").is_none());
+    srv.shutdown();
+}
+
+/// Acceptance: an async traced job exposes its telemetry at
+/// `GET /v1/jobs/{id}/trace` after completion (queue-wait + exec spans),
+/// while untraced jobs report `enabled: false` and unknown ids 404.
+#[test]
+fn async_traced_job_serves_trace_over_the_wire() {
+    let srv = start_server();
+    let mut conn = client_connect(&srv.local_addr()).unwrap();
+    let body = r#"{"synth":{"kind":"low_rank_gaussian","rows":600,"cols":500,"rank":5,"seed":22},"r":5,"mode":"async","trace":true}"#;
+    let (status, resp) = client_call(&mut conn, "POST", "/v1/svd", Some(body)).unwrap();
+    assert_eq!(status, 202, "{resp}");
+    let v = Json::parse(&resp).unwrap();
+    let id = v.get("job_id").and_then(Json::as_str).unwrap().to_string();
+    assert_eq!(
+        v.get("trace").and_then(Json::as_str),
+        Some(format!("/v1/jobs/{id}/trace").as_str()),
+        "202 body advertises the trace endpoint"
+    );
+    loop {
+        let (s, b) = client_call(&mut conn, "GET", &format!("/v1/jobs/{id}"), None).unwrap();
+        assert_eq!(s, 200);
+        match Json::parse(&b).unwrap().get("status").and_then(Json::as_str) {
+            Some("queued") | Some("running") => std::thread::yield_now(),
+            Some("done") => break,
+            other => panic!("unexpected terminal state {other:?}"),
+        }
+    }
+    let (s, b) = client_call(&mut conn, "GET", &format!("/v1/jobs/{id}/trace"), None).unwrap();
+    assert_eq!(s, 200, "{b}");
+    let t = Json::parse(&b).unwrap();
+    assert_eq!(t.get("enabled"), Some(&Json::Bool(true)));
+    let names: Vec<String> = span_list(&t).iter().map(|s| s.0.clone()).collect();
+    assert!(names.iter().any(|n| n == "queue_wait"), "{names:?}");
+    assert!(names.iter().any(|n| n == "exec"), "{names:?}");
+    assert!(names.iter().any(|n| n == "gk_iter"), "{names:?}");
+    // Unknown ids 404; a known untraced job reports enabled: false.
+    assert_eq!(client_call(&mut conn, "GET", "/v1/jobs/j-9999/trace", None).unwrap().0, 404);
+    let plain = r#"{"synth":{"kind":"low_rank_gaussian","rows":90,"cols":70,"rank":4,"seed":23},"r":4,"mode":"async"}"#;
+    let (s, b) = client_call(&mut conn, "POST", "/v1/svd", Some(plain)).unwrap();
+    assert_eq!(s, 202);
+    let id2 = Json::parse(&b).unwrap().get("job_id").and_then(Json::as_str).unwrap().to_string();
+    let (s, b) = client_call(&mut conn, "GET", &format!("/v1/jobs/{id2}/trace"), None).unwrap();
+    assert_eq!(s, 200);
+    assert_eq!(Json::parse(&b).unwrap().get("enabled"), Some(&Json::Bool(false)));
     srv.shutdown();
 }
