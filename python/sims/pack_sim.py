@@ -1,0 +1,254 @@
+#!/usr/bin/env python3
+"""Executable spec of the packed-GEMM index math and accumulation order.
+
+A 1:1 stdlib-only port of ``rust/src/linalg/gemm.rs``'s packing layer:
+
+* ``partition`` / ``partition_aligned`` — the engine's chunk planner
+  (``rust/src/exec/cost.rs``), including the MC-grid alignment the packed
+  driver requests;
+* ``pack_a`` / ``pack_b`` — MR-row column-major and NR-column row-major
+  micro-panel layouts, both operand orientations (the transposing packs
+  used by gemm_tn / gemm_nt), with zero padding of short panels;
+* ``micro_full`` / ``micro_edge`` — the register micro-kernel's strictly
+  ascending-k accumulation chains;
+* ``run_rows`` — the NC → KC → MC → NR → MR loop nest.
+
+Python floats are IEEE-754 doubles with the same ``+``/``*`` semantics the
+Rust kernel relies on (no FMA contraction, no reassociation), so the
+determinism contract is checkable here bit for bit: every variant, every
+shape, every chunk split must equal the naive i-j-l triple loop exactly.
+CI runs this before building the Rust tree; a failure means the documented
+contract and the spec disagree.
+"""
+
+import struct
+
+# Tuning constants — keep in lockstep with rust/src/linalg/gemm.rs.
+MR, NR = 4, 8
+MC, KC, NC = 64, 256, 512
+
+
+# --- Chunk planner (rust/src/exec/cost.rs) --------------------------------
+
+def partition(n, parts):
+    if n == 0:
+        return []
+    parts = max(1, min(parts, n))
+    base, rem = divmod(n, parts)
+    out, start = [], 0
+    for i in range(parts):
+        length = base + (1 if i < rem else 0)
+        out.append((start, start + length))
+        start += length
+    return out
+
+
+def ceil_div(a, b):
+    return -(-a // b)
+
+
+def partition_aligned(n, parts, align):
+    align = max(1, align)
+    if align == 1:
+        return partition(n, parts)
+    blocks = ceil_div(n, align)
+    return [(s * align, min(e * align, n)) for s, e in partition(blocks, parts)]
+
+
+# --- Packing (gemm.rs pack_a / pack_b) ------------------------------------
+# Operands are flat row-major lists. ``trans=False`` mirrors AView::Rows /
+# BView::Rows; ``trans=True`` mirrors the transposing Cols variants.
+
+def pack_a(a, ld, i0, mc, k0, kcw, trans):
+    panels = ceil_div(mc, MR)
+    out = [0.0] * (panels * MR * kcw)
+    for p in range(panels):
+        rows = min(mc - p * MR, MR)
+        base = p * MR * kcw
+        if not trans:
+            for r in range(rows):
+                row0 = (i0 + p * MR + r) * ld + k0
+                for kk in range(kcw):
+                    out[base + kk * MR + r] = a[row0 + kk]
+        else:
+            for kk in range(kcw):
+                src0 = (k0 + kk) * ld + i0 + p * MR
+                for r in range(rows):
+                    out[base + kk * MR + r] = a[src0 + r]
+    return out
+
+
+def pack_b(b, ld, k0, kcw, j0, nc, trans):
+    panels = ceil_div(nc, NR)
+    out = [0.0] * (panels * NR * kcw)
+    for p in range(panels):
+        cols = min(nc - p * NR, NR)
+        base = p * NR * kcw
+        if not trans:
+            for kk in range(kcw):
+                src0 = (k0 + kk) * ld + j0 + p * NR
+                for c in range(cols):
+                    out[base + kk * NR + c] = b[src0 + c]
+        else:
+            for c in range(cols):
+                row0 = (j0 + p * NR + c) * ld + k0
+                for kk in range(kcw):
+                    out[base + kk * NR + c] = b[row0 + kk]
+    return out
+
+
+# --- Micro-kernels (exact accumulation order) -----------------------------
+
+def micro_full(ap, bp, c, off, ldc, kcw):
+    acc = [[c[off + r * ldc + j] for j in range(NR)] for r in range(MR)]
+    for kk in range(kcw):
+        a4 = ap[kk * MR:(kk + 1) * MR]
+        b8 = bp[kk * NR:(kk + 1) * NR]
+        for r in range(MR):
+            ar = a4[r]
+            accr = acc[r]
+            for j in range(NR):
+                accr[j] += ar * b8[j]
+    for r in range(MR):
+        for j in range(NR):
+            c[off + r * ldc + j] = acc[r][j]
+
+
+def micro_edge(ap, bp, c, off, ldc, rows, cols, kcw):
+    for r in range(rows):
+        for j in range(cols):
+            s = c[off + r * ldc + j]
+            for kk in range(kcw):
+                s += ap[kk * MR + r] * bp[kk * NR + j]
+            c[off + r * ldc + j] = s
+
+
+# --- Blocked driver (gemm.rs Packed::run_rows) ----------------------------
+
+def run_rows(a, ald, a_trans, b, bld, b_trans, k, n, c_rows, r0, r1):
+    for j0 in range(0, n, NC):
+        nc = min(n - j0, NC)
+        b_panels = ceil_div(nc, NR)
+        for k0 in range(0, k, KC):
+            kcw = min(k - k0, KC)
+            bp = pack_b(b, bld, k0, kcw, j0, nc, b_trans)
+            for i0 in range(r0, r1, MC):
+                mc = min(r1 - i0, MC)
+                a_panels = ceil_div(mc, MR)
+                ap = pack_a(a, ald, i0, mc, k0, kcw, a_trans)
+                for q in range(b_panels):
+                    cols = min(nc - q * NR, NR)
+                    bpp = bp[q * NR * kcw:(q + 1) * NR * kcw]
+                    for p in range(a_panels):
+                        rows = min(mc - p * MR, MR)
+                        app = ap[p * MR * kcw:(p + 1) * MR * kcw]
+                        off = (i0 - r0 + p * MR) * n + j0 + q * NR
+                        if rows == MR and cols == NR:
+                            micro_full(app, bpp, c_rows, off, n, kcw)
+                        else:
+                            micro_edge(app, bpp, c_rows, off, n, rows, cols, kcw)
+
+
+def packed_gemm(a, b, m, k, n, a_trans=False, b_trans=False, parts=1):
+    """C = A·B over a ``parts``-way MC-aligned row split, like the engine.
+
+    ``a_trans`` means ``a`` is the k x m buffer of gemm_tn; ``b_trans``
+    means ``b`` is the n x k buffer of gemm_nt.
+    """
+    ald = m if a_trans else k
+    bld = k if b_trans else n
+    c = [0.0] * (m * n)
+    for r0, r1 in partition_aligned(m, parts, MC):
+        rows = c[r0 * n:r1 * n]
+        run_rows(a, ald, a_trans, b, bld, b_trans, k, n, rows, r0, r1)
+        c[r0 * n:r1 * n] = rows
+    return c
+
+
+def naive_gemm(a, b, m, k, n):
+    """The contract's reference order: one ascending-l chain per element."""
+    c = [0.0] * (m * n)
+    for i in range(m):
+        for j in range(n):
+            s = 0.0
+            for l in range(k):
+                s += a[i * k + l] * b[l * n + j]
+            c[i * n + j] = s
+    return c
+
+
+# --- Deterministic data ----------------------------------------------------
+
+def lcg_data(count, seed):
+    x = seed & 0xFFFFFFFFFFFFFFFF
+    out = []
+    for _ in range(count):
+        x = (x * 6364136223846793005 + 1442695040888963407) & 0xFFFFFFFFFFFFFFFF
+        out.append(((x >> 11) / float(1 << 53)) * 2.0 - 1.0)
+    return out
+
+
+def bits(vec):
+    return struct.pack("<%dd" % len(vec), *vec)
+
+
+def transpose(a, rows, cols):
+    return [a[i * cols + j] for j in range(cols) for i in range(rows)]
+
+
+# --- Checks ----------------------------------------------------------------
+
+def check_partitions():
+    for n in (0, 1, 7, 63, 64, 65, 129, 1000):
+        for parts in (1, 2, 3, 8):
+            ranges = partition(n, parts)
+            flat = [x for r in ranges for x in r]
+            # Contiguous cover of [0, n), all ranges non-empty.
+            assert flat == sorted(flat), (n, parts)
+            assert all(e > s for s, e in ranges), (n, parts)
+            assert (not ranges and n == 0) or (ranges[0][0] == 0 and ranges[-1][1] == n)
+            for align in (1, 64):
+                ar = partition_aligned(n, parts, align)
+                assert all(s % align == 0 for s, _ in ar), (n, parts, align)
+                assert all(e % align == 0 or e == n for _, e in ar), (n, parts, align)
+                assert (not ar and n == 0) or (ar[0][0] == 0 and ar[-1][1] == n)
+            assert partition_aligned(n, parts, 1) == ranges
+    print("partition/partition_aligned: boundaries on the grid, full cover")
+
+
+def check_shapes():
+    shapes = [
+        (65, 17, 24),    # straddles MC, partial everything
+        (8, 257, 16),    # straddles KC
+        (12, 20, 513),   # straddles NC
+        (5, 9, 11),      # partial MR and NR tiles
+        (4, 8, 8),       # one exact micro-tile stack
+        (3, 4, 7),       # below both micro-tile dims
+        (1, 1, 1),       # degenerate
+    ]
+    for m, k, n in shapes:
+        a = lcg_data(m * k, seed=m * 1_000_003 + k * 97 + n)
+        b = lcg_data(k * n, seed=n * 1_000_033 + k * 89 + m)
+        want = bits(naive_gemm(a, b, m, k, n))
+        for parts in (1, 2, 3, 5):
+            got = bits(packed_gemm(a, b, m, k, n, parts=parts))
+            assert got == want, f"nn bits differ at {m}x{k}x{n} parts={parts}"
+        # Transposing packs read the same scalars in the same order.
+        at = transpose(a, m, k)  # k x m buffer, gemm_tn operand
+        assert bits(packed_gemm(at, b, m, k, n, a_trans=True)) == want, \
+            f"tn bits differ at {m}x{k}x{n}"
+        bt = transpose(b, k, n)  # n x k buffer, gemm_nt operand
+        assert bits(packed_gemm(a, bt, m, k, n, b_trans=True)) == want, \
+            f"nt bits differ at {m}x{k}x{n}"
+        print(f"{m:>3} x {k:>3} x {n:>3}: nn/tn/nt bitwise == naive, "
+              "chunk-split invariant")
+
+
+def main():
+    check_partitions()
+    check_shapes()
+    print("pack_sim: all packing-order invariants hold")
+
+
+if __name__ == "__main__":
+    main()

@@ -109,6 +109,52 @@ fn main() {
         ]);
     }
 
+    // --- GEMM packed vs reference, single-thread (the PR gate). ---
+    // Always at 1024^3 and forced serial so the ratio isolates the packed
+    // micro-kernel against the retained pre-packing kernel on one core,
+    // independent of the pool and of FASTLR_THREADS. Runs in smoke mode
+    // too: CI's BENCH_kernels.json artifact carries the speedup row.
+    {
+        let s = 1024usize;
+        let a = Matrix::gaussian(s, s, &mut rng);
+        let b = Matrix::gaussian(s, s, &mut rng);
+        let flops = 2 * s * s * s;
+        let cmp_reps = if smoke { 1 } else { 3 };
+        let (t_packed, _) =
+            fastlr::exec::with_serial(|| time_reps(cmp_reps, || a.matmul(&b).unwrap()));
+        let (t_ref, _) = fastlr::exec::with_serial(|| {
+            time_reps(cmp_reps, || fastlr::linalg::gemm::gemm_reference(&a, &b).unwrap())
+        });
+        let packed_gf = gflops(flops, t_packed.median_secs());
+        let ref_gf = gflops(flops, t_ref.median_secs());
+        table.push_row(vec![
+            "gemm_packed_1t".into(),
+            format!("{s}x{s}x{s}"),
+            format!("{:.3}", t_packed.median_secs() * 1e3),
+            "-".into(),
+            format!("{packed_gf:.2}"),
+        ]);
+        table.push_row(vec![
+            "gemm_reference_1t".into(),
+            format!("{s}x{s}x{s}"),
+            format!("{:.3}", t_ref.median_secs() * 1e3),
+            "-".into(),
+            format!("{ref_gf:.2}"),
+        ]);
+        table.push_row(vec![
+            "gemm_speedup_1t".into(),
+            format!("{s}x{s}x{s}"),
+            "-".into(),
+            "-".into(),
+            format!("{:.2}", packed_gf / ref_gf),
+        ]);
+        eprintln!(
+            "gemm 1024^3 single-thread: packed {packed_gf:.2} GFLOP/s vs reference \
+             {ref_gf:.2} GFLOP/s ({:.2}x)",
+            packed_gf / ref_gf
+        );
+    }
+
     // --- Full GK loop (Algorithm 1) at bench scale. ---
     let (gk_m, gk_n, gk_rank) = if smoke { (200, 150, 10) } else { (4000, 2000, 100) };
     let a = low_rank_gaussian(gk_m, gk_n, gk_rank, &mut rng);

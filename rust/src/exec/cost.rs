@@ -4,8 +4,8 @@
 //! (`gemm`: `1<<16` multiply-adds, `gemv`: `1<<17` elements, `spmv`:
 //! `1<<16` stored entries) and its own `partition_ranges(n,
 //! num_threads())` fan-out. The engine replaces all of that with one
-//! currency — **flops, as reported by the caller** (`2·m·n·k` for GEMM
-//! variants, `2·m·n` for GEMV variants, `2·nnz` for SPMV variants) — and
+//! currency — **flops, as reported by the caller** ([`gemm_flops`] =
+//! `2·m·n·k`, [`gemv_flops`] = `2·m·n`, [`spmv_flops`] = `2·nnz`) — and
 //! two decisions made here:
 //!
 //! * **serial fallback**: below [`SERIAL_CUTOFF_FLOPS`] the call runs
@@ -13,7 +13,9 @@
 //! * **chunking**: parallel calls split so each chunk carries at least
 //!   [`MIN_CHUNK_FLOPS`]. Independent-output loops ([`plan_for`]) may
 //!   scale chunk count with the machine — their results do not depend on
-//!   chunk boundaries. Reductions ([`plan_reduce`]) use a
+//!   chunk boundaries — and blocked kernels can pin chunk edges to their
+//!   cache-block grid ([`partition_aligned`], e.g. GEMM's `MC`).
+//!   Reductions ([`plan_reduce`]) use a
 //!   machine-independent plan so the partial-merge tree, and with it
 //!   every low-order floating-point bit, is a pure function of the
 //!   problem size.
@@ -100,6 +102,26 @@ pub fn reduce_partition(flops: usize, items: usize) -> Vec<(usize, usize)> {
     }
 }
 
+/// Flops the engine charges a dense GEMM: one multiply-add per `(i, j,
+/// l)` triple. Every GEMM variant reports through this one helper so the
+/// serial-vs-parallel decision cannot drift between kernels.
+#[inline]
+pub fn gemm_flops(m: usize, n: usize, k: usize) -> usize {
+    2 * m * n * k
+}
+
+/// Flops the engine charges a dense GEMV (`2` per matrix element).
+#[inline]
+pub fn gemv_flops(m: usize, n: usize) -> usize {
+    2 * m * n
+}
+
+/// Flops the engine charges a sparse matvec (`~2` per stored entry).
+#[inline]
+pub fn spmv_flops(nnz: usize) -> usize {
+    2 * nnz
+}
+
 /// Partition `n` items into at most `parts` contiguous ranges of nearly
 /// equal size. Returns `(start, end)` pairs; never returns empty ranges.
 pub fn partition(n: usize, parts: usize) -> Vec<(usize, usize)> {
@@ -117,6 +139,23 @@ pub fn partition(n: usize, parts: usize) -> Vec<(usize, usize)> {
         start += len;
     }
     out
+}
+
+/// Like [`partition`], but every boundary except the final one is a
+/// multiple of `align`. The blocked GEMM asks for `align = MC` so chunk
+/// edges coincide with its cache-block grid and no thread ever packs a
+/// partial `MC` panel mid-matrix; the row-blocked spmv aligns to its row
+/// group the same way. `align = 1` is exactly [`partition`].
+pub fn partition_aligned(n: usize, parts: usize, align: usize) -> Vec<(usize, usize)> {
+    let align = align.max(1);
+    if align == 1 {
+        return partition(n, parts);
+    }
+    let blocks = n.div_ceil(align);
+    partition(blocks, parts)
+        .into_iter()
+        .map(|(s, e)| (s * align, (e * align).min(n)))
+        .collect()
 }
 
 #[cfg(test)]
@@ -182,6 +221,45 @@ mod tests {
                 assert!(chunks <= items);
             }
         }
+    }
+
+    #[test]
+    fn partition_aligned_boundaries_sit_on_the_grid() {
+        for n in [1usize, 63, 64, 65, 128, 129, 1000, 1024] {
+            for p in [1usize, 2, 3, 8, 64] {
+                for align in [1usize, 8, 64] {
+                    let ranges = partition_aligned(n, p, align);
+                    let total: usize = ranges.iter().map(|(s, e)| e - s).sum();
+                    assert_eq!(total, n, "n={n} p={p} align={align}");
+                    for w in ranges.windows(2) {
+                        assert_eq!(w[0].1, w[1].0);
+                    }
+                    assert!(ranges.iter().all(|(s, e)| s < e));
+                    // Every start (and every non-final end) is aligned.
+                    for &(s, e) in &ranges {
+                        assert_eq!(s % align, 0, "n={n} p={p} align={align}");
+                        assert!(e % align == 0 || e == n, "n={n} p={p} align={align}");
+                    }
+                }
+            }
+        }
+        assert_eq!(partition_aligned(0, 4, 64), vec![]);
+    }
+
+    #[test]
+    fn partition_aligned_with_unit_align_is_partition() {
+        for n in [5usize, 17, 100] {
+            for p in [2usize, 3, 7] {
+                assert_eq!(partition_aligned(n, p, 1), partition(n, p));
+            }
+        }
+    }
+
+    #[test]
+    fn flop_helpers_report_the_documented_currency() {
+        assert_eq!(gemm_flops(3, 5, 7), 2 * 3 * 5 * 7);
+        assert_eq!(gemv_flops(3, 5), 30);
+        assert_eq!(spmv_flops(100), 200);
     }
 
     #[test]

@@ -33,7 +33,7 @@ pub mod cost;
 pub mod pool;
 pub mod stats;
 
-pub use pool::{parallel_for, parallel_reduce, with_serial};
+pub use pool::{parallel_for, parallel_for_aligned, parallel_reduce, with_serial};
 pub use stats::{stats, ExecStats};
 
 /// Number of compute lanes the engine targets: pool workers plus the

@@ -218,6 +218,18 @@ pub fn parallel_for<F>(flops: usize, out: &mut [f64], width: usize, body: F)
 where
     F: Fn(usize, usize, &mut [f64]) + Sync,
 {
+    parallel_for_aligned(flops, out, width, 1, body);
+}
+
+/// [`parallel_for`] with chunk boundaries pinned to multiples of `align`
+/// (except the final edge at `items`). Blocked kernels use this so no
+/// chunk starts mid cache block: the packed GEMM aligns to its `MC` row
+/// panel, the row-blocked spmv to its row-group size. `align = 1` is
+/// plain [`parallel_for`].
+pub fn parallel_for_aligned<F>(flops: usize, out: &mut [f64], width: usize, align: usize, body: F)
+where
+    F: Fn(usize, usize, &mut [f64]) + Sync,
+{
     let items = if width == 0 { 0 } else { out.len() / width };
     // Hard assert: a silent remainder would leave trailing elements of
     // `out` unwritten in release builds.
@@ -233,7 +245,12 @@ where
         }
         Plan::Parallel { chunks } => chunks,
     };
-    let bounds = cost::partition(items, chunks);
+    let bounds = cost::partition_aligned(items, chunks, align);
+    if bounds.len() == 1 {
+        stats::SERIAL_CALLS.inc();
+        body(0, items, out);
+        return;
+    }
     let base = SendPtr(out.as_mut_ptr());
     let run = |chunk: usize| {
         let (s, e) = bounds[chunk];
@@ -329,6 +346,31 @@ mod tests {
         for (i, &v) in out.iter().enumerate() {
             assert_eq!(v, i as f64);
         }
+    }
+
+    #[test]
+    fn parallel_for_aligned_chunks_start_on_the_grid() {
+        let n = 10_000usize;
+        let align = 64usize;
+        let mut out = vec![0.0; n];
+        parallel_for_aligned(BIG, &mut out, 1, align, |r0, r1, rows| {
+            assert_eq!(r0 % align, 0, "chunk start off the grid");
+            assert!(r1 % align == 0 || r1 == n, "chunk end off the grid");
+            for (i, o) in rows.iter_mut().enumerate() {
+                *o = (r0 + i) as f64;
+            }
+        });
+        for (i, &v) in out.iter().enumerate() {
+            assert_eq!(v, i as f64);
+        }
+        // Alignment larger than the item count degrades to one inline
+        // chunk covering everything.
+        let mut small = vec![0.0; 8];
+        parallel_for_aligned(BIG, &mut small, 1, 64, |r0, r1, rows| {
+            assert_eq!((r0, r1), (0, 8));
+            rows.fill(1.0);
+        });
+        assert!(small.iter().all(|&v| v == 1.0));
     }
 
     #[test]

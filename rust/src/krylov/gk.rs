@@ -17,7 +17,7 @@
 
 use super::LinOp;
 use crate::cancel::CancelToken;
-use crate::linalg::vecops::{axpy, dot, norm2, scal};
+use crate::linalg::vecops::{axpy, axpy_dot, dot, norm2, scal};
 use crate::linalg::Matrix;
 use crate::obs::metrics::{record_stage, KernelStage};
 use crate::obs::trace::{SpanKind, Trace};
@@ -231,12 +231,29 @@ pub fn gk_bidiagonalize(a: &dyn LinOp, opts: &GkOptions) -> Result<GkResult> {
 /// This is the fused operation the L1 Pallas kernel `reorth.py` implements
 /// for the AOT path; the native version iterates columns so each basis
 /// vector is streamed exactly once per pass.
+///
+/// The per-pass column sweep is software-pipelined through
+/// [`vecops::axpy_dot`](crate::linalg::vecops::axpy_dot): subtracting the
+/// projection onto column `j` and computing the coefficient against column
+/// `j+1` share one pass over `w`, halving traffic on the GK hot loop's
+/// largest read stream. `axpy_dot` is bitwise-identical to the unfused
+/// `axpy`-then-`dot` pair (and the `c == 0.0` skip is preserved exactly),
+/// so the pipelined sweep produces the same bits as the naive loop.
 pub fn reorthogonalize(basis: &[Vec<f64>], w: &mut [f64], passes: usize) {
+    let Some(first) = basis.first() else { return };
     for _ in 0..passes.max(1) {
-        for v in basis {
-            let c = dot(v, w);
-            if c != 0.0 {
-                axpy(-c, v, w);
+        let mut c = dot(first, w);
+        for pair in basis.windows(2) {
+            c = if c != 0.0 {
+                axpy_dot(-c, &pair[0], w, &pair[1])
+            } else {
+                dot(&pair[1], w)
+            };
+        }
+        if c != 0.0 {
+            // `basis` is non-empty here, so `last()` always yields.
+            if let Some(last) = basis.last() {
+                axpy(-c, last, w);
             }
         }
     }
@@ -333,6 +350,41 @@ mod tests {
         assert!((w[0]).abs() < 1e-15);
         assert!((w[1]).abs() < 1e-15);
         assert!((w[2] - 5.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn pipelined_reorthogonalize_is_bitwise_the_naive_sweep() {
+        // The axpy_dot pipeline must reproduce the unfused dot/axpy column
+        // sweep bit for bit, including the `c == 0.0` skip semantics.
+        let mut rng = Pcg64::seed_from_u64(99);
+        for (cols, n, passes) in [(1usize, 37usize, 1usize), (2, 64, 1), (5, 129, 2), (8, 50, 3)] {
+            let basis: Vec<Vec<f64>> =
+                (0..cols).map(|_| (0..n).map(|_| rng.next_gaussian()).collect()).collect();
+            let w0: Vec<f64> = (0..n).map(|_| rng.next_gaussian()).collect();
+
+            let mut w = w0.clone();
+            reorthogonalize(&basis, &mut w, passes);
+
+            let mut w_ref = w0.clone();
+            for _ in 0..passes.max(1) {
+                for v in &basis {
+                    let c = dot(v, &w_ref);
+                    if c != 0.0 {
+                        axpy(-c, v, &mut w_ref);
+                    }
+                }
+            }
+            assert_eq!(w, w_ref, "cols={cols} n={n} passes={passes}");
+        }
+        // Zero-projection path: w orthogonal to an axis basis vector.
+        let basis = vec![vec![1.0, 0.0, 0.0], vec![0.0, 0.0, 1.0]];
+        let mut w = vec![0.0, 2.0, 3.0];
+        reorthogonalize(&basis, &mut w, 1);
+        assert_eq!(w, vec![0.0, 2.0, 0.0]);
+        // Empty basis is a no-op.
+        let mut w = vec![1.0, 2.0];
+        reorthogonalize(&[], &mut w, 2);
+        assert_eq!(w, vec![1.0, 2.0]);
     }
 
     #[test]

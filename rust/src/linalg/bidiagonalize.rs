@@ -8,6 +8,7 @@
 //! that motivates the paper — while GK only needs matrix-vector products.
 
 use super::matrix::Matrix;
+use super::vecops::{axpy, dot};
 use crate::{ensure_shape, Result};
 
 /// Output of [`bidiagonalize`]: `A = U · B · Vᵀ`.
@@ -65,21 +66,14 @@ pub fn bidiagonalize(a: &Matrix) -> Result<Bidiag> {
                 for i in j..m {
                     let vi = w[i * ncols + j];
                     if vi != 0.0 {
-                        let row = &w[i * ncols + j + 1..i * ncols + n];
-                        for (sc, &ac) in s.iter_mut().zip(row) {
-                            *sc += vi * ac;
-                        }
+                        axpy(vi, &w[i * ncols + j + 1..i * ncols + n], s);
                     }
                 }
                 let beta = beta_l[j];
                 for i in j..m {
                     let vi = w[i * ncols + j];
                     if vi != 0.0 {
-                        let f = beta * vi;
-                        let row = &mut w[i * ncols + j + 1..i * ncols + n];
-                        for (ac, &sc) in row.iter_mut().zip(s.iter()) {
-                            *ac -= f * sc;
-                        }
+                        axpy(-(beta * vi), s, &mut w[i * ncols + j + 1..i * ncols + n]);
                     }
                 }
             }
@@ -102,18 +96,18 @@ pub fn bidiagonalize(a: &Matrix) -> Result<Bidiag> {
                 let vtv = norm2 - a0 * a0 + v0 * v0;
                 beta_r[j] = if vtv > 0.0 { 2.0 / vtv } else { 0.0 };
                 e[j] = alpha;
-                // Apply to trailing rows.
-                for r in j + 1..m {
-                    let mut s = 0.0;
-                    for c in j + 1..n {
-                        s += work[(j, c)] * work[(r, c)];
-                    }
-                    let f = beta_r[j] * s;
+                // Apply to trailing rows. The v-vector is row j's tail —
+                // contiguous in row-major storage, as is each target row,
+                // so this is one [`dot`] + one [`axpy`] per trailing row.
+                let beta = beta_r[j];
+                let w = work.as_mut_slice();
+                let (top, tail) = w.split_at_mut((j + 1) * n);
+                let vrow = &top[j * n + j + 1..j * n + n];
+                for row in tail.chunks_exact_mut(n) {
+                    let rt = &mut row[j + 1..n];
+                    let f = beta * dot(vrow, rt);
                     if f != 0.0 {
-                        for c in j + 1..n {
-                            let vjc = work[(j, c)];
-                            work[(r, c)] -= f * vjc;
-                        }
+                        axpy(-f, vrow, rt);
                     }
                 }
             } else {
@@ -140,44 +134,46 @@ pub fn bidiagonalize(a: &Matrix) -> Result<Bidiag> {
         for i in j..m {
             let vi = w[i * n + j];
             if vi != 0.0 {
-                let row = &us[i * n + j..i * n + n];
-                for (sc, &uc) in s.iter_mut().zip(row) {
-                    *sc += vi * uc;
-                }
+                axpy(vi, &us[i * n + j..i * n + n], s);
             }
         }
         let beta = beta_l[j];
         for i in j..m {
             let vi = w[i * n + j];
             if vi != 0.0 {
-                let f = beta * vi;
-                let row = &mut us[i * n + j..i * n + n];
-                for (uc, &sc) in row.iter_mut().zip(s.iter()) {
-                    *uc -= f * sc;
-                }
+                axpy(-(beta * vi), s, &mut us[i * n + j..i * n + n]);
             }
         }
     }
 
     // --- Back-accumulate V = G_0 ... G_{n-1} · I(n x n). ---
-    // G_j is supported on indices j+1..n, so apply from j = n-1 downward.
+    // G_j is supported on indices j+1..n, so apply from j = n-1 downward;
+    // columns 0..=j of V are still identity structure there, so only the
+    // j+1..n block needs the reflector. Same two-pass row-streamed rank-1
+    // update as U: s = vᵀ·V then V −= v·(β·s)ᵀ, one axpy per row.
     let mut v = Matrix::eye(n);
+    let vs = v.as_mut_slice();
+    let w = work.as_slice();
     for j in (0..n.saturating_sub(1)).rev() {
         if beta_r[j] == 0.0 {
             continue;
         }
         // v-vector lives in work[j, j+1..n].
-        for c in j + 1..n {
-            let mut s = 0.0;
-            for r in j + 1..n {
-                s += work[(j, r)] * v[(r, c)];
+        let vrow = &w[j * n + j + 1..j * n + n];
+        let s = &mut s_buf[j + 1..n];
+        s.fill(0.0);
+        for (&vr, row) in vrow.iter().zip(vs[(j + 1) * n..].chunks_exact(n)) {
+            if vr != 0.0 {
+                axpy(vr, &row[j + 1..n], s);
             }
-            let f = beta_r[j] * s;
-            if f != 0.0 {
-                for r in j + 1..n {
-                    let vjr = work[(j, r)];
-                    v[(r, c)] -= f * vjr;
-                }
+        }
+        let beta = beta_r[j];
+        for sc in s.iter_mut() {
+            *sc *= beta;
+        }
+        for (&vr, row) in vrow.iter().zip(vs[(j + 1) * n..].chunks_exact_mut(n)) {
+            if vr != 0.0 {
+                axpy(-vr, s, &mut row[j + 1..n]);
             }
         }
     }

@@ -1,25 +1,330 @@
-//! Engine-parallel, cache-blocked GEMM variants.
+//! Packed, cache-blocked GEMM with a register-tiled micro-kernel.
 //!
-//! Three entry points, all row-major and allocation-minimal:
+//! Three entry points, all row-major:
 //!
-//! * [`gemm`]      — `C = A · B`
-//! * [`gemm_tn`]   — `C = Aᵀ · B` (no explicit transpose is formed)
-//! * [`gemm_nt`]   — `C = A · Bᵀ` (row·row dot products — the cheap one)
+//! * [`gemm`]    — `C = A · B`
+//! * [`gemm_tn`] — `C = Aᵀ · B` (the transpose is absorbed by the A-pack)
+//! * [`gemm_nt`] — `C = A · Bᵀ` (the transpose is absorbed by the B-pack)
 //!
-//! The kernel is an `i-k-j` loop nest over `(MC, KC)` panels: for each `k`
-//! the scalar `A[i,k]` multiplies a contiguous row of `B`, which LLVM turns
-//! into FMA vector code. Parallelism rides [`crate::exec`]: `gemm` and
-//! `gemm_nt` split the rows of `C` into disjoint chunks
-//! ([`crate::exec::parallel_for`]); `gemm_tn` reduces private accumulator
-//! panels over `k`-ranges ([`crate::exec::parallel_reduce`], fixed merge
-//! order). The serial-vs-parallel split comes from the engine's single
-//! cost model (flops = `2·m·n·k`), not a kernel-local threshold.
+//! All three share one BLIS-style blocked path: inside `(MC, KC, NC)`
+//! cache blocks, A is packed into column-major [`MR`]-row micro-panels and
+//! B into row-major [`NR`]-column micro-panels — thread-local scratch
+//! buffers reused across calls, no per-call allocation — and an `MR x NR`
+//! register-tiled micro-kernel walks the packed panels with [`NR`]-wide
+//! accumulator rows the autovectorizer keeps in registers. Operand
+//! transposes are absorbed while packing (the `gemm_tn` A-pack reads the
+//! `k x m` buffer row-contiguously), so the micro-kernel is identical for
+//! every variant and no inner loop ever does a strided read; the old
+//! one-`dot`-per-output-element `gemm_nt` nest is gone, as is the
+//! vectorization-hostile `aik == 0.0` skip. Shapes too small to amortize
+//! packing take a plain fallback nest instead ([`PACKED_MIN_FLOPS`]).
+//!
+//! # Determinism contract
+//!
+//! Every path — full micro-tiles, edge tiles, fallback — accumulates each
+//! `C[i,j]` as **one chain in strictly ascending `k`, starting from
+//! `0.0`**, with no in-kernel reassociation (Rust/LLVM does not contract
+//! `a*b + c` into an FMA or reassociate a dependent chain on its own).
+//! The result is therefore bitwise equal to the naive `i-j-l` triple loop
+//! for every variant, shape, chunk split and `FASTLR_THREADS` setting:
+//! parallelism only splits disjoint row ranges of `C`
+//! ([`crate::exec::parallel_for_aligned`], chunk edges pinned to the `MC`
+//! grid), never a `k` chain. `gemm_tn` used to reduce private panels over
+//! `k`-ranges; packing the transpose lets it row-parallelize like the
+//! others, which strengthens its guarantee from "fixed merge order" to
+//! "equal to the serial triple loop". `tests/determinism.rs` and
+//! `tests/kernels_fuzz.rs` pin the contract; `python/sims/pack_sim.py` is
+//! the executable spec of the packing index math.
+//!
+//! Each public entry records its wall time under
+//! `fastlr_gemm_seconds{path="packed"|"fallback"}` so `/v1/metrics` can
+//! attribute serving-level GEMM seconds per code path. The pre-packing
+//! kernel survives as [`gemm_reference`] for same-run before/after
+//! benchmarking (`benches/kernels.rs`).
 
 use super::matrix::Matrix;
-use crate::{ensure_shape, exec, Result};
+use crate::exec::{self, cost};
+use crate::obs::metrics::{record_gemm, GemmPath};
+use crate::{ensure_shape, Result};
+use std::cell::RefCell;
+use std::time::Instant;
 
-/// K-panel height: keeps the streamed rows of `B` resident in L2.
-const KC: usize = 256;
+/// Micro-tile rows: A panels are `MR`-row column-major. `MR x NR` = 32
+/// accumulators, 8 vector registers of 4 lanes — small enough that the
+/// autovectorizer keeps the whole tile resident.
+pub const MR: usize = 4;
+
+/// Micro-tile columns: B panels are `NR`-column row-major; one accumulator
+/// row is two 4-wide vector registers.
+pub const NR: usize = 8;
+
+/// Rows of A packed per cache block: an `MC x KC` A-pack is 128 KiB —
+/// half a typical L2 — so it stays resident while the micro-kernel
+/// streams B micro-panels over it.
+pub const MC: usize = 64;
+
+/// Shared-dimension depth per cache block: one `KC x NR` B micro-panel is
+/// 16 KiB, comfortably inside L1 across the whole `jr` sweep.
+pub const KC: usize = 256;
+
+/// Columns of B packed per cache block: a `KC x NC` B-pack is 1 MiB,
+/// sized for L2/L3 reuse across every A panel in the block row.
+pub const NC: usize = 512;
+
+/// Flop count (`2·m·n·k`) below which packing costs more than it saves;
+/// such calls — and any shape with `m < MR` or `n < NR`, which has no
+/// full micro-tile at all — take the fallback nest. Same accumulation
+/// order, same bits, only slower.
+pub const PACKED_MIN_FLOPS: usize = 1 << 13;
+
+thread_local! {
+    /// Per-thread A-pack scratch (`<= MC x KC` plus `MR` padding): packing
+    /// reuses the allocation across calls and cache blocks.
+    static PACK_A: RefCell<Vec<f64>> = const { RefCell::new(Vec::new()) };
+    /// Per-thread B-pack scratch (`<= KC x NC` plus `NR` padding).
+    static PACK_B: RefCell<Vec<f64>> = const { RefCell::new(Vec::new()) };
+}
+
+/// The A operand as the packing layer sees it: a row-major buffer holding
+/// either `A` itself or its transpose. `Cols` is the `gemm_tn` case — the
+/// buffer is `k x m`, and the pack absorbs the transpose by copying
+/// row-contiguous runs, so the strided read the old kernel did per
+/// element happens zero times.
+#[derive(Clone, Copy)]
+enum AView<'a> {
+    /// Buffer is `m x k`: logical `A[i, l]` = `buf[i*ld + l]`.
+    Rows(&'a [f64]),
+    /// Buffer is `k x m`: logical `A[i, l]` = `buf[l*ld + i]`.
+    Cols(&'a [f64]),
+}
+
+/// The B operand, same idea: `Cols` is the `gemm_nt` case (`n x k`
+/// buffer), absorbed during the B-pack.
+#[derive(Clone, Copy)]
+enum BView<'a> {
+    /// Buffer is `k x n`: logical `B[l, j]` = `buf[l*ld + j]`.
+    Rows(&'a [f64]),
+    /// Buffer is `n x k`: logical `B[l, j]` = `buf[j*ld + l]`.
+    Cols(&'a [f64]),
+}
+
+/// Pack the `mc x kcw` block of logical A at `(i0, k0)` into `MR`-row
+/// column-major micro-panels: panel `p` holds rows `i0 + p·MR ..`, laid
+/// out `out[p·MR·kcw + kk·MR + r]`. Short final panels are zero-padded so
+/// the full micro-kernel never reads garbage (the edge kernel only reads
+/// live lanes anyway).
+fn pack_a(view: AView, ld: usize, i0: usize, mc: usize, k0: usize, kcw: usize, out: &mut Vec<f64>) {
+    let panels = mc.div_ceil(MR);
+    out.clear();
+    out.resize(panels * MR * kcw, 0.0);
+    for (p, dst) in out.chunks_exact_mut(MR * kcw).enumerate() {
+        let rows = (mc - p * MR).min(MR);
+        match view {
+            AView::Rows(a) => {
+                for r in 0..rows {
+                    let src = &a[(i0 + p * MR + r) * ld + k0..][..kcw];
+                    for (kk, &v) in src.iter().enumerate() {
+                        dst[kk * MR + r] = v;
+                    }
+                }
+            }
+            AView::Cols(a) => {
+                // Transposing pack: each `kk` is a contiguous `rows`-run
+                // of the `k x m` buffer.
+                for (kk, dcol) in dst.chunks_exact_mut(MR).enumerate() {
+                    let src = &a[(k0 + kk) * ld + i0 + p * MR..][..rows];
+                    dcol[..rows].copy_from_slice(src);
+                }
+            }
+        }
+    }
+}
+
+/// Pack the `kcw x nc` block of logical B at `(k0, j0)` into `NR`-column
+/// row-major micro-panels: `out[p·NR·kcw + kk·NR + c]`, zero-padded like
+/// the A-pack.
+fn pack_b(view: BView, ld: usize, k0: usize, kcw: usize, j0: usize, nc: usize, out: &mut Vec<f64>) {
+    let panels = nc.div_ceil(NR);
+    out.clear();
+    out.resize(panels * NR * kcw, 0.0);
+    for (p, dst) in out.chunks_exact_mut(NR * kcw).enumerate() {
+        let cols = (nc - p * NR).min(NR);
+        match view {
+            BView::Rows(b) => {
+                for (kk, drow) in dst.chunks_exact_mut(NR).enumerate() {
+                    let src = &b[(k0 + kk) * ld + j0 + p * NR..][..cols];
+                    drow[..cols].copy_from_slice(src);
+                }
+            }
+            BView::Cols(b) => {
+                // Transposing pack for `A·Bᵀ`: column `c` of the panel is
+                // a contiguous row of the `n x k` buffer.
+                for c in 0..cols {
+                    let src = &b[(j0 + p * NR + c) * ld + k0..][..kcw];
+                    for (kk, &v) in src.iter().enumerate() {
+                        dst[kk * NR + c] = v;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The register micro-kernel: `C_tile (MR x NR) += Ap · Bp` over the full
+/// packed depth. The tile is preloaded into a flat accumulator array,
+/// updated in strictly ascending `kk` — one dependent chain per element,
+/// the documented order — and stored back once. `c` starts at the tile's
+/// top-left element; rows are `ldc` apart.
+#[inline(always)]
+fn micro_full(ap: &[f64], bp: &[f64], c: &mut [f64], ldc: usize) {
+    debug_assert_eq!(ap.len() / MR, bp.len() / NR);
+    let mut acc = [[0.0f64; NR]; MR];
+    for (r, accr) in acc.iter_mut().enumerate() {
+        accr.copy_from_slice(&c[r * ldc..][..NR]);
+    }
+    for (a4, b8) in ap.chunks_exact(MR).zip(bp.chunks_exact(NR)) {
+        for (accr, &ar) in acc.iter_mut().zip(a4) {
+            for (acv, &bv) in accr.iter_mut().zip(b8) {
+                *acv += ar * bv;
+            }
+        }
+    }
+    for (r, accr) in acc.iter().enumerate() {
+        c[r * ldc..][..NR].copy_from_slice(accr);
+    }
+}
+
+/// Edge-tile kernel for short panels (`rows < MR` and/or `cols < NR`):
+/// scalar, but the same per-element ascending-`kk` chain as
+/// [`micro_full`], reading only the live lanes of the padded panels.
+fn micro_edge(ap: &[f64], bp: &[f64], c: &mut [f64], ldc: usize, rows: usize, cols: usize) {
+    for r in 0..rows {
+        let crow = &mut c[r * ldc..][..cols];
+        for (j, cj) in crow.iter_mut().enumerate() {
+            let mut s = *cj;
+            for (a4, b8) in ap.chunks_exact(MR).zip(bp.chunks_exact(NR)) {
+                s += a4[r] * b8[j];
+            }
+            *cj = s;
+        }
+    }
+}
+
+/// One packed-GEMM problem: operand views plus shared dims, bundled so
+/// the per-chunk driver fits the engine's `(r0, r1, rows)` signature.
+#[derive(Clone, Copy)]
+struct Packed<'a> {
+    a: AView<'a>,
+    ald: usize,
+    b: BView<'a>,
+    bld: usize,
+    k: usize,
+    n: usize,
+}
+
+impl Packed<'_> {
+    /// Compute rows `[r0, r1)` of `C` into `c_rows` (exactly those rows).
+    ///
+    /// Loop nest, outermost first: `NC` column blocks → `KC` depth blocks
+    /// (pack B) → `MC` row blocks (pack A) → `NR` micro-panels → `MR`
+    /// micro-panels → micro-kernel. With `jr` outside `ir`, one 16 KiB B
+    /// micro-panel stays L1-hot across the whole A block.
+    fn run_rows(&self, c_rows: &mut [f64], r0: usize, r1: usize) {
+        let (k, n) = (self.k, self.n);
+        PACK_A.with(|pa| {
+            PACK_B.with(|pb| {
+                let ap = &mut *pa.borrow_mut();
+                let bp = &mut *pb.borrow_mut();
+                for j0 in (0..n).step_by(NC) {
+                    let nc = (n - j0).min(NC);
+                    let b_panels = nc.div_ceil(NR);
+                    for k0 in (0..k).step_by(KC) {
+                        let kcw = (k - k0).min(KC);
+                        pack_b(self.b, self.bld, k0, kcw, j0, nc, bp);
+                        for i0 in (r0..r1).step_by(MC) {
+                            let mc = (r1 - i0).min(MC);
+                            let a_panels = mc.div_ceil(MR);
+                            pack_a(self.a, self.ald, i0, mc, k0, kcw, ap);
+                            for q in 0..b_panels {
+                                let cols = (nc - q * NR).min(NR);
+                                let bpp = &bp[q * NR * kcw..(q + 1) * NR * kcw];
+                                for p in 0..a_panels {
+                                    let rows = (mc - p * MR).min(MR);
+                                    let app = &ap[p * MR * kcw..(p + 1) * MR * kcw];
+                                    let off = (i0 - r0 + p * MR) * n + j0 + q * NR;
+                                    if rows == MR && cols == NR {
+                                        micro_full(app, bpp, &mut c_rows[off..], n);
+                                    } else {
+                                        micro_edge(app, bpp, &mut c_rows[off..], n, rows, cols);
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            });
+        });
+    }
+}
+
+/// Packing pays once `C` admits at least one full micro-tile and the flop
+/// count clears [`PACKED_MIN_FLOPS`]. A pure function of the shape, so
+/// the path choice — like everything else here — is machine-independent.
+#[inline]
+fn use_packed(m: usize, n: usize, k: usize) -> bool {
+    m >= MR && n >= NR && cost::gemm_flops(m, n, k) >= PACKED_MIN_FLOPS
+}
+
+/// Fallback nest for `C = A·B`: `i-l-j` axpy form, contiguous over `B`
+/// rows. Per element this is the same ascending-`l` chain as the packed
+/// path — identical bits, no packing overhead.
+fn fallback_nn(a: &[f64], b: &[f64], c_rows: &mut [f64], r0: usize, r1: usize, k: usize, n: usize) {
+    for i in r0..r1 {
+        let a_row = &a[i * k..(i + 1) * k];
+        let c_row = &mut c_rows[(i - r0) * n..(i - r0 + 1) * n];
+        for (l, &ail) in a_row.iter().enumerate() {
+            let b_row = &b[l * n..(l + 1) * n];
+            for (cj, bj) in c_row.iter_mut().zip(b_row) {
+                *cj += ail * bj;
+            }
+        }
+    }
+}
+
+/// Fallback nest for `C = Aᵀ·B` (`a` is `k x m`): `l-i-j`, both inputs
+/// row-contiguous; per element still ascending `l`.
+fn fallback_tn(a: &[f64], b: &[f64], c_rows: &mut [f64], r0: usize, r1: usize, k: usize, n: usize) {
+    debug_assert!(k > 0);
+    let m = a.len() / k;
+    for (l, a_row) in a.chunks_exact(m).enumerate() {
+        let b_row = &b[l * n..(l + 1) * n];
+        for i in r0..r1 {
+            let ali = a_row[i];
+            let c_row = &mut c_rows[(i - r0) * n..(i - r0 + 1) * n];
+            for (cj, bj) in c_row.iter_mut().zip(b_row) {
+                *cj += ali * bj;
+            }
+        }
+    }
+}
+
+/// Fallback nest for `C = A·Bᵀ` (`b` is `n x k`): `i-j-l` dot form over
+/// two contiguous rows. Deliberately a single sequential chain — not
+/// `vecops::dot`'s 4-way split — to keep the ascending-`l` contract.
+fn fallback_nt(a: &[f64], b: &[f64], c_rows: &mut [f64], r0: usize, r1: usize, k: usize, n: usize) {
+    for i in r0..r1 {
+        let a_row = &a[i * k..(i + 1) * k];
+        let c_row = &mut c_rows[(i - r0) * n..(i - r0 + 1) * n];
+        for (j, cj) in c_row.iter_mut().enumerate() {
+            let b_row = &b[j * k..(j + 1) * k];
+            let mut s = 0.0;
+            for (av, bv) in a_row.iter().zip(b_row) {
+                s += av * bv;
+            }
+            *cj = s;
+        }
+    }
+}
 
 /// `C = A · B`.
 pub fn gemm(a: &Matrix, b: &Matrix) -> Result<Matrix> {
@@ -35,44 +340,27 @@ pub fn gemm(a: &Matrix, b: &Matrix) -> Result<Matrix> {
     if m * n * k == 0 {
         return Ok(c);
     }
+    let start = Instant::now();
     let (a_s, b_s) = (a.as_slice(), b.as_slice());
-    exec::parallel_for(2 * m * n * k, c.as_mut_slice(), n, |r0, r1, c_rows| {
-        gemm_rows(a_s, b_s, c_rows, r0, r1, k, n);
-    });
+    let flops = cost::gemm_flops(m, n, k);
+    if use_packed(m, n, k) {
+        let pg = Packed { a: AView::Rows(a_s), ald: k, b: BView::Rows(b_s), bld: n, k, n };
+        exec::parallel_for_aligned(flops, c.as_mut_slice(), n, MC, |r0, r1, rows| {
+            pg.run_rows(rows, r0, r1);
+        });
+        record_gemm(GemmPath::Packed, start.elapsed());
+    } else {
+        exec::parallel_for(flops, c.as_mut_slice(), n, |r0, r1, rows| {
+            fallback_nn(a_s, b_s, rows, r0, r1, k, n);
+        });
+        record_gemm(GemmPath::Fallback, start.elapsed());
+    }
     Ok(c)
 }
 
-/// Kernel for rows `[r0, r1)`; `c_rows` is exactly those rows of `C`.
-///
-/// (A 4-row micro-kernel variant — four FMA streams per `B`-row load —
-/// was tried during the perf pass and measured at parity/slightly worse
-/// on this box, so the simple form stays; see EXPERIMENTS.md §Perf.)
-fn gemm_rows(a: &[f64], b: &[f64], c_rows: &mut [f64], r0: usize, r1: usize, k: usize, n: usize) {
-    for kb in (0..k).step_by(KC) {
-        let kend = (kb + KC).min(k);
-        for i in r0..r1 {
-            let a_row = &a[i * k..(i + 1) * k];
-            let c_row = &mut c_rows[(i - r0) * n..(i - r0 + 1) * n];
-            for kk in kb..kend {
-                let aik = a_row[kk];
-                if aik == 0.0 {
-                    continue;
-                }
-                let b_row = &b[kk * n..(kk + 1) * n];
-                // Contiguous FMA over j — autovectorized.
-                for (cj, bj) in c_row.iter_mut().zip(b_row) {
-                    *cj += aik * bj;
-                }
-            }
-        }
-    }
-}
-
 /// `C = Aᵀ · B` where `A` is `k x m` and `B` is `k x n` → `C` is `m x n`.
-///
-/// Iterates the shared `k` dimension in the outer loop so both inputs are
-/// read row-contiguously; each chunk reduces a private panel, merged in
-/// fixed chunk order by the engine.
+/// No explicit transpose is formed: the A-pack reads the buffer
+/// row-contiguously and emits transposed micro-panels.
 pub fn gemm_tn(a: &Matrix, b: &Matrix) -> Result<Matrix> {
     ensure_shape!(
         a.rows() == b.rows(),
@@ -86,31 +374,27 @@ pub fn gemm_tn(a: &Matrix, b: &Matrix) -> Result<Matrix> {
     if m * n * k == 0 {
         return Ok(c);
     }
+    let start = Instant::now();
     let (a_s, b_s) = (a.as_slice(), b.as_slice());
-    exec::parallel_reduce(2 * m * n * k, k, c.as_mut_slice(), |k0, k1, acc| {
-        gemm_tn_rows(a_s, b_s, acc, k0, k1, m, n);
-    });
+    let flops = cost::gemm_flops(m, n, k);
+    if use_packed(m, n, k) {
+        let pg = Packed { a: AView::Cols(a_s), ald: m, b: BView::Rows(b_s), bld: n, k, n };
+        exec::parallel_for_aligned(flops, c.as_mut_slice(), n, MC, |r0, r1, rows| {
+            pg.run_rows(rows, r0, r1);
+        });
+        record_gemm(GemmPath::Packed, start.elapsed());
+    } else {
+        exec::parallel_for(flops, c.as_mut_slice(), n, |r0, r1, rows| {
+            fallback_tn(a_s, b_s, rows, r0, r1, k, n);
+        });
+        record_gemm(GemmPath::Fallback, start.elapsed());
+    }
     Ok(c)
 }
 
-fn gemm_tn_rows(a: &[f64], b: &[f64], c: &mut [f64], k0: usize, k1: usize, m: usize, n: usize) {
-    for l in k0..k1 {
-        let a_row = &a[l * m..(l + 1) * m];
-        let b_row = &b[l * n..(l + 1) * n];
-        for i in 0..m {
-            let ali = a_row[i];
-            if ali == 0.0 {
-                continue;
-            }
-            let c_row = &mut c[i * n..(i + 1) * n];
-            for (cj, bj) in c_row.iter_mut().zip(b_row) {
-                *cj += ali * bj;
-            }
-        }
-    }
-}
-
 /// `C = A · Bᵀ` where `A` is `m x k`, `B` is `n x k` → `C` is `m x n`.
+/// The B-pack absorbs the transpose, so this shares the micro-kernel with
+/// the other variants instead of doing one `dot` per output element.
 pub fn gemm_nt(a: &Matrix, b: &Matrix) -> Result<Matrix> {
     ensure_shape!(
         a.cols() == b.cols(),
@@ -124,21 +408,63 @@ pub fn gemm_nt(a: &Matrix, b: &Matrix) -> Result<Matrix> {
     if m * n * k == 0 {
         return Ok(c);
     }
+    let start = Instant::now();
     let (a_s, b_s) = (a.as_slice(), b.as_slice());
-    exec::parallel_for(2 * m * n * k, c.as_mut_slice(), n, |r0, r1, c_rows| {
-        gemm_nt_rows(a_s, b_s, c_rows, r0, r1, k, n);
-    });
+    let flops = cost::gemm_flops(m, n, k);
+    if use_packed(m, n, k) {
+        let pg = Packed { a: AView::Rows(a_s), ald: k, b: BView::Cols(b_s), bld: k, k, n };
+        exec::parallel_for_aligned(flops, c.as_mut_slice(), n, MC, |r0, r1, rows| {
+            pg.run_rows(rows, r0, r1);
+        });
+        record_gemm(GemmPath::Packed, start.elapsed());
+    } else {
+        exec::parallel_for(flops, c.as_mut_slice(), n, |r0, r1, rows| {
+            fallback_nt(a_s, b_s, rows, r0, r1, k, n);
+        });
+        record_gemm(GemmPath::Fallback, start.elapsed());
+    }
     Ok(c)
 }
 
-fn gemm_nt_rows(a: &[f64], b: &[f64], c: &mut [f64], r0: usize, r1: usize, k: usize, n: usize) {
-    for i in r0..r1 {
-        let a_row = &a[i * k..(i + 1) * k];
-        let c_row = &mut c[(i - r0) * n..(i - r0 + 1) * n];
-        for (j, cj) in c_row.iter_mut().enumerate() {
-            *cj = super::vecops::dot(a_row, &b[j * k..(j + 1) * k]);
-        }
+/// The pre-packing kernel, kept verbatim as the same-run benchmark
+/// baseline: an unpacked `i-k-j` nest over `KC` panels with the
+/// vectorization-hostile `aik == 0.0` skip. `benches/kernels.rs` measures
+/// this against [`gemm`] single-threaded to report the packed speedup; no
+/// serving path calls it.
+pub fn gemm_reference(a: &Matrix, b: &Matrix) -> Result<Matrix> {
+    ensure_shape!(
+        a.cols() == b.rows(),
+        "gemm_reference: {:?} x {:?}",
+        a.shape(),
+        b.shape()
+    );
+    let (m, k) = a.shape();
+    let n = b.cols();
+    let mut c = Matrix::zeros(m, n);
+    if m * n * k == 0 {
+        return Ok(c);
     }
+    let (a_s, b_s) = (a.as_slice(), b.as_slice());
+    exec::parallel_for(cost::gemm_flops(m, n, k), c.as_mut_slice(), n, |r0, r1, c_rows| {
+        for kb in (0..k).step_by(KC) {
+            let kend = (kb + KC).min(k);
+            for i in r0..r1 {
+                let a_row = &a_s[i * k..(i + 1) * k];
+                let c_row = &mut c_rows[(i - r0) * n..(i - r0 + 1) * n];
+                for kk in kb..kend {
+                    let aik = a_row[kk];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let b_row = &b_s[kk * n..(kk + 1) * n];
+                    for (cj, bj) in c_row.iter_mut().zip(b_row) {
+                        *cj += aik * bj;
+                    }
+                }
+            }
+        }
+    });
+    Ok(c)
 }
 
 #[cfg(test)]
@@ -147,7 +473,8 @@ mod tests {
     use crate::exec::cost::SERIAL_CUTOFF_FLOPS;
     use crate::rng::Pcg64;
 
-    /// Naive triple loop as the oracle.
+    /// Naive triple loop — the oracle, and per the module contract the
+    /// *bitwise* specification of every variant.
     fn gemm_naive(a: &Matrix, b: &Matrix) -> Matrix {
         let (m, k) = a.shape();
         let n = b.cols();
@@ -178,6 +505,56 @@ mod tests {
             let b = Matrix::gaussian(k, n, &mut rng);
             assert_close(&gemm(&a, &b).unwrap(), &gemm_naive(&a, &b), 1e-10);
         }
+    }
+
+    #[test]
+    fn packed_path_is_bitwise_equal_to_naive() {
+        // The determinism contract in its strongest form: exact equality
+        // with the serial triple loop, on shapes exercising full tiles,
+        // partial MR/NR edges and the packed-path threshold.
+        let mut rng = Pcg64::seed_from_u64(20);
+        for (m, k, n) in [(16, 16, 16), (65, 33, 40), (5, 300, 9), (4, 256, 8)] {
+            let a = Matrix::gaussian(m, k, &mut rng);
+            let b = Matrix::gaussian(k, n, &mut rng);
+            assert!(use_packed(m, n, k), "{m}x{k}x{n} must take the packed path");
+            assert_eq!(gemm(&a, &b).unwrap(), gemm_naive(&a, &b), "bits differ at {m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn fallback_path_is_bitwise_equal_to_naive() {
+        let mut rng = Pcg64::seed_from_u64(21);
+        for (m, k, n) in [(3, 40, 40), (40, 40, 7), (10, 10, 10)] {
+            let a = Matrix::gaussian(m, k, &mut rng);
+            let b = Matrix::gaussian(k, n, &mut rng);
+            assert!(!use_packed(m, n, k), "{m}x{k}x{n} must take the fallback");
+            assert_eq!(gemm(&a, &b).unwrap(), gemm_naive(&a, &b), "bits differ at {m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn gemm_tn_and_nt_are_bitwise_equal_to_naive_on_the_transpose() {
+        // transpose() copies values exactly, so the naive oracle on the
+        // materialized transpose is the bitwise spec for both variants.
+        let mut rng = Pcg64::seed_from_u64(22);
+        for (k, m, n) in [(5, 3, 4), (100, 40, 30), (257, 65, 40)] {
+            let a = Matrix::gaussian(k, m, &mut rng);
+            let b = Matrix::gaussian(k, n, &mut rng);
+            assert_eq!(gemm_tn(&a, &b).unwrap(), gemm_naive(&a.transpose(), &b));
+        }
+        for (m, k, n) in [(4, 6, 3), (50, 80, 40), (65, 257, 33)] {
+            let a = Matrix::gaussian(m, k, &mut rng);
+            let b = Matrix::gaussian(n, k, &mut rng);
+            assert_eq!(gemm_nt(&a, &b).unwrap(), gemm_naive(&a, &b.transpose()));
+        }
+    }
+
+    #[test]
+    fn gemm_reference_matches_packed_numerically() {
+        let mut rng = Pcg64::seed_from_u64(23);
+        let a = Matrix::gaussian(70, 90, &mut rng);
+        let b = Matrix::gaussian(90, 50, &mut rng);
+        assert_close(&gemm_reference(&a, &b).unwrap(), &gemm(&a, &b).unwrap(), 1e-10);
     }
 
     #[test]
@@ -225,6 +602,7 @@ mod tests {
         let b = Matrix::zeros(4, 2);
         assert!(gemm(&a, &b).is_err());
         assert!(gemm_tn(&a, &b).is_err());
+        assert!(gemm_reference(&a, &b).is_err());
         let c = Matrix::zeros(5, 4);
         assert!(gemm_nt(&a, &c).is_err());
     }
@@ -262,6 +640,21 @@ mod tests {
             let a = Matrix::gaussian(m, k, &mut rng);
             let b = Matrix::gaussian(k, n, &mut rng);
             assert_close(&gemm(&a, &b).unwrap(), &gemm_naive(&a, &b), 1e-10);
+        }
+    }
+
+    #[test]
+    fn scratch_buffers_survive_shape_changes() {
+        // Exercise thread-local scratch reuse across different block
+        // geometries in one thread: growing and shrinking kcw/nc must
+        // never leave stale lanes behind (the packs clear + zero-pad).
+        let mut rng = Pcg64::seed_from_u64(24);
+        let shapes = [(65, 300, 70), (12, 20, 16), (64, 257, 513), (16, 16, 16)];
+        for (m, k, n) in shapes {
+            let a = Matrix::gaussian(m, k, &mut rng);
+            let b = Matrix::gaussian(k, n, &mut rng);
+            let got = exec::with_serial(|| gemm(&a, &b).unwrap());
+            assert_eq!(got, gemm_naive(&a, &b), "stale scratch at {m}x{k}x{n}");
         }
     }
 }

@@ -13,10 +13,23 @@
 //!   accumulate private `y` buffers over row ranges, merged in fixed
 //!   chunk order ([`crate::exec::parallel_reduce`]) so the result is
 //!   bit-identical for any thread count.
+//!
+//! Both variants block the shared dimension over the GEMM layer's
+//! [`KC`](super::gemm::KC) panels so the vector operand tile stays
+//! L1-resident while `A` streams past: `gemv` accumulates per-panel
+//! [`dot`] partials into `y[i]` in ascending panel order (for `n <= KC`
+//! this is a single `dot`, exactly the unblocked kernel); `gemv_t` sweeps
+//! rows per `y`-panel, which touches each `y[j]` in the same ascending-`i`
+//! order as the unblocked kernel — identical bits, better locality. The
+//! documented accumulation order is: panel-major ascending, `dot`'s
+//! 4-accumulator split within a panel (`gemv`), ascending `i` per element
+//! with the fixed chunk-merge tree (`gemv_t`).
 
+use super::gemm::KC;
 use super::matrix::Matrix;
 use super::vecops::{axpy, dot};
-use crate::{ensure_shape, exec, Result};
+use crate::exec::{self, cost};
+use crate::{ensure_shape, Result};
 
 /// `y = A · x`.
 pub fn gemv(a: &Matrix, x: &[f64]) -> Result<Vec<f64>> {
@@ -32,10 +45,16 @@ pub fn gemv(a: &Matrix, x: &[f64]) -> Result<Vec<f64>> {
         return Ok(y);
     }
     let a_s = a.as_slice();
-    exec::parallel_for(2 * m * n, &mut y, 1, |r0, _r1, ys| {
-        for (i, yi) in ys.iter_mut().enumerate() {
-            let row = r0 + i;
-            *yi = dot(&a_s[row * n..(row + 1) * n], x);
+    exec::parallel_for(cost::gemv_flops(m, n), &mut y, 1, |r0, _r1, ys| {
+        for kb in (0..n).step_by(KC) {
+            let kend = (kb + KC).min(n);
+            let xs = &x[kb..kend];
+            for (i, yi) in ys.iter_mut().enumerate() {
+                let row = r0 + i;
+                // Ascending-panel partial sums; y starts at 0.0, so a
+                // single panel reproduces the plain `dot` bit for bit.
+                *yi += dot(&a_s[row * n + kb..row * n + kend], xs);
+            }
         }
     });
     Ok(y)
@@ -55,11 +74,17 @@ pub fn gemv_t(a: &Matrix, x: &[f64]) -> Result<Vec<f64>> {
         return Ok(y);
     }
     let a_s = a.as_slice();
-    exec::parallel_reduce(2 * m * n, m, &mut y, |r0, r1, acc| {
-        for i in r0..r1 {
-            let xi = x[i];
-            if xi != 0.0 {
-                axpy(xi, &a_s[i * n..(i + 1) * n], acc);
+    exec::parallel_reduce(cost::gemv_flops(m, n), m, &mut y, |r0, r1, acc| {
+        for jb in (0..n).step_by(KC) {
+            let jend = (jb + KC).min(n);
+            let ys = &mut acc[jb..jend];
+            for i in r0..r1 {
+                let xi = x[i];
+                // Each y[j] sees ascending i regardless of the panel
+                // split — same bits as the unblocked sweep.
+                if xi != 0.0 {
+                    axpy(xi, &a_s[i * n + jb..i * n + jend], ys);
+                }
             }
         }
     });
@@ -153,6 +178,50 @@ mod tests {
             assert!((2 * m * n < SERIAL_CUTOFF_FLOPS) == (m == 361));
             let a = Matrix::gaussian(m, n, &mut rng);
             assert_both_match_naive(&a, 1e-9);
+        }
+    }
+
+    #[test]
+    fn blocked_accumulation_follows_the_documented_order() {
+        // Widths straddling the KC panel. gemv's documented order is
+        // per-panel dot partials added ascending — replay it by hand;
+        // gemv_t's panel split must not change bits at all vs the plain
+        // row sweep under the engine's published reduction plan.
+        let mut rng = Pcg64::seed_from_u64(15);
+        for n in [KC - 1, KC, KC + 1, 2 * KC + 37] {
+            let m = 9usize;
+            let a = Matrix::gaussian(m, n, &mut rng);
+            let a_s = a.as_slice();
+            let x: Vec<f64> = (0..n).map(|i| ((i as f64) * 0.19).sin()).collect();
+            let got = gemv(&a, &x).unwrap();
+            let want: Vec<f64> = (0..m)
+                .map(|i| {
+                    let mut s = 0.0;
+                    for kb in (0..n).step_by(KC) {
+                        let kend = (kb + KC).min(n);
+                        s += dot(&a_s[i * n + kb..i * n + kend], &x[kb..kend]);
+                    }
+                    s
+                })
+                .collect();
+            assert_eq!(got, want, "gemv order differs at n={n}");
+
+            let xt: Vec<f64> = (0..m).map(|i| ((i as f64) * 0.07).cos()).collect();
+            let got_t = gemv_t(&a, &xt).unwrap();
+            let ranges = crate::exec::cost::reduce_partition(2 * m * n, m);
+            let mut want_t = vec![0.0; n];
+            for &(r0, r1) in &ranges {
+                let mut part = vec![0.0; n];
+                for i in r0..r1 {
+                    if xt[i] != 0.0 {
+                        axpy(xt[i], &a_s[i * n..(i + 1) * n], &mut part);
+                    }
+                }
+                for (w, p) in want_t.iter_mut().zip(&part) {
+                    *w += p;
+                }
+            }
+            assert_eq!(got_t, want_t, "gemv_t order differs at n={n}");
         }
     }
 

@@ -4,8 +4,15 @@
 //! orthogonality checks in the test-suite. For `A` of shape `m x n`
 //! (`m >= n`) it returns `Q` (`m x n`, orthonormal columns) and `R`
 //! (`n x n`, upper triangular) with `A = Q·R`.
+//!
+//! Reflector application is row-streamed: `H·W = W - v·(beta·vᵀW)` runs as
+//! two passes over the row-major storage (accumulate `s = vᵀW` with one
+//! [`axpy`] per row, then rank-1 update with one [`axpy`] per row) instead
+//! of striding down each column, so the trailing-matrix update touches `A`
+//! cache-line-contiguously.
 
 use super::matrix::Matrix;
+use super::vecops::axpy;
 use crate::{ensure_shape, Result};
 
 /// Result of a thin QR factorization.
@@ -26,6 +33,8 @@ pub fn qr_thin(a: &Matrix) -> Result<Qr> {
     let mut work = a.clone();
     let mut betas = vec![0.0f64; n];
     let mut rdiag = vec![0.0f64; n];
+    // Scratch for `beta·vᵀW` across the trailing columns, reused per step.
+    let mut s_buf = vec![0.0f64; n];
 
     for j in 0..n {
         // Reflector annihilating column j below the diagonal.
@@ -47,17 +56,28 @@ pub fn qr_thin(a: &Matrix) -> Result<Qr> {
         let beta = if vtv > 0.0 { 2.0 / vtv } else { 0.0 };
         betas[j] = beta;
         rdiag[j] = alpha;
-        // Apply H = I - beta·v·vᵀ to the trailing columns.
-        for c in j + 1..n {
-            let mut s = 0.0;
+        // Apply H = I - beta·v·vᵀ to the trailing columns, row-streamed:
+        // pass 1 accumulates s = vᵀ·W one row at a time, pass 2 applies
+        // the rank-1 update W -= v·(beta·s)ᵀ the same way.
+        if j + 1 < n && beta != 0.0 {
+            let w = work.as_mut_slice();
+            let sb = &mut s_buf[..n - j - 1];
+            sb.fill(0.0);
             for i in j..m {
-                s += work[(i, j)] * work[(i, c)];
+                let row = &w[i * n..(i + 1) * n];
+                let vi = row[j];
+                if vi != 0.0 {
+                    axpy(vi, &row[j + 1..], sb);
+                }
             }
-            let f = beta * s;
-            if f != 0.0 {
-                for i in j..m {
-                    let vij = work[(i, j)];
-                    work[(i, c)] -= f * vij;
+            for s in sb.iter_mut() {
+                *s *= beta;
+            }
+            for i in j..m {
+                let (head, tail) = w[i * n..(i + 1) * n].split_at_mut(j + 1);
+                let vi = head[j];
+                if vi != 0.0 {
+                    axpy(-vi, sb, tail);
                 }
             }
         }
@@ -77,22 +97,31 @@ pub fn qr_thin(a: &Matrix) -> Result<Qr> {
     for i in 0..n {
         q[(i, i)] = 1.0;
     }
+    let ws = work.as_slice();
+    let qs = q.as_mut_slice();
     for j in (0..n).rev() {
         let beta = betas[j];
         if beta == 0.0 {
             continue;
         }
-        for c in j..n {
-            let mut s = 0.0;
-            for i in j..m {
-                s += work[(i, j)] * q[(i, c)];
+        // Same two-pass row-streamed reflector as the factor loop, applied
+        // to Q's columns j..n (columns left of j are still untouched
+        // identity structure at this point).
+        let sb = &mut s_buf[..n - j];
+        sb.fill(0.0);
+        for i in j..m {
+            let vi = ws[i * n + j];
+            if vi != 0.0 {
+                axpy(vi, &qs[i * n + j..(i + 1) * n], sb);
             }
-            let f = beta * s;
-            if f != 0.0 {
-                for i in j..m {
-                    let vij = work[(i, j)];
-                    q[(i, c)] -= f * vij;
-                }
+        }
+        for s in sb.iter_mut() {
+            *s *= beta;
+        }
+        for i in j..m {
+            let vi = ws[i * n + j];
+            if vi != 0.0 {
+                axpy(-vi, sb, &mut qs[i * n + j..(i + 1) * n]);
             }
         }
     }

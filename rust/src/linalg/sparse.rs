@@ -15,13 +15,53 @@
 //!   `x[i]·A[i,:]`; chunks accumulate private `y` buffers over row
 //!   ranges, merged in fixed chunk order.
 //!
+//! Both walk rows in fixed [`SPMV_ROW_BLOCK`]-sized groups (chunk edges
+//! pinned to the same grid via [`crate::exec::parallel_for_aligned`]), so
+//! the `indptr` bounds window and the index/value streams advance in
+//! predictable prefetch-friendly runs. The spmv gather-dot uses four
+//! independent accumulators to hide gather latency; its documented
+//! accumulation order is `vecops::dot`'s — `(s0+s1)+(s2+s3)` plus a
+//! sequential tail. `spmv_t` keeps the strictly ascending per-entry
+//! scatter order (plus the engine's fixed chunk-merge tree), so its bits
+//! are a pure function of the matrix and the problem size.
+//!
 //! Both fan out through [`crate::exec`] (flops = `2·nnz` — an spmv does
 //! ~2 flops per stored entry), so the `FASTLR_THREADS` override and the
 //! engine's single cost model apply uniformly across dense and sparse
 //! paths.
 
 use super::matrix::Matrix;
-use crate::{ensure_shape, exec, Result};
+use crate::exec::{self, cost};
+use crate::{ensure_shape, Result};
+
+/// Rows per group in the blocked sparse kernels: a group's `indptr`
+/// window is 520 bytes and its output tile 512 — both stay resident
+/// while the entry streams run, and the fixed size gives the hardware
+/// prefetcher a predictable run length.
+pub const SPMV_ROW_BLOCK: usize = 64;
+
+/// Gather-dot of one CSR row with `x`: four independent accumulator
+/// chains so the gathers pipeline, merged `(s0+s1)+(s2+s3)` with a
+/// sequential tail — the exact order `vecops::dot` documents.
+#[inline]
+fn gather_dot(cols: &[usize], vals: &[f64], x: &[f64]) -> f64 {
+    debug_assert_eq!(cols.len(), vals.len());
+    let n = cols.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for i in 0..chunks {
+        let k = i * 4;
+        s0 += vals[k] * x[cols[k]];
+        s1 += vals[k + 1] * x[cols[k + 1]];
+        s2 += vals[k + 2] * x[cols[k + 2]];
+        s3 += vals[k + 3] * x[cols[k + 3]];
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for k in chunks * 4..n {
+        s += vals[k] * x[cols[k]];
+    }
+    s
+}
 
 /// Compressed sparse row (CSR) `f64` matrix.
 ///
@@ -176,10 +216,9 @@ impl SparseMatrix {
         if self.values.is_empty() {
             return Ok(y);
         }
-        exec::parallel_for(2 * self.nnz(), &mut y, 1, |r0, _r1, ys| {
-            for (i, yi) in ys.iter_mut().enumerate() {
-                *yi = self.row_dot(r0 + i, x);
-            }
+        let flops = cost::spmv_flops(self.nnz());
+        exec::parallel_for_aligned(flops, &mut y, 1, SPMV_ROW_BLOCK, |r0, r1, ys| {
+            self.gather_row_blocks(r0, r1, x, ys);
         });
         Ok(y)
     }
@@ -197,29 +236,43 @@ impl SparseMatrix {
         if self.values.is_empty() {
             return Ok(y);
         }
-        exec::parallel_reduce(2 * self.nnz(), self.rows, &mut y, |r0, r1, acc| {
+        let flops = cost::spmv_flops(self.nnz());
+        exec::parallel_reduce(flops, self.rows, &mut y, |r0, r1, acc| {
             self.scatter_rows(r0, r1, x, acc);
         });
         Ok(y)
     }
 
-    /// Gather-dot of row `i` with `x`.
-    #[inline]
-    fn row_dot(&self, i: usize, x: &[f64]) -> f64 {
-        let (cols, vals) = self.row_entries(i);
-        cols.iter().zip(vals).map(|(&c, &v)| v * x[c]).sum()
+    /// Gather-dot rows `[r0, r1)` into `ys` (exactly those outputs),
+    /// walking [`SPMV_ROW_BLOCK`]-sized groups: the group's `indptr`
+    /// bounds window is hoisted once, then each row is a 4-way unrolled
+    /// [`gather_dot`].
+    fn gather_row_blocks(&self, r0: usize, r1: usize, x: &[f64], ys: &mut [f64]) {
+        for g0 in (r0..r1).step_by(SPMV_ROW_BLOCK) {
+            let g1 = (g0 + SPMV_ROW_BLOCK).min(r1);
+            let bounds = &self.indptr[g0..=g1];
+            let yg = &mut ys[g0 - r0..g1 - r0];
+            for (w, yi) in bounds.windows(2).zip(yg.iter_mut()) {
+                *yi = gather_dot(&self.indices[w[0]..w[1]], &self.values[w[0]..w[1]], x);
+            }
+        }
     }
 
-    /// Scatter rows `[r0, r1)` scaled by `x` into `out` (length `cols`).
+    /// Scatter rows `[r0, r1)` scaled by `x` into `out` (length `cols`),
+    /// in the same fixed row groups. Entry order within a row and row
+    /// order within the chunk are strictly ascending — the blocked sweep
+    /// produces the same bits as the plain one.
     fn scatter_rows(&self, r0: usize, r1: usize, x: &[f64], out: &mut [f64]) {
-        let starts = &self.indptr[r0..r1];
-        let ends = &self.indptr[r0 + 1..=r1];
-        for ((&lo, &hi), &xi) in starts.iter().zip(ends).zip(&x[r0..r1]) {
-            if xi == 0.0 {
-                continue;
-            }
-            for (&c, &v) in self.indices[lo..hi].iter().zip(&self.values[lo..hi]) {
-                out[c] += xi * v;
+        for g0 in (r0..r1).step_by(SPMV_ROW_BLOCK) {
+            let g1 = (g0 + SPMV_ROW_BLOCK).min(r1);
+            let bounds = &self.indptr[g0..=g1];
+            for (w, &xi) in bounds.windows(2).zip(&x[g0..g1]) {
+                if xi == 0.0 {
+                    continue;
+                }
+                for (&c, &v) in self.indices[w[0]..w[1]].iter().zip(&self.values[w[0]..w[1]]) {
+                    out[c] += xi * v;
+                }
             }
         }
     }
@@ -325,6 +378,48 @@ mod tests {
             assert!((2 * nnz < crate::exec::cost::SERIAL_CUTOFF_FLOPS) == (s == 300));
             let a = Matrix::gaussian(s, s, &mut rng);
             assert_matvecs_match(&a, 1e-10);
+        }
+    }
+
+    #[test]
+    fn row_block_boundaries_match_the_documented_order() {
+        // Row counts straddling SPMV_ROW_BLOCK (±1): spmv must replay
+        // the 4-way gather order bit for bit, and spmv_t must follow the
+        // engine's published reduction plan with plain ascending scatter.
+        let mut rng = Pcg64::seed_from_u64(705);
+        let n = 97usize;
+        for m in [SPMV_ROW_BLOCK - 1, SPMV_ROW_BLOCK, SPMV_ROW_BLOCK + 1, 2 * SPMV_ROW_BLOCK + 1] {
+            let a = random_sparse_dense(m, n, 0.3, &mut rng);
+            let sp = SparseMatrix::from_dense(&a, 0.0);
+            let x: Vec<f64> = (0..n).map(|i| ((i as f64) * 0.41).sin()).collect();
+            let got = sp.spmv(&x).unwrap();
+            let want: Vec<f64> = (0..m)
+                .map(|i| {
+                    let (cols, vals) = sp.row_entries(i);
+                    gather_dot(cols, vals, &x)
+                })
+                .collect();
+            assert_eq!(got, want, "spmv order differs at m={m}");
+
+            let xt: Vec<f64> = (0..m).map(|i| ((i as f64) * 0.13).cos()).collect();
+            let got_t = sp.spmv_t(&xt).unwrap();
+            let ranges = crate::exec::cost::reduce_partition(2 * sp.nnz(), m);
+            let mut want_t = vec![0.0; n];
+            for &(r0, r1) in &ranges {
+                let mut part = vec![0.0; n];
+                for i in r0..r1 {
+                    if xt[i] != 0.0 {
+                        let (cols, vals) = sp.row_entries(i);
+                        for (&c, &v) in cols.iter().zip(vals) {
+                            part[c] += xt[i] * v;
+                        }
+                    }
+                }
+                for (w, p) in want_t.iter_mut().zip(&part) {
+                    *w += p;
+                }
+            }
+            assert_eq!(got_t, want_t, "spmv_t order differs at m={m}");
         }
     }
 

@@ -47,6 +47,44 @@ pub fn axpy(alpha: f64, x: &[f64], y: &mut [f64]) {
     }
 }
 
+/// Fused `y += alpha·x` followed by `dot(z, y)` in one pass.
+///
+/// Bitwise-identical to calling [`axpy`] then [`dot`] — the update is
+/// plain `y[k] + alpha*x[k]` and the product accumulates in `dot`'s
+/// exact 4-accumulator order — while reading `y` once instead of twice.
+/// The Gram–Schmidt pipeline in `krylov::gk` uses it to subtract the
+/// projection onto basis vector `j` while already computing the
+/// coefficient against vector `j+1`.
+#[inline]
+pub fn axpy_dot(alpha: f64, x: &[f64], y: &mut [f64], z: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    debug_assert_eq!(z.len(), y.len());
+    let n = y.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for i in 0..chunks {
+        let k = i * 4;
+        let y0 = y[k] + alpha * x[k];
+        let y1 = y[k + 1] + alpha * x[k + 1];
+        let y2 = y[k + 2] + alpha * x[k + 2];
+        let y3 = y[k + 3] + alpha * x[k + 3];
+        y[k] = y0;
+        y[k + 1] = y1;
+        y[k + 2] = y2;
+        y[k + 3] = y3;
+        s0 += z[k] * y0;
+        s1 += z[k + 1] * y1;
+        s2 += z[k + 2] * y2;
+        s3 += z[k + 3] * y3;
+    }
+    let mut s = (s0 + s1) + (s2 + s3);
+    for k in chunks * 4..n {
+        y[k] += alpha * x[k];
+        s += z[k] * y[k];
+    }
+    s
+}
+
 /// `y = alpha * x + beta * y`.
 #[inline]
 pub fn axpby(alpha: f64, x: &[f64], beta: f64, y: &mut [f64]) {
@@ -114,6 +152,23 @@ mod tests {
         assert_eq!(y, vec![7.0, 14.0, 21.0]);
         scal(0.0, &mut y);
         assert_eq!(y, vec![0.0; 3]);
+    }
+
+    #[test]
+    fn axpy_dot_is_bitwise_the_unfused_pair() {
+        for n in [0usize, 1, 3, 4, 5, 7, 8, 129, 1000] {
+            let x: Vec<f64> = (0..n).map(|i| ((i as f64) * 0.3).sin()).collect();
+            let z: Vec<f64> = (0..n).map(|i| ((i as f64) * 0.7).cos()).collect();
+            let y0: Vec<f64> = (0..n).map(|i| ((i as f64) * 0.11).sin() * 2.0 - 0.5).collect();
+            let alpha = -0.37;
+            let mut y_fused = y0.clone();
+            let s_fused = axpy_dot(alpha, &x, &mut y_fused, &z);
+            let mut y_ref = y0.clone();
+            axpy(alpha, &x, &mut y_ref);
+            let s_ref = dot(&z, &y_ref);
+            assert_eq!(y_fused, y_ref, "n={n}");
+            assert_eq!(s_fused.to_bits(), s_ref.to_bits(), "n={n}");
+        }
     }
 
     #[test]

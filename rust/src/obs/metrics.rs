@@ -242,6 +242,46 @@ pub fn record_stage(stage: KernelStage, d: Duration) {
     stage_histogram(stage).observe(d);
 }
 
+/// Which dense-GEMM code path served a call, labelled `path="..."` under
+/// the `fastlr_gemm_seconds` family. The packed path is the blocked
+/// micro-kernel; the fallback is the plain loop nest kept for shapes too
+/// small to amortize packing. Attributing seconds per path makes the
+/// serving-level effect of the packed kernels observable from
+/// `/v1/metrics` alone.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GemmPath {
+    /// Blocked, packing micro-kernel path.
+    Packed,
+    /// Small-shape plain loop nest.
+    Fallback,
+}
+
+/// All GEMM paths, in [`GemmPath`] discriminant order.
+pub const GEMM_PATHS: [GemmPath; 2] = [GemmPath::Packed, GemmPath::Fallback];
+
+impl GemmPath {
+    /// The `path` label value.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            GemmPath::Packed => "packed",
+            GemmPath::Fallback => "fallback",
+        }
+    }
+}
+
+static GEMM_TIME: [Histogram; GEMM_PATHS.len()] = [const { Histogram::new() }; GEMM_PATHS.len()];
+
+/// The process-wide timing histogram for one GEMM code path.
+pub fn gemm_path_histogram(path: GemmPath) -> &'static Histogram {
+    &GEMM_TIME[path as usize]
+}
+
+/// Record one GEMM call on the given path. Two clock reads per `gemm*`
+/// entry point — never anything inside the packed loops.
+pub fn record_gemm(path: GemmPath, d: Duration) {
+    gemm_path_histogram(path).observe(d);
+}
+
 enum Source {
     Counter(Box<dyn Fn() -> u64 + Send + Sync>),
     Gauge(Box<dyn Fn() -> f64 + Send + Sync>),
@@ -506,6 +546,15 @@ mod tests {
         record_stage(KernelStage::Ritz, Duration::from_micros(120));
         assert_eq!(stage_histogram(KernelStage::Ritz).count(), before + 1);
         assert_eq!(KERNEL_STAGES[KernelStage::Ritz as usize], KernelStage::Ritz);
+    }
+
+    #[test]
+    fn gemm_path_histograms_accumulate() {
+        let before = gemm_path_histogram(GemmPath::Packed).count();
+        record_gemm(GemmPath::Packed, Duration::from_micros(800));
+        assert_eq!(gemm_path_histogram(GemmPath::Packed).count(), before + 1);
+        assert_eq!(GEMM_PATHS[GemmPath::Fallback as usize], GemmPath::Fallback);
+        assert_eq!(GemmPath::Packed.as_str(), "packed");
     }
 
     #[test]

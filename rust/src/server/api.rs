@@ -59,7 +59,9 @@ use crate::coordinator::job::{JobError, JobErrorKind, JobOutcome, JobResult, Svd
 use crate::coordinator::queue::Priority;
 use crate::coordinator::{AccuracyClass, FactorizationService, JobRequest, JobSpec};
 use crate::linalg::{Matrix, SparseMatrix};
-use crate::obs::metrics::{stage_histogram, Counter, Histogram, Registry, KERNEL_STAGES};
+use crate::obs::metrics::{
+    gemm_path_histogram, stage_histogram, Counter, Histogram, Registry, GEMM_PATHS, KERNEL_STAGES,
+};
 use crate::obs::trace::{
     SpanKind, SpanRecord, Trace, DEFAULT_SPAN_CAP, SPANS_DROPPED, TRACES_STARTED,
 };
@@ -239,6 +241,14 @@ fn build_registry(
             "Per-stage kernel time across all jobs",
             &[("stage", stage.as_str())],
             move || stage_histogram(stage).snapshot(),
+        );
+    }
+    for path in GEMM_PATHS {
+        r.histogram(
+            "fastlr_gemm_seconds",
+            "Dense GEMM time by code path (packed micro-kernel vs small-size fallback)",
+            &[("path", path.as_str())],
+            move || gemm_path_histogram(path).snapshot(),
         );
     }
     r.counter("fastlr_traces_started_total", "Live traces created", &[], || TRACES_STARTED.get());
@@ -1378,6 +1388,9 @@ mod tests {
         assert!(text1.contains("# TYPE fastlr_requests_total counter"), "{text1}");
         assert!(text1.contains("# TYPE fastlr_request_latency_seconds histogram"));
         assert!(text1.contains("# TYPE fastlr_kernel_stage_seconds histogram"));
+        assert!(text1.contains("# TYPE fastlr_gemm_seconds histogram"));
+        assert!(text1.contains("fastlr_gemm_seconds_count{path=\"packed\"}"), "{text1}");
+        assert!(text1.contains("fastlr_gemm_seconds_count{path=\"fallback\"}"), "{text1}");
         assert_eq!(scrape_value(&text1, "fastlr_jobs_total{state=\"completed\"}"), Some(1.0));
         assert_eq!(scrape_value(&text1, "fastlr_cache_misses_total"), Some(1.0));
         let requests1 = scrape_value(&text1, "fastlr_requests_total").unwrap();

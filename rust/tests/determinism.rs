@@ -100,14 +100,52 @@ fn gemm_is_bit_identical_across_the_cutoff() {
 
 #[test]
 fn gemm_tn_reduction_is_bit_identical() {
-    // k = 600 reduction rows, well past the cutoff: the private
-    // accumulator panels must merge identically pooled and inline.
+    // k = 600 contraction rows, well past the cutoff. Since the packed
+    // rewrite gemm_tn is row-parallel over C (the transposing A-pack
+    // replaced the old reduction over k-chunks), so pooled-vs-inline
+    // equality follows from the per-element ascending-k chain alone.
     let mut rng = Pcg64::seed_from_u64(5154);
     let a = Matrix::gaussian(600, 40, &mut rng);
     let b = Matrix::gaussian(600, 30, &mut rng);
     let pooled = gemm_tn(&a, &b).unwrap();
     let inline = exec::with_serial(|| gemm_tn(&a, &b).unwrap());
     assert_eq!(pooled, inline);
+}
+
+#[test]
+fn packed_gemm_is_bit_identical_at_tile_straddling_sizes() {
+    // Shapes straddling every packing tile edge (MR/MC rows, NR/NC cols,
+    // KC depth): the pooled chunk plan splits the row space differently
+    // from the inline path (and MC-aligned chunks land mid-panel), but
+    // every C[i,j] is one ascending-k chain, so the bits cannot move.
+    use fastlr::linalg::gemm::{gemm_nt, KC, MC, MR, NC, NR};
+    let mut rng = Pcg64::seed_from_u64(5158);
+    for (m, k, n) in [
+        (MC + 1, KC + 1, NR + 1),
+        (65, 257, 513),
+        (2 * MC, KC, NC),
+        (MR, KC, NR),
+    ] {
+        let a = Matrix::gaussian(m, k, &mut rng);
+        let b = Matrix::gaussian(k, n, &mut rng);
+        let pooled = gemm(&a, &b).unwrap();
+        let inline = exec::with_serial(|| gemm(&a, &b).unwrap());
+        assert_eq!(pooled, inline, "packed gemm bits differ at {m}x{k}x{n}");
+
+        let at = a.transpose();
+        let pooled_tn = gemm_tn(&at, &b).unwrap();
+        let inline_tn = exec::with_serial(|| gemm_tn(&at, &b).unwrap());
+        assert_eq!(pooled_tn, inline_tn, "packed gemm_tn bits differ at {m}x{k}x{n}");
+        // The transposing A-pack reads the same scalars in the same
+        // order, so tn on the transpose is bitwise the nn product.
+        assert_eq!(pooled_tn, pooled, "gemm_tn(aT) must be bitwise gemm(a) at {m}x{k}x{n}");
+
+        let bt = b.transpose();
+        let pooled_nt = gemm_nt(&a, &bt).unwrap();
+        let inline_nt = exec::with_serial(|| gemm_nt(&a, &bt).unwrap());
+        assert_eq!(pooled_nt, inline_nt, "packed gemm_nt bits differ at {m}x{k}x{n}");
+        assert_eq!(pooled_nt, pooled, "gemm_nt(bT) must be bitwise gemm(b) at {m}x{k}x{n}");
+    }
 }
 
 #[test]

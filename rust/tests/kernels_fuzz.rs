@@ -1,0 +1,124 @@
+//! Shape fuzz for the packed GEMM layer.
+//!
+//! The packing index math has many edge regimes: partial MR/NR micro-tiles,
+//! short KC panels, single-block MC/NC loops, and the small-size fallback.
+//! This suite samples shape triples from boundary sets that straddle every
+//! tuning constant (`±1` around MR, NR, MC, KC, NC) and checks each variant
+//! **bitwise** against the naive ascending-k triple loop — the documented
+//! accumulation-order contract — both pooled and forced-inline.
+//!
+//! CI runs the suite under `FASTLR_THREADS=1` and `=8`; bitwise equality to
+//! the shape-independent oracle in both legs gives cross-thread-count
+//! equivalence for free.
+
+use fastlr::exec;
+use fastlr::linalg::gemm::{gemm, gemm_nt, gemm_tn, KC, MC, MR, NC, NR, PACKED_MIN_FLOPS};
+use fastlr::linalg::Matrix;
+use fastlr::rng::{Pcg64, Rng};
+
+/// Naive `C = A·B` with each element one strictly-ascending-k chain from
+/// 0.0 — the order every kernel path is documented to reproduce.
+fn naive_gemm(a: &Matrix, b: &Matrix) -> Matrix {
+    let (m, k) = a.shape();
+    let n = b.cols();
+    let mut c = Matrix::zeros(m, n);
+    for i in 0..m {
+        for j in 0..n {
+            let mut s = 0.0;
+            for l in 0..k {
+                s += a[(i, l)] * b[(l, j)];
+            }
+            c[(i, j)] = s;
+        }
+    }
+    c
+}
+
+/// Boundary values `x-1, x, x+1` for each tuning constant, plus tiny and
+/// off-grid sizes. Zero is excluded (empty products return early anyway).
+fn boundary_set(consts: &[usize], extra: &[usize]) -> Vec<usize> {
+    let mut v: Vec<usize> = extra.to_vec();
+    for &c in consts {
+        for cand in [c.saturating_sub(1), c, c + 1] {
+            if cand > 0 {
+                v.push(cand);
+            }
+        }
+    }
+    v.sort_unstable();
+    v.dedup();
+    v
+}
+
+fn check_all_variants(a: &Matrix, b: &Matrix, tag: &str) {
+    let want = naive_gemm(a, b);
+    let got = gemm(a, b).unwrap();
+    assert_eq!(got, want, "gemm != naive order at {tag}");
+    let inline = exec::with_serial(|| gemm(a, b).unwrap());
+    assert_eq!(inline, want, "inline gemm != naive order at {tag}");
+
+    // tn/nt read the same scalars in the same ascending-k order through
+    // their transposing packs, so they must equal the same oracle bits.
+    let at = a.transpose();
+    assert_eq!(gemm_tn(&at, b).unwrap(), want, "gemm_tn != naive order at {tag}");
+    assert_eq!(
+        exec::with_serial(|| gemm_tn(&at, b).unwrap()),
+        want,
+        "inline gemm_tn != naive order at {tag}"
+    );
+    let bt = b.transpose();
+    assert_eq!(gemm_nt(a, &bt).unwrap(), want, "gemm_nt != naive order at {tag}");
+    assert_eq!(
+        exec::with_serial(|| gemm_nt(a, &bt).unwrap()),
+        want,
+        "inline gemm_nt != naive order at {tag}"
+    );
+}
+
+#[test]
+fn sampled_boundary_shapes_match_the_naive_oracle_bitwise() {
+    let ms = boundary_set(&[MR, 2 * MR, MC], &[1, 2, 3, 2 * MC + 3]);
+    let ns = boundary_set(&[NR, 2 * NR, NC], &[1, 2, 3 * NR + 5]);
+    let ks = boundary_set(&[KC], &[1, 2, 7, 33]);
+
+    let mut rng = Pcg64::seed_from_u64(0xF022);
+    let mut sampled = 0usize;
+    let (mut packed_hits, mut fallback_hits) = (0usize, 0usize);
+    while sampled < 30 {
+        let m = ms[rng.next_below(ms.len() as u64) as usize];
+        let n = ns[rng.next_below(ns.len() as u64) as usize];
+        let k = ks[rng.next_below(ks.len() as u64) as usize];
+        // Bound the naive-oracle cost so the fuzz stays test-suite fast.
+        if 2 * m * n * k > 1 << 24 {
+            continue;
+        }
+        sampled += 1;
+        if m >= MR && n >= NR && 2 * m * n * k >= PACKED_MIN_FLOPS {
+            packed_hits += 1;
+        } else {
+            fallback_hits += 1;
+        }
+        let a = Matrix::gaussian(m, k, &mut rng);
+        let b = Matrix::gaussian(k, n, &mut rng);
+        check_all_variants(&a, &b, &format!("{m}x{k}x{n}"));
+    }
+    // The sample must exercise both code paths or the fuzz proves little.
+    assert!(packed_hits >= 3, "only {packed_hits} packed-path samples");
+    assert!(fallback_hits >= 3, "only {fallback_hits} fallback-path samples");
+}
+
+#[test]
+fn exhaustive_micro_tile_remainders() {
+    // Every (m mod MR, n mod NR) remainder class around one full tile,
+    // with k straddling the KC panel edge: the micro_edge path in full.
+    let mut rng = Pcg64::seed_from_u64(0xF023);
+    for m in MR..2 * MR {
+        for n in NR..2 * NR {
+            for k in [KC - 1, KC, KC + 1] {
+                let a = Matrix::gaussian(m, k, &mut rng);
+                let b = Matrix::gaussian(k, n, &mut rng);
+                check_all_variants(&a, &b, &format!("{m}x{k}x{n}"));
+            }
+        }
+    }
+}
