@@ -1,0 +1,320 @@
+#!/usr/bin/env python3
+"""Executable specification of the ``fastlr lint`` lexer.
+
+Mirrors ``rust/src/lint/lexer.rs`` 1:1 — same byte-oriented scan, same
+segment kinds and boundaries, same ``--dump-tokens`` rendering
+(``kind line:col len`` per segment, 1-based byte columns) — so CI can
+diff the two token streams over the fixture corpus and any real source
+file. A divergence means one of the two lexers mis-handles a tricky
+token (raw strings, nested block comments, char-vs-lifetime, doc
+comments) and the lint's camouflage guarantees are broken.
+
+Run:  python3 python/sims/lint_sim.py                 (self-test)
+      python3 python/sims/lint_sim.py --dump-tokens F (token stream)
+Exit: 0 on success, 1 with a diagnostic on any violation. Stdlib only.
+"""
+
+from __future__ import annotations
+
+import sys
+
+# ----------------------------------------------------------------------
+# 1:1 port of rust/src/lint/lexer.rs
+# ----------------------------------------------------------------------
+
+CODE = "code"
+LINE_COMMENT = "line_comment"
+DOC_COMMENT = "doc_comment"
+BLOCK_COMMENT = "block_comment"
+STR = "str"
+RAW_STR = "raw_str"
+CHAR = "char"
+LIFETIME = "lifetime"
+
+COMMENT_KINDS = {LINE_COMMENT, DOC_COMMENT, BLOCK_COMMENT}
+
+SLASH = ord("/")
+STAR = ord("*")
+BANG = ord("!")
+QUOTE = ord('"')
+SQUOTE = ord("'")
+BACKSLASH = ord("\\")
+NEWLINE = ord("\n")
+HASH = ord("#")
+R_LOWER = ord("r")
+B_LOWER = ord("b")
+UNDERSCORE = ord("_")
+
+
+def is_ident(b: int) -> bool:
+    return b == UNDERSCORE or chr(b).isascii() and chr(b).isalnum()
+
+
+def is_ident_start(b: int) -> bool:
+    return b == UNDERSCORE or chr(b).isascii() and chr(b).isalpha()
+
+
+def scan_str(s: bytes, i: int) -> int:
+    """String body from just past the opening quote to past the close."""
+    n = len(s)
+    while i < n:
+        if s[i] == BACKSLASH and i + 1 < n:
+            i += 2
+        elif s[i] == QUOTE:
+            return i + 1
+        else:
+            i += 1
+    return n
+
+
+def scan_raw(s: bytes, i: int, hashes: int) -> int:
+    """Raw-string body; the terminator is a quote plus `hashes` #s."""
+    n = len(s)
+    while i < n:
+        if s[i] == QUOTE:
+            k = 0
+            while k < hashes and i + 1 + k < n and s[i + 1 + k] == HASH:
+                k += 1
+            if k == hashes:
+                return i + 1 + hashes
+        i += 1
+    return n
+
+
+def lex(src: bytes):
+    """Split a source file into (kind, start, end) segments, in order."""
+    s = src
+    n = len(s)
+    segs = []
+    code_start = 0
+    i = 0
+
+    def flush_code(upto: int) -> None:
+        if upto > code_start:
+            segs.append((CODE, code_start, upto))
+
+    while i < n:
+        c = s[i]
+        if c == SLASH and i + 1 < n and s[i + 1] == SLASH:
+            flush_code(i)
+            start = i
+            if i + 2 < n and s[i + 2] == BANG:
+                kind = DOC_COMMENT
+            elif i + 2 < n and s[i + 2] == SLASH and not (i + 3 < n and s[i + 3] == SLASH):
+                kind = DOC_COMMENT
+            else:
+                kind = LINE_COMMENT
+            i += 2
+            while i < n and s[i] != NEWLINE:
+                i += 1
+            segs.append((kind, start, i))
+            code_start = i
+        elif c == SLASH and i + 1 < n and s[i + 1] == STAR:
+            flush_code(i)
+            start = i
+            depth = 1
+            i += 2
+            while i < n and depth > 0:
+                if s[i] == SLASH and i + 1 < n and s[i + 1] == STAR:
+                    depth += 1
+                    i += 2
+                elif s[i] == STAR and i + 1 < n and s[i + 1] == SLASH:
+                    depth -= 1
+                    i += 2
+                else:
+                    i += 1
+            segs.append((BLOCK_COMMENT, start, i))
+            code_start = i
+        elif c == QUOTE:
+            flush_code(i)
+            start = i
+            i = scan_str(s, i + 1)
+            segs.append((STR, start, i))
+            code_start = i
+        elif c in (R_LOWER, B_LOWER) and (i == 0 or not is_ident(s[i - 1])):
+            if c == R_LOWER:
+                prefix, raw = 1, True
+            elif i + 1 < n and s[i + 1] == R_LOWER:
+                prefix, raw = 2, True
+            elif i + 1 < n and s[i + 1] == QUOTE:
+                prefix, raw = 1, False
+            else:
+                prefix, raw = 0, False
+            if raw:
+                j = i + prefix
+                hashes = 0
+                while j < n and s[j] == HASH:
+                    hashes += 1
+                    j += 1
+                if j < n and s[j] == QUOTE:
+                    flush_code(i)
+                    start = i
+                    i = scan_raw(s, j + 1, hashes)
+                    segs.append((RAW_STR, start, i))
+                    code_start = i
+                else:
+                    i += 1
+            elif prefix == 1:
+                flush_code(i)
+                start = i
+                i = scan_str(s, i + 2)
+                segs.append((STR, start, i))
+                code_start = i
+            else:
+                i += 1
+        elif c == SQUOTE:
+            flush_code(i)
+            start = i
+            if i + 1 < n and s[i + 1] == BACKSLASH:
+                # Step past the opening quote only — the loop consumes the
+                # backslash pair, so '\'' cannot end on its escaped quote.
+                i += 1
+                while i < n and s[i] != SQUOTE:
+                    if s[i] == BACKSLASH and i + 1 < n:
+                        i += 2
+                    else:
+                        i += 1
+                if i < n:
+                    i += 1
+                segs.append((CHAR, start, i))
+            elif i + 2 < n and s[i + 2] == SQUOTE and s[i + 1] != SQUOTE:
+                i += 3
+                segs.append((CHAR, start, i))
+            elif i + 1 < n and is_ident_start(s[i + 1]):
+                i += 1
+                while i < n and is_ident(s[i]):
+                    i += 1
+                segs.append((LIFETIME, start, i))
+            else:
+                i += 1
+                while i < n and s[i] != SQUOTE and s[i] != NEWLINE:
+                    i += 1
+                if i < n and s[i] == SQUOTE:
+                    i += 1
+                segs.append((CHAR, start, i))
+            code_start = i
+        else:
+            i += 1
+    flush_code(n)
+    return segs
+
+
+def scrub(src: bytes, segs) -> bytes:
+    """Blank every non-code byte to a space, preserving newlines."""
+    out = bytearray(src)
+    for kind, start, end in segs:
+        if kind != CODE:
+            for k in range(start, end):
+                if out[k] != NEWLINE:
+                    out[k] = ord(" ")
+    return bytes(out)
+
+
+def line_col(src: bytes, offset: int):
+    """1-based (line, byte-column) of a byte offset."""
+    line, col = 1, 1
+    for k in range(min(offset, len(src))):
+        if src[k] == NEWLINE:
+            line += 1
+            col = 1
+        else:
+            col += 1
+    return line, col
+
+
+def dump(src: bytes) -> str:
+    """`--dump-tokens` rendering, identical to the Rust side."""
+    out = []
+    for kind, start, end in lex(src):
+        line, col = line_col(src, start)
+        out.append(f"{kind} {line}:{col} {end - start}\n")
+    return "".join(out)
+
+
+# ----------------------------------------------------------------------
+# Self-test: the same cases the Rust unit tests pin, plus coverage
+# ----------------------------------------------------------------------
+
+
+def check(cond: bool, msg: str) -> None:
+    if not cond:
+        print(f"lint_sim: FAIL: {msg}", file=sys.stderr)
+        sys.exit(1)
+
+
+def kinds(src: str):
+    return [k for k, _, _ in lex(src.encode())]
+
+
+def scrubbed(src: str) -> str:
+    b = src.encode()
+    return scrub(b, lex(b)).decode()
+
+
+def self_test() -> int:
+    # Segments cover every byte, in order, for a mixed-token line.
+    src = b"fn main() { // c\n  let s = \"x\"; /* b */ let c = 'y'; }\n"
+    pos = 0
+    for kind, start, end in lex(src):
+        check(start == pos, f"gap before {kind}")
+        check(end > start, f"empty segment {kind}")
+        pos = end
+    check(pos == len(src), "segments do not cover the file")
+
+    # Raw strings hide banned substrings; code context survives.
+    s = scrubbed('let s = r#"thread::spawn " quote "# ;\n')
+    check("thread::spawn" not in s, "raw string leaked")
+    check("let s =" in s, "code scrubbed by mistake")
+
+    # Nested block comments scrub fully.
+    s = scrubbed("a /* x /* y */ Instant::now() */ b")
+    check("Instant" not in s, "nested block comment leaked")
+    check(s.endswith(" b"), "code after block comment lost")
+
+    # Char vs lifetime.
+    ks = kinds("fn f<'a>(x: &'a str) { let c = 'c'; let d = '\\''; let s = '_'; }")
+    check(ks.count(LIFETIME) == 2, f"lifetimes: {ks}")
+    check(ks.count(CHAR) == 3, f"chars: {ks}")
+
+    # Doc comment classification (rustdoc's //// rule included).
+    check(kinds("/// doc\n")[0] == DOC_COMMENT, "/// misclassified")
+    check(kinds("//! doc\n")[0] == DOC_COMMENT, "//! misclassified")
+    check(kinds("//// not doc\n")[0] == LINE_COMMENT, "//// misclassified")
+    check(kinds("// plain\n")[0] == LINE_COMMENT, "// misclassified")
+
+    # Byte and raw byte strings.
+    s = scrubbed('let a = b"x\\"y"; let b = br#"panic!("no")"#;')
+    check("panic!" not in s, "raw byte string leaked")
+
+    # Raw identifiers are code.
+    check(kinds("let r#fn = 1; let rank = r#fn;") == [CODE], "r#ident not code")
+
+    # String escapes do not end the string early.
+    s = scrubbed('let s = "a\\"b// not a comment"; // real\n')
+    check("not a comment" not in s, "escape ended string early")
+    check("real" not in s, "trailing comment leaked")
+
+    # line_col is 1-based over bytes.
+    check(line_col(b"ab\ncd", 0) == (1, 1), "line_col origin")
+    check(line_col(b"ab\ncd", 3) == (2, 1), "line_col after newline")
+
+    # dump format is stable.
+    check(
+        dump(b"// c\nx\n") == "line_comment 1:1 4\ncode 1:5 3\n",
+        f"dump format drifted: {dump(b'// c') !r}",
+    )
+
+    print("lint_sim: OK (lexer port matches the pinned contract)")
+    return 0
+
+
+def main(argv) -> int:
+    if len(argv) >= 3 and argv[1] == "--dump-tokens":
+        with open(argv[2], "rb") as f:
+            sys.stdout.write(dump(f.read()))
+        return 0
+    return self_test()
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

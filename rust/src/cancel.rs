@@ -47,11 +47,14 @@ impl CancelToken {
     }
 
     /// A live token that also fires once `budget` has elapsed from now.
+    /// A budget too large to represent as an `Instant` (e.g. a crafted
+    /// multi-century `deadline_ms`) means "no deadline" rather than the
+    /// overflow panic `Instant + Duration` would raise.
     pub fn with_deadline(budget: Duration) -> Self {
         CancelToken {
             inner: Some(Arc::new(Inner {
                 cancelled: AtomicBool::new(false),
-                deadline: Some(Instant::now() + budget),
+                deadline: crate::obs::clock::now().checked_add(budget),
             })),
         }
     }
@@ -68,12 +71,16 @@ impl CancelToken {
     /// Fire the explicit cancel flag. No-op on an inert token; idempotent.
     pub fn cancel(&self) {
         if let Some(inner) = &self.inner {
+            // Relaxed: the flag is a standalone stop signal — no other
+            // memory is published with it, and a late read only delays
+            // the stop by one iteration block.
             inner.cancelled.store(true, Ordering::Relaxed);
         }
     }
 
     /// Whether [`CancelToken::cancel`] has been called.
     pub fn is_cancelled(&self) -> bool {
+        // Relaxed: see `cancel` — the flag carries no dependent data.
         self.inner.as_ref().is_some_and(|i| i.cancelled.load(Ordering::Relaxed))
     }
 
@@ -86,7 +93,7 @@ impl CancelToken {
     /// passed).
     pub fn remaining(&self) -> Option<Duration> {
         let deadline = self.inner.as_ref()?.deadline?;
-        Some(deadline.saturating_duration_since(Instant::now()))
+        Some(deadline.saturating_duration_since(crate::obs::clock::now()))
     }
 
     /// The cooperative checkpoint: `Ok(())` to keep iterating, or the
@@ -94,11 +101,12 @@ impl CancelToken {
     /// when both have fired.
     pub fn check(&self) -> Result<()> {
         let Some(inner) = &self.inner else { return Ok(()) };
+        // Relaxed: see `cancel` — the flag carries no dependent data.
         if inner.cancelled.load(Ordering::Relaxed) {
             return Err(Error::Cancelled("job cancel token fired".into()));
         }
         if let Some(deadline) = inner.deadline {
-            if Instant::now() >= deadline {
+            if crate::obs::clock::now() >= deadline {
                 return Err(Error::DeadlineExceeded("job deadline passed".into()));
             }
         }

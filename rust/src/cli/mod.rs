@@ -8,6 +8,7 @@
 //! fastlr loadgen [--clients N] [--requests R] [--addr HOST:PORT] [--out PATH]
 //! fastlr loadgen --open-loop RATE [--duration-ms D] [--deadline-ms MS] [--out PATH]
 //! fastlr top     [--addr HOST:PORT] [--raw]
+//! fastlr lint    [PATH] [--json] [--fix-allow] [--dump-tokens FILE]
 //! fastlr exp     <table1a|table1b|table2|fig1|fig2> [--scale smoke|paper]
 //! fastlr artifacts
 //! ```
@@ -51,6 +52,14 @@ USAGE:
                  one-shot observability view of a running server: scrapes
                  GET /v1/stats and renders a compact table; --raw dumps the
                  GET /v1/metrics Prometheus-style text instead
+  fastlr lint    [PATH] [--json] [--fix-allow] [--dump-tokens FILE]
+                 static analysis: walks rust/{src,tests,benches,examples}
+                 under PATH (default .) and enforces the project invariants
+                 (threads/clock/unsafe/panic/float-reduce/atomic-ordering);
+                 exits 1 on violations; --json emits the machine-readable
+                 report, --fix-allow appends inline suppressions to every
+                 offending line, --dump-tokens prints the lexer segmentation
+                 of one file (diffed against python/sims/lint_sim.py in CI)
   fastlr exp     <table1a|table1b|table2|fig1|fig2> [--scale smoke|paper]
   fastlr artifacts
 
@@ -82,6 +91,7 @@ pub fn dispatch(argv: &[String]) -> crate::Result<i32> {
         "serve" => cmd_serve(&args),
         "loadgen" => cmd_loadgen(&args),
         "top" => cmd_top(&args),
+        "lint" => cmd_lint(&args),
         "exp" => cmd_exp(&args),
         "artifacts" => cmd_artifacts(),
         "help" | "--help" | "-h" => {
@@ -105,7 +115,7 @@ fn cmd_svd(args: &Args) -> crate::Result<i32> {
     let mut rng = Pcg64::seed_from_u64(seed);
     eprintln!("generating {m}x{n} rank-{l} gaussian product ...");
     let a = low_rank_gaussian(m, n, l, &mut rng);
-    let t0 = std::time::Instant::now();
+    let t0 = crate::obs::clock::now();
     let (sigma, label) = match method.as_str() {
         "fsvd" => {
             let out = crate::krylov::fsvd::fsvd(
@@ -149,7 +159,7 @@ fn cmd_rank(args: &Args) -> crate::Result<i32> {
     let seed = args.get_u64("seed", 42)?;
     let mut rng = Pcg64::seed_from_u64(seed);
     let a = low_rank_gaussian(m, n, l, &mut rng);
-    let t0 = std::time::Instant::now();
+    let t0 = crate::obs::clock::now();
     let est = crate::krylov::rank::estimate_rank(
         &a,
         &crate::krylov::rank::RankOptions { eps, seed, ..Default::default() },
@@ -396,6 +406,29 @@ fn top_table(addr: &str, v: &crate::server::Json) -> crate::bench_harness::Table
     t.push_row(vec!["exec tasks".into(), num(&["exec", "tasks"])]);
     t.push_row(vec!["async jobs tracked".into(), num(&["jobs_api", "tracked"])]);
     t
+}
+
+fn cmd_lint(args: &Args) -> crate::Result<i32> {
+    if let Some(file) = args.options.get("dump-tokens") {
+        print!("{}", crate::lint::dump_tokens(std::path::Path::new(file))?);
+        return Ok(0);
+    }
+    let root = args
+        .positional
+        .first()
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from("."));
+    let report = crate::lint::lint_tree(&root)?;
+    if args.has_flag("fix-allow") && !report.violations.is_empty() {
+        let n = crate::lint::apply_fix_allow(&root, &report)?;
+        eprintln!("lint: wrote {n} inline suppression(s) — justify or fix them");
+    }
+    if args.has_flag("json") {
+        println!("{}", report.render_json());
+    } else {
+        print!("{}", report.render_text());
+    }
+    Ok(if report.violations.is_empty() { 0 } else { 1 })
 }
 
 fn cmd_exp(args: &Args) -> crate::Result<i32> {

@@ -88,13 +88,13 @@ impl<T> AdmissionQueue<T> {
 
     /// `(interactive, bulk)` depths right now (racy by nature; gauges).
     pub fn depths(&self) -> (usize, usize) {
-        let g = self.lanes.lock().expect("admission lock");
+        let g = crate::sync::lock(&self.lanes);
         (g.interactive.len(), g.bulk.len())
     }
 
     /// Total queued items right now.
     pub fn len(&self) -> usize {
-        self.lanes.lock().expect("admission lock").len()
+        crate::sync::lock(&self.lanes).len()
     }
 
     /// Whether both lanes are empty.
@@ -105,7 +105,7 @@ impl<T> AdmissionQueue<T> {
     /// Admit without waiting: `Err(Full)` when at capacity — the caller
     /// sheds the job instead of queueing unbounded work.
     pub fn try_push(&self, item: T, priority: Priority) -> Result<(), PushError<T>> {
-        let mut g = self.lanes.lock().expect("admission lock");
+        let mut g = crate::sync::lock(&self.lanes);
         if g.closed {
             return Err(PushError::Closed(item));
         }
@@ -124,9 +124,9 @@ impl<T> AdmissionQueue<T> {
     /// Admit, waiting for a slot when full (backpressure). Fails only
     /// when the queue closes while waiting.
     pub fn push(&self, item: T, priority: Priority) -> Result<(), PushError<T>> {
-        let mut g = self.lanes.lock().expect("admission lock");
+        let mut g = crate::sync::lock(&self.lanes);
         while !g.closed && g.len() >= self.limit {
-            g = self.space.wait(g).expect("admission lock");
+            g = crate::sync::wait(&self.space, g);
         }
         if g.closed {
             return Err(PushError::Closed(item));
@@ -143,7 +143,7 @@ impl<T> AdmissionQueue<T> {
     /// Take the next job: interactive lane first, then bulk. Blocks
     /// while both lanes are empty; `None` once closed *and* drained.
     pub fn pop(&self) -> Option<T> {
-        let mut g = self.lanes.lock().expect("admission lock");
+        let mut g = crate::sync::lock(&self.lanes);
         loop {
             if let Some(item) = g.interactive.pop_front().or_else(|| g.bulk.pop_front()) {
                 drop(g);
@@ -153,14 +153,14 @@ impl<T> AdmissionQueue<T> {
             if g.closed {
                 return None;
             }
-            g = self.ready.wait(g).expect("admission lock");
+            g = crate::sync::wait(&self.ready, g);
         }
     }
 
     /// Close the queue: producers fail from here on, consumers drain the
     /// remainder. Idempotent.
     pub fn close(&self) {
-        let mut g = self.lanes.lock().expect("admission lock");
+        let mut g = crate::sync::lock(&self.lanes);
         g.closed = true;
         drop(g);
         self.ready.notify_all();
@@ -272,6 +272,10 @@ mod tests {
     #[test]
     fn many_producers_many_consumers_lose_nothing() {
         const PRODUCERS: usize = 4;
+        // Miri interprets every interleaving step; keep the stress small.
+        #[cfg(miri)]
+        const PER: usize = 8;
+        #[cfg(not(miri))]
         const PER: usize = 50;
         let q = Arc::new(AdmissionQueue::new(3));
         let total: usize = std::thread::scope(|scope| {

@@ -97,6 +97,8 @@ impl JobHandle {
     /// Whether a worker has picked the job up (false ⇒ still queued).
     /// Drives the async jobs API's `queued`/`running` distinction.
     pub fn started(&self) -> bool {
+        // Relaxed: a momentary stale false only reports "queued" one poll
+        // longer; no data is read through this flag.
         self.started.load(Ordering::Relaxed)
     }
 }
@@ -212,13 +214,14 @@ impl FactorizationService {
         cancel: CancelToken,
         trace: Trace,
     ) -> (QueuedJob, JobHandle) {
+        // Relaxed: unique-id ticket; atomicity alone guarantees distinct ids.
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (reply_tx, reply_rx) = sync_channel(1);
         let started = Arc::new(AtomicBool::new(false));
         let job = QueuedJob {
             id,
             request,
-            enqueued: Instant::now(),
+            enqueued: crate::obs::clock::now(),
             cancel,
             trace,
             started: started.clone(),
@@ -262,13 +265,14 @@ fn run_one(job: QueuedJob, policy: &RoutePolicy, seed: u64, metrics: &Metrics) {
     let queue_time = job.enqueued.elapsed();
     metrics.queue_wait.observe(queue_time);
     job.trace.record_at(SpanKind::Job, "queue_wait", job.enqueued, queue_time, Vec::new());
+    // Relaxed: status hint only (see `QueuedJob::started`), no payload rides on it.
     job.started.store(true, Ordering::Relaxed);
     // A job cancelled (or deadlined) while queued never reaches the
     // kernels: reply with the typed error at zero exec cost.
     let (outcome, exec_time) = match job.cancel.check() {
         Err(e) => (Err(e), std::time::Duration::ZERO),
         Ok(()) => {
-            let started = Instant::now();
+            let started = crate::obs::clock::now();
             let outcome = {
                 let _exec_span = job.trace.span(SpanKind::Job, "exec");
                 execute_traced(&job.request, policy, seed ^ job.id, &job.cancel, &job.trace)
@@ -403,7 +407,7 @@ pub fn execute_traced(
             // Golub–Reinsch has no iteration hook; honor the token at the
             // boundary so a cancelled-while-queued full SVD still stops.
             cancel.check()?;
-            let t0 = Instant::now();
+            let t0 = crate::obs::clock::now();
             let s = {
                 let _sp = trace.span(SpanKind::Stage, "full_svd");
                 svd(matrix)?
@@ -419,7 +423,7 @@ pub fn execute_traced(
         JobSpec::PartialSvd { matrix, r } => match method {
             SvdMethod::Full => {
                 cancel.check()?;
-                let t0 = Instant::now();
+                let t0 = crate::obs::clock::now();
                 let s = {
                     let _sp = trace.span(SpanKind::Stage, "full_svd");
                     svd(matrix)?

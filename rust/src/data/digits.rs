@@ -203,7 +203,7 @@ mod tests {
         let s = ds.x.as_slice();
         assert!(s.iter().all(|&p| (0.0..=1.0).contains(&p)));
         // Images are not blank and not saturated.
-        let mean: f64 = s.iter().sum::<f64>() / s.len() as f64;
+        let mean: f64 = crate::linalg::vecops::sum(s) / s.len() as f64;
         assert!(mean > 0.01 && mean < 0.6, "mean={mean}");
     }
 

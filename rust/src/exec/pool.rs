@@ -53,11 +53,17 @@ struct Job {
 // in `run_parallel`, which keeps the referent alive; every other field
 // is plain sync primitives.
 unsafe impl Send for Job {}
+// SAFETY: same argument as `Send` above — `task` is immutable once the
+// job is published, shared access happens only through `&*job.task`
+// while the submitter's latch wait pins the referent, and the remaining
+// fields (`AtomicUsize`, `Mutex`, `Condvar`, `AtomicBool`) are `Sync`.
 unsafe impl Sync for Job {}
 
 impl Job {
     /// All chunks claimed (not necessarily finished).
     fn exhausted(&self) -> bool {
+        // Relaxed: a monotone watermark used only to skip drained deques;
+        // a stale read just means one extra (harmless) claim attempt.
         self.next.load(Ordering::Relaxed) >= self.chunks
     }
 }
@@ -119,6 +125,9 @@ fn worker_loop(shared: &Shared) {
 /// submitting thread.
 fn run_chunks(job: &Job, stolen: bool) {
     loop {
+        // Relaxed: atomicity alone hands each index out exactly once;
+        // the caller's happens-before edge is the `done` mutex latch
+        // below, not this relaxed claim counter.
         let i = job.next.fetch_add(1, Ordering::Relaxed);
         if i >= job.chunks {
             break;
@@ -132,6 +141,8 @@ fn run_chunks(job: &Job, stolen: bool) {
         // touches `task` at all.)
         let task = unsafe { &*job.task };
         if catch_unwind(AssertUnwindSafe(|| task(i))).is_err() {
+            // Relaxed: the flag is read by the submitter only after the
+            // `done` latch (a mutex) already ordered this store.
             job.panicked.store(true, Ordering::Relaxed);
         }
         stats::TASKS.inc();
@@ -195,6 +206,8 @@ fn run_parallel(chunks: usize, task: &(dyn Fn(usize) + Sync)) {
     drop(done);
     // Tidy the queue so drained deques don't pile up while workers idle.
     eng.shared.queue.lock().expect("exec queue").retain(|j| !j.exhausted());
+    // Relaxed: the latch wait above synchronized with every chunk's
+    // completion, so any panic store is already visible.
     if job.panicked.load(Ordering::Relaxed) {
         panic!("exec: a parallel chunk panicked");
     }
@@ -203,7 +216,14 @@ fn run_parallel(chunks: usize, task: &(dyn Fn(usize) + Sync)) {
 /// A raw base pointer that may cross threads: chunk bodies receive
 /// disjoint sub-slices of one output buffer.
 struct SendPtr(*mut f64);
+// SAFETY: the pointer itself is plain data; every dereference site
+// re-slices it to a chunk-exclusive, in-bounds range (see the SAFETY
+// comments at the `from_raw_parts_mut` calls below), so moving the
+// wrapper across threads cannot create aliased access.
 unsafe impl Send for SendPtr {}
+// SAFETY: shared `&SendPtr` only ever reads the pointer value; mutation
+// happens through the disjoint sub-slices formed per chunk, never
+// through shared state in the wrapper.
 unsafe impl Sync for SendPtr {}
 
 /// Chunked parallel loop with disjoint output rows.
@@ -254,10 +274,10 @@ where
     let base = SendPtr(out.as_mut_ptr());
     let run = |chunk: usize| {
         let (s, e) = bounds[chunk];
+        let (at, len) = (s * width, (e - s) * width);
         // SAFETY: `bounds` ranges are disjoint and within `items`, so
         // each chunk gets an exclusive, in-bounds sub-slice of `out`.
-        let rows =
-            unsafe { std::slice::from_raw_parts_mut(base.0.add(s * width), (e - s) * width) };
+        let rows = unsafe { std::slice::from_raw_parts_mut(base.0.add(at), len) };
         body(s, e, rows);
     };
     run_parallel(bounds.len(), &run);
@@ -334,9 +354,32 @@ mod tests {
     /// Big enough to force the parallel plan regardless of shape.
     const BIG: usize = SERIAL_CUTOFF_FLOPS * 4;
 
+    /// Miri executes these tests orders of magnitude slower than native;
+    /// shrink the data (the chunk plans stay parallel — `BIG` is a flop
+    /// estimate, not a size).
+    #[cfg(not(miri))]
+    const N_FILL: usize = 10_000;
+    #[cfg(miri)]
+    const N_FILL: usize = 640;
+
+    #[cfg(not(miri))]
+    const N_REDUCE: usize = 5000;
+    #[cfg(miri)]
+    const N_REDUCE: usize = 400;
+
+    #[cfg(not(miri))]
+    const N_BITS: usize = 4096;
+    #[cfg(miri)]
+    const N_BITS: usize = 256;
+
+    #[cfg(not(miri))]
+    const GRID: usize = 64;
+    #[cfg(miri)]
+    const GRID: usize = 12;
+
     #[test]
     fn parallel_for_fills_every_row() {
-        let n = 10_000usize;
+        let n = N_FILL;
         let mut out = vec![0.0; n];
         parallel_for(BIG, &mut out, 1, |r0, _r1, rows| {
             for (i, o) in rows.iter_mut().enumerate() {
@@ -350,7 +393,7 @@ mod tests {
 
     #[test]
     fn parallel_for_aligned_chunks_start_on_the_grid() {
-        let n = 10_000usize;
+        let n = N_FILL;
         let align = 64usize;
         let mut out = vec![0.0; n];
         parallel_for_aligned(BIG, &mut out, 1, align, |r0, r1, rows| {
@@ -394,7 +437,7 @@ mod tests {
     #[test]
     fn parallel_reduce_sums_all_chunks() {
         // Each row i contributes i to every slot; total = sum 0..items.
-        let items = 5000usize;
+        let items = N_REDUCE;
         let expect = (items * (items - 1) / 2) as f64;
         let mut out = vec![0.0; 3];
         parallel_reduce(BIG, items, &mut out, |r0, r1, acc| {
@@ -413,7 +456,7 @@ mod tests {
     fn pooled_and_inline_runs_are_bit_identical() {
         // A reduction whose low-order bits depend on the merge order:
         // pooled vs with_serial must agree exactly.
-        let items = 4096usize;
+        let items = N_BITS;
         let vals: Vec<f64> = (0..items).map(|i| ((i as f64) * 0.7).sin() * 1e-3 + 1.0).collect();
         let run = || {
             let mut out = vec![0.0; 4];
@@ -433,8 +476,8 @@ mod tests {
 
     #[test]
     fn nested_calls_run_inline_and_complete() {
-        let rows = 64usize;
-        let cols = 64usize;
+        let rows = GRID;
+        let cols = GRID;
         let mut out = vec![0.0; rows * cols];
         parallel_for(BIG, &mut out, cols, |r0, _r1, block| {
             // Nested engine call from inside a chunk body: must execute
@@ -461,7 +504,7 @@ mod tests {
     #[test]
     fn chunk_panic_propagates_to_caller() {
         let caught = std::panic::catch_unwind(|| {
-            let mut out = vec![0.0; 1024];
+            let mut out = vec![0.0; N_BITS];
             parallel_for(BIG, &mut out, 1, |r0, _r1, _rows| {
                 if r0 == 0 {
                     panic!("boom");
@@ -474,7 +517,7 @@ mod tests {
     #[test]
     fn stats_record_engine_traffic() {
         let before = super::super::stats();
-        let mut out = vec![0.0; 2048];
+        let mut out = vec![0.0; N_BITS];
         parallel_for(BIG, &mut out, 1, |_r0, _r1, rows| rows.fill(1.0));
         parallel_for(1, &mut out, 1, |_r0, _r1, rows| rows.fill(2.0));
         let after = super::super::stats();
@@ -493,12 +536,12 @@ mod tests {
         assert_eq!(r, 42);
         // After the scopes, pooled execution is allowed again: just
         // exercise a call to prove the thread-local unwound.
-        let mut out = vec![0.0; 512];
+        let mut out = vec![0.0; N_BITS];
         parallel_for(BIG, &mut out, 1, |r0, _r1, rows| {
             for (i, o) in rows.iter_mut().enumerate() {
                 *o = (r0 + i) as f64;
             }
         });
-        assert_eq!(out[511], 511.0);
+        assert_eq!(out[N_BITS - 1], (N_BITS - 1) as f64);
     }
 }

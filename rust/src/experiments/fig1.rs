@@ -117,7 +117,9 @@ pub fn run_fig1(scale: Scale) -> Result<Vec<Table>> {
     // Summary row statistics appended as a second table (mean quality per
     // algorithm — the "who is accurate across the whole spectrum" claim).
     let mean = |col: usize| -> f64 {
-        table.rows.iter().map(|r| r[col].parse::<f64>().unwrap()).sum::<f64>() / p.r as f64
+        let vals: Vec<f64> =
+            table.rows.iter().map(|r| r[col].parse::<f64>().unwrap_or(f64::NAN)).collect();
+        crate::linalg::vecops::sum(&vals) / p.r as f64
     };
     let mut summary = Table::new(
         "Figure 1 summary — mean vector quality over the requested triplets",

@@ -50,7 +50,7 @@ pub fn errors(a: &Matrix, u: &Matrix, sigma: &[f64], v: &Matrix) -> Result<(f64,
         }
     }
     let num = atu.sub(&vs)?.fro_norm();
-    let den: f64 = sigma.iter().map(|s| s * s).sum::<f64>().sqrt();
+    let den: f64 = crate::linalg::vecops::sum_sq(sigma).sqrt();
     Ok((residual, num / den.max(f64::MIN_POSITIVE)))
 }
 

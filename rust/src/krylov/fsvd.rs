@@ -14,7 +14,6 @@ use crate::linalg::Matrix;
 use crate::obs::metrics::{record_stage, KernelStage};
 use crate::obs::trace::{SpanKind, Trace};
 use crate::{Error, Result};
-use std::time::Instant;
 
 /// Options for [`fsvd`].
 #[derive(Debug, Clone)]
@@ -95,11 +94,11 @@ pub fn fsvd_from_gk(a: &dyn LinOp, gk: &GkResult, r: usize) -> Result<FsvdOutput
     let kp = gk.alpha.len();
     let r = r.min(kp);
     // Line 2: eigendecomposition of B^T B (tridiagonal, O(k'^2)).
-    let t_ritz = Instant::now();
+    let t_ritz = crate::obs::clock::now();
     let (theta, g) = btb_eig(&gk.alpha, &gk.beta)?;
     record_stage(KernelStage::Ritz, t_ritz.elapsed());
     // Lines 3–4: V_2 = P·V_1, keep top r columns.
-    let t_recover = Instant::now();
+    let t_recover = crate::obs::clock::now();
     let g_r = g.submatrix(0..kp, 0..r);
     let v_r = gk.p.matmul(&g_r)?; // n x r
     // Line 5: Σ_r = sqrt of Ritz values (clamp tiny negatives from
@@ -154,7 +153,7 @@ impl FsvdOutput {
             }
         }
         let num = atu.sub(&vs)?.fro_norm();
-        let den: f64 = self.sigma.iter().map(|s| s * s).sum::<f64>().sqrt();
+        let den: f64 = crate::linalg::vecops::sum_sq(&self.sigma).sqrt();
         Ok(num / den.max(f64::MIN_POSITIVE))
     }
 

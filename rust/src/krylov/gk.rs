@@ -23,7 +23,6 @@ use crate::obs::metrics::{record_stage, KernelStage};
 use crate::obs::trace::{SpanKind, Trace};
 use crate::rng::{Pcg64, Rng};
 use crate::{Error, Result};
-use std::time::Instant;
 
 /// Options for [`gk_bidiagonalize`].
 #[derive(Debug, Clone)]
@@ -105,7 +104,7 @@ pub fn gk_bidiagonalize(a: &dyn LinOp, opts: &GkOptions) -> Result<GkResult> {
     if kmax == 0 {
         return Err(Error::InvalidArg("gk: k must be >= 1".into()));
     }
-    let t_stage = Instant::now();
+    let t_stage = crate::obs::clock::now();
     let mut stage_span = opts.trace.span(SpanKind::Stage, "gk");
     let mut rng = Pcg64::seed_from_u64(opts.seed);
 

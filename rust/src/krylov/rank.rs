@@ -12,7 +12,6 @@ use crate::linalg::tridiag::btb_eig;
 use crate::obs::metrics::{record_stage, KernelStage};
 use crate::obs::trace::Trace;
 use crate::Result;
-use std::time::Instant;
 
 /// Options for [`estimate_rank`].
 #[derive(Debug, Clone)]
@@ -82,7 +81,7 @@ pub fn estimate_rank(a: &dyn LinOp, opts: &RankOptions) -> Result<RankEstimate> 
 
 /// Algorithm 3 lines 3–4 given an existing Algorithm 1 run.
 pub fn rank_from_gk(gk: &GkResult, eps: f64) -> Result<RankEstimate> {
-    let t_ritz = Instant::now();
+    let t_ritz = crate::obs::clock::now();
     let (theta, _g) = btb_eig(&gk.alpha, &gk.beta)?;
     record_stage(KernelStage::Ritz, t_ritz.elapsed());
     // Count eigenvalues of B^T B exceeding ε (paper line 4). The

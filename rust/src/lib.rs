@@ -74,6 +74,7 @@ pub mod exec;
 pub mod experiments;
 pub mod krylov;
 pub mod linalg;
+pub mod lint;
 pub mod manifold;
 pub mod obs;
 pub mod rng;
@@ -81,6 +82,7 @@ pub mod rsl;
 pub mod rsvd;
 pub mod runtime;
 pub mod server;
+pub mod sync;
 pub mod testing;
 
 pub use cancel::CancelToken;

@@ -47,7 +47,6 @@ use crate::exec::{self, cost};
 use crate::obs::metrics::{record_gemm, GemmPath};
 use crate::{ensure_shape, Result};
 use std::cell::RefCell;
-use std::time::Instant;
 
 /// Micro-tile rows: A panels are `MR`-row column-major. `MR x NR` = 32
 /// accumulators, 8 vector registers of 4 lanes — small enough that the
@@ -340,7 +339,7 @@ pub fn gemm(a: &Matrix, b: &Matrix) -> Result<Matrix> {
     if m * n * k == 0 {
         return Ok(c);
     }
-    let start = Instant::now();
+    let start = crate::obs::clock::now();
     let (a_s, b_s) = (a.as_slice(), b.as_slice());
     let flops = cost::gemm_flops(m, n, k);
     if use_packed(m, n, k) {
@@ -374,7 +373,7 @@ pub fn gemm_tn(a: &Matrix, b: &Matrix) -> Result<Matrix> {
     if m * n * k == 0 {
         return Ok(c);
     }
-    let start = Instant::now();
+    let start = crate::obs::clock::now();
     let (a_s, b_s) = (a.as_slice(), b.as_slice());
     let flops = cost::gemm_flops(m, n, k);
     if use_packed(m, n, k) {
@@ -408,7 +407,7 @@ pub fn gemm_nt(a: &Matrix, b: &Matrix) -> Result<Matrix> {
     if m * n * k == 0 {
         return Ok(c);
     }
-    let start = Instant::now();
+    let start = crate::obs::clock::now();
     let (a_s, b_s) = (a.as_slice(), b.as_slice());
     let flops = cost::gemm_flops(m, n, k);
     if use_packed(m, n, k) {

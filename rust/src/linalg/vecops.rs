@@ -24,6 +24,29 @@ pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     s
 }
 
+/// Sum in a fixed ascending-index order — the one sanctioned scalar
+/// float reduction (`fastlr lint` rule `no-unordered-float-reduce`
+/// funnels every layer's `.sum::<f64>()` through here so rounding never
+/// depends on iterator adapters or thread count).
+#[inline]
+pub fn sum(v: &[f64]) -> f64 {
+    let mut s = 0.0;
+    for &x in v {
+        s += x;
+    }
+    s
+}
+
+/// Sum of squares in the same fixed ascending order as [`sum`].
+#[inline]
+pub fn sum_sq(v: &[f64]) -> f64 {
+    let mut s = 0.0;
+    for &x in v {
+        s += x * x;
+    }
+    s
+}
+
 /// Euclidean norm, overflow-safe for the extreme scales the rank tests use.
 pub fn norm2(v: &[f64]) -> f64 {
     let mx = v.iter().fold(0.0f64, |m, &x| m.max(x.abs()));

@@ -1,0 +1,386 @@
+//! Minimal Rust lexer for the lint pass.
+//!
+//! Not a full lexer: the rules only need to know, for every byte of a
+//! source file, whether it is *code* or camouflage (a comment, a string,
+//! a char literal, a lifetime). The tricky cases are exactly the ones
+//! that break naive grep-based checks: raw strings (`r#"…"#`) that
+//! contain banned substrings, nested block comments, `'a` lifetimes vs
+//! `'a'` char literals, and doc comments.
+//!
+//! `python/sims/lint_sim.py` is a 1:1 stdlib port of this file; CI diffs
+//! the two token streams (`fastlr lint --dump-tokens`) over the fixture
+//! corpus, so any change here must be mirrored there.
+
+/// Segment classification.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SegKind {
+    Code,
+    LineComment,
+    DocComment,
+    BlockComment,
+    Str,
+    RawStr,
+    Char,
+    Lifetime,
+}
+
+impl SegKind {
+    /// Stable name used by `--dump-tokens` (mirrored by `lint_sim.py`).
+    pub fn name(self) -> &'static str {
+        match self {
+            SegKind::Code => "code",
+            SegKind::LineComment => "line_comment",
+            SegKind::DocComment => "doc_comment",
+            SegKind::BlockComment => "block_comment",
+            SegKind::Str => "str",
+            SegKind::RawStr => "raw_str",
+            SegKind::Char => "char",
+            SegKind::Lifetime => "lifetime",
+        }
+    }
+
+    /// Comment segments carry `SAFETY:` / `lint: allow(...)` annotations.
+    pub fn is_comment(self) -> bool {
+        matches!(self, SegKind::LineComment | SegKind::DocComment | SegKind::BlockComment)
+    }
+}
+
+/// A half-open byte range `[start, end)` of one segment.
+#[derive(Debug, Clone)]
+pub struct Segment {
+    pub kind: SegKind,
+    pub start: usize,
+    pub end: usize,
+}
+
+fn is_ident(b: u8) -> bool {
+    b == b'_' || b.is_ascii_alphanumeric()
+}
+
+fn is_ident_start(b: u8) -> bool {
+    b == b'_' || b.is_ascii_alphabetic()
+}
+
+fn flush_code(segs: &mut Vec<Segment>, code_start: usize, upto: usize) {
+    if upto > code_start {
+        segs.push(Segment { kind: SegKind::Code, start: code_start, end: upto });
+    }
+}
+
+/// Scan a (byte-)string body starting just after the opening quote;
+/// returns the offset just past the closing quote.
+fn scan_str(s: &[u8], mut i: usize) -> usize {
+    let n = s.len();
+    while i < n {
+        if s[i] == b'\\' && i + 1 < n {
+            i += 2;
+        } else if s[i] == b'"' {
+            return i + 1;
+        } else {
+            i += 1;
+        }
+    }
+    n
+}
+
+/// Scan a raw-string body starting just after the opening quote; the
+/// terminator is `"` followed by `hashes` `#`s.
+fn scan_raw(s: &[u8], mut i: usize, hashes: usize) -> usize {
+    let n = s.len();
+    while i < n {
+        if s[i] == b'"' {
+            let mut k = 0usize;
+            while k < hashes && i + 1 + k < n && s[i + 1 + k] == b'#' {
+                k += 1;
+            }
+            if k == hashes {
+                return i + 1 + hashes;
+            }
+        }
+        i += 1;
+    }
+    n
+}
+
+/// Split a source file into segments covering every byte, in order.
+pub fn lex(src: &str) -> Vec<Segment> {
+    let s = src.as_bytes();
+    let n = s.len();
+    let mut segs: Vec<Segment> = Vec::new();
+    let mut code_start = 0usize;
+    let mut i = 0usize;
+    while i < n {
+        let c = s[i];
+        if c == b'/' && i + 1 < n && s[i + 1] == b'/' {
+            flush_code(&mut segs, code_start, i);
+            let start = i;
+            // `///` and `//!` are doc comments; `////…` is not (rustdoc rule).
+            let kind = if i + 2 < n && s[i + 2] == b'!' {
+                SegKind::DocComment
+            } else if i + 2 < n && s[i + 2] == b'/' && !(i + 3 < n && s[i + 3] == b'/') {
+                SegKind::DocComment
+            } else {
+                SegKind::LineComment
+            };
+            i += 2;
+            while i < n && s[i] != b'\n' {
+                i += 1;
+            }
+            segs.push(Segment { kind, start, end: i });
+            code_start = i;
+        } else if c == b'/' && i + 1 < n && s[i + 1] == b'*' {
+            flush_code(&mut segs, code_start, i);
+            let start = i;
+            let mut depth = 1usize;
+            i += 2;
+            while i < n && depth > 0 {
+                if s[i] == b'/' && i + 1 < n && s[i + 1] == b'*' {
+                    depth += 1;
+                    i += 2;
+                } else if s[i] == b'*' && i + 1 < n && s[i + 1] == b'/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+            }
+            segs.push(Segment { kind: SegKind::BlockComment, start, end: i });
+            code_start = i;
+        } else if c == b'"' {
+            flush_code(&mut segs, code_start, i);
+            let start = i;
+            i = scan_str(s, i + 1);
+            segs.push(Segment { kind: SegKind::Str, start, end: i });
+            code_start = i;
+        } else if (c == b'r' || c == b'b') && (i == 0 || !is_ident(s[i - 1])) {
+            // Possible raw string `r"…"` / `r#"…"#`, byte string `b"…"`,
+            // or raw byte string `br#"…"#`. `r#ident` (raw identifier) and
+            // a plain `r`/`b` identifier fall through as code.
+            let (prefix, raw) = if c == b'r' {
+                (1usize, true)
+            } else if i + 1 < n && s[i + 1] == b'r' {
+                (2, true)
+            } else if i + 1 < n && s[i + 1] == b'"' {
+                (1, false)
+            } else {
+                (0, false)
+            };
+            if raw {
+                let mut j = i + prefix;
+                let mut hashes = 0usize;
+                while j < n && s[j] == b'#' {
+                    hashes += 1;
+                    j += 1;
+                }
+                if j < n && s[j] == b'"' {
+                    flush_code(&mut segs, code_start, i);
+                    let start = i;
+                    i = scan_raw(s, j + 1, hashes);
+                    segs.push(Segment { kind: SegKind::RawStr, start, end: i });
+                    code_start = i;
+                } else {
+                    i += 1;
+                }
+            } else if prefix == 1 {
+                flush_code(&mut segs, code_start, i);
+                let start = i;
+                i = scan_str(s, i + 2);
+                segs.push(Segment { kind: SegKind::Str, start, end: i });
+                code_start = i;
+            } else {
+                i += 1;
+            }
+        } else if c == b'\'' {
+            flush_code(&mut segs, code_start, i);
+            let start = i;
+            if i + 1 < n && s[i + 1] == b'\\' {
+                // Escaped char literal: '\n', '\'', '\u{1F600}'. Step past
+                // the opening quote only — the loop below consumes the
+                // backslash pair, so '\'' cannot end on its escaped quote.
+                i += 1;
+                while i < n && s[i] != b'\'' {
+                    if s[i] == b'\\' && i + 1 < n {
+                        i += 2;
+                    } else {
+                        i += 1;
+                    }
+                }
+                if i < n {
+                    i += 1;
+                }
+                segs.push(Segment { kind: SegKind::Char, start, end: i });
+            } else if i + 2 < n && s[i + 2] == b'\'' && s[i + 1] != b'\'' {
+                // One-byte char literal: 'x', '0', '_' — including the
+                // ident-start bytes that would otherwise read as lifetimes.
+                i += 3;
+                segs.push(Segment { kind: SegKind::Char, start, end: i });
+            } else if i + 1 < n && is_ident_start(s[i + 1]) {
+                // Lifetime: 'a, 'static, '_ — no closing quote.
+                i += 1;
+                while i < n && is_ident(s[i]) {
+                    i += 1;
+                }
+                segs.push(Segment { kind: SegKind::Lifetime, start, end: i });
+            } else {
+                // Multibyte char literal (or stray quote): scan to the
+                // closing quote on this line.
+                i += 1;
+                while i < n && s[i] != b'\'' && s[i] != b'\n' {
+                    i += 1;
+                }
+                if i < n && s[i] == b'\'' {
+                    i += 1;
+                }
+                segs.push(Segment { kind: SegKind::Char, start, end: i });
+            }
+            code_start = i;
+        } else {
+            i += 1;
+        }
+    }
+    flush_code(&mut segs, code_start, n);
+    segs
+}
+
+/// Replace every non-code byte with a space (newlines preserved), so rule
+/// patterns can never match inside strings, comments, or char literals,
+/// while line/column positions stay exact.
+pub fn scrub(src: &str, segs: &[Segment]) -> String {
+    let mut out = src.as_bytes().to_vec();
+    for seg in segs {
+        if seg.kind != SegKind::Code {
+            for b in &mut out[seg.start..seg.end] {
+                if *b != b'\n' {
+                    *b = b' ';
+                }
+            }
+        }
+    }
+    // Non-code bytes are now ASCII spaces/newlines and code bytes came
+    // from a valid UTF-8 file at ASCII boundaries, so this cannot fail.
+    String::from_utf8(out).unwrap_or_default()
+}
+
+/// 1-based (line, byte-column) of a byte offset.
+pub fn line_col(src: &str, offset: usize) -> (usize, usize) {
+    let s = src.as_bytes();
+    let mut line = 1usize;
+    let mut col = 1usize;
+    let mut i = 0usize;
+    while i < offset && i < s.len() {
+        if s[i] == b'\n' {
+            line += 1;
+            col = 1;
+        } else {
+            col += 1;
+        }
+        i += 1;
+    }
+    (line, col)
+}
+
+/// `--dump-tokens` rendering: one `kind line:col len` row per segment.
+pub fn dump(src: &str) -> String {
+    let mut out = String::new();
+    for seg in lex(src) {
+        let (line, col) = line_col(src, seg.start);
+        out.push_str(&format!("{} {}:{} {}\n", seg.kind.name(), line, col, seg.end - seg.start));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<SegKind> {
+        lex(src).into_iter().map(|s| s.kind).collect()
+    }
+
+    fn scrubbed(src: &str) -> String {
+        scrub(src, &lex(src))
+    }
+
+    #[test]
+    fn segments_cover_every_byte_in_order() {
+        let src = "fn main() { // c\n  let s = \"x\"; /* b */ let c = 'y'; }\n";
+        let segs = lex(src);
+        let mut pos = 0usize;
+        for seg in &segs {
+            assert_eq!(seg.start, pos, "gap before {:?}", seg.kind);
+            assert!(seg.end > seg.start);
+            pos = seg.end;
+        }
+        assert_eq!(pos, src.len());
+    }
+
+    #[test]
+    fn raw_strings_hide_banned_substrings() {
+        let src = "let s = r#\"thread::spawn \" quote \"# ;\n";
+        assert!(kinds(src).contains(&SegKind::RawStr));
+        assert!(!scrubbed(src).contains("thread::spawn"));
+        assert!(scrubbed(src).contains("let s ="));
+    }
+
+    #[test]
+    fn nested_block_comments_scrub_fully() {
+        let src = "a /* x /* y */ Instant::now() */ b";
+        let segs = lex(src);
+        assert_eq!(
+            segs.iter().map(|s| s.kind).collect::<Vec<_>>(),
+            vec![SegKind::Code, SegKind::BlockComment, SegKind::Code]
+        );
+        assert!(!scrubbed(src).contains("Instant"));
+        assert!(scrubbed(src).ends_with(" b"));
+    }
+
+    #[test]
+    fn char_vs_lifetime() {
+        let src = "fn f<'a>(x: &'a str) { let c = 'c'; let d = '\\''; let s = '_'; }";
+        let segs = lex(src);
+        let lifetimes = segs.iter().filter(|s| s.kind == SegKind::Lifetime).count();
+        let chars = segs.iter().filter(|s| s.kind == SegKind::Char).count();
+        assert_eq!(lifetimes, 2, "{segs:?}");
+        assert_eq!(chars, 3, "{segs:?}");
+    }
+
+    #[test]
+    fn doc_comment_classification() {
+        assert_eq!(kinds("/// doc\n")[0], SegKind::DocComment);
+        assert_eq!(kinds("//! doc\n")[0], SegKind::DocComment);
+        assert_eq!(kinds("//// not doc\n")[0], SegKind::LineComment);
+        assert_eq!(kinds("// plain\n")[0], SegKind::LineComment);
+    }
+
+    #[test]
+    fn byte_and_raw_byte_strings() {
+        let src = "let a = b\"x\\\"y\"; let b = br#\"panic!(\"no\")\"#;";
+        assert!(!scrubbed(src).contains("panic!"));
+        let segs = lex(src);
+        assert!(segs.iter().any(|s| s.kind == SegKind::Str));
+        assert!(segs.iter().any(|s| s.kind == SegKind::RawStr));
+    }
+
+    #[test]
+    fn raw_identifier_is_code() {
+        let src = "let r#fn = 1; let rank = r#fn;";
+        assert_eq!(kinds(src), vec![SegKind::Code]);
+    }
+
+    #[test]
+    fn string_escapes_do_not_end_early() {
+        let src = "let s = \"a\\\"b// not a comment\"; // real\n";
+        let scr = scrubbed(src);
+        assert!(!scr.contains("not a comment"));
+        assert!(!scr.contains("real"));
+        assert!(scr.contains("let s ="));
+    }
+
+    #[test]
+    fn line_col_is_one_based_bytes() {
+        let src = "ab\ncd";
+        assert_eq!(line_col(src, 0), (1, 1));
+        assert_eq!(line_col(src, 3), (2, 1));
+        assert_eq!(line_col(src, 4), (2, 2));
+    }
+}

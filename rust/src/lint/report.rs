@@ -1,0 +1,140 @@
+//! Violation records and report rendering (human text + `--json`).
+
+/// One rule violation at an exact source position.
+#[derive(Debug, Clone)]
+pub struct Violation {
+    /// Rule name, e.g. `no-raw-clock`.
+    pub rule: &'static str,
+    /// Repo-relative path with `/` separators.
+    pub path: String,
+    /// 1-based line.
+    pub line: usize,
+    /// 1-based byte column of the match.
+    pub col: usize,
+    /// The pattern (or token) that matched.
+    pub matched: String,
+    /// One-line rationale for the rule.
+    pub why: &'static str,
+}
+
+/// The result of linting a tree.
+#[derive(Debug)]
+pub struct Report {
+    /// Repo-relative paths of every file scanned, sorted.
+    pub files: Vec<String>,
+    /// All violations, sorted by (path, line, col, rule).
+    pub violations: Vec<Violation>,
+    /// Number of entries in the static allowlist (reported for audit).
+    pub allowlist_entries: usize,
+}
+
+impl Report {
+    /// Human-readable rendering, one line per violation plus a summary.
+    pub fn render_text(&self) -> String {
+        let mut out = String::new();
+        for v in &self.violations {
+            out.push_str(&format!(
+                "{}:{}:{}: {}: `{}` — {}\n",
+                v.path, v.line, v.col, v.rule, v.matched, v.why
+            ));
+        }
+        if self.violations.is_empty() {
+            out.push_str(&format!(
+                "lint: clean — {} files scanned, {} allowlist entries\n",
+                self.files.len(),
+                self.allowlist_entries
+            ));
+        } else {
+            out.push_str(&format!(
+                "lint: {} violation(s) in {} files scanned\n",
+                self.violations.len(),
+                self.files.len()
+            ));
+        }
+        out
+    }
+
+    /// Machine-readable rendering for the CI artifact (`--json`).
+    pub fn render_json(&self) -> String {
+        let mut out = String::from("{\n  \"violations\": [");
+        for (i, v) in self.violations.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str(&format!(
+                "\n    {{\"rule\": \"{}\", \"path\": \"{}\", \"line\": {}, \"col\": {}, \
+                 \"matched\": \"{}\", \"why\": \"{}\"}}",
+                escape(v.rule),
+                escape(&v.path),
+                v.line,
+                v.col,
+                escape(&v.matched),
+                escape(v.why)
+            ));
+        }
+        if !self.violations.is_empty() {
+            out.push_str("\n  ");
+        }
+        out.push_str(&format!(
+            "],\n  \"files_scanned\": {},\n  \"allowlist_entries\": {},\n  \"ok\": {}\n}}",
+            self.files.len(),
+            self.allowlist_entries,
+            self.violations.is_empty()
+        ));
+        out
+    }
+}
+
+/// Minimal JSON string escaping (the report never carries exotic text).
+fn escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Report {
+        Report {
+            files: vec!["rust/src/a.rs".into()],
+            violations: vec![Violation {
+                rule: "no-raw-clock",
+                path: "rust/src/a.rs".into(),
+                line: 3,
+                col: 9,
+                matched: "Instant::now".into(),
+                why: "clock reads go through obs::clock",
+            }],
+            allowlist_entries: 4,
+        }
+    }
+
+    #[test]
+    fn text_has_file_line_col() {
+        let r = sample();
+        let t = r.render_text();
+        assert!(t.contains("rust/src/a.rs:3:9: no-raw-clock"));
+        assert!(t.contains("1 violation(s)"));
+    }
+
+    #[test]
+    fn json_parses_with_the_in_tree_codec() {
+        let r = sample();
+        let v = crate::server::Json::parse(&r.render_json()).expect("valid json");
+        assert_eq!(v.get("ok").and_then(crate::server::Json::as_bool), Some(false));
+        let clean = Report { violations: Vec::new(), ..sample() };
+        let v = crate::server::Json::parse(&clean.render_json()).expect("valid json");
+        assert_eq!(v.get("ok").and_then(crate::server::Json::as_bool), Some(true));
+    }
+}

@@ -1,0 +1,420 @@
+//! The six project invariants, their scopes, and the allowlist.
+//!
+//! All checks are *lexical*: they run over the scrubbed code text from
+//! [`super::lexer`] (strings/comments/char literals blanked), so they can
+//! never fire inside camouflage, and they skip `#[cfg(test)]` regions and
+//! everything under `rust/tests|benches|examples` for the rules that only
+//! govern production code. Known limits: the checks are not type-aware
+//! (an untyped `.sum()` over floats is invisible; only the turbofish
+//! forms are flaggable) and `.elapsed()` is deliberately not matched —
+//! it is anchored to an `Instant` that must itself come from
+//! `obs::clock::now()`.
+
+use super::lexer::{lex, line_col, scrub, SegKind};
+use super::report::Violation;
+
+/// Static, file-scoped exemptions: `(rule, repo-relative path,
+/// justification)`. The acceptance contract caps this at 10 entries;
+/// one-off sites use inline `// lint: allow(rule)` suppressions instead.
+pub const ALLOWLIST: &[(&str, &str, &str)] = &[
+    (
+        "no-raw-threads",
+        "rust/src/server/http.rs",
+        "acceptor + connection workers block on sockets; the exec pool is compute lanes only",
+    ),
+    (
+        "no-raw-threads",
+        "rust/src/server/loadgen.rs",
+        "load-generator client threads must stay independent of the server pool under test",
+    ),
+    (
+        "no-raw-threads",
+        "rust/src/coordinator/service.rs",
+        "service workers park on the admission-queue Condvar; exec-pool tasks must never block",
+    ),
+    (
+        "no-raw-threads",
+        "rust/src/coordinator/batcher.rs",
+        "the batcher pump blocks on its channel with a deadline timeout",
+    ),
+];
+
+/// Rule rationales, shown with every violation and in the README table.
+pub fn why(rule: &str) -> &'static str {
+    match rule {
+        "no-raw-threads" => {
+            "all compute threading goes through exec:: so FASTLR_THREADS stays authoritative"
+        }
+        "no-raw-clock" => {
+            "clock reads go through obs::clock so observation stays outside the determinism contract"
+        }
+        "unsafe-needs-safety" => "every unsafe block/impl documents its proof obligation",
+        "no-panic-on-request-path" => {
+            "server/coordinator code returns typed errors; a panic kills a connection worker"
+        }
+        "no-unordered-float-reduce" => {
+            "float reductions pin their order (vecops/exec merge contract); iterator sum does not"
+        }
+        "atomic-ordering-documented" => {
+            "Relaxed needs a nearby comment saying why that ordering is sufficient"
+        }
+        _ => "unknown rule",
+    }
+}
+
+/// All rule names, for suppression validation and the README table.
+pub const RULES: &[&str] = &[
+    "no-raw-threads",
+    "no-raw-clock",
+    "unsafe-needs-safety",
+    "no-panic-on-request-path",
+    "no-unordered-float-reduce",
+    "atomic-ordering-documented",
+];
+
+/// Does `rule` govern the file at repo-relative path `rel`?
+fn in_scope(rule: &str, rel: &str) -> bool {
+    match rule {
+        "no-raw-threads" => rel.starts_with("rust/src/") && !rel.starts_with("rust/src/exec/"),
+        "no-raw-clock" => {
+            rel.starts_with("rust/src/")
+                && !rel.starts_with("rust/src/obs/")
+                && !rel.starts_with("rust/src/bench_harness")
+        }
+        "unsafe-needs-safety" => true,
+        "no-panic-on-request-path" => {
+            rel.starts_with("rust/src/server/") || rel.starts_with("rust/src/coordinator/")
+        }
+        "no-unordered-float-reduce" => {
+            rel.starts_with("rust/src/")
+                && !rel.starts_with("rust/src/exec/")
+                && rel != "rust/src/linalg/vecops.rs"
+        }
+        "atomic-ordering-documented" => rel.starts_with("rust/src/"),
+        _ => false,
+    }
+}
+
+/// Rules that also apply inside test code.
+fn includes_tests(rule: &str) -> bool {
+    rule == "unsafe-needs-safety"
+}
+
+fn allowlisted(rule: &str, rel: &str) -> bool {
+    ALLOWLIST.iter().any(|(r, p, _)| *r == rule && *p == rel)
+}
+
+/// Per-line analysis context shared by every rule.
+struct FileCtx {
+    /// Scrubbed source, split into lines (0-based).
+    code: Vec<String>,
+    /// Concatenated comment text per line (0-based).
+    comments: Vec<String>,
+    /// Lines inside `#[cfg(test)]` regions (or the whole file for
+    /// `rust/tests|benches|examples`).
+    is_test: Vec<bool>,
+    /// `lint: allow(rule)` suppressions in force per line.
+    suppressed: Vec<Vec<String>>,
+}
+
+fn build_ctx(rel: &str, src: &str) -> FileCtx {
+    let segs = lex(src);
+    let scrubbed = scrub(src, &segs);
+    let code: Vec<String> = scrubbed.split('\n').map(str::to_string).collect();
+    let nlines = code.len();
+
+    let mut comments = vec![String::new(); nlines];
+    for seg in &segs {
+        if seg.kind.is_comment() {
+            let (line0, _) = line_col(src, seg.start);
+            for (k, part) in src[seg.start..seg.end].split('\n').enumerate() {
+                let idx = line0 - 1 + k;
+                if idx < nlines {
+                    comments[idx].push_str(part);
+                    comments[idx].push(' ');
+                }
+            }
+        }
+    }
+
+    let mut suppressed = vec![Vec::new(); nlines];
+    for (i, c) in comments.iter().enumerate() {
+        let mut rest = c.as_str();
+        while let Some(pos) = rest.find("lint: allow(") {
+            let after = &rest[pos + "lint: allow(".len()..];
+            if let Some(close) = after.find(')') {
+                for name in after[..close].split(',') {
+                    let name = name.trim().to_string();
+                    if !name.is_empty() {
+                        // The suppression covers its own line and the next
+                        // (comment-above style).
+                        suppressed[i].push(name.clone());
+                        if i + 1 < nlines {
+                            suppressed[i + 1].push(name);
+                        }
+                    }
+                }
+                rest = &after[close..];
+            } else {
+                break;
+            }
+        }
+    }
+
+    let whole_file_test = rel.starts_with("rust/tests/")
+        || rel.starts_with("rust/benches/")
+        || rel.starts_with("rust/examples/");
+    let is_test = if whole_file_test {
+        vec![true; nlines]
+    } else {
+        cfg_test_lines(&scrubbed, nlines)
+    };
+
+    FileCtx { code, comments, is_test, suppressed }
+}
+
+/// Mark the lines of every `#[cfg(test)] mod … { … }` region by brace
+/// matching on the scrubbed text (string/comment braces already blanked).
+fn cfg_test_lines(scrubbed: &str, nlines: usize) -> Vec<bool> {
+    let mut out = vec![false; nlines];
+    let bytes = scrubbed.as_bytes();
+    let mut search = 0usize;
+    while let Some(rel_pos) = scrubbed[search..].find("#[cfg(test)]") {
+        let attr_at = search + rel_pos;
+        let (start_line, _) = line_col(scrubbed, attr_at);
+        let mut depth = 0usize;
+        let mut saw_brace = false;
+        let mut i = attr_at + "#[cfg(test)]".len();
+        while i < bytes.len() {
+            match bytes[i] {
+                b'{' => {
+                    depth += 1;
+                    saw_brace = true;
+                }
+                b'}' => {
+                    depth = depth.saturating_sub(1);
+                    if saw_brace && depth == 0 {
+                        break;
+                    }
+                }
+                b';' if !saw_brace => break,
+                _ => {}
+            }
+            i += 1;
+        }
+        let (end_line, _) = line_col(scrubbed, i.min(bytes.len().saturating_sub(1)));
+        for l in out.iter_mut().take(end_line.min(nlines)).skip(start_line - 1) {
+            *l = true;
+        }
+        search = attr_at + 1;
+    }
+    out
+}
+
+/// Is the scrubbed line only whitespace (comment/blank) or an attribute?
+/// Used when scanning upward for a `SAFETY:` comment block.
+fn passthrough_line(ctx: &FileCtx, idx: usize) -> bool {
+    let t = ctx.code[idx].trim();
+    (t.is_empty() && !ctx.comments[idx].is_empty()) || t.starts_with("#[") || t.starts_with("#![")
+}
+
+/// Word-boundary check so `unsafe` does not match inside identifiers.
+fn word_at(line: &str, pos: usize, len: usize) -> bool {
+    let b = line.as_bytes();
+    let before_ok = pos == 0 || !(b[pos - 1] == b'_' || b[pos - 1].is_ascii_alphanumeric());
+    let after = pos + len;
+    let after_ok = after >= b.len() || !(b[after] == b'_' || b[after].is_ascii_alphanumeric());
+    before_ok && after_ok
+}
+
+/// All match positions of `pat` in `line`.
+fn find_all(line: &str, pat: &str) -> Vec<usize> {
+    let mut out = Vec::new();
+    let mut from = 0usize;
+    while let Some(p) = line[from..].find(pat) {
+        out.push(from + p);
+        from += p + 1;
+    }
+    out
+}
+
+/// Lint one file; `rel` is the repo-relative path with `/` separators.
+pub fn check_file(rel: &str, src: &str) -> Vec<Violation> {
+    if !rel.ends_with(".rs") {
+        return Vec::new();
+    }
+    let ctx = build_ctx(rel, src);
+    let mut out = Vec::new();
+
+    // Simple substring rules: (rule, patterns).
+    let simple: &[(&str, &[&str])] = &[
+        ("no-raw-threads", &["thread::spawn", "thread::scope", "thread::Builder"]),
+        ("no-raw-clock", &["Instant::now", "SystemTime"]),
+        (
+            "no-panic-on-request-path",
+            &[".unwrap()", ".expect(", "panic!", "unreachable!", "todo!", "unimplemented!"],
+        ),
+        (
+            "no-unordered-float-reduce",
+            &[".sum::<f64>()", ".sum::<f32>()", ".product::<f64>()", ".product::<f32>()"],
+        ),
+    ];
+
+    for (rule, patterns) in simple {
+        if !in_scope(rule, rel) || allowlisted(rule, rel) {
+            continue;
+        }
+        for (i, line) in ctx.code.iter().enumerate() {
+            if ctx.is_test[i] && !includes_tests(rule) {
+                continue;
+            }
+            if ctx.suppressed[i].iter().any(|s| s == rule) {
+                continue;
+            }
+            for pat in *patterns {
+                for pos in find_all(line, pat) {
+                    out.push(Violation {
+                        rule,
+                        path: rel.to_string(),
+                        line: i + 1,
+                        col: pos + 1,
+                        matched: (*pat).to_string(),
+                        why: why(rule),
+                    });
+                }
+            }
+        }
+    }
+
+    // unsafe-needs-safety: `unsafe` (word) needs `SAFETY:` in a same-line
+    // comment or in the contiguous comment/attribute block right above.
+    if in_scope("unsafe-needs-safety", rel) && !allowlisted("unsafe-needs-safety", rel) {
+        for (i, line) in ctx.code.iter().enumerate() {
+            if ctx.suppressed[i].iter().any(|s| s == "unsafe-needs-safety") {
+                continue;
+            }
+            for pos in find_all(line, "unsafe") {
+                if !word_at(line, pos, "unsafe".len()) {
+                    continue;
+                }
+                let mut ok = ctx.comments[i].contains("SAFETY:");
+                let mut j = i;
+                while !ok && j > 0 && passthrough_line(&ctx, j - 1) {
+                    j -= 1;
+                    ok = ctx.comments[j].contains("SAFETY:");
+                }
+                if !ok {
+                    out.push(Violation {
+                        rule: "unsafe-needs-safety",
+                        path: rel.to_string(),
+                        line: i + 1,
+                        col: pos + 1,
+                        matched: "unsafe".to_string(),
+                        why: why("unsafe-needs-safety"),
+                    });
+                }
+            }
+        }
+    }
+
+    // atomic-ordering-documented: `Ordering::Relaxed` needs a comment
+    // containing "relaxed" on the same line or within 3 lines above.
+    if in_scope("atomic-ordering-documented", rel)
+        && !allowlisted("atomic-ordering-documented", rel)
+    {
+        for (i, line) in ctx.code.iter().enumerate() {
+            if ctx.is_test[i] {
+                continue;
+            }
+            if ctx.suppressed[i].iter().any(|s| s == "atomic-ordering-documented") {
+                continue;
+            }
+            for pos in find_all(line, "Ordering::Relaxed") {
+                let documented = (i.saturating_sub(3)..=i)
+                    .any(|j| ctx.comments[j].to_ascii_lowercase().contains("relaxed"));
+                if !documented {
+                    out.push(Violation {
+                        rule: "atomic-ordering-documented",
+                        path: rel.to_string(),
+                        line: i + 1,
+                        col: pos + 1,
+                        matched: "Ordering::Relaxed".to_string(),
+                        why: why("atomic-ordering-documented"),
+                    });
+                }
+            }
+        }
+    }
+
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lint_src(rel: &str, src: &str) -> Vec<(usize, &'static str)> {
+        check_file(rel, src).into_iter().map(|v| (v.line, v.rule)).collect()
+    }
+
+    #[test]
+    fn scope_map_matches_the_contract() {
+        assert!(in_scope("no-raw-threads", "rust/src/server/api.rs"));
+        assert!(!in_scope("no-raw-threads", "rust/src/exec/pool.rs"));
+        assert!(!in_scope("no-raw-clock", "rust/src/obs/trace.rs"));
+        assert!(!in_scope("no-raw-clock", "rust/src/bench_harness.rs"));
+        assert!(in_scope("no-panic-on-request-path", "rust/src/coordinator/queue.rs"));
+        assert!(!in_scope("no-panic-on-request-path", "rust/src/linalg/gemm.rs"));
+        assert!(!in_scope("no-unordered-float-reduce", "rust/src/linalg/vecops.rs"));
+        assert!(in_scope("unsafe-needs-safety", "rust/tests/end_to_end.rs"));
+    }
+
+    #[test]
+    fn raw_string_does_not_fire() {
+        let src = "pub fn f() -> &'static str {\n    r#\"thread::spawn\"#\n}\n";
+        assert!(lint_src("rust/src/data/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn cfg_test_region_is_exempt() {
+        let src = "pub fn f() {}\n#[cfg(test)]\nmod tests {\n    fn g() {\n        \
+                   std::thread::spawn(|| {});\n    }\n}\n";
+        assert!(lint_src("rust/src/data/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn suppression_covers_own_and_next_line() {
+        let src = "pub fn f() {\n    // lint: allow(no-raw-threads) -- test rig only\n    \
+                   std::thread::spawn(|| {});\n}\n";
+        assert!(lint_src("rust/src/data/x.rs", src).is_empty());
+        let bare = "pub fn f() {\n    std::thread::spawn(|| {});\n}\n";
+        assert_eq!(lint_src("rust/src/data/x.rs", bare), vec![(2, "no-raw-threads")]);
+    }
+
+    #[test]
+    fn unsafe_accepts_contiguous_safety_block() {
+        let good = "// SAFETY: ptr is valid for the slice len\n#[inline]\nunsafe fn f() {}\n";
+        assert!(lint_src("rust/src/exec/x.rs", good).is_empty());
+        let bad = "fn a() {}\nunsafe fn f() {}\n";
+        assert_eq!(lint_src("rust/src/exec/x.rs", bad), vec![(2, "unsafe-needs-safety")]);
+    }
+
+    #[test]
+    fn relaxed_needs_nearby_comment() {
+        let good = "fn f(c: &A) {\n    // relaxed: standalone counter\n    \
+                    c.fetch_add(1, Ordering::Relaxed);\n}\n";
+        assert!(lint_src("rust/src/obs/m.rs", good).is_empty());
+        let bad = "fn f(c: &A) {\n    c.fetch_add(1, Ordering::Relaxed);\n}\n";
+        assert_eq!(lint_src("rust/src/obs/m.rs", bad), vec![(2, "atomic-ordering-documented")]);
+    }
+
+    #[test]
+    fn allowlist_is_small_and_justified() {
+        assert!(ALLOWLIST.len() <= 10, "allowlist grew past the contract cap");
+        for (rule, path, why) in ALLOWLIST {
+            assert!(RULES.contains(rule), "{rule}: unknown rule");
+            assert!(path.starts_with("rust/"), "{path}: not repo-relative");
+            assert!(why.len() > 20, "{rule} {path}: justification too thin");
+        }
+    }
+}

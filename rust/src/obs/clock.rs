@@ -1,0 +1,29 @@
+//! The one sanctioned monotonic-clock read.
+//!
+//! Everything outside `obs/` and the bench harness calls [`now`] instead
+//! of `Instant::now()` directly — enforced by the `fastlr lint` rule
+//! `no-raw-clock`. The determinism contract says observation must never
+//! leak into iteration arithmetic (results are bitwise identical under
+//! any `FASTLR_THREADS`); funneling every clock read through one choke
+//! point is how that stays reviewable as the codebase grows. `elapsed()`
+//! on an [`Instant`] issued here is fine and is deliberately not flagged.
+
+use std::time::Instant;
+
+/// Read the monotonic clock.
+#[inline]
+pub fn now() -> Instant {
+    Instant::now()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn now_is_monotonic() {
+        let a = now();
+        let b = now();
+        assert!(b >= a);
+    }
+}

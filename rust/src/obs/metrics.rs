@@ -54,16 +54,19 @@ impl Counter {
 
     /// Add one.
     pub fn inc(&self) {
+        // Relaxed: standalone monotone counter; no data rides on it.
         self.0.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Add `n`.
     pub fn add(&self, n: u64) {
+        // Relaxed: standalone monotone counter; no data rides on it.
         self.0.fetch_add(n, Ordering::Relaxed);
     }
 
     /// Current value.
     pub fn get(&self) -> u64 {
+        // Relaxed: telemetry read; readers tolerate a stale count.
         self.0.load(Ordering::Relaxed)
     }
 }
@@ -100,6 +103,8 @@ impl Histogram {
 
     /// Record one observation given directly in microseconds.
     pub fn observe_us(&self, us: u64) {
+        // Relaxed: independent telemetry counters; readers take unfenced
+        // relaxed snapshots and tolerate inconsistent bucket/sum/n.
         self.counts[bucket_index(us)].fetch_add(1, Ordering::Relaxed);
         self.sum_us.fetch_add(us, Ordering::Relaxed);
         self.n.fetch_add(1, Ordering::Relaxed);
@@ -107,11 +112,13 @@ impl Histogram {
 
     /// Number of observations.
     pub fn count(&self) -> u64 {
+        // Relaxed: telemetry read; staleness is acceptable.
         self.n.load(Ordering::Relaxed)
     }
 
     /// Sum of all observations, in microseconds.
     pub fn sum_us(&self) -> u64 {
+        // Relaxed: telemetry read; staleness is acceptable.
         self.sum_us.load(Ordering::Relaxed)
     }
 
@@ -135,6 +142,7 @@ impl Histogram {
         let target = (q.clamp(0.0, 1.0) * n as f64).ceil() as u64;
         let mut acc = 0u64;
         for (i, c) in self.counts.iter().enumerate() {
+            // Relaxed: quantile over an unfenced snapshot is telemetry.
             acc += c.load(Ordering::Relaxed);
             if acc >= target {
                 let us = if i < BUCKETS_US.len() { BUCKETS_US[i] } else { OVERFLOW_US };
@@ -150,11 +158,14 @@ impl Histogram {
     /// contract the PR 3 exec reductions keep.
     pub fn merge_from(&self, src: &Histogram) {
         for i in 0..NUM_BUCKETS {
+            // Relaxed: merges run after shards quiesce (joined workers), so
+            // the relaxed load sees a final value; the add is accumulation.
             let c = src.counts[i].load(Ordering::Relaxed);
             if c > 0 {
                 self.counts[i].fetch_add(c, Ordering::Relaxed);
             }
         }
+        // Relaxed: same quiesced-shard argument as the bucket loop above.
         self.sum_us.fetch_add(src.sum_us.load(Ordering::Relaxed), Ordering::Relaxed);
         self.n.fetch_add(src.n.load(Ordering::Relaxed), Ordering::Relaxed);
     }
@@ -163,6 +174,7 @@ impl Histogram {
     pub fn snapshot(&self) -> HistogramSnapshot {
         let mut counts = [0u64; NUM_BUCKETS];
         for (dst, src) in counts.iter_mut().zip(&self.counts) {
+            // Relaxed: unfenced point-in-time copy for rendering only.
             *dst = src.load(Ordering::Relaxed);
         }
         HistogramSnapshot { counts, sum_us: self.sum_us(), n: self.count() }

@@ -23,6 +23,7 @@
 //! the clock, and a live trace adds work *between* iteration arithmetic,
 //! never inside it — the determinism suite pins this.
 
+pub mod clock;
 pub mod metrics;
 pub mod trace;
 

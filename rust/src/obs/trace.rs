@@ -150,6 +150,7 @@ impl Trace {
         if g.len() < inner.cap {
             g.push(rec);
         } else {
+            // Relaxed: standalone drop counter (telemetry only).
             inner.dropped.fetch_add(1, Ordering::Relaxed);
             SPANS_DROPPED.inc();
         }
@@ -157,6 +158,7 @@ impl Trace {
 
     /// Records dropped at the buffer cap.
     pub fn dropped(&self) -> u64 {
+        // Relaxed: telemetry read; callers tolerate a stale count.
         self.inner.as_ref().map_or(0, |i| i.dropped.load(Ordering::Relaxed))
     }
 

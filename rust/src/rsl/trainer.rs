@@ -15,7 +15,6 @@ use crate::linalg::Matrix;
 use crate::manifold::{project_tangent, retract, FixedRankPoint, SvdBackend};
 use crate::rng::Pcg64;
 use crate::{Error, Result};
-use std::time::Instant;
 
 /// Options for [`train`].
 #[derive(Debug, Clone)]
@@ -109,7 +108,7 @@ pub fn train(
     let mut w = FixedRankPoint::new(u, sigma, v)?;
 
     let mut records = Vec::new();
-    let t0 = Instant::now();
+    let t0 = crate::obs::clock::now();
     for it in 1..=opts.iters {
         // Line 4: draw mini-batch.
         let batch = train_sampler.sample_batch(opts.batch, &mut rng);

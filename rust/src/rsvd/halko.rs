@@ -16,7 +16,6 @@ use crate::obs::metrics::{record_stage, KernelStage};
 use crate::obs::trace::{SpanKind, Trace};
 use crate::rng::Pcg64;
 use crate::{Error, Result};
-use std::time::Instant;
 
 /// Options for [`rsvd`].
 #[derive(Debug, Clone)]
@@ -72,7 +71,7 @@ pub fn rsvd(a: &dyn LinOp, opts: &RsvdOptions) -> Result<Svd> {
     // Stage A: find Q whose columns approximate range(A). Each block
     // step is preceded by a cooperative cancel checkpoint.
     opts.cancel.check()?;
-    let t_sketch = Instant::now();
+    let t_sketch = crate::obs::clock::now();
     let mut q = {
         let mut sp = opts.trace.span(SpanKind::Stage, "sketch");
         sp.field("l", l as f64);
@@ -83,7 +82,7 @@ pub fn rsvd(a: &dyn LinOp, opts: &RsvdOptions) -> Result<Svd> {
     record_stage(KernelStage::Sketch, t_sketch.elapsed());
     for _ in 0..opts.power_iters {
         opts.cancel.check()?;
-        let t_power = Instant::now();
+        let t_power = crate::obs::clock::now();
         let mut sp = opts.trace.span(SpanKind::Iter, "power_iter");
         // Subspace iteration with re-orthonormalization each half-step
         // (numerically stable variant of [4] Alg. 4.4).
@@ -101,7 +100,7 @@ pub fn rsvd(a: &dyn LinOp, opts: &RsvdOptions) -> Result<Svd> {
     // Stage B: SVD of the small matrix B = Qᵀ·A (l x n), formed through
     // the operator as (Aᵀ·Q)ᵀ.
     opts.cancel.check()?;
-    let t_b = Instant::now();
+    let t_b = crate::obs::clock::now();
     let _sp = opts.trace.span(SpanKind::Stage, "stage_b");
     let b = a.apply_t_block(&q)?.transpose(); // l x n
     let small = svd(&b)?;

@@ -124,7 +124,7 @@ impl ApiState {
         let jobs = Arc::new(JobsRegistry::new(256));
         let requests = Arc::new(Counter::new());
         let request_latency = Arc::new(Histogram::new());
-        let started = Instant::now();
+        let started = crate::obs::clock::now();
         let registry =
             build_registry(&service, &cache, &jobs, &requests, &request_latency, started);
         ApiState {
@@ -204,10 +204,12 @@ fn build_registry(
     }
     let c = Arc::clone(cache);
     r.counter("fastlr_cache_hits_total", "Result-cache hits", &[], move || {
+        // Relaxed: telemetry read; scrapes tolerate a stale count.
         c.hits.load(Ordering::Relaxed)
     });
     let c = Arc::clone(cache);
     r.counter("fastlr_cache_misses_total", "Result-cache misses", &[], move || {
+        // Relaxed: telemetry read; scrapes tolerate a stale count.
         c.misses.load(Ordering::Relaxed)
     });
     let c = Arc::clone(cache);
@@ -361,7 +363,7 @@ fn retry_after_secs(p50: Duration, backlog: usize, workers: usize) -> u64 {
 /// `Retry-After` when present).
 fn error_response(state: &ApiState, request_id: &str, err: ApiError) -> Response {
     {
-        let mut ring = state.last_errors.lock().expect("last-errors lock");
+        let mut ring = crate::sync::lock(&state.last_errors);
         if ring.len() >= LAST_ERRORS_CAP {
             ring.pop_front();
         }
@@ -386,7 +388,7 @@ fn error_response(state: &ApiState, request_id: &str, err: ApiError) -> Response
 /// Route one request. Pure apart from the submitted job — usable from
 /// the HTTP server and directly from tests.
 pub fn handle(state: &ApiState, req: &Request) -> Response {
-    let t0 = Instant::now();
+    let t0 = crate::obs::clock::now();
     state.requests.inc();
     let request_id = req
         .header("x-request-id")
@@ -475,13 +477,14 @@ fn histogram_json(h: &Histogram) -> Json {
 fn stats(state: &ApiState) -> Response {
     let m = &state.service.metrics;
     let flushes = {
-        let b = state.batcher.lock().expect("batcher lock");
+        let b = crate::sync::lock(&state.batcher);
+        // Relaxed: stats snapshot; a slightly stale flush count is fine.
         b.flushes.load(Ordering::Relaxed)
     };
     let e = crate::exec::stats();
     let (interactive_depth, bulk_depth) = state.service.queue_depths();
     let last_errors: Vec<Json> = {
-        let ring = state.last_errors.lock().expect("last-errors lock");
+        let ring = crate::sync::lock(&state.last_errors);
         ring.iter().cloned().collect()
     };
     Response::json(
@@ -526,6 +529,7 @@ fn stats(state: &ApiState) -> Response {
             (
                 "cache",
                 Json::obj(vec![
+                    // Relaxed: stats snapshot; counters tolerate staleness.
                     ("hits", Json::Num(state.cache.hits.load(Ordering::Relaxed) as f64)),
                     ("misses", Json::Num(state.cache.misses.load(Ordering::Relaxed) as f64)),
                     ("entries", Json::Num(state.cache.len() as f64)),
@@ -580,11 +584,20 @@ struct JobParams {
     trace: bool,
 }
 
+/// Upper bound on client-supplied `deadline_ms` (one year). Anything
+/// larger is a client bug; a 400 beats the `Instant + Duration` overflow
+/// panic that multi-century budgets once triggered in the cancel token.
+const MAX_DEADLINE_MS: usize = 31_536_000_000;
+
 fn parse_params(state: &ApiState, body: &Json) -> Result<JobParams> {
     let accuracy = parse_accuracy(body)?;
     let return_vectors = body.get("return_vectors").and_then(Json::as_bool).unwrap_or(false);
-    let client_deadline =
-        field_usize(body, "deadline_ms")?.map(|ms| Duration::from_millis(ms as u64));
+    let client_deadline = match field_usize(body, "deadline_ms")? {
+        Some(ms) if ms > MAX_DEADLINE_MS => {
+            return Err(Error::Http(format!("deadline_ms must be <= {MAX_DEADLINE_MS}, got {ms}")))
+        }
+        ms => ms.map(|ms| Duration::from_millis(ms as u64)),
+    };
     let deadline = match (client_deadline, state.default_deadline) {
         (Some(c), Some(s)) => Some(c.min(s)),
         (c, s) => c.or(s),
@@ -650,7 +663,7 @@ fn run_cached(state: &ApiState, spec: JobSpec, params: JobParams, request_id: &s
     // Traced requests always execute — the point is to observe *this*
     // run — so they skip the cache read. They still feed the cache with
     // the untraced body below.
-    let t_req = Instant::now();
+    let t_req = crate::obs::clock::now();
     let trace = if params.trace { Trace::new(DEFAULT_SPAN_CAP) } else { Trace::none() };
     if !trace.is_live() {
         // Cache hits bypass admission entirely — even async submissions
@@ -697,7 +710,7 @@ fn run_cached(state: &ApiState, spec: JobSpec, params: JobParams, request_id: &s
         && priority == Priority::Interactive
         && !trace.is_live()
     {
-        let rx = state.batcher.lock().expect("batcher lock").submit_with(request, cancel);
+        let rx = crate::sync::lock(&state.batcher).submit_with(request, cancel);
         match rx.recv() {
             Ok(r) => r,
             Err(_) => Err(Error::Service("batcher dropped the job".into())),
@@ -1206,6 +1219,7 @@ mod tests {
             r#"{"rows":2,"cols":2,"data":[1,2,3,4],"priority":"urgent"}"#, // bad priority
             r#"{"rows":2,"cols":2,"data":[1,2,3,4],"mode":"defer"}"#, // bad mode
             r#"{"rows":2,"cols":2,"data":[1,2,3,4],"deadline_ms":"soon"}"#, // bad deadline
+            r#"{"rows":2,"cols":2,"data":[1,2,3,4],"deadline_ms":99999999999999}"#, // over cap
             r#"{"rows":2,"cols":2,"data":[1,2,3,4],"trace":"yes"}"#, // non-boolean trace
         ] {
             let resp = handle(&st, &request("POST", "/v1/svd", bad));
@@ -1225,6 +1239,23 @@ mod tests {
         assert!(e.get("message").and_then(Json::as_str).is_some());
         assert!(e.get("request_id").and_then(Json::as_str).is_some());
         assert!(resp.headers.iter().any(|(k, _)| *k == "x-request-id"));
+    }
+
+    #[test]
+    fn huge_deadline_is_rejected_not_a_panic() {
+        // Regression: a deadline_ms near u64::MAX once overflowed
+        // `Instant + Duration` inside the cancel token and panicked the
+        // handler; it must be a clean 400 envelope instead.
+        let st = state();
+        let bad =
+            r#"{"rows":2,"cols":2,"data":[1,2,3,4],"r":1,"deadline_ms":18446744073709551615}"#;
+        let resp = handle(&st, &request("POST", "/v1/svd", bad));
+        assert_eq!(resp.status, 400);
+        let e = body_json(&resp).get("error").cloned().expect("envelope");
+        assert_eq!(e.get("code").and_then(Json::as_str), Some("invalid_argument"));
+        // A sane budget on the same state still completes normally.
+        let ok = r#"{"rows":2,"cols":2,"data":[1,2,3,4],"r":1,"deadline_ms":600000}"#;
+        assert_eq!(handle(&st, &request("POST", "/v1/svd", ok)).status, 200);
     }
 
     #[test]

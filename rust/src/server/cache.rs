@@ -194,16 +194,18 @@ impl ResultCache {
 
     /// Look up a fingerprint; counts the hit/miss and refreshes recency.
     pub fn get(&self, key: u64) -> Option<Json> {
-        let mut inner = self.inner.lock().expect("cache lock");
+        let mut inner = crate::sync::lock(&self.inner);
         inner.tick += 1;
         let tick = inner.tick;
         match inner.map.get_mut(&key) {
             Some(entry) => {
                 entry.last_used = tick;
+                // Relaxed: hit/miss are standalone telemetry counters.
                 self.hits.fetch_add(1, Ordering::Relaxed);
                 Some(entry.value.clone())
             }
             None => {
+                // Relaxed: telemetry counter, same as `hits` above.
                 self.misses.fetch_add(1, Ordering::Relaxed);
                 None
             }
@@ -221,7 +223,7 @@ impl ResultCache {
         if weight > self.max_bytes / 4 {
             return; // pathological payload: recompute beats hoarding it
         }
-        let mut inner = self.inner.lock().expect("cache lock");
+        let mut inner = crate::sync::lock(&self.inner);
         inner.tick += 1;
         let tick = inner.tick;
         if let Some(old) = inner.map.remove(&key) {
@@ -243,7 +245,7 @@ impl ResultCache {
 
     /// Stored entries.
     pub fn len(&self) -> usize {
-        self.inner.lock().expect("cache lock").map.len()
+        crate::sync::lock(&self.inner).map.len()
     }
 
     /// True when nothing is cached.
@@ -258,7 +260,7 @@ impl ResultCache {
 
     /// Estimated bytes currently held.
     pub fn bytes(&self) -> usize {
-        self.inner.lock().expect("cache lock").bytes
+        crate::sync::lock(&self.inner).bytes
     }
 }
 

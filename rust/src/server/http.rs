@@ -21,7 +21,7 @@ use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// Transport knobs.
 #[derive(Debug, Clone)]
@@ -209,6 +209,7 @@ impl Response {
 /// correlated across client and server logs.
 pub fn generate_request_id() -> String {
     static COUNTER: AtomicU64 = AtomicU64::new(1);
+    // Relaxed: unique-id ticket; atomicity alone guarantees distinct ids.
     let n = COUNTER.fetch_add(1, Ordering::Relaxed);
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
     for b in std::process::id()
@@ -338,7 +339,7 @@ fn worker_loop(
     loop {
         // Hold the lock only to receive; on shutdown the channel closes
         // and recv errors out.
-        let stream = match rx.lock().expect("http queue lock").recv() {
+        let stream = match crate::sync::lock(&rx).recv() {
             Ok(s) => s,
             Err(_) => break,
         };
@@ -372,9 +373,15 @@ fn serve_connection(
         }
         match read_request(&mut stream, &mut buf, shutdown, config) {
             Ok(req) => {
+                // Relaxed: standalone request counter (telemetry only).
                 requests.fetch_add(1, Ordering::Relaxed);
                 let keep = req.keep_alive();
-                let resp = handler(&req);
+                // A panicking handler must cost one 500, not the worker:
+                // unwinding out of here would kill this connection thread
+                // and shrink the pool for the rest of the process life.
+                let resp =
+                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| handler(&req)))
+                        .unwrap_or_else(|_| Response::error(500, "internal handler panic"));
                 if write_response(&mut stream, &resp, keep).is_err() || !keep {
                     break;
                 }
@@ -405,7 +412,7 @@ fn read_request(
     shutdown: &AtomicBool,
     config: &HttpConfig,
 ) -> std::result::Result<Request, ReadError> {
-    let started = Instant::now();
+    let started = crate::obs::clock::now();
     let mut chunk = [0u8; 8192];
     // Parsed head, once it has fully arrived: `(request, head_len, content_len)`.
     let mut head: Option<(Request, usize, usize)> = None;
@@ -436,13 +443,13 @@ fn read_request(
                 scanned = buf.len();
             }
         }
-        let complete = matches!(&head, Some((_, hl, cl)) if buf.len() >= hl + cl);
-        if complete {
-            let (mut req, head_len, content_len) = head.take().expect("head parsed");
-            let total = head_len + content_len;
-            req.body = buf[head_len..total].to_vec();
-            buf.drain(..total);
-            return Ok(req);
+        if matches!(&head, Some((_, hl, cl)) if buf.len() >= hl + cl) {
+            if let Some((mut req, head_len, content_len)) = head.take() {
+                let total = head_len + content_len;
+                req.body = buf[head_len..total].to_vec();
+                buf.drain(..total);
+                return Ok(req);
+            }
         }
         // Deadline checks run every pass — also after successful reads —
         // so a client trickling bytes cannot hold the worker past
@@ -776,6 +783,31 @@ mod tests {
         assert_eq!((s1, b1.as_str()), (200, "POST /a one"));
         assert_eq!((s2, b2.as_str()), (200, "GET /b "));
         assert_eq!(server.requests.load(Ordering::Relaxed), 2);
+        server.shutdown();
+    }
+
+    #[test]
+    fn handler_panic_becomes_500_and_worker_survives() {
+        let handler: Handler = Arc::new(|req: &Request| {
+            if req.path == "/boom" {
+                panic!("handler bug");
+            }
+            Response::text(200, "ok")
+        });
+        let server = HttpServer::bind(
+            "127.0.0.1:0",
+            HttpConfig { conn_workers: 1, ..Default::default() },
+            handler,
+        )
+        .unwrap();
+        let mut c = client_connect(&server.local_addr()).unwrap();
+        let (s, body) = client_call(&mut c, "GET", "/boom", None).unwrap();
+        assert_eq!(s, 500);
+        assert!(body.contains("internal"), "{body}");
+        // Same keep-alive connection — and with conn_workers=1, the same
+        // worker thread — must keep serving after the panic.
+        let (s2, _) = client_call(&mut c, "GET", "/fine", None).unwrap();
+        assert_eq!(s2, 200);
         server.shutdown();
     }
 

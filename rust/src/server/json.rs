@@ -204,7 +204,7 @@ impl Parser<'_> {
         }
     }
 
-    fn expect(&mut self, b: u8) -> Result<()> {
+    fn expect_byte(&mut self, b: u8) -> Result<()> {
         if self.peek() == Some(b) {
             self.pos += 1;
             Ok(())
@@ -240,7 +240,7 @@ impl Parser<'_> {
     }
 
     fn array(&mut self) -> Result<Json> {
-        self.expect(b'[')?;
+        self.expect_byte(b'[')?;
         self.depth += 1;
         let mut xs = Vec::new();
         self.skip_ws();
@@ -266,7 +266,7 @@ impl Parser<'_> {
     }
 
     fn object(&mut self) -> Result<Json> {
-        self.expect(b'{')?;
+        self.expect_byte(b'{')?;
         self.depth += 1;
         let mut pairs = Vec::new();
         self.skip_ws();
@@ -279,7 +279,7 @@ impl Parser<'_> {
             self.skip_ws();
             let key = self.string()?;
             self.skip_ws();
-            self.expect(b':')?;
+            self.expect_byte(b':')?;
             self.skip_ws();
             let val = self.value()?;
             pairs.push((key, val));
@@ -297,7 +297,7 @@ impl Parser<'_> {
     }
 
     fn string(&mut self) -> Result<String> {
-        self.expect(b'"')?;
+        self.expect_byte(b'"')?;
         let mut s = String::new();
         loop {
             let start = self.pos;
@@ -346,7 +346,7 @@ impl Parser<'_> {
                     // Surrogate pair: require the low half.
                     if self.peek() == Some(b'\\') {
                         self.pos += 1;
-                        self.expect(b'u')?;
+                        self.expect_byte(b'u')?;
                         let lo = self.hex4()?;
                         if !(0xDC00..0xE000).contains(&lo) {
                             return Err(self.err("invalid low surrogate"));

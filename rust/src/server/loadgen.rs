@@ -30,7 +30,7 @@ use crate::bench_harness::Table;
 use crate::obs::metrics::{Histogram, BUCKETS_US};
 use crate::{Error, Result};
 use std::net::SocketAddr;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
 /// Options for [`run`].
 #[derive(Debug, Clone)]
@@ -254,17 +254,23 @@ pub fn run_open_loop(opts: &OpenLoopOptions) -> Result<OpenLoopReport> {
             ..Default::default()
         })?),
     };
-    let addr = opts.addr.unwrap_or_else(|| local.as_ref().expect("local server").local_addr());
+    let addr = match (opts.addr, local.as_ref()) {
+        (Some(a), _) => a,
+        (None, Some(s)) => s.local_addr(),
+        // Unreachable by construction (`local` is Some whenever `addr` is
+        // None), but a typed error beats a panic on the serving path.
+        (None, None) => return Err(Error::Service("loadgen: no server to target".into())),
+    };
 
     let interval = Duration::from_secs_f64(1.0 / opts.rate);
     let n = (opts.duration.as_secs_f64() * opts.rate).ceil() as usize;
-    let t0 = Instant::now();
+    let t0 = crate::obs::clock::now();
     let (tx, rx) = std::sync::mpsc::channel::<(u16, Duration)>();
     std::thread::scope(|scope| {
         for i in 0..n {
             // Fixed-interval schedule: ticks do not wait for responses.
             let target = t0 + interval.mul_f64(i as f64);
-            if let Some(gap) = target.checked_duration_since(Instant::now()) {
+            if let Some(gap) = target.checked_duration_since(crate::obs::clock::now()) {
                 std::thread::sleep(gap);
             }
             let tx = tx.clone();
@@ -272,7 +278,7 @@ pub fn run_open_loop(opts: &OpenLoopOptions) -> Result<OpenLoopReport> {
             scope.spawn(move || {
                 // Fresh connection per request: an open-loop client must
                 // not serialize behind its own earlier requests.
-                let r0 = Instant::now();
+                let r0 = crate::obs::clock::now();
                 let status = client_connect(&addr)
                     .and_then(|mut c| client_call(&mut c, "POST", "/v1/svd", Some(&body)))
                     .map(|(status, _)| status)
@@ -364,9 +370,15 @@ pub fn run(opts: &LoadgenOptions) -> Result<LoadgenReport> {
             ..Default::default()
         })?),
     };
-    let addr = opts.addr.unwrap_or_else(|| local.as_ref().expect("local server").local_addr());
+    let addr = match (opts.addr, local.as_ref()) {
+        (Some(a), _) => a,
+        (None, Some(s)) => s.local_addr(),
+        // Unreachable by construction (`local` is Some whenever `addr` is
+        // None), but a typed error beats a panic on the serving path.
+        (None, None) => return Err(Error::Service("loadgen: no server to target".into())),
+    };
 
-    let t0 = Instant::now();
+    let t0 = crate::obs::clock::now();
     let results: Vec<Vec<(u16, Duration)>> = std::thread::scope(|scope| {
         let handles: Vec<_> = (0..opts.clients)
             .map(|client| {
@@ -378,7 +390,7 @@ pub fn run(opts: &LoadgenOptions) -> Result<LoadgenReport> {
                     };
                     for i in 0..opts.requests_per_client {
                         let (path, body) = request_for(client, i, opts.seed);
-                        let r0 = Instant::now();
+                        let r0 = crate::obs::clock::now();
                         let status = client_call(&mut conn, "POST", path, Some(&body))
                             .map(|(status, _)| status)
                             .unwrap_or(0);
@@ -388,7 +400,9 @@ pub fn run(opts: &LoadgenOptions) -> Result<LoadgenReport> {
                 })
             })
             .collect();
-        handles.into_iter().map(|h| h.join().expect("loadgen client")).collect()
+        // A panicked client thread contributes an empty sample list
+        // instead of tearing down the whole run.
+        handles.into_iter().map(|h| h.join().unwrap_or_default()).collect()
     });
     let wall = t0.elapsed();
 

@@ -1,0 +1,63 @@
+//! Poison-tolerant lock/wait helpers for the request path.
+//!
+//! Server and coordinator code must not panic (`fastlr lint` rule
+//! `no-panic-on-request-path`), and `Mutex` poisoning is the one place
+//! the std API forces a panic-or-recover decision on every call site.
+//! These helpers centralize the decision: recover the inner data. Every
+//! lock-guarded structure in this crate stays consistent under unwinding
+//! (counters, maps and queues mutated in place, no multi-step invariants
+//! held across a panic point), so continuing with a once-poisoned payload
+//! is sound — and it keeps one panicking request from wedging every later
+//! request that touches the same lock.
+
+use std::sync::{Condvar, Mutex, MutexGuard, PoisonError};
+use std::time::Duration;
+
+/// Lock a mutex, recovering the guard if a previous holder panicked.
+pub fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Condvar wait, recovering the guard if a previous holder panicked.
+pub fn wait<'a, T>(cv: &Condvar, guard: MutexGuard<'a, T>) -> MutexGuard<'a, T> {
+    cv.wait(guard).unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Condvar wait with timeout; returns the guard and whether it timed out.
+pub fn wait_timeout<'a, T>(
+    cv: &Condvar,
+    guard: MutexGuard<'a, T>,
+    dur: Duration,
+) -> (MutexGuard<'a, T>, bool) {
+    let (guard, timeout) = cv.wait_timeout(guard, dur).unwrap_or_else(PoisonError::into_inner);
+    (guard, timeout.timed_out())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::{Arc, Condvar, Mutex};
+
+    #[test]
+    fn lock_recovers_from_poison() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        assert_eq!(*lock(&m), 7);
+        *lock(&m) = 8;
+        assert_eq!(*lock(&m), 8);
+    }
+
+    #[test]
+    fn wait_timeout_reports_timeouts() {
+        let m = Mutex::new(());
+        let cv = Condvar::new();
+        let (_g, timed_out) = wait_timeout(&cv, lock(&m), Duration::from_millis(1));
+        assert!(timed_out);
+    }
+}

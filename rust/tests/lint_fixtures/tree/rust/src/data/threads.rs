@@ -1,0 +1,15 @@
+//! Lint fixture: seeded `no-raw-threads` and `no-unordered-float-reduce`
+//! violations; the doc and block comments naming banned calls must not.
+
+/// Docs may say thread::spawn freely — doc comments are not code.
+pub fn fan_out(xs: &[f64]) -> f64 {
+    let h = std::thread::spawn(move || 1.0_f64);
+    let total = xs.iter().sum::<f64>();
+    total + h.join().unwrap_or(0.0)
+}
+
+/* block comment camouflage: thread::scope, Instant::now, .sum::<f64>()
+   with a nested /* inner */ section — still one comment */
+pub fn quiet() -> usize {
+    0
+}

@@ -1,0 +1,11 @@
+//! Lint fixture: seeded `no-raw-clock` violations behind raw-string,
+//! char-literal, and lifetime camouflage the lexer must see through.
+
+pub fn timing<'a>(label: &'a str) -> usize {
+    let camo = r#"Instant::now() and SystemTime hiding in a raw string"#;
+    let tick: char = 'I';
+    let t0 = std::time::Instant::now();
+    let wall = std::time::SystemTime::now();
+    let _ = (tick, wall);
+    label.len() + camo.len() + format!("{t0:?}").len()
+}

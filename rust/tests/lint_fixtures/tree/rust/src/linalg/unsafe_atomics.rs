@@ -1,0 +1,28 @@
+//! Lint fixture: seeded `unsafe-needs-safety` and
+//! `atomic-ordering-documented` violations next to documented twins.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+// SAFETY: fixture twin — a documented unsafe fn passes the rule.
+#[inline]
+pub unsafe fn documented(p: *const u8) -> u8 {
+    *p
+}
+
+pub unsafe fn undocumented(p: *const u8) -> u8 {
+    *p
+}
+
+pub fn not_unsafe_at_all(unsafe_ish: u32) -> u32 {
+    unsafe_ish
+}
+
+pub fn documented_count(c: &AtomicU64) {
+    // Relaxed: fixture twin — a documented ordering passes.
+    c.fetch_add(1, Ordering::Relaxed);
+}
+
+pub fn undocumented_count(c: &AtomicU64) {
+    let n = c.load(Ordering::Relaxed);
+    c.store(n + 1, Ordering::Relaxed);
+}

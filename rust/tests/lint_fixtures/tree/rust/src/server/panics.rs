@@ -1,0 +1,26 @@
+//! Lint fixture: seeded `no-panic-on-request-path` violations.
+//! Never compiled — `fastlr lint` only reads it. Camouflage below
+//! (strings and comments naming .unwrap) must not fire.
+
+pub fn handler(input: Option<u32>) -> u32 {
+    let banner = "camouflage: .unwrap() and panic! inside a string";
+    let a = input.unwrap();
+    let b = input.expect("boom");
+    if a + b > 100 {
+        panic!("overflow");
+    }
+    a + b + banner.len() as u32
+}
+
+pub fn suppressed(input: Option<u32>) -> u32 {
+    // lint: allow(no-panic-on-request-path) -- fixture: inline suppression
+    input.unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_code_is_exempt() {
+        assert_eq!(super::handler(Some(1)).checked_sub(0).unwrap(), 2);
+    }
+}

@@ -1,0 +1,93 @@
+//! Integration tests for `fastlr lint`: the seeded fixture corpus under
+//! `tests/lint_fixtures/tree` must produce exactly the expected
+//! `file:line:col` diagnostics, and the real source tree must be clean.
+
+use fastlr::lint::{lint_tree, Report};
+use std::path::{Path, PathBuf};
+
+fn fixture_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/lint_fixtures/tree")
+}
+
+fn repo_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("..")
+}
+
+fn flat(report: &Report) -> Vec<(String, usize, usize, &'static str)> {
+    report.violations.iter().map(|v| (v.path.clone(), v.line, v.col, v.rule)).collect()
+}
+
+#[test]
+fn fixtures_produce_exact_diagnostics() {
+    let report = lint_tree(&fixture_root()).expect("fixture tree lints");
+    let expected: Vec<(String, usize, usize, &'static str)> = [
+        ("rust/src/data/threads.rs", 6, 18, "no-raw-threads"),
+        ("rust/src/data/threads.rs", 7, 26, "no-unordered-float-reduce"),
+        ("rust/src/krylov/clock.rs", 7, 25, "no-raw-clock"),
+        ("rust/src/krylov/clock.rs", 8, 27, "no-raw-clock"),
+        ("rust/src/linalg/unsafe_atomics.rs", 12, 5, "unsafe-needs-safety"),
+        ("rust/src/linalg/unsafe_atomics.rs", 26, 20, "atomic-ordering-documented"),
+        ("rust/src/linalg/unsafe_atomics.rs", 27, 20, "atomic-ordering-documented"),
+        ("rust/src/server/panics.rs", 7, 18, "no-panic-on-request-path"),
+        ("rust/src/server/panics.rs", 8, 18, "no-panic-on-request-path"),
+        ("rust/src/server/panics.rs", 10, 9, "no-panic-on-request-path"),
+    ]
+    .into_iter()
+    .map(|(p, l, c, r)| (p.to_string(), l, c, r))
+    .collect();
+    assert_eq!(flat(&report), expected, "\n{}", report.render_text());
+}
+
+#[test]
+fn fixture_camouflage_stays_silent() {
+    // Every seeded violation sits next to camouflage (raw strings, doc
+    // and block comments, char literals, suppressed and test-only
+    // lines); none of those may fire. The exact-match test above pins
+    // the full set, so here it is enough that no *extra* diagnostics
+    // appear on the camouflage lines.
+    let report = lint_tree(&fixture_root()).expect("fixture tree lints");
+    for v in &report.violations {
+        let silent = [
+            ("rust/src/server/panics.rs", 17),    // suppressed .unwrap()
+            ("rust/src/server/panics.rs", 24),    // .unwrap() in cfg(test)
+            ("rust/src/krylov/clock.rs", 5),      // raw-string camouflage
+            ("rust/src/data/threads.rs", 4),      // doc-comment camouflage
+            ("rust/src/data/threads.rs", 11),     // block-comment camouflage
+            ("rust/src/linalg/unsafe_atomics.rs", 8), // documented unsafe
+            ("rust/src/linalg/unsafe_atomics.rs", 16), // unsafe_ish ident
+            ("rust/src/linalg/unsafe_atomics.rs", 22), // documented Relaxed
+        ];
+        assert!(
+            !silent.iter().any(|(p, l)| v.path == *p && v.line == *l),
+            "camouflage line fired: {}:{}:{} {}",
+            v.path,
+            v.line,
+            v.col,
+            v.rule
+        );
+    }
+}
+
+#[test]
+fn real_tree_is_clean() {
+    let report = lint_tree(&repo_root()).expect("repo tree lints");
+    assert!(
+        report.violations.is_empty(),
+        "real tree must lint clean:\n{}",
+        report.render_text()
+    );
+    assert!(report.allowlist_entries <= 10, "allowlist grew past the contract cap");
+    assert!(report.files.len() > 40, "suspiciously few files scanned: {}", report.files.len());
+}
+
+#[test]
+fn json_report_round_trips() {
+    use fastlr::server::Json;
+    let report = lint_tree(&fixture_root()).expect("fixture tree lints");
+    let v = Json::parse(&report.render_json()).expect("valid JSON");
+    assert_eq!(v.get("ok").and_then(Json::as_bool), Some(false));
+    let arr = v.get("violations").and_then(Json::as_array).expect("violations");
+    assert_eq!(arr.len(), 10);
+    assert_eq!(arr[0].get("rule").and_then(Json::as_str), Some("no-raw-threads"));
+    assert_eq!(arr[0].get("line").and_then(Json::as_usize), Some(6));
+}
