@@ -296,6 +296,7 @@ fn main() {
                 svc.submit(JobRequest {
                     spec: JobSpec::PartialSvd { matrix: m.clone(), r: jr },
                     accuracy: AccuracyClass::Balanced,
+                    method: None,
                 })
                 .unwrap()
             })
@@ -315,6 +316,7 @@ fn main() {
                 batcher.submit(JobRequest {
                     spec: JobSpec::PartialSvd { matrix: m.clone(), r: jr },
                     accuracy: AccuracyClass::Balanced,
+                    method: None,
                 })
             })
             .collect();

@@ -31,6 +31,7 @@ fn main() -> fastlr::Result<()> {
             svc.submit(JobRequest {
                 spec: JobSpec::PartialSvd { matrix: a, r: 10 },
                 accuracy: AccuracyClass::Balanced,
+                method: None,
             })
             .expect("submit")
         })
@@ -50,7 +51,11 @@ fn main() -> fastlr::Result<()> {
             } else {
                 JobSpec::PartialSvd { matrix: a, r: 5 }
             };
-            batcher.submit(JobRequest { spec, accuracy: AccuracyClass::Balanced })
+            batcher.submit(JobRequest {
+                spec,
+                accuracy: AccuracyClass::Balanced,
+                method: None,
+            })
         })
         .collect();
 

@@ -1,7 +1,8 @@
 //! Command-line interface (hand-rolled parser — no clap offline).
 //!
 //! ```text
-//! fastlr svd     --rows M --cols N --rank L --r R [--method fsvd|rsvd|full]
+//! fastlr svd     --rows M --cols N --rank L --r R
+//!                [--method fsvd|rsvd|block_krylov|single_pass|full]
 //! fastlr rank    --rows M --cols N --rank L [--eps E]
 //! fastlr rsl     [--iters K] [--backend full|fsvd20|fsvd35] [--pjrt]
 //! fastlr serve   [--port P] [--workers W] [--queue Q] [--budget-ms MS] | --demo [--jobs N]
@@ -9,6 +10,7 @@
 //! fastlr loadgen --open-loop RATE [--duration-ms D] [--deadline-ms MS] [--out PATH]
 //! fastlr top     [--addr HOST:PORT] [--raw]
 //! fastlr lint    [PATH] [--json] [--fix-allow] [--dump-tokens FILE]
+//! fastlr bench-policy [--smoke] [--out PATH]
 //! fastlr exp     <table1a|table1b|table2|fig1|fig2> [--scale smoke|paper]
 //! fastlr artifacts
 //! ```
@@ -28,7 +30,8 @@ use std::sync::Arc;
 const USAGE: &str = "fastlr — accurate & fast matrix factorization for low-rank learning
 
 USAGE:
-  fastlr svd     --rows M --cols N --rank L --r R [--method fsvd|rsvd|full] [--seed S]
+  fastlr svd     --rows M --cols N --rank L --r R [--seed S]
+                 [--method fsvd|rsvd|block_krylov|single_pass|full]
   fastlr rank    --rows M --cols N --rank L [--eps E] [--seed S]
   fastlr rsl     [--iters K] [--backend full|fsvd20|fsvd35] [--pjrt]
   fastlr serve   [--host H] [--port P] [--workers W] [--conn-threads C] [--cache E]
@@ -60,6 +63,12 @@ USAGE:
                  report, --fix-allow appends inline suppressions to every
                  offending line, --dump-tokens prints the lexer segmentation
                  of one file (diffed against python/sims/lint_sim.py in CI)
+  fastlr bench-policy [--smoke] [--out PATH] [--seed S] [--workers W]
+                 runs one representative workload per routing decision
+                 through the full service path and writes the
+                 workload -> method table as BENCH_policy.json at the
+                 repo root (or --out PATH); --smoke skips the two
+                 largest dense workloads
   fastlr exp     <table1a|table1b|table2|fig1|fig2> [--scale smoke|paper]
   fastlr artifacts
 
@@ -92,6 +101,7 @@ pub fn dispatch(argv: &[String]) -> crate::Result<i32> {
         "loadgen" => cmd_loadgen(&args),
         "top" => cmd_top(&args),
         "lint" => cmd_lint(&args),
+        "bench-policy" => cmd_bench_policy(&args),
         "exp" => cmd_exp(&args),
         "artifacts" => cmd_artifacts(),
         "help" | "--help" | "-h" => {
@@ -137,6 +147,23 @@ fn cmd_svd(args: &Args) -> crate::Result<i32> {
                 &crate::rsvd::RsvdOptions { r, seed, ..Default::default() },
             )?;
             (out.truncate(r).sigma, "R-SVD")
+        }
+        "block_krylov" => {
+            use crate::solver::{BlockKrylovSolver, SolverContext, SvdSolver};
+            let solver = BlockKrylovSolver {
+                iters: crate::coordinator::policy::BLOCK_KRYLOV_ITERS,
+                block: r + crate::coordinator::policy::BLOCK_OVERSAMPLE,
+            };
+            let cx = SolverContext { seed, ..Default::default() };
+            (solver.solve(&a, r, &cx)?.sigma, "block-Krylov")
+        }
+        "single_pass" => {
+            use crate::solver::{SinglePassSolver, SolverContext, SvdSolver};
+            let solver = SinglePassSolver {
+                sketch: r + crate::coordinator::policy::SINGLE_PASS_OVERSAMPLE,
+            };
+            let cx = SolverContext { seed, ..Default::default() };
+            (solver.solve(&a, r, &cx)?.sigma, "single-pass")
         }
         "full" => (crate::linalg::svd::svd(&a)?.truncate(r).sigma, "SVD"),
         other => {
@@ -263,7 +290,7 @@ fn cmd_serve_demo(args: &Args) -> crate::Result<i32> {
                 JobSpec::PartialSvd { matrix: a, r: 8 }
             };
             let accuracy = if i % 5 == 4 { AccuracyClass::Fast } else { AccuracyClass::Balanced };
-            svc.submit(JobRequest { spec, accuracy }).expect("submit")
+            svc.submit(JobRequest { spec, accuracy, method: None }).expect("submit")
         })
         .collect();
     for h in handles {
@@ -431,6 +458,143 @@ fn cmd_lint(args: &Args) -> crate::Result<i32> {
     Ok(if report.violations.is_empty() { 0 } else { 1 })
 }
 
+/// `fastlr bench-policy`: one representative workload per routing
+/// decision, run through the full service path, persisted as a
+/// bench-harness JSON artifact (`BENCH_policy.json` at the repo root by
+/// default; CI uploads one per `FASTLR_THREADS` leg).
+fn cmd_bench_policy(args: &Args) -> crate::Result<i32> {
+    use crate::cancel::CancelToken;
+    use crate::coordinator::queue::Priority;
+    use crate::data::synth::{geometric_spectrum, sparse_low_rank_noise, with_spectrum};
+    let seed = args.get_u64("seed", 0x9011c)?;
+    let smoke = args.has_flag("smoke");
+    let svc = FactorizationService::new(ServiceConfig {
+        workers: args.get_usize("workers", 2)?,
+        seed,
+        ..Default::default()
+    })?;
+    let mut rng = Pcg64::seed_from_u64(seed);
+    let mut table = crate::bench_harness::Table::new(
+        "Routing policy — one workload per decision (service path)",
+        &["workload", "accuracy", "deadline", "method", "exec (ms)", "rel err sigma1"],
+    );
+    let mut decisions = std::collections::BTreeSet::new();
+
+    // Dense workloads with a planted spectrum so the error column is
+    // exact; sizes straddle the policy's numel cutoffs, and the last
+    // case shows deadline pressure flipping Fast to the single-pass
+    // sketch. `--smoke` drops the two workloads past the block-Krylov
+    // cutoff (the routing they exercise is pinned in policy tests).
+    let r = 10usize;
+    let dense: &[(usize, usize, AccuracyClass, Option<u64>)] = &[
+        (300, 300, AccuracyClass::Balanced, None), // -> full (tiny numel)
+        (600, 500, AccuracyClass::Balanced, None), // -> fsvd
+        (600, 500, AccuracyClass::Fast, None),     // -> rsvd
+        (1100, 1000, AccuracyClass::Fast, None),   // -> block_krylov
+        (2100, 2000, AccuracyClass::Fast, None),   // -> single_pass (numel)
+        (600, 500, AccuracyClass::Fast, Some(100)), // -> single_pass (deadline)
+    ];
+    for &(m, n, accuracy, deadline_ms) in dense {
+        if smoke && m * n >= crate::coordinator::policy::BLOCK_KRYLOV_NUMEL {
+            continue;
+        }
+        let sigma: Vec<f64> = geometric_spectrum(r, 0.7).iter().map(|s| s * 100.0).collect();
+        let a = Arc::new(with_spectrum(m, n, &sigma, &mut rng)?);
+        let cancel = match deadline_ms {
+            Some(ms) => CancelToken::with_deadline(std::time::Duration::from_millis(ms)),
+            None => CancelToken::none(),
+        };
+        let res = svc
+            .submit_with(
+                JobRequest {
+                    spec: JobSpec::PartialSvd { matrix: a, r },
+                    accuracy,
+                    method: None,
+                },
+                Priority::Interactive,
+                cancel,
+            )?
+            .wait()?;
+        push_policy_row(
+            &mut table,
+            &mut decisions,
+            &format!("dense {m}x{n} r={r}"),
+            accuracy,
+            deadline_ms,
+            &res,
+            Some(sigma[0]),
+        );
+    }
+
+    // Sparse workloads: matrix-free routing on nnz/density. ~3000 nnz
+    // at 0.1% density stays under every densify threshold.
+    let sp = Arc::new(sparse_low_rank_noise(2000, 1500, r, 0.001, 0.0, &mut rng)?);
+    for accuracy in [AccuracyClass::Fast, AccuracyClass::Balanced] {
+        let res = svc.run(JobRequest {
+            spec: JobSpec::SparsePartialSvd { matrix: sp.clone(), r },
+            accuracy,
+            method: None,
+        })?;
+        let workload = format!("sparse 2000x1500 nnz={} r={r}", sp.nnz());
+        push_policy_row(&mut table, &mut decisions, &workload, accuracy, None, &res, None);
+    }
+
+    println!("{}", table.render_markdown());
+    println!("distinct (workload -> method) decisions: {}", decisions.len());
+    let path = match args.options.get("out") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .parent()
+            .expect("rust/ lives under the repo root")
+            .join("BENCH_policy.json"),
+    };
+    table.write_json(&path)?;
+    eprintln!("wrote {}", path.display());
+    if decisions.len() < 4 {
+        return Err(crate::Error::InvalidArg(format!(
+            "policy bench exercised only {} distinct methods (want >= 4)",
+            decisions.len()
+        )));
+    }
+    Ok(0)
+}
+
+/// One `bench-policy` table row; records the routed method (which is
+/// known even when the run itself missed its deadline).
+fn push_policy_row(
+    table: &mut crate::bench_harness::Table,
+    decisions: &mut std::collections::BTreeSet<&'static str>,
+    workload: &str,
+    accuracy: AccuracyClass,
+    deadline_ms: Option<u64>,
+    res: &crate::coordinator::JobResult,
+    sigma1: Option<f64>,
+) {
+    let method = res.method.as_ref().map(|m| m.name()).unwrap_or("-");
+    if let Some(m) = &res.method {
+        decisions.insert(m.name());
+    }
+    let (time, err) = match &res.outcome {
+        Ok(crate::coordinator::job::JobOutcome::Svd(s)) => (
+            format!("{:.3}", res.exec_time.as_secs_f64() * 1e3),
+            match sigma1 {
+                Some(s1) => format!("{:.2e}", (s.sigma[0] - s1).abs() / s1),
+                None => "NA".into(),
+            },
+        ),
+        Ok(_) => (format!("{:.3}", res.exec_time.as_secs_f64() * 1e3), "NA".into()),
+        Err(e) => ("-".into(), format!("{e}")),
+    };
+    table.push_row(vec![
+        workload.into(),
+        format!("{accuracy:?}"),
+        deadline_ms.map(|ms| format!("{ms}ms")).unwrap_or_else(|| "-".into()),
+        method.into(),
+        time,
+        err,
+    ]);
+}
+
 fn cmd_exp(args: &Args) -> crate::Result<i32> {
     let Some(id) = args.positional.first() else {
         return Err(crate::Error::InvalidArg(
@@ -515,6 +679,35 @@ mod tests {
             "svd", "--rows", "50", "--cols", "50", "--rank", "5", "--method", "magic"
         ]))
         .is_err());
+    }
+
+    #[test]
+    fn svd_new_methods_run() {
+        for method in ["block_krylov", "single_pass"] {
+            let code = dispatch(&sv(&[
+                "svd", "--rows", "120", "--cols", "100", "--rank", "6", "--r", "4", "--method",
+                method,
+            ]))
+            .unwrap();
+            assert_eq!(code, 0, "{method}");
+        }
+    }
+
+    #[test]
+    fn bench_policy_smoke_writes_artifact_with_four_decisions() {
+        let path = std::env::temp_dir().join(format!("fastlr-policy-{}.json", std::process::id()));
+        let p = path.to_str().unwrap().to_string();
+        let code = dispatch(&sv(&["bench-policy", "--smoke", "--out", &p])).unwrap();
+        assert_eq!(code, 0);
+        let written = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        let v = crate::server::Json::parse(&written).unwrap();
+        let rows = v.get("rows").and_then(crate::server::Json::as_array).unwrap();
+        // --smoke keeps 4 dense + 2 sparse workloads.
+        assert_eq!(rows.len(), 6, "{written}");
+        for method in ["full", "fsvd", "rsvd", "block_krylov", "single_pass"] {
+            assert!(written.contains(method), "missing {method}: {written}");
+        }
     }
 
     #[test]

@@ -201,6 +201,7 @@ mod tests {
                 batcher.submit(JobRequest {
                     spec: JobSpec::PartialSvd { matrix: a, r: 3 },
                     accuracy: AccuracyClass::Balanced,
+                    method: None,
                 })
             })
             .collect();
@@ -220,6 +221,7 @@ mod tests {
         let rx = batcher.submit(JobRequest {
             spec: JobSpec::PartialSvd { matrix: a, r: 3 },
             accuracy: AccuracyClass::Balanced,
+            method: None,
         });
         // One lone job must still complete (deadline flush).
         let res = rx.recv_timeout(Duration::from_secs(30)).unwrap().unwrap();
@@ -244,12 +246,14 @@ mod tests {
             .submit(JobRequest {
                 spec: JobSpec::PartialSvd { matrix: big.clone(), r: 40 },
                 accuracy: AccuracyClass::Balanced,
+                method: None,
             })
             .unwrap();
         let filler = svc
             .submit(JobRequest {
                 spec: JobSpec::PartialSvd { matrix: big, r: 40 },
                 accuracy: AccuracyClass::Balanced,
+                method: None,
             })
             .unwrap();
         let batcher = Batcher::new(
@@ -260,6 +264,7 @@ mod tests {
         let rx = batcher.submit(JobRequest {
             spec: JobSpec::PartialSvd { matrix: a, r: 2 },
             accuracy: AccuracyClass::Balanced,
+            method: None,
         });
         let err = rx.recv_timeout(Duration::from_secs(30)).unwrap().unwrap_err();
         assert!(matches!(err, crate::Error::Overloaded(_)), "{err}");
@@ -276,6 +281,7 @@ mod tests {
         let rx = batcher.submit(JobRequest {
             spec: JobSpec::PartialSvd { matrix: a, r: 2 },
             accuracy: AccuracyClass::Balanced,
+            method: None,
         });
         drop(batcher);
         let res = rx.recv().unwrap().unwrap();

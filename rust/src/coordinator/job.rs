@@ -76,13 +76,18 @@ impl JobSpec {
     }
 }
 
-/// A queued request: spec + accuracy demand.
+/// A queued request: spec + accuracy demand + optional method override.
 #[derive(Debug, Clone)]
 pub struct JobRequest {
     /// The work.
     pub spec: JobSpec,
     /// How accurate the result must be (drives routing).
     pub accuracy: super::policy::AccuracyClass,
+    /// Optional routing override: pin the algorithm family instead of
+    /// letting the policy choose. The policy still picks the parameters
+    /// (k, oversampling, block width) for the pinned family. `None` is
+    /// the normal path: full policy routing.
+    pub method: Option<MethodKind>,
 }
 
 /// Which algorithm the policy chose (recorded in the result for audit).
@@ -100,6 +105,79 @@ pub enum SvdMethod {
         /// Oversampling parameter `p`.
         oversample: usize,
     },
+    /// Randomized block-Krylov SVD (Musco–Musco).
+    BlockKrylov {
+        /// Block power iterations.
+        q: usize,
+        /// Sketch block width.
+        block: usize,
+    },
+    /// Single-pass sketch SVD (Tropp–Webber).
+    SinglePass {
+        /// Range-sketch width `k` (the co-range sketch uses `2k + 1`).
+        sketch: usize,
+    },
+}
+
+impl SvdMethod {
+    /// Wire/metrics name of the algorithm family.
+    pub fn name(&self) -> &'static str {
+        self.kind().as_str()
+    }
+
+    /// The parameter-free family tag of this concrete choice.
+    pub fn kind(&self) -> MethodKind {
+        match self {
+            SvdMethod::Full => MethodKind::Full,
+            SvdMethod::Fsvd { .. } => MethodKind::Fsvd,
+            SvdMethod::Rsvd { .. } => MethodKind::Rsvd,
+            SvdMethod::BlockKrylov { .. } => MethodKind::BlockKrylov,
+            SvdMethod::SinglePass { .. } => MethodKind::SinglePass,
+        }
+    }
+}
+
+/// Algorithm family, without parameters — the client-facing override
+/// vocabulary (`method` in the API/CLI) and the per-method metrics key.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MethodKind {
+    /// Traditional Golub–Reinsch.
+    Full,
+    /// F-SVD (Algorithm 2).
+    Fsvd,
+    /// Randomized SVD (Halko).
+    Rsvd,
+    /// Randomized block-Krylov SVD (Musco–Musco).
+    BlockKrylov,
+    /// Single-pass sketch SVD (Tropp–Webber).
+    SinglePass,
+}
+
+/// Every method family, in a fixed order (metrics registries iterate it).
+pub const METHOD_KINDS: [MethodKind; 5] = [
+    MethodKind::Full,
+    MethodKind::Fsvd,
+    MethodKind::Rsvd,
+    MethodKind::BlockKrylov,
+    MethodKind::SinglePass,
+];
+
+impl MethodKind {
+    /// Wire name (`method` field in the API/CLI and metrics labels).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            MethodKind::Full => "full",
+            MethodKind::Fsvd => "fsvd",
+            MethodKind::Rsvd => "rsvd",
+            MethodKind::BlockKrylov => "block_krylov",
+            MethodKind::SinglePass => "single_pass",
+        }
+    }
+
+    /// Parse a wire name; `None` for unknown strings.
+    pub fn parse(s: &str) -> Option<MethodKind> {
+        METHOD_KINDS.into_iter().find(|k| k.as_str() == s)
+    }
 }
 
 /// A partial/full SVD outcome.
@@ -195,6 +273,9 @@ pub struct JobResult {
     pub id: JobId,
     /// Payload or the typed error (kept `Clone` for fan-out).
     pub outcome: Result<JobOutcome, JobError>,
+    /// The routing decision that ran (audit trail: present even when the
+    /// run itself failed; `None` only if the job died before routing).
+    pub method: Option<SvdMethod>,
     /// Time spent executing (excludes queueing).
     pub exec_time: Duration,
     /// Time spent in the queue before a worker picked it up.
@@ -236,10 +317,22 @@ mod tests {
         let req = JobRequest {
             spec: JobSpec::FullSvd { matrix: m.clone() },
             accuracy: AccuracyClass::Balanced,
+            method: None,
         };
         let req2 = req.clone();
         assert_eq!(Arc::strong_count(&m), 3);
         drop(req2);
         assert_eq!(Arc::strong_count(&m), 2);
+    }
+
+    #[test]
+    fn method_kind_round_trips_through_wire_names() {
+        for kind in METHOD_KINDS {
+            assert_eq!(MethodKind::parse(kind.as_str()), Some(kind));
+        }
+        assert_eq!(MethodKind::parse("halko"), None);
+        assert_eq!(SvdMethod::BlockKrylov { q: 4, block: 26 }.name(), "block_krylov");
+        assert_eq!(SvdMethod::SinglePass { sketch: 30 }.name(), "single_pass");
+        assert_eq!(SvdMethod::Fsvd { k: 9 }.kind(), MethodKind::Fsvd);
     }
 }

@@ -7,6 +7,7 @@
 //! numbers the workers write. `LatencyHistogram` remains as an alias for
 //! source compatibility.
 
+use super::job::{MethodKind, METHOD_KINDS};
 use crate::obs::metrics::{Counter, Histogram};
 
 /// Fixed-bucket latency histogram (alias of the obs primitive; kept so
@@ -28,6 +29,11 @@ pub struct Metrics {
     pub cancelled: Counter,
     /// Jobs stopped because their deadline passed.
     pub deadline_exceeded: Counter,
+    /// Jobs routed per algorithm family, indexed by the position of the
+    /// [`MethodKind`] in [`METHOD_KINDS`] (use [`Metrics::method`]).
+    /// Ticks at routing time, so failed runs still count toward the
+    /// method that ran them.
+    pub by_method: [Counter; METHOD_KINDS.len()],
     /// Queue-wait distribution.
     pub queue_wait: LatencyHistogram,
     /// Execution-time distribution.
@@ -35,11 +41,26 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// The routed-jobs counter for one algorithm family.
+    pub fn method(&self, kind: MethodKind) -> &Counter {
+        let idx = METHOD_KINDS
+            .iter()
+            .position(|k| *k == kind)
+            .expect("every MethodKind appears in METHOD_KINDS");
+        &self.by_method[idx]
+    }
+
     /// Point-in-time snapshot rendered as a human-readable block.
     pub fn render(&self) -> String {
+        let methods = METHOD_KINDS
+            .iter()
+            .map(|k| format!("{}={}", k.as_str(), self.method(*k).get()))
+            .collect::<Vec<_>>()
+            .join(" ");
         format!(
             "jobs: submitted={} completed={} failed={}\n\
              admission: shed={} cancelled={} deadline_exceeded={}\n\
+             methods: {}\n\
              queue_wait: mean={:?} p50={:?} p99={:?}\n\
              exec_time:  mean={:?} p50={:?} p99={:?}",
             self.submitted.get(),
@@ -48,6 +69,7 @@ impl Metrics {
             self.shed.get(),
             self.cancelled.get(),
             self.deadline_exceeded.get(),
+            methods,
             self.queue_wait.mean(),
             self.queue_wait.quantile(0.5),
             self.queue_wait.quantile(0.99),
@@ -73,12 +95,28 @@ mod tests {
         m.completed.add(6);
         m.failed.inc();
         m.shed.add(3);
+        m.method(MethodKind::BlockKrylov).add(2);
         m.exec_time.observe(Duration::from_micros(900));
         let s = m.render();
         assert!(s.contains("submitted=7"));
         assert!(s.contains("failed=1"));
         assert!(s.contains("shed=3"));
+        assert!(s.contains("block_krylov=2"));
+        assert!(s.contains("single_pass=0"));
         assert!(s.contains("exec_time"));
+    }
+
+    #[test]
+    fn per_method_counters_are_independent() {
+        let m = Metrics::default();
+        for kind in METHOD_KINDS {
+            assert_eq!(m.method(kind).get(), 0);
+        }
+        m.method(MethodKind::Fsvd).inc();
+        m.method(MethodKind::SinglePass).add(4);
+        assert_eq!(m.method(MethodKind::Fsvd).get(), 1);
+        assert_eq!(m.method(MethodKind::SinglePass).get(), 4);
+        assert_eq!(m.method(MethodKind::Rsvd).get(), 0);
     }
 
     #[test]

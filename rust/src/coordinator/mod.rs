@@ -6,9 +6,11 @@
 //!
 //! * [`job`]     — typed job specs (partial SVD / rank estimate / full SVD)
 //!   and results.
-//! * [`policy`]  — routing: picks traditional SVD, F-SVD or R-SVD per job
-//!   from its size, requested triplets and accuracy class (the decision
-//!   procedure the paper's §6 tables imply).
+//! * [`policy`]  — routing: picks traditional SVD, F-SVD, R-SVD,
+//!   block-Krylov or single-pass sketch per job from its shape,
+//!   nnz/density, accuracy class and remaining deadline budget (the
+//!   decision procedure the paper's §6 tables imply, extended to the
+//!   full portfolio), honoring client method overrides.
 //! * [`service`] — worker pool + admission queue; submit returns a handle
 //!   that resolves to the result.
 //! * [`queue`]   — the bounded two-lane admission queue itself: shared
@@ -24,7 +26,8 @@ pub mod queue;
 pub mod service;
 
 pub use job::{
-    JobError, JobErrorKind, JobId, JobRequest, JobResult, JobSpec, SvdMethod, SvdResult,
+    JobError, JobErrorKind, JobId, JobRequest, JobResult, JobSpec, MethodKind, SvdMethod,
+    SvdResult, METHOD_KINDS,
 };
 pub use policy::{AccuracyClass, RoutePolicy};
 pub use queue::{AdmissionQueue, Priority, PushError};

@@ -1,16 +1,64 @@
-//! Algorithm routing policy.
+//! Algorithm routing policy: the real chooser over the method portfolio.
 //!
-//! Encodes the decision procedure the paper's evaluation implies:
+//! Encodes the decision procedure the paper's evaluation implies, extended
+//! to the full portfolio:
 //!
 //! * tiny inputs → traditional SVD (its constant factors win below ~1e5
 //!   entries, Table 1b first row);
 //! * accuracy-sensitive jobs (the default, and anything feeding Riemannian
 //!   optimization — §6.3 notes R-SVD "can not be used" there) → **F-SVD**
 //!   with `k = r + slack` Krylov iterations;
-//! * throughput-over-accuracy jobs → R-SVD with the Halko default `p=10`;
-//! * `Exact` → traditional SVD regardless of size.
+//! * throughput-over-accuracy (`Fast`) jobs pick along two axes:
+//!   - a tight deadline budget or a huge operator → **single-pass** sketch
+//!     (Tropp–Webber): one pass over `A`, fixed cost, no iteration;
+//!   - large-but-revisitable dense operators → **block-Krylov**
+//!     (Musco–Musco): better accuracy per block product than Halko;
+//!   - everything else → plain **R-SVD** with the Halko default `p = 10`;
+//! * sparse inputs never densify: `Exact`/`Balanced` go matrix-free F-SVD,
+//!   `Fast` picks among the sketches by density and nnz;
+//! * `Exact` (dense) → traditional SVD regardless of size.
+//!
+//! The thresholds below are `pub const` and mirrored 1:1 by
+//! `python/sims/portfolio_sim.py`, which re-derives the decision table
+//! from this file's source and pins it against the same workloads the
+//! Rust unit tests pin (`decision_table_is_pinned`). Change a constant
+//! here and the sim fails until the table is re-derived.
 
-use super::job::{JobSpec, SvdMethod};
+use super::job::{JobSpec, MethodKind, SvdMethod};
+use crate::{Error, Result};
+use std::time::Duration;
+
+/// Below this many entries traditional SVD is used outright (~500x500).
+pub const FULL_SVD_NUMEL_CUTOFF: usize = 250_000;
+/// Krylov slack: F-SVD runs `k = r + slack` iterations.
+pub const FSVD_SLACK: usize = 10;
+/// Hard cap on F-SVD iterations.
+pub const FSVD_MAX_K: usize = 400;
+/// R-SVD oversampling for `Fast` jobs (Halko's default).
+pub const RSVD_OVERSAMPLE: usize = 10;
+/// Dense `Fast` jobs at or above this many entries take block-Krylov:
+/// the extra accuracy per block product starts paying for the per-step
+/// QR once the operator products dominate.
+pub const BLOCK_KRYLOV_NUMEL: usize = 1_000_000;
+/// Dense `Fast` jobs at or above this many entries take the single-pass
+/// sketch: at this size revisiting `A` for power/Krylov iterations costs
+/// more than the sketch-quality loss.
+pub const SINGLE_PASS_NUMEL: usize = 4_000_000;
+/// Block power iterations `q` for routed block-Krylov jobs.
+pub const BLOCK_KRYLOV_ITERS: usize = 4;
+/// Block-Krylov sketch width is `r + BLOCK_OVERSAMPLE`.
+pub const BLOCK_OVERSAMPLE: usize = 6;
+/// Single-pass range-sketch width is `r + SINGLE_PASS_OVERSAMPLE`.
+pub const SINGLE_PASS_OVERSAMPLE: usize = 10;
+/// Sparse `Fast` jobs with at least this many nonzeros take the
+/// single-pass sketch (two spmv sweeps total, never revisited).
+pub const SPARSE_NNZ_SINGLE_PASS: usize = 2_000_000;
+/// Sparse inputs denser than this fraction behave like dense ones for
+/// sketching: plain R-SVD wins over block-Krylov's extra sweeps.
+pub const DENSE_DENSITY: f64 = 0.25;
+/// A remaining deadline budget under this is "tight": `Fast` jobs go
+/// single-pass, whose cost is one data pass + small-matrix work.
+pub const TIGHT_DEADLINE_MS: u64 = 250;
 
 /// Client-declared accuracy demand.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -20,72 +68,126 @@ pub enum AccuracyClass {
     /// Accurate singular values *and* vectors across the spectrum — the
     /// paper's F-SVD target regime.
     Balanced,
-    /// Speed matters more than tail accuracy (R-SVD regime).
+    /// Speed matters more than tail accuracy (sketch regime).
     Fast,
 }
 
-/// Tunable routing policy.
+/// Tunable routing policy. Defaults come from the `pub const` thresholds
+/// above (the constants are the spec; the fields let tests and deployments
+/// shift individual knobs).
 #[derive(Debug, Clone)]
 pub struct RoutePolicy {
-    /// Below this many entries traditional SVD is used outright.
+    /// See [`FULL_SVD_NUMEL_CUTOFF`].
     pub full_svd_numel_cutoff: usize,
-    /// Krylov slack: F-SVD runs `k = r + slack` iterations.
+    /// See [`FSVD_SLACK`].
     pub fsvd_slack: usize,
-    /// Hard cap on F-SVD iterations.
+    /// See [`FSVD_MAX_K`].
     pub fsvd_max_k: usize,
-    /// R-SVD oversampling for `Fast` jobs.
+    /// See [`RSVD_OVERSAMPLE`].
     pub rsvd_oversample: usize,
+    /// See [`BLOCK_KRYLOV_NUMEL`].
+    pub block_krylov_numel: usize,
+    /// See [`SINGLE_PASS_NUMEL`].
+    pub single_pass_numel: usize,
+    /// See [`BLOCK_KRYLOV_ITERS`].
+    pub block_krylov_iters: usize,
+    /// See [`BLOCK_OVERSAMPLE`].
+    pub block_oversample: usize,
+    /// See [`SINGLE_PASS_OVERSAMPLE`].
+    pub single_pass_oversample: usize,
+    /// See [`SPARSE_NNZ_SINGLE_PASS`].
+    pub sparse_nnz_single_pass: usize,
+    /// See [`DENSE_DENSITY`].
+    pub dense_density: f64,
+    /// See [`TIGHT_DEADLINE_MS`].
+    pub tight_deadline: Duration,
 }
 
 impl Default for RoutePolicy {
     fn default() -> Self {
         RoutePolicy {
-            full_svd_numel_cutoff: 250_000, // ~500x500
-            fsvd_slack: 10,
-            fsvd_max_k: 400,
-            rsvd_oversample: 10,
+            full_svd_numel_cutoff: FULL_SVD_NUMEL_CUTOFF,
+            fsvd_slack: FSVD_SLACK,
+            fsvd_max_k: FSVD_MAX_K,
+            rsvd_oversample: RSVD_OVERSAMPLE,
+            block_krylov_numel: BLOCK_KRYLOV_NUMEL,
+            single_pass_numel: SINGLE_PASS_NUMEL,
+            block_krylov_iters: BLOCK_KRYLOV_ITERS,
+            block_oversample: BLOCK_OVERSAMPLE,
+            single_pass_oversample: SINGLE_PASS_OVERSAMPLE,
+            sparse_nnz_single_pass: SPARSE_NNZ_SINGLE_PASS,
+            dense_density: DENSE_DENSITY,
+            tight_deadline: Duration::from_millis(TIGHT_DEADLINE_MS),
         }
     }
 }
 
 impl RoutePolicy {
-    /// Choose the SVD method for a partial-SVD job.
+    /// Choose the SVD method for a job without a deadline budget (the
+    /// historical entry point; equivalent to
+    /// [`RoutePolicy::select_with`]`(spec, accuracy, None)`).
     pub fn select(&self, spec: &JobSpec, accuracy: AccuracyClass) -> SvdMethod {
+        self.select_with(spec, accuracy, None)
+    }
+
+    /// Choose the SVD method from (shape, nnz/density, accuracy class,
+    /// remaining deadline budget). The budget only steers `Fast` jobs:
+    /// accuracy classes are a contract, so a tight deadline on a
+    /// `Balanced` job is allowed to fail with `DeadlineExceeded` rather
+    /// than silently degrade to a sketch.
+    pub fn select_with(
+        &self,
+        spec: &JobSpec,
+        accuracy: AccuracyClass,
+        deadline: Option<Duration>,
+    ) -> SvdMethod {
         let (m, n) = spec.shape();
-        let numel = m * n;
+        let min_dim = m.min(n);
+        let numel = spec.numel();
+        let tight = deadline.is_some_and(|d| d < self.tight_deadline);
         match spec {
             JobSpec::FullSvd { .. } => SvdMethod::Full,
-            JobSpec::RankEstimate { .. } => {
+            JobSpec::RankEstimate { .. } | JobSpec::SparseRankEstimate { .. } => {
                 // Rank estimation *is* Algorithm 3 (GK-based); encode as
                 // F-SVD with the full iteration budget.
-                SvdMethod::Fsvd { k: m.min(n) }
+                SvdMethod::Fsvd { k: min_dim }
             }
-            JobSpec::SparseRankEstimate { .. } => SvdMethod::Fsvd { k: m.min(n) },
-            JobSpec::SparsePartialSvd { r, .. } => match accuracy {
-                // Sparse inputs are always served matrix-free: F-SVD and
-                // R-SVD both run off the two CSR products now that the
-                // sketch is LinOp-generic. `Fast` takes the randomized
-                // route; everything else (including `Exact`, which would
-                // need to densify for traditional SVD) takes F-SVD.
-                AccuracyClass::Fast => SvdMethod::Rsvd { oversample: self.rsvd_oversample },
-                _ => {
-                    let k = (r + self.fsvd_slack).min(self.fsvd_max_k).min(m.min(n));
-                    SvdMethod::Fsvd { k }
+            JobSpec::SparsePartialSvd { matrix, r } => match accuracy {
+                // Sparse inputs are always served matrix-free; `Exact`
+                // would need to densify for traditional SVD, so it takes
+                // F-SVD like `Balanced`.
+                AccuracyClass::Exact | AccuracyClass::Balanced => {
+                    SvdMethod::Fsvd { k: self.fsvd_k(*r, min_dim) }
+                }
+                AccuracyClass::Fast => {
+                    let nnz = matrix.nnz();
+                    let density = nnz as f64 / numel.max(1) as f64;
+                    if tight {
+                        SvdMethod::SinglePass { sketch: r + self.single_pass_oversample }
+                    } else if density > self.dense_density {
+                        SvdMethod::Rsvd { oversample: self.rsvd_oversample }
+                    } else if nnz >= self.sparse_nnz_single_pass {
+                        SvdMethod::SinglePass { sketch: r + self.single_pass_oversample }
+                    } else {
+                        SvdMethod::BlockKrylov {
+                            q: self.block_krylov_iters,
+                            block: r + self.block_oversample,
+                        }
+                    }
                 }
             },
             JobSpec::PartialSvd { r, .. } => match accuracy {
                 AccuracyClass::Exact => SvdMethod::Full,
-                AccuracyClass::Balanced => {
-                    if numel <= self.full_svd_numel_cutoff {
-                        SvdMethod::Full
-                    } else {
-                        let k = (r + self.fsvd_slack).min(self.fsvd_max_k).min(m.min(n));
-                        SvdMethod::Fsvd { k }
-                    }
-                }
+                _ if numel <= self.full_svd_numel_cutoff => SvdMethod::Full,
+                AccuracyClass::Balanced => SvdMethod::Fsvd { k: self.fsvd_k(*r, min_dim) },
                 AccuracyClass::Fast => {
-                    if numel <= self.full_svd_numel_cutoff {
-                        SvdMethod::Full
+                    if tight || numel >= self.single_pass_numel {
+                        SvdMethod::SinglePass { sketch: r + self.single_pass_oversample }
+                    } else if numel >= self.block_krylov_numel {
+                        SvdMethod::BlockKrylov {
+                            q: self.block_krylov_iters,
+                            block: r + self.block_oversample,
+                        }
                     } else {
                         SvdMethod::Rsvd { oversample: self.rsvd_oversample }
                     }
@@ -93,16 +195,89 @@ impl RoutePolicy {
             },
         }
     }
+
+    /// Resolve a client method override into a concrete parameterized
+    /// method: the client pins the family, the policy still supplies the
+    /// parameters. Overrides are only meaningful on partial-SVD specs;
+    /// rank jobs are Algorithm 3 by definition, and `Full` on a sparse
+    /// spec would densify — both are typed errors.
+    pub fn resolve(&self, spec: &JobSpec, kind: MethodKind) -> Result<SvdMethod> {
+        let (m, n) = spec.shape();
+        let min_dim = m.min(n);
+        let r = match spec {
+            JobSpec::PartialSvd { r, .. } | JobSpec::SparsePartialSvd { r, .. } => *r,
+            JobSpec::FullSvd { .. } => {
+                return if kind == MethodKind::Full {
+                    Ok(SvdMethod::Full)
+                } else {
+                    Err(Error::InvalidArg(format!(
+                        "method override {:?} is invalid for a full-SVD job",
+                        kind.as_str()
+                    )))
+                };
+            }
+            JobSpec::RankEstimate { .. } | JobSpec::SparseRankEstimate { .. } => {
+                return Err(Error::InvalidArg(
+                    "method override is invalid for a rank job".into(),
+                ));
+            }
+        };
+        let sparse = spec.nnz().is_some();
+        match kind {
+            MethodKind::Full if sparse => Err(Error::InvalidArg(
+                "method=full would densify a sparse input".into(),
+            )),
+            MethodKind::Full => Ok(SvdMethod::Full),
+            MethodKind::Fsvd => Ok(SvdMethod::Fsvd { k: self.fsvd_k(r, min_dim) }),
+            MethodKind::Rsvd => Ok(SvdMethod::Rsvd { oversample: self.rsvd_oversample }),
+            MethodKind::BlockKrylov => Ok(SvdMethod::BlockKrylov {
+                q: self.block_krylov_iters,
+                block: r + self.block_oversample,
+            }),
+            MethodKind::SinglePass => Ok(SvdMethod::SinglePass {
+                sketch: r + self.single_pass_oversample,
+            }),
+        }
+    }
+
+    /// The full routing entry point the service uses: an override pins
+    /// the family (validated), otherwise the chooser runs with the
+    /// remaining deadline budget.
+    pub fn route(
+        &self,
+        spec: &JobSpec,
+        accuracy: AccuracyClass,
+        over: Option<MethodKind>,
+        deadline: Option<Duration>,
+    ) -> Result<SvdMethod> {
+        match over {
+            Some(kind) => self.resolve(spec, kind),
+            None => Ok(self.select_with(spec, accuracy, deadline)),
+        }
+    }
+
+    fn fsvd_k(&self, r: usize, min_dim: usize) -> usize {
+        (r + self.fsvd_slack).min(self.fsvd_max_k).min(min_dim)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::linalg::Matrix;
+    use crate::linalg::{Matrix, SparseMatrix};
     use std::sync::Arc;
 
     fn spec(m: usize, n: usize, r: usize) -> JobSpec {
         JobSpec::PartialSvd { matrix: Arc::new(Matrix::zeros(m, n)), r }
+    }
+
+    fn sparse_spec(m: usize, n: usize, nnz: usize, r: usize) -> JobSpec {
+        let trips: Vec<(usize, usize, f64)> =
+            (0..nnz).map(|i| (i % m, (i / m) % n, 1.0)).collect();
+        JobSpec::SparsePartialSvd {
+            matrix: Arc::new(SparseMatrix::from_triplets(m, n, &trips).unwrap()),
+            r,
+        }
     }
 
     #[test]
@@ -128,11 +303,49 @@ mod tests {
     }
 
     #[test]
-    fn fast_large_routes_to_rsvd_default_p() {
+    fn fast_ladder_rsvd_then_block_krylov_then_single_pass() {
         let p = RoutePolicy::default();
+        // 300k entries: above the full-SVD cutoff, below the block-Krylov
+        // threshold — plain R-SVD.
+        assert_eq!(
+            p.select(&spec(600, 500, 20), AccuracyClass::Fast),
+            SvdMethod::Rsvd { oversample: 10 }
+        );
+        // 2M entries: block-Krylov regime.
         assert_eq!(
             p.select(&spec(2000, 1000, 20), AccuracyClass::Fast),
-            SvdMethod::Rsvd { oversample: 10 }
+            SvdMethod::BlockKrylov { q: 4, block: 26 }
+        );
+        // 4.2M entries: one pass only.
+        assert_eq!(
+            p.select(&spec(2100, 2000, 20), AccuracyClass::Fast),
+            SvdMethod::SinglePass { sketch: 30 }
+        );
+    }
+
+    #[test]
+    fn tight_deadline_pushes_fast_jobs_to_single_pass() {
+        let p = RoutePolicy::default();
+        let s = spec(2000, 1000, 20);
+        let tight = Some(Duration::from_millis(100));
+        assert_eq!(
+            p.select_with(&s, AccuracyClass::Fast, tight),
+            SvdMethod::SinglePass { sketch: 30 }
+        );
+        // A roomy budget routes like no budget at all.
+        assert_eq!(
+            p.select_with(&s, AccuracyClass::Fast, Some(Duration::from_secs(10))),
+            SvdMethod::BlockKrylov { q: 4, block: 26 }
+        );
+        // The budget never degrades accuracy-contracted classes.
+        match p.select_with(&s, AccuracyClass::Balanced, tight) {
+            SvdMethod::Fsvd { k } => assert_eq!(k, 30),
+            other => panic!("{other:?}"),
+        }
+        // Tiny inputs keep their full-SVD routing even under pressure.
+        assert_eq!(
+            p.select_with(&spec(100, 100, 5), AccuracyClass::Fast, tight),
+            SvdMethod::Full
         );
     }
 
@@ -161,10 +374,8 @@ mod tests {
 
     #[test]
     fn sparse_jobs_always_route_matrix_free() {
-        use crate::linalg::SparseMatrix;
         let p = RoutePolicy::default();
-        let sp = Arc::new(SparseMatrix::from_triplets(2000, 1500, &[(0, 0, 1.0)]).unwrap());
-        let s = JobSpec::SparsePartialSvd { matrix: sp.clone(), r: 10 };
+        let s = sparse_spec(2000, 1500, 1, 10);
         // Accuracy-sensitive classes take F-SVD; never traditional SVD
         // (which would have to densify).
         for acc in [AccuracyClass::Exact, AccuracyClass::Balanced] {
@@ -173,13 +384,44 @@ mod tests {
                 other => panic!("sparse job routed to {other:?}"),
             }
         }
-        // `Fast` now takes the LinOp-generic randomized sketch.
-        assert_eq!(p.select(&s, AccuracyClass::Fast), SvdMethod::Rsvd { oversample: 10 });
-        let r = JobSpec::SparseRankEstimate { matrix: sp, eps: 1e-8 };
+        // Truly sparse `Fast` jobs take block-Krylov: accuracy per spmv
+        // sweep beats the plain sketch, and the data is cheap to revisit.
+        assert_eq!(
+            p.select(&s, AccuracyClass::Fast),
+            SvdMethod::BlockKrylov { q: 4, block: 16 }
+        );
+        let r = JobSpec::SparseRankEstimate {
+            matrix: Arc::new(SparseMatrix::from_triplets(2000, 1500, &[(0, 0, 1.0)]).unwrap()),
+            eps: 1e-8,
+        };
         match p.select(&r, AccuracyClass::Balanced) {
             SvdMethod::Fsvd { k } => assert_eq!(k, 1500),
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn sparse_fast_splits_on_density_nnz_and_deadline() {
+        let p = RoutePolicy::default();
+        // Dense-ish "sparse" input (50% fill): plain R-SVD.
+        assert_eq!(
+            p.select(&sparse_spec(200, 100, 10_000, 10), AccuracyClass::Fast),
+            SvdMethod::Rsvd { oversample: 10 }
+        );
+        // Huge nnz at low density: one pass only.
+        assert_eq!(
+            p.select(&sparse_spec(10_000, 10_000, 2_000_000, 10), AccuracyClass::Fast),
+            SvdMethod::SinglePass { sketch: 20 }
+        );
+        // Tight deadline wins over everything.
+        assert_eq!(
+            p.select_with(
+                &sparse_spec(2000, 1500, 100, 10),
+                AccuracyClass::Fast,
+                Some(Duration::from_millis(5)),
+            ),
+            SvdMethod::SinglePass { sketch: 20 }
+        );
     }
 
     #[test]
@@ -189,6 +431,67 @@ mod tests {
         match p.select(&s, AccuracyClass::Balanced) {
             SvdMethod::Fsvd { k } => assert_eq!(k, 600),
             other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn overrides_pin_the_family_with_policy_parameters() {
+        let p = RoutePolicy::default();
+        let dense = spec(600, 500, 10);
+        assert_eq!(p.resolve(&dense, MethodKind::Full).unwrap(), SvdMethod::Full);
+        assert_eq!(
+            p.resolve(&dense, MethodKind::Fsvd).unwrap(),
+            SvdMethod::Fsvd { k: 20 }
+        );
+        assert_eq!(
+            p.resolve(&dense, MethodKind::BlockKrylov).unwrap(),
+            SvdMethod::BlockKrylov { q: 4, block: 16 }
+        );
+        assert_eq!(
+            p.resolve(&dense, MethodKind::SinglePass).unwrap(),
+            SvdMethod::SinglePass { sketch: 20 }
+        );
+        // Sparse + full would densify: typed error.
+        let sp = sparse_spec(100, 80, 10, 5);
+        assert!(p.resolve(&sp, MethodKind::Full).is_err());
+        assert_eq!(
+            p.resolve(&sp, MethodKind::Rsvd).unwrap(),
+            SvdMethod::Rsvd { oversample: 10 }
+        );
+        // Rank jobs refuse overrides.
+        let rank = JobSpec::RankEstimate { matrix: Arc::new(Matrix::zeros(50, 40)), eps: 1e-8 };
+        assert!(p.resolve(&rank, MethodKind::Fsvd).is_err());
+        // route() is select_with when no override rides along.
+        assert_eq!(
+            p.route(&dense, AccuracyClass::Fast, None, None).unwrap(),
+            p.select(&dense, AccuracyClass::Fast)
+        );
+        assert_eq!(
+            p.route(&dense, AccuracyClass::Fast, Some(MethodKind::Fsvd), None).unwrap(),
+            SvdMethod::Fsvd { k: 20 }
+        );
+    }
+
+    /// The pinned decision table mirrored by `python/sims/portfolio_sim.py`.
+    /// Keep the workloads and expectations in lockstep with
+    /// `DECISION_TABLE` there — the sim re-derives this from the policy
+    /// constants and fails CI on drift.
+    #[test]
+    fn decision_table_is_pinned() {
+        let p = RoutePolicy::default();
+        let table: [(JobSpec, AccuracyClass, Option<u64>, &str); 8] = [
+            (spec(300, 300, 10), AccuracyClass::Balanced, None, "full"),
+            (spec(600, 500, 10), AccuracyClass::Balanced, None, "fsvd"),
+            (spec(600, 500, 10), AccuracyClass::Fast, None, "rsvd"),
+            (spec(1100, 1000, 10), AccuracyClass::Fast, None, "block_krylov"),
+            (spec(2100, 2000, 10), AccuracyClass::Fast, None, "single_pass"),
+            (spec(600, 500, 10), AccuracyClass::Fast, Some(100), "single_pass"),
+            (sparse_spec(2000, 1500, 3000, 10), AccuracyClass::Fast, None, "block_krylov"),
+            (sparse_spec(2000, 1500, 3000, 10), AccuracyClass::Balanced, None, "fsvd"),
+        ];
+        for (s, acc, deadline_ms, want) in table {
+            let got = p.select_with(&s, acc, deadline_ms.map(Duration::from_millis));
+            assert_eq!(got.name(), want, "{:?} {acc:?} {deadline_ms:?}", s.shape());
         }
     }
 }

@@ -2,11 +2,14 @@
 //! pool.
 //!
 //! `submit` enqueues a [`JobRequest`] and returns a [`JobHandle`] that
-//! resolves to the [`JobResult`]. Workers route each job through
-//! [`RoutePolicy`] and execute the chosen algorithm. Everything is std
-//! threads + condvars (no async runtime exists in the vendored crate set,
-//! and the jobs are CPU-bound minutes-to-microseconds tasks — a thread
-//! pool is the right shape anyway).
+//! resolves to the [`JobResult`]. Workers [`route`] each job through
+//! [`RoutePolicy`] — honoring a client method override when the request
+//! carries one — record the decision in [`JobResult::method`], and
+//! dispatch the chosen algorithm uniformly through the
+//! [`crate::solver::SvdSolver`] trait. Everything is std threads +
+//! condvars (no async runtime exists in the vendored crate set, and the
+//! jobs are CPU-bound minutes-to-microseconds tasks — a thread pool is
+//! the right shape anyway).
 //!
 //! Admission control (see [`super::queue`]):
 //!
@@ -19,17 +22,20 @@
 //!   executing (a job cancelled while queued never burns the pool) and
 //!   the iteration kernels check it between block steps.
 
-use super::job::{JobError, JobId, JobOutcome, JobRequest, JobResult, JobSpec, SvdMethod, SvdResult};
+use super::job::{
+    JobError, JobId, JobOutcome, JobRequest, JobResult, JobSpec, SvdMethod, SvdResult,
+};
 use super::metrics::Metrics;
 use super::policy::RoutePolicy;
 use super::queue::{AdmissionQueue, Priority, PushError};
 use crate::cancel::CancelToken;
-use crate::krylov::fsvd::{fsvd, FsvdOptions};
 use crate::krylov::rank::{estimate_rank, RankOptions};
+use crate::krylov::LinOp;
 use crate::linalg::svd::svd;
-use crate::obs::metrics::{record_stage, KernelStage};
+use crate::linalg::Matrix;
+use crate::obs::metrics::KernelStage;
 use crate::obs::trace::{SpanKind, Trace};
-use crate::rsvd::{rsvd, RsvdOptions};
+use crate::solver::{from_method, SolverContext, SolverDriver};
 use crate::{Error, Result};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
@@ -260,13 +266,18 @@ impl Drop for FactorizationService {
     }
 }
 
-/// One worker turn: pre-exec cancel check, execute, account, reply.
+/// One worker turn: pre-exec cancel check, route, execute, account, reply.
+/// The routing decision is recorded in [`JobResult::method`] even when
+/// execution fails (audit trail); only a job that dies before routing —
+/// cancelled while queued, or an invalid method override — replies with
+/// `method: None`.
 fn run_one(job: QueuedJob, policy: &RoutePolicy, seed: u64, metrics: &Metrics) {
     let queue_time = job.enqueued.elapsed();
     metrics.queue_wait.observe(queue_time);
     job.trace.record_at(SpanKind::Job, "queue_wait", job.enqueued, queue_time, Vec::new());
     // Relaxed: status hint only (see `QueuedJob::started`), no payload rides on it.
     job.started.store(true, Ordering::Relaxed);
+    let mut method: Option<SvdMethod> = None;
     // A job cancelled (or deadlined) while queued never reaches the
     // kernels: reply with the typed error at zero exec cost.
     let (outcome, exec_time) = match job.cancel.check() {
@@ -275,7 +286,14 @@ fn run_one(job: QueuedJob, policy: &RoutePolicy, seed: u64, metrics: &Metrics) {
             let started = crate::obs::clock::now();
             let outcome = {
                 let _exec_span = job.trace.span(SpanKind::Job, "exec");
-                execute_traced(&job.request, policy, seed ^ job.id, &job.cancel, &job.trace)
+                match route(&job.request, policy, &job.cancel) {
+                    Ok(m) => {
+                        metrics.method(m.kind()).inc();
+                        method = Some(m.clone());
+                        execute_method(&job.request, &m, seed ^ job.id, &job.cancel, &job.trace)
+                    }
+                    Err(e) => Err(e),
+                }
             };
             let exec_time = started.elapsed();
             metrics.exec_time.observe(exec_time);
@@ -291,9 +309,23 @@ fn run_one(job: QueuedJob, policy: &RoutePolicy, seed: u64, metrics: &Metrics) {
     let _ = job.reply.send(JobResult {
         id: job.id,
         outcome: outcome.map_err(JobError::from),
+        method,
         exec_time,
         queue_time,
     });
+}
+
+/// Route one request to a concrete method: a client override pins the
+/// algorithm family (validated against the spec — typed `InvalidArg` on
+/// a nonsensical combination), otherwise [`RoutePolicy`] chooses from
+/// shape, sparsity, accuracy class and the remaining deadline budget on
+/// the cancel token.
+pub fn route(
+    request: &JobRequest,
+    policy: &RoutePolicy,
+    cancel: &CancelToken,
+) -> Result<SvdMethod> {
+    policy.route(&request.spec, request.accuracy, request.method, cancel.remaining())
 }
 
 /// Execute one routed job (also used directly by the benches so the
@@ -325,165 +357,109 @@ pub fn execute_traced(
     cancel: &CancelToken,
     trace: &Trace,
 ) -> Result<JobOutcome> {
-    let method = policy.select(&request.spec, request.accuracy);
+    let method = route(request, policy, cancel)?;
+    execute_method(request, &method, seed, cancel, trace)
+}
+
+/// Execute a request with an already-routed method. Every partial-SVD
+/// family dispatches uniformly through [`crate::solver::from_method`];
+/// traditional SVD is the one special case (it needs the dense matrix
+/// itself, not a [`LinOp`]), and rank jobs run Algorithm 3 directly.
+pub fn execute_method(
+    request: &JobRequest,
+    method: &SvdMethod,
+    seed: u64,
+    cancel: &CancelToken,
+    trace: &Trace,
+) -> Result<JobOutcome> {
     match &request.spec {
         JobSpec::RankEstimate { matrix, eps } => {
-            let est = estimate_rank(
-                matrix.as_ref(),
-                &RankOptions {
-                    eps: *eps,
-                    seed,
-                    cancel: cancel.clone(),
-                    trace: trace.clone(),
-                    ..Default::default()
-                },
-            )?;
-            Ok(JobOutcome::Rank { rank: est.rank, k_iterations: est.k_iterations })
+            rank_outcome(matrix.as_ref(), *eps, seed, cancel, trace)
         }
         JobSpec::SparseRankEstimate { matrix, eps } => {
-            let est = estimate_rank(
-                matrix.as_ref(),
-                &RankOptions {
-                    eps: *eps,
-                    seed,
-                    cancel: cancel.clone(),
-                    trace: trace.clone(),
-                    ..Default::default()
-                },
-            )?;
-            Ok(JobOutcome::Rank { rank: est.rank, k_iterations: est.k_iterations })
+            rank_outcome(matrix.as_ref(), *eps, seed, cancel, trace)
         }
-        JobSpec::SparsePartialSvd { matrix, r } => match method {
-            // `Fast` jobs take the randomized sketch, matrix-free through
-            // the CSR LinOp (the sketch only needs A·Ω / Aᵀ·Q).
-            SvdMethod::Rsvd { oversample } => {
-                let s = rsvd(
-                    matrix.as_ref(),
-                    &RsvdOptions {
-                        r: *r,
-                        oversample,
-                        seed,
-                        cancel: cancel.clone(),
-                        trace: trace.clone(),
-                        ..Default::default()
-                    },
-                )?
-                .truncate(*r);
-                Ok(JobOutcome::Svd(SvdResult {
-                    u: s.u,
-                    sigma: s.sigma,
-                    v: s.v,
-                    method: SvdMethod::Rsvd { oversample },
-                }))
-            }
-            // Everything else is F-SVD; the fallback recomputes the same
-            // budget from the policy knobs so the two can never diverge.
-            _ => {
-                let (m, n) = matrix.shape();
-                let k = match method {
-                    SvdMethod::Fsvd { k } => k,
-                    _ => (*r + policy.fsvd_slack).min(policy.fsvd_max_k).min(m.min(n)),
-                };
-                let out = fsvd(
-                    matrix.as_ref(),
-                    &FsvdOptions {
-                        k,
-                        r: *r,
-                        seed,
-                        cancel: cancel.clone(),
-                        trace: trace.clone(),
-                        ..Default::default()
-                    },
-                )?;
-                Ok(JobOutcome::Svd(SvdResult {
-                    u: out.u,
-                    sigma: out.sigma,
-                    v: out.v,
-                    method: SvdMethod::Fsvd { k },
-                }))
-            }
-        },
-        JobSpec::FullSvd { matrix } => {
-            // Golub–Reinsch has no iteration hook; honor the token at the
-            // boundary so a cancelled-while-queued full SVD still stops.
-            cancel.check()?;
-            let t0 = crate::obs::clock::now();
-            let s = {
-                let _sp = trace.span(SpanKind::Stage, "full_svd");
-                svd(matrix)?
-            };
-            record_stage(KernelStage::FullSvd, t0.elapsed());
-            Ok(JobOutcome::Svd(SvdResult {
-                u: s.u,
-                sigma: s.sigma,
-                v: s.v,
-                method: SvdMethod::Full,
-            }))
-        }
+        JobSpec::FullSvd { matrix } => full_svd_outcome(matrix, None, cancel, trace),
         JobSpec::PartialSvd { matrix, r } => match method {
-            SvdMethod::Full => {
-                cancel.check()?;
-                let t0 = crate::obs::clock::now();
-                let s = {
-                    let _sp = trace.span(SpanKind::Stage, "full_svd");
-                    svd(matrix)?
-                };
-                record_stage(KernelStage::FullSvd, t0.elapsed());
-                let s = s.truncate(*r);
-                Ok(JobOutcome::Svd(SvdResult {
-                    u: s.u,
-                    sigma: s.sigma,
-                    v: s.v,
-                    method: SvdMethod::Full,
-                }))
-            }
-            SvdMethod::Fsvd { k } => {
-                let out = fsvd(
-                    matrix.as_ref(),
-                    &FsvdOptions {
-                        k,
-                        r: *r,
-                        seed,
-                        cancel: cancel.clone(),
-                        trace: trace.clone(),
-                        ..Default::default()
-                    },
-                )?;
-                Ok(JobOutcome::Svd(SvdResult {
-                    u: out.u,
-                    sigma: out.sigma,
-                    v: out.v,
-                    method: SvdMethod::Fsvd { k },
-                }))
-            }
-            SvdMethod::Rsvd { oversample } => {
-                let s = rsvd(
-                    matrix.as_ref(),
-                    &RsvdOptions {
-                        r: *r,
-                        oversample,
-                        seed,
-                        cancel: cancel.clone(),
-                        trace: trace.clone(),
-                        ..Default::default()
-                    },
-                )?
-                .truncate(*r);
-                Ok(JobOutcome::Svd(SvdResult {
-                    u: s.u,
-                    sigma: s.sigma,
-                    v: s.v,
-                    method: SvdMethod::Rsvd { oversample },
-                }))
-            }
+            SvdMethod::Full => full_svd_outcome(matrix, Some(*r), cancel, trace),
+            _ => solve_partial(matrix.as_ref(), *r, method, seed, cancel, trace),
         },
+        JobSpec::SparsePartialSvd { matrix, r } => {
+            solve_partial(matrix.as_ref(), *r, method, seed, cancel, trace)
+        }
     }
+}
+
+fn rank_outcome(
+    a: &dyn LinOp,
+    eps: f64,
+    seed: u64,
+    cancel: &CancelToken,
+    trace: &Trace,
+) -> Result<JobOutcome> {
+    let est = estimate_rank(
+        a,
+        &RankOptions {
+            eps,
+            seed,
+            cancel: cancel.clone(),
+            trace: trace.clone(),
+            ..Default::default()
+        },
+    )?;
+    Ok(JobOutcome::Rank { rank: est.rank, k_iterations: est.k_iterations })
+}
+
+fn solve_partial(
+    a: &dyn LinOp,
+    r: usize,
+    method: &SvdMethod,
+    seed: u64,
+    cancel: &CancelToken,
+    trace: &Trace,
+) -> Result<JobOutcome> {
+    // `Full` never reaches here: the dense dispatch special-cases it and
+    // the policy refuses it for sparse specs.
+    let solver = from_method(method).ok_or_else(|| {
+        Error::InvalidArg(format!("method {} needs a dense input", method.name()))
+    })?;
+    let cx = SolverContext { seed, cancel: cancel.clone(), trace: trace.clone() };
+    let s = solver.solve(a, r, &cx)?;
+    Ok(JobOutcome::Svd(SvdResult {
+        u: s.u,
+        sigma: s.sigma,
+        v: s.v,
+        method: method.clone(),
+    }))
+}
+
+fn full_svd_outcome(
+    matrix: &Matrix,
+    r: Option<usize>,
+    cancel: &CancelToken,
+    trace: &Trace,
+) -> Result<JobOutcome> {
+    // Golub–Reinsch has no iteration hook; honor the token at the
+    // boundary so a cancelled-while-queued full SVD still stops.
+    let driver = SolverDriver::new(cancel.clone(), trace.clone());
+    driver.checkpoint()?;
+    let s = driver.stage(Some(KernelStage::FullSvd), "full_svd", "full_svd", |_| svd(matrix))?;
+    let s = match r {
+        Some(r) => s.truncate(r),
+        None => s,
+    };
+    Ok(JobOutcome::Svd(SvdResult {
+        u: s.u,
+        sigma: s.sigma,
+        v: s.v,
+        method: SvdMethod::Full,
+    }))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::job::JobErrorKind;
+    use crate::coordinator::job::{JobErrorKind, MethodKind};
     use crate::coordinator::policy::AccuracyClass;
     use crate::data::synth::low_rank_gaussian;
     use crate::linalg::Matrix;
@@ -507,6 +483,7 @@ mod tests {
                 r,
             },
             accuracy: AccuracyClass::Balanced,
+            method: None,
         }
     }
 
@@ -519,8 +496,12 @@ mod tests {
             .run(JobRequest {
                 spec: JobSpec::PartialSvd { matrix: a.clone(), r: 10 },
                 accuracy: AccuracyClass::Balanced,
+                method: None,
             })
             .unwrap();
+        // The routing decision rides on the envelope for audit, matching
+        // the payload's record.
+        assert_eq!(res.method, Some(SvdMethod::Fsvd { k: 20 }));
         let out = match res.outcome.unwrap() {
             JobOutcome::Svd(s) => s,
             other => panic!("{other:?}"),
@@ -543,6 +524,7 @@ mod tests {
             .run(JobRequest {
                 spec: JobSpec::RankEstimate { matrix: a, eps: 1e-8 },
                 accuracy: AccuracyClass::Balanced,
+                method: None,
             })
             .unwrap();
         match res.outcome.unwrap() {
@@ -567,6 +549,7 @@ mod tests {
                 svc.submit(JobRequest {
                     spec: JobSpec::PartialSvd { matrix: m.clone(), r: 4 },
                     accuracy: AccuracyClass::Balanced,
+                    method: None,
                 })
                 .unwrap()
             })
@@ -578,6 +561,8 @@ mod tests {
         assert_eq!(svc.metrics.completed.get(), 6);
         assert_eq!(svc.metrics.failed.get(), 0);
         assert_eq!(svc.metrics.exec_time.count(), 6);
+        // 120x90 is under the full-SVD cutoff: all six route to `full`.
+        assert_eq!(svc.metrics.method(MethodKind::Full).get(), 6);
     }
 
     #[test]
@@ -592,6 +577,7 @@ mod tests {
             .run(JobRequest {
                 spec: JobSpec::SparsePartialSvd { matrix: a.clone(), r: 6 },
                 accuracy: AccuracyClass::Balanced,
+                method: None,
             })
             .unwrap();
         let out = match res.outcome.unwrap() {
@@ -624,6 +610,7 @@ mod tests {
             .run(JobRequest {
                 spec: JobSpec::SparseRankEstimate { matrix: a, eps: 1e-8 },
                 accuracy: AccuracyClass::Balanced,
+                method: None,
             })
             .unwrap();
         match res.outcome.unwrap() {
@@ -636,7 +623,7 @@ mod tests {
     }
 
     #[test]
-    fn sparse_fast_class_routes_to_rsvd_matrix_free() {
+    fn sparse_fast_class_routes_to_block_krylov_matrix_free() {
         let mut rng = Pcg64::seed_from_u64(216);
         let a = Arc::new(
             crate::data::synth::sparse_low_rank_noise(400, 300, 6, 0.05, 0.0, &mut rng)
@@ -647,21 +634,25 @@ mod tests {
             .run(JobRequest {
                 spec: JobSpec::SparsePartialSvd { matrix: a.clone(), r: 6 },
                 accuracy: AccuracyClass::Fast,
+                method: None,
             })
             .unwrap();
+        // Truly sparse + Fast + modest nnz: the policy picks block-Krylov.
+        assert_eq!(res.method, Some(SvdMethod::BlockKrylov { q: 4, block: 12 }));
         let out = match res.outcome.unwrap() {
             JobOutcome::Svd(s) => s,
             other => panic!("{other:?}"),
         };
-        assert!(matches!(out.method, SvdMethod::Rsvd { .. }));
+        assert!(matches!(out.method, SvdMethod::BlockKrylov { .. }));
         assert_eq!(out.sigma.len(), 6);
-        // l = r + p = 16 covers the exact rank 6, so the sketch recovers
-        // the spectrum to near machine precision — matrix-free.
+        // block = r + 6 = 12 covers the exact rank 6, so the Krylov sketch
+        // recovers the spectrum to near machine precision — matrix-free.
         let full = crate::linalg::svd::svd(&a.to_dense()).unwrap();
         for i in 0..6 {
             let rel = (out.sigma[i] - full.sigma[i]).abs() / full.sigma[i];
             assert!(rel < 1e-8, "sigma[{i}]: {} vs {}", out.sigma[i], full.sigma[i]);
         }
+        assert_eq!(svc.metrics.method(MethodKind::BlockKrylov).get(), 1);
     }
 
     #[test]
@@ -673,10 +664,13 @@ mod tests {
             .run(JobRequest {
                 spec: JobSpec::PartialSvd { matrix: Arc::new(Matrix::zeros(700, 600)), r: 3 },
                 accuracy: AccuracyClass::Balanced,
+                method: None,
             })
             .unwrap();
         let err = res.outcome.unwrap_err();
         assert_eq!(err.kind, JobErrorKind::Breakdown);
+        // The audit trail still says which method died.
+        assert_eq!(res.method, Some(SvdMethod::Fsvd { k: 13 }));
         assert_eq!(svc.metrics.failed.get(), 1);
     }
 
@@ -698,12 +692,70 @@ mod tests {
             .run(JobRequest {
                 spec: JobSpec::PartialSvd { matrix: a, r: 10 },
                 accuracy: AccuracyClass::Fast,
+                method: None,
             })
             .unwrap();
+        // 300k entries: above the full-SVD cutoff, below the block-Krylov
+        // threshold.
+        assert_eq!(res.method, Some(SvdMethod::Rsvd { oversample: 10 }));
         match res.outcome.unwrap() {
             JobOutcome::Svd(s) => assert!(matches!(s.method, SvdMethod::Rsvd { .. })),
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn method_override_pins_the_family() {
+        let mut rng = Pcg64::seed_from_u64(217);
+        let a = Arc::new(low_rank_gaussian(100, 80, 4, &mut rng));
+        let svc = service();
+        // 100x80 would route to full SVD; the override forces single-pass
+        // (with policy-chosen parameters).
+        let res = svc
+            .run(JobRequest {
+                spec: JobSpec::PartialSvd { matrix: a.clone(), r: 4 },
+                accuracy: AccuracyClass::Balanced,
+                method: Some(MethodKind::SinglePass),
+            })
+            .unwrap();
+        assert_eq!(res.method, Some(SvdMethod::SinglePass { sketch: 14 }));
+        let out = match res.outcome.unwrap() {
+            JobOutcome::Svd(s) => s,
+            other => panic!("{other:?}"),
+        };
+        assert!(matches!(out.method, SvdMethod::SinglePass { .. }));
+        assert_eq!(out.sigma.len(), 4);
+        // Exact rank 4 with sketch 14: near machine precision.
+        let full = crate::linalg::svd::svd(&a).unwrap();
+        for i in 0..4 {
+            let rel = (out.sigma[i] - full.sigma[i]).abs() / full.sigma[i];
+            assert!(rel < 1e-8, "sigma[{i}]");
+        }
+        assert_eq!(svc.metrics.method(MethodKind::SinglePass).get(), 1);
+        assert_eq!(svc.metrics.method(MethodKind::Full).get(), 0);
+    }
+
+    #[test]
+    fn invalid_override_is_a_typed_error_with_no_method_recorded() {
+        let mut rng = Pcg64::seed_from_u64(218);
+        let a = Arc::new(low_rank_gaussian(60, 50, 3, &mut rng));
+        let svc = service();
+        let res = svc
+            .run(JobRequest {
+                spec: JobSpec::RankEstimate { matrix: a, eps: 1e-8 },
+                accuracy: AccuracyClass::Balanced,
+                method: Some(MethodKind::Rsvd),
+            })
+            .unwrap();
+        let err = res.outcome.unwrap_err();
+        assert_eq!(err.kind, JobErrorKind::InvalidArgument);
+        // The job died before routing completed: no method on the audit
+        // trail, no per-method counter tick.
+        assert_eq!(res.method, None);
+        for kind in crate::coordinator::job::METHOD_KINDS {
+            assert_eq!(svc.metrics.method(kind).get(), 0, "{}", kind.as_str());
+        }
+        assert_eq!(svc.metrics.failed.get(), 1);
     }
 
     #[test]
@@ -766,6 +818,8 @@ mod tests {
         assert_eq!(err.kind, JobErrorKind::Cancelled);
         assert!(!err.retryable());
         assert_eq!(res.exec_time, std::time::Duration::ZERO);
+        // Never routed: no audit method.
+        assert_eq!(res.method, None);
         assert_eq!(svc.metrics.cancelled.get(), 1);
         assert!(big.wait().unwrap().outcome.is_ok());
     }

@@ -11,8 +11,9 @@ use super::LinOp;
 use crate::cancel::CancelToken;
 use crate::linalg::tridiag::btb_eig;
 use crate::linalg::Matrix;
-use crate::obs::metrics::{record_stage, KernelStage};
-use crate::obs::trace::{SpanKind, Trace};
+use crate::obs::metrics::KernelStage;
+use crate::obs::trace::Trace;
+use crate::solver::driver::SolverDriver;
 use crate::{Error, Result};
 
 /// Options for [`fsvd`].
@@ -84,8 +85,8 @@ pub fn fsvd(a: &dyn LinOp, opts: &FsvdOptions) -> Result<FsvdOutput> {
             trace: opts.trace.clone(),
         },
     )?;
-    let _sp = opts.trace.span(SpanKind::Stage, "ritz_recover");
-    fsvd_from_gk(a, &gk, opts.r)
+    let driver = SolverDriver::new(opts.cancel.clone(), opts.trace.clone());
+    driver.stage(None, "ritz_recover", "ritz_recover", |_| fsvd_from_gk(a, &gk, opts.r))
 }
 
 /// Algorithm 2 lines 2–9, reusing an existing Algorithm 1 run. Exposed so
@@ -93,38 +94,37 @@ pub fn fsvd(a: &dyn LinOp, opts: &FsvdOptions) -> Result<FsvdOutput> {
 pub fn fsvd_from_gk(a: &dyn LinOp, gk: &GkResult, r: usize) -> Result<FsvdOutput> {
     let kp = gk.alpha.len();
     let r = r.min(kp);
+    let driver = SolverDriver::inert();
     // Line 2: eigendecomposition of B^T B (tridiagonal, O(k'^2)).
-    let t_ritz = crate::obs::clock::now();
-    let (theta, g) = btb_eig(&gk.alpha, &gk.beta)?;
-    record_stage(KernelStage::Ritz, t_ritz.elapsed());
-    // Lines 3–4: V_2 = P·V_1, keep top r columns.
-    let t_recover = crate::obs::clock::now();
-    let g_r = g.submatrix(0..kp, 0..r);
-    let v_r = gk.p.matmul(&g_r)?; // n x r
-    // Line 5: Σ_r = sqrt of Ritz values (clamp tiny negatives from
-    // round-off before the sqrt).
-    let sigma: Vec<f64> = theta[..r].iter().map(|&t| t.max(0.0).sqrt()).collect();
-    // Lines 6–8: u_i = A·v_i / σ_i.
-    let (m, _n) = a.shape();
-    let mut u = Matrix::zeros(m, r);
-    for i in 0..r {
-        let vi = v_r.col(i);
-        let avi = a.apply(&vi)?;
-        if sigma[i] > 0.0 {
-            let inv = 1.0 / sigma[i];
-            for (row, &x) in avi.iter().enumerate() {
-                u[(row, i)] = x * inv;
+    let (theta, g) = driver.timed(KernelStage::Ritz, || btb_eig(&gk.alpha, &gk.beta))?;
+    driver.timed(KernelStage::RecoverUv, || {
+        // Lines 3–4: V_2 = P·V_1, keep top r columns.
+        let g_r = g.submatrix(0..kp, 0..r);
+        let v_r = gk.p.matmul(&g_r)?; // n x r
+        // Line 5: Σ_r = sqrt of Ritz values (clamp tiny negatives from
+        // round-off before the sqrt).
+        let sigma: Vec<f64> = theta[..r].iter().map(|&t| t.max(0.0).sqrt()).collect();
+        // Lines 6–8: u_i = A·v_i / σ_i.
+        let (m, _n) = a.shape();
+        let mut u = Matrix::zeros(m, r);
+        for i in 0..r {
+            let vi = v_r.col(i);
+            let avi = a.apply(&vi)?;
+            if sigma[i] > 0.0 {
+                let inv = 1.0 / sigma[i];
+                for (row, &x) in avi.iter().enumerate() {
+                    u[(row, i)] = x * inv;
+                }
             }
         }
-    }
-    record_stage(KernelStage::RecoverUv, t_recover.elapsed());
-    Ok(FsvdOutput {
-        u,
-        sigma,
-        v: v_r,
-        theta,
-        k_used: gk.k_used,
-        terminated_early: gk.terminated_early,
+        Ok(FsvdOutput {
+            u,
+            sigma,
+            v: v_r,
+            theta: theta.clone(),
+            k_used: gk.k_used,
+            terminated_early: gk.terminated_early,
+        })
     })
 }
 

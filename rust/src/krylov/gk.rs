@@ -19,10 +19,12 @@ use super::LinOp;
 use crate::cancel::CancelToken;
 use crate::linalg::vecops::{axpy, axpy_dot, dot, norm2, scal};
 use crate::linalg::Matrix;
-use crate::obs::metrics::{record_stage, KernelStage};
-use crate::obs::trace::{SpanKind, Trace};
+use crate::obs::metrics::KernelStage;
+use crate::obs::trace::Trace;
 use crate::rng::{Pcg64, Rng};
+use crate::solver::driver::{LoopSpec, SolverDriver};
 use crate::{Error, Result};
+use std::ops::ControlFlow;
 
 /// Options for [`gk_bidiagonalize`].
 #[derive(Debug, Clone)]
@@ -104,121 +106,128 @@ pub fn gk_bidiagonalize(a: &dyn LinOp, opts: &GkOptions) -> Result<GkResult> {
     if kmax == 0 {
         return Err(Error::InvalidArg("gk: k must be >= 1".into()));
     }
-    let t_stage = crate::obs::clock::now();
-    let mut stage_span = opts.trace.span(SpanKind::Stage, "gk");
-    let mut rng = Pcg64::seed_from_u64(opts.seed);
+    let driver = SolverDriver::new(opts.cancel.clone(), opts.trace.clone());
+    let (q_cols, p_cols, alpha, beta, k_used, terminated_early) =
+        driver.stage(Some(KernelStage::Gk), "gk", "gk", |stage_span| {
+            let mut rng = Pcg64::seed_from_u64(opts.seed);
 
-    // Column-major bases: q_cols[j] has length m, p_cols[j] length n.
-    let mut q_cols: Vec<Vec<f64>> = Vec::with_capacity(kmax + 1);
-    let mut p_cols: Vec<Vec<f64>> = Vec::with_capacity(kmax);
-    let mut alpha = Vec::with_capacity(kmax);
-    let mut beta = Vec::with_capacity(kmax);
+            // Column-major bases: q_cols[j] has length m, p_cols[j] length n.
+            let mut q_cols: Vec<Vec<f64>> = Vec::with_capacity(kmax + 1);
+            let mut p_cols: Vec<Vec<f64>> = Vec::with_capacity(kmax);
+            let mut alpha = Vec::with_capacity(kmax);
+            let mut beta = Vec::with_capacity(kmax);
 
-    // Line 1: q₁ ~ N(2, 1), normalized.
-    let mut q1: Vec<f64> = (0..m).map(|_| rng.next_gaussian_with(2.0, 1.0)).collect();
-    let b1 = norm2(&q1);
-    if b1 == 0.0 {
-        return Err(Error::Breakdown("gk: zero start vector".into()));
-    }
-    scal(1.0 / b1, &mut q1);
-    q_cols.push(q1);
-
-    // Line 2: p₁ = Aᵀq₁ normalized.
-    let mut p1 = a.apply_t(&q_cols[0])?;
-    let a1 = norm2(&p1);
-    if a1 == 0.0 {
-        return Err(Error::Breakdown("gk: A^T q1 = 0 (A is zero?)".into()));
-    }
-    scal(1.0 / a1, &mut p1);
-    p_cols.push(p1);
-    alpha.push(a1);
-
-    let mut terminated_early = false;
-    let mut k_used = 0;
-    let mut prev_sigma = 0.0f64;
-
-    // Main loop (paper lines 4–17). Iteration j (0-based) extends the
-    // bases by (q_{j+2}, p_{j+2}) from (p_{j+1}, q_{j+1}).
-    for j in 0..kmax {
-        // Cooperative checkpoint: a deadlined/cancelled job stops here,
-        // between block steps, with the typed error — never mid-step, so
-        // cancel-to-idle latency is bounded by one iteration.
-        opts.cancel.check()?;
-        let mut iter_span = opts.trace.span(SpanKind::Iter, "gk_iter");
-        // Line 5: q_new = A·p_j − α_j·q_j.
-        let mut q_new = {
-            let _k = opts.trace.span(SpanKind::Kernel, "apply");
-            a.apply(&p_cols[j])?
-        };
-        axpy(-alpha[j], &q_cols[j], &mut q_new);
-        // Line 6: full reorthogonalization against Q.
-        {
-            let _k = opts.trace.span(SpanKind::Kernel, "reorth_q");
-            reorthogonalize(&q_cols, &mut q_new, opts.reorth_passes);
-        }
-        // Lines 7–8.
-        let b_new = norm2(&q_new);
-        beta.push(b_new);
-        k_used = j + 1;
-        // Convergence telemetry, live traces only: β_{j+2} is the residual
-        // norm driving termination, and the top Ritz value of BᵀB so far
-        // tracks σ₁. Pure observation between block steps — the extra
-        // eigensolve reads `alpha`/`beta` but feeds nothing back, so a
-        // traced run is bit-identical to an untraced one.
-        iter_span.field("beta", b_new);
-        if iter_span.is_live() {
-            if let Ok((theta, _)) = crate::linalg::tridiag::btb_eig(&alpha, &beta) {
-                let sigma = theta.first().copied().unwrap_or(0.0).max(0.0).sqrt();
-                iter_span.field("sigma_est", sigma);
-                iter_span.field("ritz_delta", (sigma - prev_sigma).abs());
-                prev_sigma = sigma;
+            // Line 1: q₁ ~ N(2, 1), normalized.
+            let mut q1: Vec<f64> =
+                (0..m).map(|_| rng.next_gaussian_with(2.0, 1.0)).collect();
+            let b1 = norm2(&q1);
+            if b1 == 0.0 {
+                return Err(Error::Breakdown("gk: zero start vector".into()));
             }
-        }
-        // Line 9: termination — the Krylov space is exhausted.
-        if b_new < opts.eps {
-            terminated_early = true;
-            // Keep Q at k'+1 columns by appending the (non-informative)
-            // normalized residual direction as a zero column placeholder:
-            // the algebra downstream only uses Q_{1..k'}.
-            q_cols.push(vec![0.0; m]);
-            break;
-        }
-        scal(1.0 / b_new, &mut q_new);
-        q_cols.push(q_new);
+            scal(1.0 / b1, &mut q1);
+            q_cols.push(q1);
 
-        if j + 1 == kmax {
-            break;
-        }
+            // Line 2: p₁ = Aᵀq₁ normalized.
+            let mut p1 = a.apply_t(&q_cols[0])?;
+            let a1 = norm2(&p1);
+            if a1 == 0.0 {
+                return Err(Error::Breakdown("gk: A^T q1 = 0 (A is zero?)".into()));
+            }
+            scal(1.0 / a1, &mut p1);
+            p_cols.push(p1);
+            alpha.push(a1);
 
-        // Line 12: p_new = Aᵀ·q_{j+1} − β·p_j.
-        let mut p_new = {
-            let _k = opts.trace.span(SpanKind::Kernel, "apply_t");
-            a.apply_t(&q_cols[j + 1])?
-        };
-        axpy(-beta[j], &p_cols[j], &mut p_new);
-        // Line 13: full reorthogonalization against P.
-        {
-            let _k = opts.trace.span(SpanKind::Kernel, "reorth_p");
-            reorthogonalize(&p_cols, &mut p_new, opts.reorth_passes);
-        }
-        // Line 14.
-        let a_new = norm2(&p_new);
-        if a_new < opts.eps {
-            // Row space exhausted: equivalent rank signal.
-            terminated_early = true;
-            break;
-        }
-        scal(1.0 / a_new, &mut p_new);
-        alpha.push(a_new);
-        p_cols.push(p_new);
-    }
+            let mut terminated_early = false;
+            let mut prev_sigma = 0.0f64;
 
-    debug_assert_eq!(alpha.len(), p_cols.len());
-    debug_assert_eq!(beta.len(), alpha.len());
+            // Main loop (paper lines 4–17), driven: the driver owns the
+            // per-iteration cancel/deadline checkpoint and the `gk_iter`
+            // span; iteration j (0-based) extends the bases by
+            // (q_{j+2}, p_{j+2}) from (p_{j+1}, q_{j+1}).
+            let spec = LoopSpec {
+                iter_name: "gk_iter",
+                iter_label: "gk_iter",
+                max_iters: kmax,
+                // The enclosing `gk` stage histogram covers the loop.
+                per_iter_stage: None,
+            };
+            let k_used = driver.run_loop(&spec, |j, iter_span| {
+                // Line 5: q_new = A·p_j − α_j·q_j.
+                let mut q_new = {
+                    let _k = driver.kernel("apply", "gk_apply");
+                    a.apply(&p_cols[j])?
+                };
+                axpy(-alpha[j], &q_cols[j], &mut q_new);
+                // Line 6: full reorthogonalization against Q.
+                {
+                    let _k = driver.kernel("reorth_q", "gk_reorth_q");
+                    reorthogonalize(&q_cols, &mut q_new, opts.reorth_passes);
+                }
+                // Lines 7–8.
+                let b_new = norm2(&q_new);
+                beta.push(b_new);
+                // Convergence telemetry, live traces only: β_{j+2} is the
+                // residual norm driving termination, and the top Ritz value
+                // of BᵀB so far tracks σ₁. Pure observation between block
+                // steps — the extra eigensolve reads `alpha`/`beta` but
+                // feeds nothing back, so a traced run is bit-identical to
+                // an untraced one.
+                iter_span.field("beta", b_new);
+                if iter_span.is_live() {
+                    if let Ok((theta, _)) = crate::linalg::tridiag::btb_eig(&alpha, &beta) {
+                        let sigma = theta.first().copied().unwrap_or(0.0).max(0.0).sqrt();
+                        iter_span.field("sigma_est", sigma);
+                        iter_span.field("ritz_delta", (sigma - prev_sigma).abs());
+                        prev_sigma = sigma;
+                    }
+                }
+                // Line 9: termination — the Krylov space is exhausted.
+                if b_new < opts.eps {
+                    terminated_early = true;
+                    // Keep Q at k'+1 columns by appending the
+                    // (non-informative) normalized residual direction as a
+                    // zero column placeholder: the algebra downstream only
+                    // uses Q_{1..k'}.
+                    q_cols.push(vec![0.0; m]);
+                    return Ok(ControlFlow::Break(()));
+                }
+                scal(1.0 / b_new, &mut q_new);
+                q_cols.push(q_new);
 
-    stage_span.field("k_used", k_used as f64);
-    drop(stage_span);
-    record_stage(KernelStage::Gk, t_stage.elapsed());
+                if j + 1 == kmax {
+                    return Ok(ControlFlow::Break(()));
+                }
+
+                // Line 12: p_new = Aᵀ·q_{j+1} − β·p_j.
+                let mut p_new = {
+                    let _k = driver.kernel("apply_t", "gk_apply_t");
+                    a.apply_t(&q_cols[j + 1])?
+                };
+                axpy(-beta[j], &p_cols[j], &mut p_new);
+                // Line 13: full reorthogonalization against P.
+                {
+                    let _k = driver.kernel("reorth_p", "gk_reorth_p");
+                    reorthogonalize(&p_cols, &mut p_new, opts.reorth_passes);
+                }
+                // Line 14.
+                let a_new = norm2(&p_new);
+                if a_new < opts.eps {
+                    // Row space exhausted: equivalent rank signal.
+                    terminated_early = true;
+                    return Ok(ControlFlow::Break(()));
+                }
+                scal(1.0 / a_new, &mut p_new);
+                alpha.push(a_new);
+                p_cols.push(p_new);
+                Ok(ControlFlow::Continue(()))
+            })?;
+
+            debug_assert_eq!(alpha.len(), p_cols.len());
+            debug_assert_eq!(beta.len(), alpha.len());
+
+            stage_span.field("k_used", k_used as f64);
+            Ok((q_cols, p_cols, alpha, beta, k_used, terminated_early))
+        })?;
 
     let p = Matrix::from_columns(n, &p_cols)?;
     let q = Matrix::from_columns(m, &q_cols)?;

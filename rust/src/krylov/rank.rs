@@ -9,8 +9,9 @@ use super::gk::{gk_bidiagonalize, GkOptions, GkResult};
 use super::LinOp;
 use crate::cancel::CancelToken;
 use crate::linalg::tridiag::btb_eig;
-use crate::obs::metrics::{record_stage, KernelStage};
+use crate::obs::metrics::KernelStage;
 use crate::obs::trace::Trace;
+use crate::solver::driver::SolverDriver;
 use crate::Result;
 
 /// Options for [`estimate_rank`].
@@ -81,9 +82,8 @@ pub fn estimate_rank(a: &dyn LinOp, opts: &RankOptions) -> Result<RankEstimate> 
 
 /// Algorithm 3 lines 3–4 given an existing Algorithm 1 run.
 pub fn rank_from_gk(gk: &GkResult, eps: f64) -> Result<RankEstimate> {
-    let t_ritz = crate::obs::clock::now();
-    let (theta, _g) = btb_eig(&gk.alpha, &gk.beta)?;
-    record_stage(KernelStage::Ritz, t_ritz.elapsed());
+    let (theta, _g) =
+        SolverDriver::inert().timed(KernelStage::Ritz, || btb_eig(&gk.alpha, &gk.beta))?;
     // Count eigenvalues of B^T B exceeding ε (paper line 4). The
     // eigenvalues are σ² estimates; the paper's ε applies directly to them.
     let rank = theta.iter().filter(|&&t| t > eps).count();

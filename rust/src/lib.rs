@@ -16,8 +16,10 @@
 //!
 //! * **L3 (this crate)** — the coordinator: a factorization service with a
 //!   job queue, routing policy and worker pool ([`coordinator`]), plus native
-//!   implementations of every algorithm ([`krylov`], [`rsvd`], [`linalg`],
-//!   [`manifold`], [`rsl`]). In front of it sits the **serving edge**
+//!   implementations of every algorithm ([`krylov`], [`rsvd`], [`solver`],
+//!   [`linalg`], [`manifold`], [`rsl`]) unified behind the
+//!   [`solver::SvdSolver`] trait and its shared iteration driver
+//!   ([`solver::SolverDriver`]). In front of it sits the **serving edge**
 //!   ([`server`]): a zero-dependency HTTP/1.1 + JSON network API with a
 //!   fingerprint-keyed result cache (`fastlr serve`) and a loopback load
 //!   generator (`fastlr loadgen`). Underneath everything sits the
@@ -81,6 +83,7 @@ pub mod rng;
 pub mod rsl;
 pub mod rsvd;
 pub mod runtime;
+pub mod solver;
 pub mod server;
 pub mod sync;
 pub mod testing;

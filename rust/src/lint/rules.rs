@@ -50,7 +50,8 @@ pub fn why(rule: &str) -> &'static str {
         }
         "unsafe-needs-safety" => "every unsafe block/impl documents its proof obligation",
         "no-panic-on-request-path" => {
-            "server/coordinator code returns typed errors; a panic kills a connection worker"
+            "server/coordinator/solver code returns typed errors; a panic kills a connection \
+             worker or a routed job"
         }
         "no-unordered-float-reduce" => {
             "float reductions pin their order (vecops/exec merge contract); iterator sum does not"
@@ -83,7 +84,9 @@ fn in_scope(rule: &str, rel: &str) -> bool {
         }
         "unsafe-needs-safety" => true,
         "no-panic-on-request-path" => {
-            rel.starts_with("rust/src/server/") || rel.starts_with("rust/src/coordinator/")
+            rel.starts_with("rust/src/server/")
+                || rel.starts_with("rust/src/coordinator/")
+                || rel.starts_with("rust/src/solver/")
         }
         "no-unordered-float-reduce" => {
             rel.starts_with("rust/src/")
@@ -364,7 +367,9 @@ mod tests {
         assert!(!in_scope("no-raw-clock", "rust/src/obs/trace.rs"));
         assert!(!in_scope("no-raw-clock", "rust/src/bench_harness.rs"));
         assert!(in_scope("no-panic-on-request-path", "rust/src/coordinator/queue.rs"));
+        assert!(in_scope("no-panic-on-request-path", "rust/src/solver/driver.rs"));
         assert!(!in_scope("no-panic-on-request-path", "rust/src/linalg/gemm.rs"));
+        assert!(in_scope("no-raw-clock", "rust/src/solver/block_krylov.rs"));
         assert!(!in_scope("no-unordered-float-reduce", "rust/src/linalg/vecops.rs"));
         assert!(in_scope("unsafe-needs-safety", "rust/tests/end_to_end.rs"));
     }

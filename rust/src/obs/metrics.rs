@@ -212,10 +212,20 @@ pub enum KernelStage {
     StageB,
     /// Traditional dense SVD (the non-Krylov route).
     FullSvd,
+    /// Block-Krylov initial sketch `Y₀ = orth(A·Ω)`.
+    BkSketch,
+    /// One block-Krylov power step `Yᵢ = orth(A·(Aᵀ·Yᵢ₋₁))`.
+    BkIter,
+    /// Block-Krylov basis assembly + small core solve.
+    BkCore,
+    /// Single-pass range + co-range sketches (the one data pass).
+    SpSketch,
+    /// Single-pass core solve: least-squares core, small SVD, lift.
+    SpCore,
 }
 
 /// All stages, in [`KernelStage`] discriminant order.
-pub const KERNEL_STAGES: [KernelStage; 7] = [
+pub const KERNEL_STAGES: [KernelStage; 12] = [
     KernelStage::Gk,
     KernelStage::Ritz,
     KernelStage::RecoverUv,
@@ -223,6 +233,11 @@ pub const KERNEL_STAGES: [KernelStage; 7] = [
     KernelStage::PowerIter,
     KernelStage::StageB,
     KernelStage::FullSvd,
+    KernelStage::BkSketch,
+    KernelStage::BkIter,
+    KernelStage::BkCore,
+    KernelStage::SpSketch,
+    KernelStage::SpCore,
 ];
 
 impl KernelStage {
@@ -236,6 +251,11 @@ impl KernelStage {
             KernelStage::PowerIter => "power_iter",
             KernelStage::StageB => "stage_b",
             KernelStage::FullSvd => "full_svd",
+            KernelStage::BkSketch => "bk_sketch",
+            KernelStage::BkIter => "bk_iter",
+            KernelStage::BkCore => "bk_core",
+            KernelStage::SpSketch => "sp_sketch",
+            KernelStage::SpCore => "sp_core",
         }
     }
 }

@@ -69,8 +69,13 @@ impl SpanKind {
 pub struct SpanRecord {
     /// Stack level.
     pub kind: SpanKind,
-    /// Static span name (e.g. `"gk_iter"`).
+    /// Static span name (e.g. `"gk_iter"`). Kept stable across releases —
+    /// the `/v1/jobs/{id}/trace` wire shape pins these.
     pub name: &'static str,
+    /// Method-qualified label (e.g. `"rsvd_power_iter"`). Defaults to
+    /// `name`; solver drivers set it so multi-method traces stay
+    /// attributable without renaming the wire-stable `name`.
+    pub label: &'static str,
     /// Start offset from trace creation, microseconds.
     pub start_us: u64,
     /// Span duration, microseconds.
@@ -120,10 +125,22 @@ impl Trace {
     /// Open a span that records itself on drop. No-op (and no clock read)
     /// on an inert trace.
     pub fn span(&self, kind: SpanKind, name: &'static str) -> Span<'_> {
+        self.span_labeled(kind, name, name)
+    }
+
+    /// Like [`Trace::span`], with a method-qualified `label` distinct from
+    /// the wire-stable `name` (e.g. name `"power_iter"`, label
+    /// `"rsvd_power_iter"`).
+    pub fn span_labeled(
+        &self,
+        kind: SpanKind,
+        name: &'static str,
+        label: &'static str,
+    ) -> Span<'_> {
         let live = self
             .inner
             .is_some()
-            .then(|| LiveSpan { kind, name, start: Instant::now(), fields: Vec::new() });
+            .then(|| LiveSpan { kind, name, label, start: Instant::now(), fields: Vec::new() });
         Span { trace: self, live }
     }
 
@@ -138,10 +155,25 @@ impl Trace {
         dur: Duration,
         fields: Vec<(&'static str, f64)>,
     ) {
+        self.record_at_labeled(kind, name, name, start, dur, fields);
+    }
+
+    /// [`Trace::record_at`] with an explicit label (see
+    /// [`Trace::span_labeled`]).
+    pub fn record_at_labeled(
+        &self,
+        kind: SpanKind,
+        name: &'static str,
+        label: &'static str,
+        start: Instant,
+        dur: Duration,
+        fields: Vec<(&'static str, f64)>,
+    ) {
         let Some(inner) = &self.inner else { return };
         let rec = SpanRecord {
             kind,
             name,
+            label,
             start_us: micros(start.saturating_duration_since(inner.t0)),
             dur_us: micros(dur),
             fields,
@@ -179,6 +211,7 @@ fn micros(d: Duration) -> u64 {
 struct LiveSpan {
     kind: SpanKind,
     name: &'static str,
+    label: &'static str,
     start: Instant,
     fields: Vec<(&'static str, f64)>,
 }
@@ -207,7 +240,14 @@ impl Span<'_> {
 impl Drop for Span<'_> {
     fn drop(&mut self) {
         if let Some(l) = self.live.take() {
-            self.trace.record_at(l.kind, l.name, l.start, l.start.elapsed(), l.fields);
+            self.trace.record_at_labeled(
+                l.kind,
+                l.name,
+                l.label,
+                l.start,
+                l.start.elapsed(),
+                l.fields,
+            );
         }
     }
 }
@@ -293,5 +333,19 @@ mod tests {
     fn kind_names_are_stable() {
         assert_eq!(SpanKind::Request.as_str(), "request");
         assert_eq!(SpanKind::Kernel.as_str(), "kernel");
+    }
+
+    #[test]
+    fn label_defaults_to_name_and_can_differ() {
+        let t = Trace::new(8);
+        {
+            let _plain = t.span(SpanKind::Iter, "power_iter");
+            let _tagged = t.span_labeled(SpanKind::Iter, "power_iter", "rsvd_power_iter");
+        }
+        let spans = t.snapshot();
+        assert_eq!(spans.len(), 2);
+        assert!(spans.iter().all(|s| s.name == "power_iter"));
+        assert!(spans.iter().any(|s| s.label == "power_iter"));
+        assert!(spans.iter().any(|s| s.label == "rsvd_power_iter"));
     }
 }

@@ -12,10 +12,12 @@ use crate::krylov::LinOp;
 use crate::linalg::qr::orthonormalize;
 use crate::linalg::svd::{svd, Svd};
 use crate::linalg::Matrix;
-use crate::obs::metrics::{record_stage, KernelStage};
-use crate::obs::trace::{SpanKind, Trace};
+use crate::obs::metrics::KernelStage;
+use crate::obs::trace::Trace;
 use crate::rng::Pcg64;
+use crate::solver::driver::{LoopSpec, SolverDriver};
 use crate::{Error, Result};
+use std::ops::ControlFlow;
 
 /// Options for [`rsvd`].
 #[derive(Debug, Clone)]
@@ -66,49 +68,50 @@ pub fn rsvd(a: &dyn LinOp, opts: &RsvdOptions) -> Result<Svd> {
         return Err(Error::InvalidArg("rsvd: r must be >= 1".into()));
     }
     let l = (opts.r + opts.oversample).min(n).min(m);
+    let driver = SolverDriver::new(opts.cancel.clone(), opts.trace.clone());
     let mut rng = Pcg64::seed_from_u64(opts.seed);
 
-    // Stage A: find Q whose columns approximate range(A). Each block
-    // step is preceded by a cooperative cancel checkpoint.
-    opts.cancel.check()?;
-    let t_sketch = crate::obs::clock::now();
-    let mut q = {
-        let mut sp = opts.trace.span(SpanKind::Stage, "sketch");
+    // Stage A: find Q whose columns approximate range(A). The driver
+    // checkpoints before every block step (sketch, each power iteration,
+    // stage B).
+    driver.checkpoint()?;
+    let mut q = driver.stage(Some(KernelStage::Sketch), "sketch", "rsvd_sketch", |sp| {
         sp.field("l", l as f64);
         let omega = Matrix::gaussian(n, l, &mut rng);
         let y = a.apply_block(&omega)?; // m x l  (A Ω)
-        orthonormalize(&y)?
-    };
-    record_stage(KernelStage::Sketch, t_sketch.elapsed());
-    for _ in 0..opts.power_iters {
-        opts.cancel.check()?;
-        let t_power = crate::obs::clock::now();
-        let mut sp = opts.trace.span(SpanKind::Iter, "power_iter");
-        // Subspace iteration with re-orthonormalization each half-step
-        // (numerically stable variant of [4] Alg. 4.4).
-        let z = a.apply_t_block(&q)?; // n x l  (A^T Q)
-        let qz = orthonormalize(&z)?;
-        let y2 = a.apply_block(&qz)?; // m x l
-        if sp.is_live() {
-            sp.field("block_fro", y2.fro_norm());
-        }
-        q = orthonormalize(&y2)?;
-        drop(sp);
-        record_stage(KernelStage::PowerIter, t_power.elapsed());
-    }
+        orthonormalize(&y)
+    })?;
+    driver.run_loop(
+        &LoopSpec {
+            iter_name: "power_iter",
+            iter_label: "rsvd_power_iter",
+            max_iters: opts.power_iters,
+            per_iter_stage: Some(KernelStage::PowerIter),
+        },
+        |_, sp| {
+            // Subspace iteration with re-orthonormalization each half-step
+            // (numerically stable variant of [4] Alg. 4.4).
+            let z = a.apply_t_block(&q)?; // n x l  (A^T Q)
+            let qz = orthonormalize(&z)?;
+            let y2 = a.apply_block(&qz)?; // m x l
+            if sp.is_live() {
+                sp.field("block_fro", y2.fro_norm());
+            }
+            q = orthonormalize(&y2)?;
+            Ok(ControlFlow::Continue(()))
+        },
+    )?;
 
     // Stage B: SVD of the small matrix B = Qᵀ·A (l x n), formed through
     // the operator as (Aᵀ·Q)ᵀ.
-    opts.cancel.check()?;
-    let t_b = crate::obs::clock::now();
-    let _sp = opts.trace.span(SpanKind::Stage, "stage_b");
-    let b = a.apply_t_block(&q)?.transpose(); // l x n
-    let small = svd(&b)?;
-    // U = Q · U_b.
-    let u = q.matmul(&small.u)?;
-    drop(_sp);
-    record_stage(KernelStage::StageB, t_b.elapsed());
-    Ok(Svd { u, sigma: small.sigma, v: small.v })
+    driver.checkpoint()?;
+    driver.stage(Some(KernelStage::StageB), "stage_b", "rsvd_stage_b", |_| {
+        let b = a.apply_t_block(&q)?.transpose(); // l x n
+        let small = svd(&b)?;
+        // U = Q · U_b.
+        let u = q.matmul(&small.u)?;
+        Ok(Svd { u, sigma: small.sigma, v: small.v })
+    })
 }
 
 #[cfg(test)]

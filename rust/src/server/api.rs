@@ -4,9 +4,12 @@
 //!
 //! * `POST /v1/svd`  — partial SVD. Body selects the operator (inline
 //!   dense `data`, sparse `triplets`, or a `synth` generator spec) plus
-//!   `r`, `accuracy` (`exact|balanced|fast`), `return_vectors`, and the
-//!   admission fields: `deadline_ms`, `priority`
-//!   (`interactive|bulk`) and `mode` (`sync|async`).
+//!   `r`, `accuracy` (`exact|balanced|fast`), an optional `method`
+//!   override pinning the algorithm family
+//!   (`full|fsvd|rsvd|block_krylov|single_pass` — the policy still picks
+//!   the parameters), `return_vectors`, and the admission fields:
+//!   `deadline_ms`, `priority` (`interactive|bulk`) and `mode`
+//!   (`sync|async`).
 //! * `POST /v1/rank` — numerical rank (Algorithm 3); same operator
 //!   sources plus `eps`, same admission fields.
 //! * `GET /v1/jobs/{id}`    — poll an async job
@@ -55,7 +58,9 @@ use super::jobs::{JobsRegistry, PollOutcome};
 use super::json::Json;
 use crate::cancel::CancelToken;
 use crate::coordinator::batcher::Batcher;
-use crate::coordinator::job::{JobError, JobErrorKind, JobOutcome, JobResult, SvdMethod};
+use crate::coordinator::job::{
+    JobError, JobErrorKind, JobOutcome, JobResult, MethodKind, SvdMethod, METHOD_KINDS,
+};
 use crate::coordinator::queue::Priority;
 use crate::coordinator::{AccuracyClass, FactorizationService, JobRequest, JobSpec};
 use crate::linalg::{Matrix, SparseMatrix};
@@ -237,6 +242,16 @@ fn build_registry(
     r.counter("fastlr_exec_steals_total", "Chunks stolen by pool workers", &[], || {
         crate::exec::stats().steals
     });
+    // One series per algorithm family: how routing splits the traffic.
+    for kind in METHOD_KINDS {
+        let svc = Arc::clone(service);
+        r.counter(
+            "fastlr_jobs_by_method_total",
+            "Jobs routed per algorithm family (ticks at routing time)",
+            &[("method", kind.as_str())],
+            move || svc.metrics.method(kind).get(),
+        );
+    }
     for stage in KERNEL_STAGES {
         r.histogram(
             "fastlr_kernel_stage_seconds",
@@ -574,6 +589,8 @@ enum Mode {
 /// Parsed admission fields, shared by both POST endpoints.
 struct JobParams {
     accuracy: AccuracyClass,
+    /// Optional algorithm-family override (`"method"`); SVD only.
+    method: Option<MethodKind>,
     return_vectors: bool,
     /// Effective budget: `min(client deadline_ms, server cap)`.
     deadline: Option<Duration>,
@@ -591,6 +608,20 @@ const MAX_DEADLINE_MS: usize = 31_536_000_000;
 
 fn parse_params(state: &ApiState, body: &Json) -> Result<JobParams> {
     let accuracy = parse_accuracy(body)?;
+    let method = match body.get("method") {
+        None => None,
+        Some(v) => {
+            let name = v.as_str().ok_or_else(|| {
+                Error::Http(format!("method must be a string, got {v}"))
+            })?;
+            Some(MethodKind::parse(name).ok_or_else(|| {
+                Error::Http(format!(
+                    "unknown method {name:?} (expected full, fsvd, rsvd, block_krylov \
+                     or single_pass)"
+                ))
+            })?)
+        }
+    };
     let return_vectors = body.get("return_vectors").and_then(Json::as_bool).unwrap_or(false);
     let client_deadline = match field_usize(body, "deadline_ms")? {
         Some(ms) if ms > MAX_DEADLINE_MS => {
@@ -632,10 +663,11 @@ fn parse_params(state: &ApiState, body: &Json) -> Result<JobParams> {
             .as_bool()
             .ok_or_else(|| Error::Http(format!("trace must be a boolean, got {v}")))?,
     };
-    Ok(JobParams { accuracy, return_vectors, deadline, priority, mode, trace })
+    Ok(JobParams { accuracy, method, return_vectors, deadline, priority, mode, trace })
 }
 
 fn post_job(state: &ApiState, req: &Request, kind: JobKind, request_id: &str) -> Response {
+    let is_rank = matches!(kind, JobKind::Rank);
     let parsed = req
         .body_str()
         .and_then(Json::parse)
@@ -648,6 +680,15 @@ fn post_job(state: &ApiState, req: &Request, kind: JobKind, request_id: &str) ->
         Ok(p) => p,
         Err(e) => return error_response(state, request_id, ApiError::from_error(&e, state)),
     };
+    // Rank estimation is Algorithm 3 by definition: reject the override
+    // here with a 400 rather than letting the worker fail it later.
+    if is_rank && params.method.is_some() {
+        return error_response(
+            state,
+            request_id,
+            ApiError::new(400, "invalid_argument", "method override is not valid for /v1/rank"),
+        );
+    }
     run_cached(state, spec, params, request_id)
 }
 
@@ -659,6 +700,11 @@ fn run_cached(state: &ApiState, spec: JobSpec, params: JobParams, request_id: &s
     let mut key = fingerprint_spec(&spec, params.accuracy);
     if params.return_vectors {
         key ^= 0x9e37_79b9_7f4a_7c15;
+    }
+    // A method override changes *what runs*, so it is part of the cache
+    // identity; each family perturbs the key by a distinct odd constant.
+    if let Some(kind) = params.method {
+        key ^= 0xd1b5_4a32_d192_ed03u64.wrapping_mul(kind as u64 + 1);
     }
     // Traced requests always execute — the point is to observe *this*
     // run — so they skip the cache read. They still feed the cache with
@@ -681,7 +727,7 @@ fn run_cached(state: &ApiState, spec: JobSpec, params: JobParams, request_id: &s
     });
     // Live token even without a deadline: async jobs stay cancellable.
     let cancel = CancelToken::with_budget(params.deadline);
-    let request = JobRequest { spec, accuracy: params.accuracy };
+    let request = JobRequest { spec, accuracy: params.accuracy, method: params.method };
 
     if params.mode == Mode::Async {
         let submitted =
@@ -852,9 +898,14 @@ fn trace_json(trace: &Trace) -> Json {
 }
 
 fn span_json(s: &SpanRecord) -> Json {
+    // `name` keeps the historical wire vocabulary (generic stage names:
+    // "sketch", "power_iter", ...); `label` is the additive
+    // method-qualified variant ("rsvd_sketch", "bk_iter", ...). Clients
+    // keying on `name` are unaffected.
     let mut v = Json::obj(vec![
         ("kind", Json::Str(s.kind.as_str().into())),
         ("name", Json::Str(s.name.into())),
+        ("label", Json::Str(s.label.into())),
         ("start_us", Json::Num(s.start_us as f64)),
         ("dur_us", Json::Num(s.dur_us as f64)),
     ]);
@@ -882,14 +933,18 @@ fn outcome_json(outcome: &JobOutcome, res: &JobResult, return_vectors: bool) -> 
             v.set("k_iterations", Json::Num(*k_iterations as f64));
         }
         JobOutcome::Svd(s) => {
-            let (name, param) = match s.method {
-                SvdMethod::Full => ("full", None),
-                SvdMethod::Fsvd { k } => ("fsvd", Some(("k", k))),
-                SvdMethod::Rsvd { oversample } => ("rsvd", Some(("oversample", oversample))),
-            };
-            v.set("method", Json::Str(name.into()));
-            if let Some((pname, pval)) = param {
-                v.set(pname, Json::Num(pval as f64));
+            v.set("method", Json::Str(s.method.name().into()));
+            match s.method {
+                SvdMethod::Full => {}
+                SvdMethod::Fsvd { k } => v.set("k", Json::Num(k as f64)),
+                SvdMethod::Rsvd { oversample } => {
+                    v.set("oversample", Json::Num(oversample as f64))
+                }
+                SvdMethod::BlockKrylov { q, block } => {
+                    v.set("q", Json::Num(q as f64));
+                    v.set("block", Json::Num(block as f64));
+                }
+                SvdMethod::SinglePass { sketch } => v.set("sketch", Json::Num(sketch as f64)),
             }
             v.set("sigma", Json::num_array(&s.sigma));
             if return_vectors {
@@ -1221,10 +1276,57 @@ mod tests {
             r#"{"rows":2,"cols":2,"data":[1,2,3,4],"deadline_ms":"soon"}"#, // bad deadline
             r#"{"rows":2,"cols":2,"data":[1,2,3,4],"deadline_ms":99999999999999}"#, // over cap
             r#"{"rows":2,"cols":2,"data":[1,2,3,4],"trace":"yes"}"#, // non-boolean trace
+            r#"{"rows":2,"cols":2,"data":[1,2,3,4],"method":"qr"}"#, // unknown method
+            r#"{"rows":2,"cols":2,"data":[1,2,3,4],"method":7}"#,    // non-string method
         ] {
             let resp = handle(&st, &request("POST", "/v1/svd", bad));
             assert_eq!(resp.status, 400, "body {bad:?} -> {}", resp.status);
         }
+    }
+
+    #[test]
+    fn method_override_round_trips_and_keys_the_cache() {
+        let st = state();
+        let base = r#"{"synth":{"kind":"low_rank_gaussian","rows":60,"cols":50,"rank":4,
+                       "seed":77},"r":4}"#;
+        let pinned = r#"{"synth":{"kind":"low_rank_gaussian","rows":60,"cols":50,"rank":4,
+                       "seed":77},"r":4,"method":"block_krylov"}"#;
+        let v1 = body_json(&handle(&st, &request("POST", "/v1/svd", base)));
+        assert_eq!(v1.get("method").and_then(Json::as_str), Some("full"));
+        let resp = handle(&st, &request("POST", "/v1/svd", pinned));
+        assert_eq!(resp.status, 200, "{:?}", String::from_utf8_lossy(&resp.body));
+        let v2 = body_json(&resp);
+        assert_eq!(v2.get("method").and_then(Json::as_str), Some("block_krylov"));
+        // A pinned method is a distinct cache identity: no stale hit from
+        // the policy-routed run.
+        assert_eq!(v2.get("cached"), Some(&Json::Bool(false)));
+        assert_eq!(v2.get("q").and_then(Json::as_usize), Some(4));
+        assert_eq!(v2.get("block").and_then(Json::as_usize), Some(10));
+        // Exact rank 4 with block 10: both methods agree on the spectrum.
+        let s1 = v1.get("sigma").and_then(Json::as_array).unwrap();
+        let s2 = v2.get("sigma").and_then(Json::as_array).unwrap();
+        for (a, b) in s1.iter().zip(s2) {
+            let (a, b) = (a.as_f64().unwrap(), b.as_f64().unwrap());
+            assert!((a - b).abs() / a.abs() < 1e-8, "{a} vs {b}");
+        }
+        // Rank estimation refuses the override outright.
+        let rank_bad = r#"{"synth":{"kind":"low_rank_gaussian","rows":60,"cols":50,"rank":4,
+                       "seed":77},"method":"fsvd"}"#;
+        let rej = handle(&st, &request("POST", "/v1/rank", rank_bad));
+        assert_eq!(rej.status, 400, "{:?}", String::from_utf8_lossy(&rej.body));
+    }
+
+    #[test]
+    fn single_pass_override_reports_sketch_param() {
+        let st = state();
+        let body = r#"{"synth":{"kind":"low_rank_gaussian","rows":60,"cols":50,"rank":4,
+                       "seed":78},"r":4,"method":"single_pass"}"#;
+        let resp = handle(&st, &request("POST", "/v1/svd", body));
+        assert_eq!(resp.status, 200, "{:?}", String::from_utf8_lossy(&resp.body));
+        let v = body_json(&resp);
+        assert_eq!(v.get("method").and_then(Json::as_str), Some("single_pass"));
+        assert_eq!(v.get("sketch").and_then(Json::as_usize), Some(14));
+        assert_eq!(v.get("sigma").and_then(Json::as_array).unwrap().len(), 4);
     }
 
     #[test]
@@ -1423,6 +1525,16 @@ mod tests {
         assert!(text1.contains("fastlr_gemm_seconds_count{path=\"packed\"}"), "{text1}");
         assert!(text1.contains("fastlr_gemm_seconds_count{path=\"fallback\"}"), "{text1}");
         assert_eq!(scrape_value(&text1, "fastlr_jobs_total{state=\"completed\"}"), Some(1.0));
+        // 2x2 routes to traditional SVD; per-method counters export one
+        // series per family.
+        assert_eq!(
+            scrape_value(&text1, "fastlr_jobs_by_method_total{method=\"full\"}"),
+            Some(1.0)
+        );
+        assert_eq!(
+            scrape_value(&text1, "fastlr_jobs_by_method_total{method=\"single_pass\"}"),
+            Some(0.0)
+        );
         assert_eq!(scrape_value(&text1, "fastlr_cache_misses_total"), Some(1.0));
         let requests1 = scrape_value(&text1, "fastlr_requests_total").unwrap();
         // Another job + the scrape itself: counters only move up.
@@ -1462,6 +1574,15 @@ mod tests {
             assert!(fields.get("beta").and_then(Json::as_f64).is_some(), "beta per iteration");
             assert!(fields.get("sigma_est").and_then(Json::as_f64).is_some());
         }
+        // Every span carries the additive `label` field (method-qualified
+        // stage vocabulary); `name` keeps the historical wire values, so
+        // kernel spans show the split: name "apply", label "gk_apply".
+        assert!(spans.iter().all(|s| s.get("label").and_then(Json::as_str).is_some()));
+        let apply = spans
+            .iter()
+            .find(|s| name_of(s).as_deref() == Some("apply"))
+            .expect("gk kernel span");
+        assert_eq!(apply.get("label").and_then(Json::as_str), Some("gk_apply"));
         // The traced run still fed the cache — with an untraced body.
         let untraced = r#"{"synth":{"kind":"low_rank_gaussian","rows":600,"cols":500,"rank":5,
                        "seed":21},"r":5}"#;

@@ -211,6 +211,7 @@ mod tests {
                         r,
                     },
                     accuracy: AccuracyClass::Balanced,
+                    method: None,
                 },
                 Priority::Bulk,
                 cancel.clone(),

@@ -1,0 +1,250 @@
+//! The shared iteration-loop driver under every SVD method.
+//!
+//! Before this module, `gk.rs`, `fsvd.rs`, `rank.rs` and `halko.rs` each
+//! carried their own copy of the same plumbing: a cooperative cancel
+//! check at the top of every block step, a deadline that fires *between*
+//! steps (never inside one), per-stage/per-iteration [`Trace`] spans, and
+//! always-on [`KernelStage`] histograms. [`SolverDriver`] owns that
+//! plumbing once; the methods keep only their arithmetic.
+//!
+//! The contract the driver preserves is the repo-wide determinism
+//! contract: everything here *observes* the iteration (clock reads, span
+//! buffers, stage histograms) and feeds nothing back into it, so a
+//! driven run is bit-identical to an undriven one, traced or not, under
+//! any `FASTLR_THREADS`.
+
+use crate::cancel::CancelToken;
+use crate::obs::metrics::{record_stage, KernelStage};
+use crate::obs::trace::{Span, SpanKind, Trace};
+use crate::Result;
+use std::ops::ControlFlow;
+use std::time::Duration;
+
+/// Shape of one driven iteration loop.
+#[derive(Debug, Clone)]
+pub struct LoopSpec {
+    /// Wire-stable iteration span name (e.g. `"gk_iter"`, `"power_iter"`).
+    pub iter_name: &'static str,
+    /// Method-qualified span label (e.g. `"rsvd_power_iter"`).
+    pub iter_label: &'static str,
+    /// Upper bound on iterations; the step decides early termination.
+    pub max_iters: usize,
+    /// Stage histogram fed once per iteration (None: the enclosing stage
+    /// timer covers the loop, as in GK).
+    pub per_iter_stage: Option<KernelStage>,
+}
+
+/// Owns cancel/deadline checkpoints, trace spans and stage metrics for
+/// one solver run. Construct with [`SolverDriver::new`] from a job's
+/// token + trace, or [`SolverDriver::inert`] where neither applies.
+#[derive(Debug, Clone, Default)]
+pub struct SolverDriver {
+    cancel: CancelToken,
+    trace: Trace,
+}
+
+impl SolverDriver {
+    /// Driver carrying a job's cancel token and telemetry sink.
+    pub fn new(cancel: CancelToken, trace: Trace) -> Self {
+        SolverDriver { cancel, trace }
+    }
+
+    /// Driver with an inert token and trace: checkpoints always pass,
+    /// spans are no-ops, stage histograms still record (they are global
+    /// and always on).
+    pub fn inert() -> Self {
+        SolverDriver { cancel: CancelToken::none(), trace: Trace::none() }
+    }
+
+    /// Cooperative checkpoint: returns the typed `Cancelled` /
+    /// `DeadlineExceeded` error when the job should stop. Called by the
+    /// driver at the top of every loop iteration; methods call it
+    /// directly before non-loop block steps.
+    pub fn checkpoint(&self) -> Result<()> {
+        self.cancel.check()
+    }
+
+    /// Time left in the deadline budget, if one is set.
+    pub fn remaining(&self) -> Option<Duration> {
+        self.cancel.remaining()
+    }
+
+    /// Whether a live trace is attached (for lazily computed span fields).
+    pub fn is_traced(&self) -> bool {
+        self.trace.is_live()
+    }
+
+    /// Open a kernel span (recorded on drop; no-op when untraced).
+    pub fn kernel(&self, name: &'static str, label: &'static str) -> Span<'_> {
+        self.trace.span_labeled(SpanKind::Kernel, name, label)
+    }
+
+    /// Run one algorithm stage: opens a stage span (`name` wire-stable,
+    /// `label` method-qualified), runs `f`, then — only on success —
+    /// feeds the stage histogram. On error the span is still recorded
+    /// (the trace shows where the run died) but the histogram is not.
+    pub fn stage<T>(
+        &self,
+        metric: Option<KernelStage>,
+        name: &'static str,
+        label: &'static str,
+        f: impl FnOnce(&mut Span<'_>) -> Result<T>,
+    ) -> Result<T> {
+        let t0 = crate::obs::clock::now();
+        let mut span = self.trace.span_labeled(SpanKind::Stage, name, label);
+        let out = f(&mut span)?;
+        drop(span);
+        if let Some(stage) = metric {
+            record_stage(stage, t0.elapsed());
+        }
+        Ok(out)
+    }
+
+    /// Feed a stage histogram around `f` without opening a span — for
+    /// helpers like `fsvd_from_gk` that run outside any trace context.
+    pub fn timed<T>(&self, metric: KernelStage, f: impl FnOnce() -> Result<T>) -> Result<T> {
+        let t0 = crate::obs::clock::now();
+        let out = f()?;
+        record_stage(metric, t0.elapsed());
+        Ok(out)
+    }
+
+    /// The shared iteration loop. Per iteration: one cooperative
+    /// checkpoint (a deadlined/cancelled job stops *between* block steps
+    /// with the typed error, so cancel-to-idle latency is bounded by one
+    /// iteration), one iteration span handed to `step` for convergence
+    /// fields, and optionally one stage-histogram observation.
+    ///
+    /// Returns the number of iterations whose step ran to completion; a
+    /// step returning `Break` still counts its own iteration (GK's
+    /// `k_used` convention).
+    pub fn run_loop(
+        &self,
+        spec: &LoopSpec,
+        mut step: impl FnMut(usize, &mut Span<'_>) -> Result<ControlFlow<()>>,
+    ) -> Result<usize> {
+        let mut done = 0usize;
+        for j in 0..spec.max_iters {
+            self.cancel.check()?;
+            let t_iter = spec.per_iter_stage.map(|_| crate::obs::clock::now());
+            let mut span = self.trace.span_labeled(SpanKind::Iter, spec.iter_name, spec.iter_label);
+            let flow = step(j, &mut span)?;
+            drop(span);
+            if let (Some(stage), Some(t0)) = (spec.per_iter_stage, t_iter) {
+                record_stage(stage, t0.elapsed());
+            }
+            done = j + 1;
+            if flow.is_break() {
+                break;
+            }
+        }
+        Ok(done)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::Error;
+
+    #[test]
+    fn run_loop_counts_break_iteration() {
+        let d = SolverDriver::inert();
+        let spec = LoopSpec {
+            iter_name: "it",
+            iter_label: "it",
+            max_iters: 10,
+            per_iter_stage: None,
+        };
+        let n = d
+            .run_loop(&spec, |j, _| {
+                Ok(if j == 3 { ControlFlow::Break(()) } else { ControlFlow::Continue(()) })
+            })
+            .unwrap();
+        assert_eq!(n, 4);
+        let full = d.run_loop(&spec, |_, _| Ok(ControlFlow::Continue(()))).unwrap();
+        assert_eq!(full, 10);
+        let none =
+            d.run_loop(&LoopSpec { max_iters: 0, ..spec }, |_, _| unreachable!()).unwrap();
+        assert_eq!(none, 0);
+    }
+
+    #[test]
+    fn cancelled_driver_stops_before_the_first_step() {
+        let cancel = CancelToken::new();
+        cancel.cancel();
+        let d = SolverDriver::new(cancel, Trace::none());
+        let spec = LoopSpec {
+            iter_name: "it",
+            iter_label: "it",
+            max_iters: 5,
+            per_iter_stage: None,
+        };
+        let mut steps = 0usize;
+        let err = d
+            .run_loop(&spec, |_, _| {
+                steps += 1;
+                Ok(ControlFlow::Continue(()))
+            })
+            .unwrap_err();
+        assert!(matches!(err, Error::Cancelled(_)), "{err}");
+        assert_eq!(steps, 0);
+        assert!(d.checkpoint().is_err());
+    }
+
+    #[test]
+    fn deadline_fires_between_iterations() {
+        let cancel = CancelToken::with_deadline(Duration::ZERO);
+        let d = SolverDriver::new(cancel, Trace::none());
+        let spec = LoopSpec {
+            iter_name: "it",
+            iter_label: "it",
+            max_iters: 5,
+            per_iter_stage: None,
+        };
+        let err = d.run_loop(&spec, |_, _| Ok(ControlFlow::Continue(()))).unwrap_err();
+        assert!(matches!(err, Error::DeadlineExceeded(_)), "{err}");
+    }
+
+    #[test]
+    fn traced_loop_records_named_iteration_spans() {
+        let trace = Trace::new(64);
+        let d = SolverDriver::new(CancelToken::none(), trace.clone());
+        let spec = LoopSpec {
+            iter_name: "power_iter",
+            iter_label: "rsvd_power_iter",
+            max_iters: 3,
+            per_iter_stage: Some(KernelStage::PowerIter),
+        };
+        let n = d
+            .run_loop(&spec, |j, span| {
+                span.field("j", j as f64);
+                Ok(ControlFlow::Continue(()))
+            })
+            .unwrap();
+        assert_eq!(n, 3);
+        let spans = trace.snapshot();
+        assert_eq!(spans.len(), 3);
+        assert!(spans.iter().all(|s| s.name == "power_iter"));
+        assert!(spans.iter().all(|s| s.label == "rsvd_power_iter"));
+    }
+
+    #[test]
+    fn stage_records_span_even_on_error() {
+        let trace = Trace::new(8);
+        let d = SolverDriver::new(CancelToken::none(), trace.clone());
+        let err: Result<()> = d.stage(None, "sketch", "sp_sketch", |_| {
+            Err(Error::Breakdown("synthetic".into()))
+        });
+        assert!(err.is_err());
+        let spans = trace.snapshot();
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].name, "sketch");
+        assert_eq!(spans[0].label, "sp_sketch");
+        let ok = d.stage(None, "core", "sp_core", |span| {
+            span.field("k", 2.0);
+            Ok(7usize)
+        });
+        assert_eq!(ok.unwrap(), 7);
+    }
+}

@@ -1,0 +1,229 @@
+//! The unified solver layer: every SVD method behind one trait.
+//!
+//! The paper's pitch is picking the *right* factorization per workload —
+//! GK/F-SVD where all singular vectors must be accurate, randomized
+//! sketches where speed wins. This module makes that a first-class
+//! abstraction:
+//!
+//! * [`driver`] — the shared iteration-loop driver (cancel/deadline
+//!   checkpoints, trace spans, [`KernelStage`] histograms) that
+//!   `gk.rs`, `fsvd.rs`, `rank.rs` and `halko.rs` all run through.
+//! * [`block_krylov`] — Musco–Musco randomized block-Krylov SVD.
+//! * [`single_pass`] — Tropp–Webber single-pass sketch SVD.
+//! * [`SvdSolver`] — the trait the coordinator dispatches on once
+//!   `coordinator/policy.rs` has picked a [`SvdMethod`].
+//!
+//! [`KernelStage`]: crate::obs::metrics::KernelStage
+
+pub mod block_krylov;
+pub mod driver;
+pub mod single_pass;
+
+pub use driver::{LoopSpec, SolverDriver};
+
+use crate::cancel::CancelToken;
+use crate::coordinator::job::SvdMethod;
+use crate::krylov::fsvd::{fsvd, FsvdOptions};
+use crate::krylov::LinOp;
+use crate::linalg::svd::Svd;
+use crate::obs::trace::Trace;
+use crate::rsvd::{rsvd, RsvdOptions};
+use crate::Result;
+use block_krylov::{block_krylov, BlockKrylovOptions};
+use single_pass::{single_pass, SinglePassOptions};
+
+/// Per-job execution context threaded into every solver: the seed the
+/// coordinator derived for the job, its cancel token, and its trace.
+#[derive(Debug, Clone, Default)]
+pub struct SolverContext {
+    /// Start-vector / test-matrix seed.
+    pub seed: u64,
+    /// Cooperative stop signal (inert by default).
+    pub cancel: CancelToken,
+    /// Telemetry sink (inert by default).
+    pub trace: Trace,
+}
+
+/// A partial-SVD method the coordinator can dispatch uniformly. Each
+/// implementation returns at least `r` triplets, truncated to `r`
+/// (descending σ), and is bitwise-deterministic given `(a, r, cx.seed)`
+/// under any `FASTLR_THREADS`.
+pub trait SvdSolver {
+    /// Wire/metrics name, matching [`crate::coordinator::job::MethodKind`].
+    fn name(&self) -> &'static str;
+    /// Compute the leading-`r` partial SVD of `a`.
+    fn solve(&self, a: &dyn LinOp, r: usize, cx: &SolverContext) -> Result<Svd>;
+}
+
+/// GK-based F-SVD (Algorithm 2) with `k` Krylov iterations.
+#[derive(Debug, Clone)]
+pub struct GkSolver {
+    /// Inner Algorithm 1 iteration budget.
+    pub k: usize,
+}
+
+impl SvdSolver for GkSolver {
+    fn name(&self) -> &'static str {
+        "fsvd"
+    }
+
+    fn solve(&self, a: &dyn LinOp, r: usize, cx: &SolverContext) -> Result<Svd> {
+        let out = fsvd(
+            a,
+            &FsvdOptions {
+                k: self.k,
+                r,
+                seed: cx.seed,
+                cancel: cx.cancel.clone(),
+                trace: cx.trace.clone(),
+                ..Default::default()
+            },
+        )?;
+        Ok(Svd { u: out.u, sigma: out.sigma, v: out.v })
+    }
+}
+
+/// Halko randomized SVD with oversampling `p`.
+#[derive(Debug, Clone)]
+pub struct RsvdSolver {
+    /// Oversampling parameter `p`.
+    pub oversample: usize,
+}
+
+impl SvdSolver for RsvdSolver {
+    fn name(&self) -> &'static str {
+        "rsvd"
+    }
+
+    fn solve(&self, a: &dyn LinOp, r: usize, cx: &SolverContext) -> Result<Svd> {
+        let out = rsvd(
+            a,
+            &RsvdOptions {
+                r,
+                oversample: self.oversample,
+                seed: cx.seed,
+                cancel: cx.cancel.clone(),
+                trace: cx.trace.clone(),
+                ..Default::default()
+            },
+        )?;
+        Ok(out.truncate(r))
+    }
+}
+
+/// Musco–Musco randomized block-Krylov SVD.
+#[derive(Debug, Clone)]
+pub struct BlockKrylovSolver {
+    /// Block power iterations `q`.
+    pub iters: usize,
+    /// Sketch block width `b`.
+    pub block: usize,
+}
+
+impl SvdSolver for BlockKrylovSolver {
+    fn name(&self) -> &'static str {
+        "block_krylov"
+    }
+
+    fn solve(&self, a: &dyn LinOp, r: usize, cx: &SolverContext) -> Result<Svd> {
+        let out = block_krylov(
+            a,
+            &BlockKrylovOptions {
+                r,
+                block: self.block,
+                iters: self.iters,
+                seed: cx.seed,
+                cancel: cx.cancel.clone(),
+                trace: cx.trace.clone(),
+            },
+        )?;
+        Ok(out.truncate(r))
+    }
+}
+
+/// Tropp–Webber single-pass sketch SVD.
+#[derive(Debug, Clone)]
+pub struct SinglePassSolver {
+    /// Range-sketch width `k`.
+    pub sketch: usize,
+}
+
+impl SvdSolver for SinglePassSolver {
+    fn name(&self) -> &'static str {
+        "single_pass"
+    }
+
+    fn solve(&self, a: &dyn LinOp, r: usize, cx: &SolverContext) -> Result<Svd> {
+        let out = single_pass(
+            a,
+            &SinglePassOptions {
+                r,
+                sketch: self.sketch,
+                seed: cx.seed,
+                cancel: cx.cancel.clone(),
+                trace: cx.trace.clone(),
+            },
+        )?;
+        Ok(out.truncate(r))
+    }
+}
+
+/// Instantiate the solver for a routed [`SvdMethod`]. `Full` returns
+/// `None`: traditional SVD needs the dense matrix itself (not a
+/// [`LinOp`]) and stays a special case at the dispatch site.
+pub fn from_method(method: &SvdMethod) -> Option<Box<dyn SvdSolver>> {
+    match *method {
+        SvdMethod::Full => None,
+        SvdMethod::Fsvd { k } => Some(Box::new(GkSolver { k })),
+        SvdMethod::Rsvd { oversample } => Some(Box::new(RsvdSolver { oversample })),
+        SvdMethod::BlockKrylov { q, block } => {
+            Some(Box::new(BlockKrylovSolver { iters: q, block }))
+        }
+        SvdMethod::SinglePass { sketch } => Some(Box::new(SinglePassSolver { sketch })),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::low_rank_gaussian;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn from_method_names_match_the_method() {
+        let cases: [(SvdMethod, &str); 4] = [
+            (SvdMethod::Fsvd { k: 20 }, "fsvd"),
+            (SvdMethod::Rsvd { oversample: 10 }, "rsvd"),
+            (SvdMethod::BlockKrylov { q: 4, block: 26 }, "block_krylov"),
+            (SvdMethod::SinglePass { sketch: 30 }, "single_pass"),
+        ];
+        for (method, name) in cases {
+            let solver = from_method(&method).expect("solver");
+            assert_eq!(solver.name(), name);
+            assert_eq!(method.name(), name);
+        }
+        assert!(from_method(&SvdMethod::Full).is_none());
+    }
+
+    #[test]
+    fn every_solver_recovers_a_planted_rank_through_the_trait() {
+        let mut rng = Pcg64::seed_from_u64(160);
+        let a = low_rank_gaussian(80, 60, 6, &mut rng);
+        let cx = SolverContext { seed: 0x5eed, ..Default::default() };
+        let solvers: [Box<dyn SvdSolver>; 4] = [
+            Box::new(GkSolver { k: 30 }),
+            Box::new(RsvdSolver { oversample: 8 }),
+            Box::new(BlockKrylovSolver { iters: 2, block: 10 }),
+            Box::new(SinglePassSolver { sketch: 14 }),
+        ];
+        for solver in &solvers {
+            let out = solver.solve(&a, 6, &cx).unwrap();
+            assert_eq!(out.sigma.len(), 6, "{}", solver.name());
+            assert_eq!(out.u.shape(), (80, 6), "{}", solver.name());
+            assert_eq!(out.v.shape(), (60, 6), "{}", solver.name());
+            let back = out.reconstruct().unwrap();
+            let rel = back.sub(&a).unwrap().fro_norm() / a.fro_norm();
+            assert!(rel < 1e-6, "{}: residual {rel}", solver.name());
+        }
+    }
+}

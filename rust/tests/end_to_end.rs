@@ -74,6 +74,7 @@ fn service_results_match_direct_calls() {
         .run(JobRequest {
             spec: JobSpec::PartialSvd { matrix: a.clone(), r: 9 },
             accuracy: AccuracyClass::Balanced,
+            method: None,
         })
         .unwrap();
     let out = match res.outcome.unwrap() {
@@ -134,7 +135,11 @@ fn concurrent_submitters_all_resolve_with_unique_ids() {
                             JobSpec::PartialSvd { matrix: m, r: 4 }
                         };
                         let h = svc
-                            .submit(JobRequest { spec, accuracy: AccuracyClass::Balanced })
+                            .submit(JobRequest {
+                                spec,
+                                accuracy: AccuracyClass::Balanced,
+                                method: None,
+                            })
                             .expect("submit");
                         let res = h.wait().expect("wait");
                         assert!(res.outcome.is_ok(), "job {} failed", res.id);

@@ -1,0 +1,14 @@
+//! Lint fixture: a seeded `no-raw-clock` violation inside a *trait
+//! default method* — the lexer must attribute it like any fn body.
+
+/// Camouflage: `Instant::now()` in a doc comment must stay silent.
+pub trait Stopwatch {
+    fn label(&self) -> &'static str;
+
+    fn elapsed_us(&self) -> u128 {
+        let camo = "SystemTime::now() hiding in a string";
+        let t0 = std::time::Instant::now();
+        let _ = camo;
+        t0.elapsed().as_micros()
+    }
+}

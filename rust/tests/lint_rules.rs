@@ -31,6 +31,7 @@ fn fixtures_produce_exact_diagnostics() {
         ("rust/src/server/panics.rs", 7, 18, "no-panic-on-request-path"),
         ("rust/src/server/panics.rs", 8, 18, "no-panic-on-request-path"),
         ("rust/src/server/panics.rs", 10, 9, "no-panic-on-request-path"),
+        ("rust/src/solver/trait_default.rs", 10, 29, "no-raw-clock"),
     ]
     .into_iter()
     .map(|(p, l, c, r)| (p.to_string(), l, c, r))
@@ -56,6 +57,8 @@ fn fixture_camouflage_stays_silent() {
             ("rust/src/linalg/unsafe_atomics.rs", 8), // documented unsafe
             ("rust/src/linalg/unsafe_atomics.rs", 16), // unsafe_ish ident
             ("rust/src/linalg/unsafe_atomics.rs", 22), // documented Relaxed
+            ("rust/src/solver/trait_default.rs", 4),   // doc-comment camouflage
+            ("rust/src/solver/trait_default.rs", 9),   // string-literal camouflage
         ];
         assert!(
             !silent.iter().any(|(p, l)| v.path == *p && v.line == *l),
@@ -87,7 +90,7 @@ fn json_report_round_trips() {
     let v = Json::parse(&report.render_json()).expect("valid JSON");
     assert_eq!(v.get("ok").and_then(Json::as_bool), Some(false));
     let arr = v.get("violations").and_then(Json::as_array).expect("violations");
-    assert_eq!(arr.len(), 10);
+    assert_eq!(arr.len(), 11);
     assert_eq!(arr[0].get("rule").and_then(Json::as_str), Some("no-raw-threads"));
     assert_eq!(arr[0].get("line").and_then(Json::as_usize), Some(6));
 }

@@ -1,0 +1,155 @@
+//! The algorithm-portfolio contract behind the unified solver layer.
+//!
+//! Every method the routing policy can pick — GK/F-SVD, Halko R-SVD,
+//! Musco–Musco block-Krylov and the Tropp–Webber single-pass sketch —
+//! runs behind the same [`SvdSolver`] trait, so the coordinator may swap
+//! one for another and downstream learners must not care. These tests
+//! pin that down:
+//!
+//! 1. **agreement** — on a planted low-rank input (dense, and sparse via
+//!    `synth::sparse_low_rank_noise`) every method reproduces exact SVD's
+//!    leading triplets;
+//! 2. **near-optimality** — on a full-spectrum sparse input no method's
+//!    rank-`r` residual is more than a few percent of `‖A‖_F` above the
+//!    Eckart–Young optimum;
+//! 3. **determinism** — the two new sketch methods are bitwise stable
+//!    pooled vs forced-inline (`exec::with_serial`) and traced vs
+//!    untraced, the same contract `tests/determinism.rs` pins for F-SVD.
+
+use fastlr::data::synth::{geometric_spectrum, sparse_low_rank_noise, with_spectrum};
+use fastlr::exec;
+use fastlr::linalg::svd::svd;
+use fastlr::linalg::vecops::dot;
+use fastlr::obs::trace::Trace;
+use fastlr::rng::Pcg64;
+use fastlr::solver::{
+    BlockKrylovSolver, GkSolver, RsvdSolver, SinglePassSolver, SolverContext, SvdSolver,
+};
+
+/// One solver per routable family, parameterized the way the policy
+/// would for `r = 8` (GK gets the full iteration budget).
+fn portfolio(min_dim: usize) -> [Box<dyn SvdSolver>; 4] {
+    [
+        Box::new(GkSolver { k: min_dim }),
+        Box::new(RsvdSolver { oversample: 10 }),
+        Box::new(BlockKrylovSolver { iters: 4, block: 14 }),
+        Box::new(SinglePassSolver { sketch: 18 }),
+    ]
+}
+
+#[test]
+fn all_methods_agree_with_exact_svd_on_dense_low_rank() {
+    let mut rng = Pcg64::seed_from_u64(700);
+    let sigma: Vec<f64> = geometric_spectrum(10, 0.7).iter().map(|s| s * 100.0).collect();
+    let a = with_spectrum(300, 250, &sigma, &mut rng).unwrap();
+    let full = svd(&a).unwrap();
+    let cx = SolverContext { seed: 0x5eed, ..Default::default() };
+    for solver in &portfolio(250) {
+        let out = solver.solve(&a, 8, &cx).unwrap();
+        assert_eq!(out.sigma.len(), 8, "{}", solver.name());
+        for i in 0..8 {
+            let rel = (out.sigma[i] - full.sigma[i]).abs() / full.sigma[i];
+            assert!(rel < 1e-8, "{} sigma[{i}] rel err {rel}", solver.name());
+            // Subspace agreement up to sign.
+            let au = dot(&out.u.col(i), &full.u.col(i)).abs();
+            let av = dot(&out.v.col(i), &full.v.col(i)).abs();
+            assert!(au > 1.0 - 1e-6, "{} u[{i}] alignment {au}", solver.name());
+            assert!(av > 1.0 - 1e-6, "{} v[{i}] alignment {av}", solver.name());
+        }
+    }
+}
+
+#[test]
+fn all_methods_agree_on_sparse_low_rank_noise() {
+    // The sampled-entry sparse model: a planted rank-6 signal observed
+    // at 10% density with small entry noise. Every method sees it only
+    // through the matrix-free `LinOp` (CSR sweeps), the reference SVD
+    // through the densified copy.
+    let mut rng = Pcg64::seed_from_u64(701);
+    let sp = sparse_low_rank_noise(300, 250, 6, 0.1, 0.01, &mut rng).unwrap();
+    let dense = sp.to_dense();
+    let full = svd(&dense).unwrap();
+    let a_fro = dense.fro_norm();
+    let opt = {
+        let back = full.clone().truncate(6).reconstruct().unwrap();
+        back.sub(&dense).unwrap().fro_norm()
+    };
+    let cx = SolverContext { seed: 0xd157, ..Default::default() };
+    // (solver, excess-residual tolerance as a fraction of ||A||_F): the
+    // Krylov methods must be essentially optimal, the one-shot sketches
+    // are allowed their analysis slack.
+    let cases: [(Box<dyn SvdSolver>, f64); 4] = [
+        (Box::new(GkSolver { k: 120 }), 1e-6),
+        (Box::new(BlockKrylovSolver { iters: 6, block: 12 }), 1e-3),
+        (Box::new(RsvdSolver { oversample: 24 }), 0.05),
+        (Box::new(SinglePassSolver { sketch: 30 }), 0.05),
+    ];
+    for (solver, tol) in &cases {
+        let out = solver.solve(&sp, 6, &cx).unwrap();
+        // sigma_1 agreement is gap-independent.
+        let rel1 = (out.sigma[0] - full.sigma[0]).abs() / full.sigma[0];
+        assert!(rel1 < 0.02, "{} sigma[0] rel err {rel1}", solver.name());
+        // Eckart–Young: residual within tol of the optimal rank-6 one.
+        let res = out.reconstruct().unwrap().sub(&dense).unwrap().fro_norm();
+        let excess = (res - opt) / a_fro;
+        assert!(excess < *tol, "{} excess residual {excess} (tol {tol})", solver.name());
+    }
+}
+
+#[test]
+fn new_methods_are_bitwise_stable_under_forced_inline() {
+    // 500x400 keeps the inner GEMMs past the pool cutoff, so pooled vs
+    // `with_serial` genuinely exercises the chunked execution paths.
+    let mut rng = Pcg64::seed_from_u64(702);
+    let sigma: Vec<f64> = geometric_spectrum(12, 0.8).iter().map(|s| s * 50.0).collect();
+    let a = with_spectrum(500, 400, &sigma, &mut rng).unwrap();
+    let cx = SolverContext { seed: 0xb175, ..Default::default() };
+    let solvers: [Box<dyn SvdSolver>; 2] = [
+        Box::new(BlockKrylovSolver { iters: 4, block: 18 }),
+        Box::new(SinglePassSolver { sketch: 22 }),
+    ];
+    for solver in &solvers {
+        let pooled = solver.solve(&a, 10, &cx).unwrap();
+        let inline = exec::with_serial(|| solver.solve(&a, 10, &cx).unwrap());
+        assert_eq!(pooled.sigma, inline.sigma, "{} sigma bits differ", solver.name());
+        assert_eq!(
+            pooled.u.as_slice(),
+            inline.u.as_slice(),
+            "{} u bits differ",
+            solver.name()
+        );
+        assert_eq!(
+            pooled.v.as_slice(),
+            inline.v.as_slice(),
+            "{} v bits differ",
+            solver.name()
+        );
+    }
+}
+
+#[test]
+fn new_methods_are_bitwise_stable_under_live_tracing() {
+    // Telemetry only observes values between stages: a live trace must
+    // not move a single bit, pooled or forced-inline.
+    let mut rng = Pcg64::seed_from_u64(703);
+    let sigma: Vec<f64> = geometric_spectrum(12, 0.8).iter().map(|s| s * 50.0).collect();
+    let a = with_spectrum(500, 400, &sigma, &mut rng).unwrap();
+    let solvers: [Box<dyn SvdSolver>; 2] = [
+        Box::new(BlockKrylovSolver { iters: 4, block: 18 }),
+        Box::new(SinglePassSolver { sketch: 22 }),
+    ];
+    for solver in &solvers {
+        let plain_cx = SolverContext { seed: 0x7ace, ..Default::default() };
+        let plain = solver.solve(&a, 10, &plain_cx).unwrap();
+        let trace = Trace::new(4096);
+        let traced_cx = SolverContext { seed: 0x7ace, trace: trace.clone(), ..Default::default() };
+        let traced = solver.solve(&a, 10, &traced_cx).unwrap();
+        assert_eq!(plain.sigma, traced.sigma, "{}", solver.name());
+        assert_eq!(plain.u.as_slice(), traced.u.as_slice(), "{}", solver.name());
+        assert_eq!(plain.v.as_slice(), traced.v.as_slice(), "{}", solver.name());
+        assert!(!trace.snapshot().is_empty(), "{}: no spans captured", solver.name());
+        let inline = exec::with_serial(|| solver.solve(&a, 10, &traced_cx).unwrap());
+        assert_eq!(plain.sigma, inline.sigma, "{} inline+traced", solver.name());
+        assert_eq!(plain.u.as_slice(), inline.u.as_slice(), "{} inline+traced", solver.name());
+    }
+}
